@@ -1,0 +1,83 @@
+//! Cooling study (paper §5.2.1 + §6/Fig 14): train on the air-cooled and
+//! water-cooled V100s, quantify the measured energy gap, check the
+//! air↔water table linearity, and build a water table from a 10 % measured
+//! subset via the PJRT affine-fit artifact.
+//!
+//!     cargo run --release --example cooling_study
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::isa::Gen;
+use wattchmen::model::{random_subset, table_r_squared, transfer_table, TrainConfig};
+use wattchmen::report::{measure_workload, scaled_workload};
+use wattchmen::runtime::Artifacts;
+use wattchmen::util::stats;
+use wattchmen::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::load_default().ok();
+    let tc = TrainConfig {
+        reps: 2,
+        bench_secs: 60.0,
+        cooldown_secs: 15.0,
+        idle_secs: 20.0,
+        cov_threshold: 0.02,
+    };
+    let air_cfg = ArchConfig::cloudlab_v100();
+    let water_cfg = ArchConfig::summit_v100();
+
+    println!("training on air-cooled V100...");
+    let air = ClusterCampaign::new(air_cfg.clone(), 4, 42).train(&tc, arts.as_ref())?;
+    println!("training on water-cooled V100...");
+    let water = ClusterCampaign::new(water_cfg.clone(), 4, 42).train(&tc, arts.as_ref())?;
+
+    // Ground-truth energy gap across the Rodinia set.
+    let mut gaps = Vec::new();
+    for w in workloads::evaluation_suite(Gen::Volta).iter().take(5) {
+        let wa = scaled_workload(&air_cfg, w, 90.0);
+        let ww = scaled_workload(&water_cfg, w, 90.0);
+        let ea = measure_workload(&air_cfg, &wa, 7).energy_j;
+        let ew = measure_workload(&water_cfg, &ww, 7).energy_j;
+        gaps.push(100.0 * (ea - ew) / ea);
+        println!("  {:<14} air {ea:>8.0} J | water {ew:>8.0} J | gap {:.1}%", w.name, gaps.last().unwrap());
+    }
+    println!(
+        "mean water-cooling energy reduction: {:.1}% (paper: ~12%)",
+        stats::mean(&gaps)
+    );
+
+    // Table linearity + affine transfer from a 10 % subset.
+    let r2 = table_r_squared(&air.table, &water.table);
+    println!("air↔water per-instruction energy R² = {r2:.3} (paper: 0.988)");
+    let keys = random_subset(&water.table, 0.10, 99);
+    let subset: std::collections::BTreeMap<String, f64> = keys
+        .iter()
+        .map(|k| (k.clone(), water.table.entries[k]))
+        .collect();
+    let transfer = transfer_table(
+        &air.table,
+        &subset,
+        water.table.const_power_w,
+        water.table.static_power_w,
+        arts.as_ref(),
+    )?;
+    println!(
+        "affine transfer from {} measured instructions: slope {:.3}, intercept {:.3}",
+        keys.len(),
+        transfer.slope,
+        transfer.intercept
+    );
+    // How close is the transferred table to the fully-measured one?
+    let mut errs = Vec::new();
+    for (k, &e_true) in &water.table.entries {
+        let e_t = transfer.table.entries[k];
+        if e_true > 0.05 {
+            errs.push(100.0 * ((e_t - e_true) / e_true).abs());
+        }
+    }
+    println!(
+        "transferred-vs-measured per-instruction error: median {:.1}%",
+        stats::median(&errs)
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! END-TO-END DRIVER (DESIGN.md §6): the complete Wattchmen pipeline on the
+//! air-cooled V100 with the paper's full measurement protocol —
+//!
+//!   1. idle + NANOSLEEP calibration,
+//!   2. the 90-microbenchmark campaign, 5 reps × 180 s with 60 s cooldowns,
+//!      sharded over a simulated 4-GPU CloudLab slice,
+//!   3. batched steady-state integration + the NNLS solve through the AOT
+//!      PJRT artifacts (python never runs here),
+//!   4. ground-truth measurement of all 16 evaluation workloads,
+//!   5. Wattchmen-Direct / Wattchmen-Pred predictions + MAPE (Fig 6 /
+//!      Table 4 reproduction) and per-workload attribution.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     make artifacts && cargo run --release --example full_campaign
+
+use std::time::Instant;
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::isa::Gen;
+use wattchmen::model::{predict_suite, Mode, TrainConfig};
+use wattchmen::report::{measure_workload, scaled_workload};
+use wattchmen::runtime::Artifacts;
+use wattchmen::util::stats;
+use wattchmen::util::text::{f, render_table};
+use wattchmen::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let arts = Artifacts::load_default()?; // end-to-end REQUIRES the artifacts
+    println!("PJRT artifacts loaded (nnls, integrate, affine_fit, predict)");
+
+    // --- Training campaign: full paper protocol ---
+    let cfg = ArchConfig::cloudlab_v100();
+    let tc = TrainConfig::default(); // 5 reps × 180 s, 60 s cooldowns
+    println!(
+        "running the full campaign on {}: 90 benchmarks × {} reps × {:.0}s across 4 GPUs...",
+        cfg.name, tc.reps, tc.bench_secs
+    );
+    let t_train = Instant::now();
+    let result = ClusterCampaign::new(cfg.clone(), 4, 42).train(&tc, Some(&arts))?;
+    println!(
+        "trained in {:.1}s wall ({} columns, residual {:.2e}, solver {:?})",
+        t_train.elapsed().as_secs_f64(),
+        result.columns.len(),
+        result.residual,
+        result.solver
+    );
+
+    // --- Workload measurement + prediction ---
+    let suite = workloads::evaluation_suite(Gen::Volta);
+    let scaled: Vec<_> = suite
+        .iter()
+        .map(|w| scaled_workload(&cfg, w, 90.0))
+        .collect();
+    let profiles: Vec<(String, Vec<_>)> = scaled
+        .iter()
+        .map(|w| (w.name.clone(), profile_app(&cfg, &w.kernels)))
+        .collect();
+    println!("measuring {} workloads (~90 s each, simulated)...", scaled.len());
+    let measured: Vec<f64> = scaled
+        .iter()
+        .enumerate()
+        .map(|(i, w)| measure_workload(&cfg, w, 1000 + i as u64).energy_j)
+        .collect();
+
+    let direct = predict_suite(&result.table, &profiles, Mode::Direct, Some(&arts))?;
+    let pred = predict_suite(&result.table, &profiles, Mode::Pred, Some(&arts))?;
+
+    let mut rows = Vec::new();
+    for (i, w) in scaled.iter().enumerate() {
+        rows.push(vec![
+            w.name.clone(),
+            f(direct[i].energy_j / measured[i], 2),
+            f(pred[i].energy_j / measured[i], 2),
+            f(100.0 * pred[i].coverage, 0),
+            f(measured[i], 0),
+        ]);
+    }
+    println!(
+        "\n{}",
+        render_table(
+            &["workload", "Direct/D", "Pred/D", "coverage %", "measured D [J]"],
+            &rows
+        )
+    );
+    let d_e: Vec<f64> = direct.iter().map(|p| p.energy_j).collect();
+    let p_e: Vec<f64> = pred.iter().map(|p| p.energy_j).collect();
+    println!(
+        "MAPE: Wattchmen-Direct {:.1}% (paper 19) | Wattchmen-Pred {:.1}% (paper 14)",
+        stats::mape(&d_e, &measured),
+        stats::mape(&p_e, &measured)
+    );
+    println!(
+        "full end-to-end pipeline completed in {:.1}s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,17 @@
+use std::time::Instant;
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::model::train::TrainConfig;
+use wattchmen::runtime::Artifacts;
+
+fn main() {
+    let cfg = ArchConfig::cloudlab_v100();
+    let tc = TrainConfig { reps: 2, bench_secs: 60.0, cooldown_secs: 15.0, idle_secs: 20.0, cov_threshold: 0.02 };
+    let t0 = Instant::now();
+    let r = ClusterCampaign::new(cfg.clone(), 4, 42).train(&tc, None).unwrap();
+    println!("native path: {:.2}s residual {:.1e}", t0.elapsed().as_secs_f64(), r.residual);
+    let arts = Artifacts::load_default().unwrap();
+    let t1 = Instant::now();
+    let r = ClusterCampaign::new(cfg.clone(), 4, 42).train(&tc, Some(&arts)).unwrap();
+    println!("artifact path: {:.2}s residual {:.1e}", t1.elapsed().as_secs_f64(), r.residual);
+}

@@ -1,0 +1,92 @@
+"""AOT bridge: lower the Layer-2 entry points to HLO-text artifacts.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects with ``proto.id() <= INT_MAX``.  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """Name -> (function, example argument specs)."""
+    n, B, T = model.NNLS_N, model.TRACE_B, model.TRACE_T
+    an, W, I = model.AFFINE_N, model.PREDICT_W, model.PREDICT_I
+    return {
+        f"nnls_{n}": (
+            model.nnls,
+            (_spec((n, n)), _spec((n,)), _spec((n,))),
+        ),
+        f"integrate_{B}x{T}": (
+            model.integrate_traces,
+            (_spec((B, T)), _spec((B, T)), _spec(())),
+        ),
+        f"affine_fit_{an}": (
+            model.affine_fit,
+            (_spec((an,)), _spec((an,)), _spec((an,))),
+        ),
+        f"predict_{W}x{I}": (
+            model.predict_energy,
+            (_spec((W, I)), _spec((I,)), _spec((W,)), _spec((W,))),
+        ),
+    }
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

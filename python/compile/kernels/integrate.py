@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: batched power-trace integration.
+
+Every microbenchmark in the Wattchmen training campaign produces a power
+trace (NVML-style samples).  Training integrates each trace to energy
+(trapezoidal rule over masked sample intervals) and computes the mean power
+over the steady-state window.  This is the numeric hot spot of the training
+phase: a campaign is O(100) benchmarks x O(5) repetitions x O(2-4k) samples.
+
+The kernel processes a (BLOCK_B, T) tile of traces per grid step.  A full
+row lives in VMEM: at T=4096 f32 a row is 16 KiB, so BLOCK_B=8 keeps the
+working set (P, V, partials) at ~256 KiB  -- comfortably inside a TPU
+core's ~16 MiB VMEM with room for double buffering.  The kernel is
+reduction-bound (no MXU use); on TPU it would be VPU/memory-bound, which is
+fine because it runs on the build/training path, not per-request.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+executes via the `xla` crate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 8
+
+
+def _integrate_kernel(p_ref, v_ref, sum_ref, mean_ref):
+    """Per-tile body.
+
+    p_ref: (BB, T) power samples [W]
+    v_ref: (BB, T) validity mask in {0,1} (1 = sample inside the window)
+    sum_ref: (BB,) sum of trapezoid pairs (caller multiplies by dt)
+    mean_ref: (BB,) masked mean power over the window
+    """
+    p = p_ref[...]
+    v = v_ref[...]
+    # Trapezoid weights: an interval contributes iff both endpoints are valid.
+    pair = 0.5 * (p[:, :-1] + p[:, 1:]) * (v[:, :-1] * v[:, 1:])
+    sum_ref[...] = jnp.sum(pair, axis=1)
+    denom = jnp.maximum(jnp.sum(v, axis=1), 1.0)
+    mean_ref[...] = jnp.sum(p * v, axis=1) / denom
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def integrate_traces(P, valid, dt, block_b: int = DEFAULT_BLOCK_B):
+    """Integrate a batch of power traces.
+
+    Args:
+      P: f32[B, T] power samples in watts.
+      valid: f32[B, T] mask, 1.0 where the sample is inside the integration
+        window (rows may have ragged true lengths; tail is zero-padded).
+      dt: scalar sample period in seconds.
+      block_b: rows per pallas grid step.
+
+    Returns:
+      (energy, mean_power): f32[B] joules over the window, f32[B] watts.
+    """
+    B, T = P.shape
+    if B % block_b != 0:
+        pad = block_b - B % block_b
+        P = jnp.pad(P, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    Bp = P.shape[0]
+    grid = (Bp // block_b,)
+    sums, means = pl.pallas_call(
+        _integrate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        ],
+        interpret=True,
+    )(P.astype(jnp.float32), valid.astype(jnp.float32))
+    energy = sums[:B] * dt
+    return energy, means[:B]

@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: one projected-gradient NNLS iteration.
+
+Wattchmen solves a square system of microbenchmark energy equations
+``A x = b`` subject to ``x >= 0`` (paper section 3.1: a non-negative solver
+over the instruction-share matrix).  The L2 graph reduces the problem to the
+normal equations ``G = A^T A``, ``h = A^T b`` and iterates the accelerated
+projected-gradient step
+
+    x_new = max(0, y - alpha * (G @ y - h))
+
+This kernel computes a single step.  At N=128 the entire G tile is
+128*128*4 = 64 KiB -- a single VMEM-resident block, so the matvec hits the
+MXU once per iteration with no HBM traffic beyond the initial load.  For
+larger tables the kernel would tile G by rows; N=128 comfortably covers the
+paper's 90-instruction V100 system and the A100/H100 variants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pgd_step_kernel(g_ref, y_ref, h_ref, alpha_ref, o_ref):
+    """x_new = max(0, y - alpha * (G y - h)) over a full (N, N) block."""
+    g = g_ref[...]
+    y = y_ref[...]          # (1, N) row vector
+    h = h_ref[...]
+    alpha = alpha_ref[0, 0]
+    grad = y @ g.T - h      # (1,N) @ (N,N)^T == (G @ y^T)^T
+    o_ref[...] = jnp.maximum(y - alpha * grad, 0.0)
+
+
+@jax.jit
+def pgd_step(G, y, h, alpha):
+    """One projected-gradient step.
+
+    Args:
+      G: f32[N, N] normal matrix A^T A (symmetric PSD).
+      y: f32[N] current (extrapolated) iterate.
+      h: f32[N] A^T b.
+      alpha: scalar step size (1 / L with L >= lambda_max(G)).
+
+    Returns:
+      f32[N] next iterate, elementwise non-negative.
+    """
+    N = G.shape[0]
+    y2 = y.reshape(1, N).astype(jnp.float32)
+    h2 = h.reshape(1, N).astype(jnp.float32)
+    a2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _pgd_step_kernel,
+        in_specs=[
+            pl.BlockSpec((N, N), lambda: (0, 0)),
+            pl.BlockSpec((1, N), lambda: (0, 0)),
+            pl.BlockSpec((1, N), lambda: (0, 0)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=True,
+    )(G.astype(jnp.float32), y2, h2, a2)
+    return out.reshape(N)

@@ -1,0 +1,84 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels and the L2 graph.
+
+These are the correctness ground truth: pytest checks every kernel and every
+AOT entry point against these implementations (plus scipy.optimize.nnls for
+the solver).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def integrate_traces_ref(P, valid, dt):
+    """Masked trapezoidal integration + masked mean, row-wise.
+
+    Mirrors kernels.integrate.integrate_traces: an interval [t, t+1]
+    contributes iff both endpoint samples are valid.
+    """
+    P = np.asarray(P, np.float64)
+    V = np.asarray(valid, np.float64)
+    pair = 0.5 * (P[:, :-1] + P[:, 1:]) * (V[:, :-1] * V[:, 1:])
+    energy = pair.sum(axis=1) * float(dt)
+    denom = np.maximum(V.sum(axis=1), 1.0)
+    mean = (P * V).sum(axis=1) / denom
+    return energy.astype(np.float32), mean.astype(np.float32)
+
+
+def pgd_step_ref(G, y, h, alpha):
+    """max(0, y - alpha*(G y - h)) in float64 for tight comparison."""
+    G = np.asarray(G, np.float64)
+    y = np.asarray(y, np.float64)
+    h = np.asarray(h, np.float64)
+    return np.maximum(y - float(alpha) * (G @ y - h), 0.0).astype(np.float32)
+
+
+def nnls_ref(A, b, iters=4000):
+    """Accelerated projected-gradient NNLS, numpy mirror of model.nnls."""
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    G = A.T @ A
+    h = A.T @ b
+    # Power iteration for the Lipschitz constant (matches model.nnls).
+    v = np.ones(G.shape[0]) / np.sqrt(G.shape[0])
+    for _ in range(50):
+        w = G @ v
+        n = np.linalg.norm(w)
+        if n == 0:
+            break
+        v = w / n
+    L = max(float(v @ (G @ v)), 1e-12)
+    alpha = 1.0 / L
+    x = np.zeros(G.shape[0])
+    y = x.copy()
+    t = 1.0
+    for _ in range(iters):
+        x_new = np.maximum(y - alpha * (G @ y - h), 0.0)
+        t_new = 0.5 * (1.0 + np.sqrt(1.0 + 4.0 * t * t))
+        y = x_new + ((t - 1.0) / t_new) * (x_new - x)
+        x, t = x_new, t_new
+    return x.astype(np.float32)
+
+
+def affine_fit_ref(x, y, mask):
+    """Masked least-squares line fit: returns (slope, intercept)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    m = np.asarray(mask, np.float64)
+    n = max(m.sum(), 1.0)
+    mx = (x * m).sum() / n
+    my = (y * m).sum() / n
+    var = ((x - mx) ** 2 * m).sum()
+    cov = ((x - mx) * (y - my) * m).sum()
+    slope = cov / max(var, 1e-12)
+    return np.float32(slope), np.float32(my - slope * mx)
+
+
+def predict_energy_ref(C, e, p0, t):
+    """E_w = p0_w * t_w + sum_i C[w,i] * e[i]  (C in giga-instructions,
+    e in nJ per instruction => the product is joules)."""
+    C = np.asarray(C, np.float64)
+    e = np.asarray(e, np.float64)
+    p0 = np.asarray(p0, np.float64)
+    t = np.asarray(t, np.float64)
+    return (p0 * t + C @ e).astype(np.float32)

@@ -1,0 +1,127 @@
+"""Layer-2 JAX compute graph for Wattchmen's training + prediction math.
+
+Four entry points, each AOT-lowered by compile.aot to an HLO-text artifact
+that the rust coordinator executes through PJRT (python never runs at
+request time):
+
+  nnls(A, b, mask)              -- the paper's non-negative solver (3.1)
+  integrate_traces(P, valid, dt)-- steady-state energy integration (3.3)
+  affine_fit(x, y, mask)        -- cross-system table transfer (6 / Fig 14)
+  predict_energy(C, e, p0, t)   -- batched workload energy prediction (3.5)
+
+The hot inner loops (trace integration, the projected-gradient step) are
+Layer-1 Pallas kernels; everything here stays fixed-shape so the lowered
+module is a static graph (lax.scan, no retracing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.integrate import integrate_traces as _integrate_pallas
+from compile.kernels.nnls_step import pgd_step
+
+# Fixed artifact shapes (padded; rust masks the real problem into them).
+NNLS_N = 128
+NNLS_ITERS = 2000
+TRACE_B = 128
+TRACE_T = 4096
+AFFINE_N = 256
+PREDICT_W = 32
+PREDICT_I = 256
+
+
+def _lipschitz(G, iters: int = 50):
+    """Largest-eigenvalue estimate of PSD G via fixed-step power iteration."""
+    n = G.shape[0]
+    v0 = jnp.ones((n,), jnp.float32) / jnp.sqrt(jnp.asarray(n, jnp.float32))
+
+    def body(v, _):
+        w = G @ v
+        norm = jnp.linalg.norm(w)
+        v = jnp.where(norm > 0, w / jnp.maximum(norm, 1e-30), v)
+        return v, None
+
+    v, _ = jax.lax.scan(body, v0, None, length=iters)
+    return jnp.maximum(v @ (G @ v), 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def nnls(A, b, mask, iters: int = NNLS_ITERS):
+    """Non-negative least squares via accelerated projected gradient.
+
+    Args:
+      A: f32[N, N] instruction-share matrix (row = microbenchmark, column =
+        instruction group; padded rows/cols are zero).
+      b: f32[N] per-benchmark dynamic energy (right-hand side).
+      mask: f32[N] 1.0 for live columns, 0.0 for padding.  Padded columns
+        have zero gradient; masking pins them to exactly zero.
+      iters: fixed iteration count (static graph).
+
+    Returns:
+      x: f32[N] non-negative solution, zero on padded columns.
+    """
+    A = A.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    G = A.T @ A
+    h = A.T @ b
+    # Ridge on the padded diagonal keeps G positive definite there without
+    # perturbing live columns.
+    G = G + jnp.diag(1e-6 * (1.0 - mask))
+    alpha = 1.0 / _lipschitz(G)
+
+    x0 = jnp.zeros((A.shape[0],), jnp.float32)
+
+    def body(carry, _):
+        x, y, t = carry
+        x_new = pgd_step(G, y, h, alpha) * mask
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = x_new + ((t - 1.0) / t_new) * (x_new - x)
+        return (x_new, y_new, t_new), None
+
+    (x, _, _), _ = jax.lax.scan(
+        body, (x0, x0, jnp.asarray(1.0, jnp.float32)), None, length=iters
+    )
+    return x * mask
+
+
+@jax.jit
+def integrate_traces(P, valid, dt):
+    """Batched masked trapezoidal integration (see kernels.integrate)."""
+    return _integrate_pallas(P, valid, dt)
+
+
+@jax.jit
+def affine_fit(x, y, mask):
+    """Masked least-squares line fit y ~ slope*x + intercept.
+
+    Used for the Fig-14 experiment: transfer a per-instruction energy table
+    across systems (air-cooled -> water-cooled) from a measured subset.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mx = jnp.sum(x * m) / n
+    my = jnp.sum(y * m) / n
+    var = jnp.sum((x - mx) ** 2 * m)
+    cov = jnp.sum((x - mx) * (y - my) * m)
+    slope = cov / jnp.maximum(var, 1e-12)
+    return slope, my - slope * mx
+
+
+@jax.jit
+def predict_energy(C, e, p0, t):
+    """Batched workload energy: E_w = p0_w * t_w + C[w,:] @ e.
+
+    C is in giga-instructions per group, e in nJ/instruction, so C @ e is in
+    joules; p0 is the (constant + static) power in watts and t the runtime
+    in seconds.
+    """
+    C = C.astype(jnp.float32)
+    e = e.astype(jnp.float32)
+    return p0.astype(jnp.float32) * t.astype(jnp.float32) + C @ e

@@ -1,0 +1,105 @@
+"""L1 Pallas kernels vs pure references — the core correctness signal.
+
+hypothesis sweeps shapes/values; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.integrate import integrate_traces
+from compile.kernels.nnls_step import pgd_step
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _traces(b, t, seed):
+    rng = np.random.default_rng(seed)
+    P = rng.uniform(20.0, 320.0, size=(b, t)).astype(np.float32)
+    # Ragged validity windows: a contiguous [lo, hi) window per row.
+    V = np.zeros((b, t), np.float32)
+    for i in range(b):
+        lo = int(rng.integers(0, max(t // 2, 1)))
+        hi = int(rng.integers(lo + 1, t + 1))
+        V[i, lo:hi] = 1.0
+    return P, V
+
+
+class TestIntegrate:
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 12),
+        t=st.integers(2, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_random_shapes(self, b, t, seed):
+        P, V = _traces(b, t, seed)
+        dt = 0.1
+        e, m = integrate_traces(P, V, dt, block_b=4)
+        e_ref, m_ref = ref.integrate_traces_ref(P, V, dt)
+        np.testing.assert_allclose(e, e_ref, rtol=2e-5, atol=1e-3)
+        np.testing.assert_allclose(m, m_ref, rtol=2e-5, atol=1e-4)
+
+    def test_artifact_shape(self):
+        P, V = _traces(128, 4096, 7)
+        e, m = integrate_traces(P, V, 0.1)
+        e_ref, m_ref = ref.integrate_traces_ref(P, V, 0.1)
+        np.testing.assert_allclose(e, e_ref, rtol=2e-5, atol=5e-2)
+        np.testing.assert_allclose(m, m_ref, rtol=2e-5, atol=1e-3)
+
+    def test_all_invalid_rows_are_zero(self):
+        P = np.full((4, 64), 150.0, np.float32)
+        V = np.zeros((4, 64), np.float32)
+        e, m = integrate_traces(P, V, 0.1)
+        assert np.all(np.asarray(e) == 0.0)
+        assert np.all(np.asarray(m) == 0.0)
+
+    def test_constant_power_full_window(self):
+        # Constant P over a fully-valid window: E = P * (T-1) * dt exactly.
+        P = np.full((2, 101), 200.0, np.float32)
+        V = np.ones((2, 101), np.float32)
+        e, m = integrate_traces(P, V, 0.5)
+        np.testing.assert_allclose(e, 200.0 * 100 * 0.5, rtol=1e-6)
+        np.testing.assert_allclose(m, 200.0, rtol=1e-6)
+
+    def test_single_valid_sample_has_zero_energy(self):
+        P = np.full((1, 16), 99.0, np.float32)
+        V = np.zeros((1, 16), np.float32)
+        V[0, 5] = 1.0
+        e, m = integrate_traces(P, V, 0.1)
+        np.testing.assert_allclose(e, 0.0, atol=1e-6)
+        np.testing.assert_allclose(m, 99.0, rtol=1e-6)
+
+
+class TestPgdStep:
+    @settings(**SETTINGS)
+    @given(n=st.integers(2, 96), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        A = rng.normal(size=(n, n)).astype(np.float32)
+        G = (A @ A.T).astype(np.float32)
+        y = rng.normal(size=n).astype(np.float32)
+        h = rng.normal(size=n).astype(np.float32)
+        alpha = float(rng.uniform(1e-4, 1e-1))
+        out = pgd_step(G, y, h, alpha)
+        expect = ref.pgd_step_ref(G, y, h, alpha)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+    def test_result_nonnegative(self):
+        rng = np.random.default_rng(3)
+        A = rng.normal(size=(128, 128)).astype(np.float32)
+        G = A @ A.T
+        out = pgd_step(G, rng.normal(size=128).astype(np.float32),
+                       rng.normal(size=128).astype(np.float32), 0.01)
+        assert np.all(np.asarray(out) >= 0.0)
+
+    def test_fixed_point_of_interior_solution(self):
+        # If y solves G y = h with y > 0, the step leaves it unchanged.
+        rng = np.random.default_rng(11)
+        Q = rng.normal(size=(32, 32))
+        G = (Q @ Q.T + 32 * np.eye(32)).astype(np.float32)
+        y = rng.uniform(0.5, 1.5, size=32).astype(np.float32)
+        h = (G.astype(np.float64) @ y).astype(np.float32)
+        out = pgd_step(G, y, h, 1e-3)
+        np.testing.assert_allclose(out, y, rtol=5e-4, atol=5e-4)

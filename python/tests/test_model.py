@@ -1,0 +1,133 @@
+"""L2 graph correctness: nnls vs scipy, affine_fit, predict_energy."""
+
+import numpy as np
+import pytest
+import scipy.optimize
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _padded_system(A, b):
+    """Embed a small system into the fixed artifact shape with a mask."""
+    n = model.NNLS_N
+    k = A.shape[0]
+    Ap = np.zeros((n, n), np.float32)
+    bp = np.zeros(n, np.float32)
+    mp = np.zeros(n, np.float32)
+    Ap[:k, :k] = A
+    bp[:k] = b
+    mp[:k] = 1.0
+    return Ap, bp, mp
+
+
+def _wattchmen_like_system(k, seed):
+    """Diagonally-dominant instruction-share system like the real campaign:
+    each benchmark is ~85% one target instruction + ancillary spread."""
+    rng = np.random.default_rng(seed)
+    A = np.zeros((k, k))
+    for i in range(k):
+        A[i, i] = rng.uniform(0.6, 0.95)
+        anc = rng.dirichlet(np.ones(k - 1)) * (1.0 - A[i, i]) if k > 1 else []
+        A[i, np.arange(k) != i] = anc
+    x_true = rng.uniform(0.2, 5.0, size=k)
+    return A.astype(np.float32), x_true
+
+
+class TestNnls:
+    @settings(**SETTINGS)
+    @given(k=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+    def test_recovers_true_solution(self, k, seed):
+        A, x_true = _wattchmen_like_system(k, seed)
+        b = (A.astype(np.float64) @ x_true).astype(np.float32)
+        Ap, bp, mp = _padded_system(A, b)
+        x = np.asarray(model.nnls(Ap, bp, mp, iters=1500))
+        np.testing.assert_allclose(x[:k], x_true, rtol=5e-3, atol=5e-3)
+        assert np.all(x[k:] == 0.0)
+
+    @settings(**SETTINGS)
+    @given(k=st.integers(2, 24), seed=st.integers(0, 2**31 - 1))
+    def test_matches_scipy_nnls(self, k, seed):
+        rng = np.random.default_rng(seed)
+        A = rng.uniform(0.0, 1.0, size=(k, k)).astype(np.float32)
+        A += k * np.eye(k, dtype=np.float32)  # well-conditioned
+        b = rng.uniform(-1.0, 2.0, size=k).astype(np.float32)
+        Ap, bp, mp = _padded_system(A, b)
+        x = np.asarray(model.nnls(Ap, bp, mp, iters=2000))
+        x_sp, _ = scipy.optimize.nnls(A.astype(np.float64), b.astype(np.float64))
+        np.testing.assert_allclose(x[:k], x_sp, rtol=1e-2, atol=1e-3)
+
+    def test_nonnegative_output(self):
+        rng = np.random.default_rng(0)
+        A = rng.normal(size=(30, 30)).astype(np.float32)
+        b = rng.normal(size=30).astype(np.float32)
+        Ap, bp, mp = _padded_system(A, b)
+        x = np.asarray(model.nnls(Ap, bp, mp, iters=500))
+        assert np.all(x >= 0.0)
+
+    def test_matches_numpy_mirror(self):
+        A, x_true = _wattchmen_like_system(20, 42)
+        b = (A.astype(np.float64) @ x_true).astype(np.float32)
+        Ap, bp, mp = _padded_system(A, b)
+        x = np.asarray(model.nnls(Ap, bp, mp, iters=1000))
+        x_np = ref.nnls_ref(A, b, iters=1000)
+        np.testing.assert_allclose(x[:20], x_np, rtol=1e-3, atol=1e-3)
+
+
+class TestAffineFit:
+    @settings(**SETTINGS)
+    @given(
+        k=st.integers(3, 256),
+        slope=st.floats(-3.0, 3.0),
+        icept=st.floats(-5.0, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exact_line_recovery(self, k, slope, icept, seed):
+        rng = np.random.default_rng(seed)
+        x = np.zeros(model.AFFINE_N, np.float32)
+        y = np.zeros(model.AFFINE_N, np.float32)
+        m = np.zeros(model.AFFINE_N, np.float32)
+        xv = rng.uniform(-10, 10, size=k).astype(np.float32)
+        if np.var(xv) < 1e-3:
+            xv = xv + np.linspace(0, 1, k, dtype=np.float32)
+        x[:k] = xv
+        y[:k] = slope * xv + icept
+        m[:k] = 1.0
+        s, i = model.affine_fit(x, y, m)
+        assert abs(float(s) - slope) < 5e-2 + 2e-2 * abs(slope)
+        assert abs(float(i) - icept) < 1e-1 + 2e-2 * abs(icept)
+
+    def test_matches_ref_noisy(self):
+        rng = np.random.default_rng(5)
+        x = rng.uniform(0, 20, model.AFFINE_N).astype(np.float32)
+        y = (0.9 * x + 1.7 + rng.normal(0, 0.3, model.AFFINE_N)).astype(np.float32)
+        m = (rng.uniform(size=model.AFFINE_N) < 0.6).astype(np.float32)
+        s, i = model.affine_fit(x, y, m)
+        s_ref, i_ref = ref.affine_fit_ref(x, y, m)
+        np.testing.assert_allclose(float(s), s_ref, rtol=1e-4)
+        np.testing.assert_allclose(float(i), i_ref, rtol=1e-3, atol=1e-4)
+
+
+class TestPredict:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        C = rng.uniform(0, 100, (model.PREDICT_W, model.PREDICT_I)).astype(np.float32)
+        e = rng.uniform(0, 5, model.PREDICT_I).astype(np.float32)
+        p0 = rng.uniform(50, 150, model.PREDICT_W).astype(np.float32)
+        t = rng.uniform(0.1, 300, model.PREDICT_W).astype(np.float32)
+        out = np.asarray(model.predict_energy(C, e, p0, t))
+        expect = ref.predict_energy_ref(C, e, p0, t)
+        np.testing.assert_allclose(out, expect, rtol=2e-4)
+
+    def test_zero_counts_is_static_only(self):
+        C = np.zeros((model.PREDICT_W, model.PREDICT_I), np.float32)
+        e = np.ones(model.PREDICT_I, np.float32)
+        p0 = np.full(model.PREDICT_W, 80.0, np.float32)
+        t = np.full(model.PREDICT_W, 10.0, np.float32)
+        out = np.asarray(model.predict_energy(C, e, p0, t))
+        np.testing.assert_allclose(out, 800.0, rtol=1e-6)

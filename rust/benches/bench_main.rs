@@ -1,0 +1,187 @@
+//! Benchmark harness (`cargo bench`) — criterion is unavailable offline,
+//! so this is a custom `harness = false` driver: warmup + N samples,
+//! median/min/max wall times per benchmark.
+//!
+//! One end-to-end benchmark per experiment family (DESIGN.md §4):
+//!   campaign_v100        — Fig 3/6 training pipeline (collect+reduce+solve)
+//!   predict_sweep_v100   — Fig 6 prediction phase over the 16 workloads
+//!   measure_suite_v100   — ground-truth "Real GPU (D)" measurement loop
+//!   nnls_{artifact,native}      — the §3.1 solver on a 90×90 system
+//!   integrate_{artifact,native} — the §3.3 batched trace integration
+//!   device_sim           — raw simulator substrate throughput
+//!   affine_transfer      — Fig 14 transfer fit
+//!   case_study_backprop  — Fig 10/11 pipeline
+//!
+//! Each benchmark also prints the headline numbers it reproduces so
+//! `cargo bench` doubles as a quick regeneration harness.
+
+use std::time::Instant;
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::device::Device;
+use wattchmen::gpusim::kernel::KernelSpec;
+use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::isa::Gen;
+use wattchmen::model::{self, Mode, TrainConfig};
+use wattchmen::report::{measure_workload, scaled_workload};
+use wattchmen::runtime::Artifacts;
+use wattchmen::solver::{nnls as native_nnls, Mat};
+use wattchmen::trace;
+use wattchmen::util::prng::Rng;
+use wattchmen::util::stats;
+use wattchmen::workloads;
+
+fn bench<F: FnMut() -> String>(name: &str, iters: usize, mut f: F) {
+    let mut note = f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        note = f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let med = stats::median(&samples);
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let max = samples.iter().cloned().fold(f64::MIN, f64::max);
+    println!("{name:<26} median {med:>10.2} ms   min {min:>10.2}   max {max:>10.2}   [{note}]");
+}
+
+fn fast_tc() -> TrainConfig {
+    TrainConfig {
+        reps: 2,
+        bench_secs: 60.0,
+        cooldown_secs: 15.0,
+        idle_secs: 20.0,
+        cov_threshold: 0.02,
+    }
+}
+
+fn system_90(rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let n = 90;
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 0.05)).collect();
+        row[i] = rng.uniform(0.7, 0.95);
+        rows.push(row);
+    }
+    let x: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 5.0)).collect();
+    let b = Mat::from_rows(&rows).mul_vec(&x);
+    (rows, b)
+}
+
+fn main() {
+    println!("wattchmen bench harness (criterion unavailable offline — custom timer)\n");
+    let arts = Artifacts::load_default().ok();
+    if arts.is_none() {
+        println!("NOTE: artifacts missing — artifact benches will be skipped\n");
+    }
+    let cfg = ArchConfig::cloudlab_v100();
+
+    // --- device simulator substrate ---
+    bench("device_sim", 5, || {
+        let mut dev = Device::new(cfg.clone(), 3);
+        let spec = KernelSpec::new("b", vec![("FFMA".into(), 1.0)]).with_issue_eff(0.45);
+        let rec = dev.run(&spec, Some(600.0));
+        format!("{} samples simulated", rec.telemetry.samples.len())
+    });
+
+    // --- solver: PJRT artifact vs native ---
+    let mut rng = Rng::new(9);
+    let (rows, b) = system_90(&mut rng);
+    let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
+    if let Some(arts) = arts.as_ref() {
+        bench("nnls_artifact_90x90", 10, || {
+            let x = arts.nnls(&flat, 90, 90, &b).unwrap();
+            format!("x[0]={:.3}", x[0])
+        });
+    }
+    bench("nnls_native_90x90", 10, || {
+        let (x, res) = native_nnls(&Mat::from_rows(&rows), &b);
+        format!("x[0]={:.3} res={res:.1e}", x[0])
+    });
+
+    // --- trace integration: artifact vs native ---
+    let traces: Vec<Vec<f64>> = (0..90)
+        .map(|i| {
+            let mut r = Rng::new(100 + i);
+            (0..1800).map(|_| r.uniform(120.0, 260.0)).collect()
+        })
+        .collect();
+    let windows: Vec<(usize, usize)> = vec![(450, 1800); 90];
+    if let Some(arts) = arts.as_ref() {
+        bench("integrate_artifact_90", 10, || {
+            let out = arts.integrate(&traces, &windows, 0.1).unwrap();
+            format!("E[0]={:.0} J", out[0].0)
+        });
+    }
+    bench("integrate_native_90", 10, || {
+        let mut acc = 0.0;
+        for (t, &(lo, hi)) in traces.iter().zip(&windows) {
+            let w = trace::SteadyWindow { start: lo, end: hi };
+            acc += trace::integrate_native(t, w, 0.1).0;
+        }
+        format!("sumE={acc:.0} J")
+    });
+
+    // --- training campaign (Fig 3/6 pipeline) ---
+    bench("campaign_v100", 3, || {
+        let r = ClusterCampaign::new(cfg.clone(), 4, 42)
+            .train(&fast_tc(), arts.as_ref())
+            .unwrap();
+        format!("{} cols residual {:.1e}", r.columns.len(), r.residual)
+    });
+
+    // --- prediction sweep (Fig 6 prediction phase) ---
+    let table = ClusterCampaign::new(cfg.clone(), 4, 42)
+        .train(&fast_tc(), arts.as_ref())
+        .unwrap()
+        .table;
+    let suite = workloads::evaluation_suite(Gen::Volta);
+    let profiles: Vec<(String, Vec<_>)> = suite
+        .iter()
+        .map(|w| {
+            let sw = scaled_workload(&cfg, w, 90.0);
+            (w.name.clone(), profile_app(&cfg, &sw.kernels))
+        })
+        .collect();
+    bench("predict_sweep_v100", 10, || {
+        let preds = model::predict_suite(&table, &profiles, Mode::Pred, arts.as_ref()).unwrap();
+        format!(
+            "16 workloads, sum={:.0} J",
+            preds.iter().map(|p| p.energy_j).sum::<f64>()
+        )
+    });
+
+    // --- ground-truth measurement loop ("Real GPU (D)") ---
+    bench("measure_suite_v100", 3, || {
+        let mut acc = 0.0;
+        for (i, w) in suite.iter().enumerate().take(4) {
+            let sw = scaled_workload(&cfg, w, 90.0);
+            acc += measure_workload(&cfg, &sw, 50 + i as u64).energy_j;
+        }
+        format!("4 workloads, sum={acc:.0} J")
+    });
+
+    // --- Fig 14 affine transfer ---
+    if let Some(arts) = arts.as_ref() {
+        let xs: Vec<f64> = (0..90).map(|i| 0.5 + 0.1 * i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.9 * x + 0.05).collect();
+        bench("affine_transfer", 20, || {
+            let (s, i) = arts.affine_fit(&xs, &ys).unwrap();
+            format!("slope {s:.3} icept {i:.3}")
+        });
+    }
+
+    // --- case study pipeline (Fig 10/11) ---
+    bench("case_study_backprop", 3, || {
+        let buggy =
+            scaled_workload(&cfg, &workloads::rodinia::backprop_k2(Gen::Volta, false), 90.0);
+        let fixed =
+            scaled_workload(&cfg, &workloads::rodinia::backprop_k2(Gen::Volta, true), 90.0);
+        let mb = measure_workload(&cfg, &buggy, 11).energy_j;
+        let ma = measure_workload(&cfg, &fixed, 11).energy_j;
+        format!("energy drop {:.1}%", 100.0 * (mb - ma) / mb)
+    });
+
+    println!("\nbench complete");
+}

@@ -1,0 +1,251 @@
+//! AccelWattch baseline (Kandiah et al., MICRO'21) — re-implemented at the
+//! fidelity the paper evaluates it (§2.3.1, §4.3):
+//!
+//! * a component-level (bucket) power model fit with constrained least
+//!   squares on microbenchmark measurements from its *validated reference*
+//!   V100 environment (250 W TDP, 1417 MHz, 32 GB — NOT the evaluated
+//!   CloudLab/Summit parts);
+//! * cache behaviour comes from its own simulator defaults, not from the
+//!   target's profiled hit rates;
+//! * no cooling/environment inputs: it predicts identical energy for the
+//!   air- and water-cooled V100s (the §5.2.1 observation);
+//! * energy = predicted average power × observed execution time.
+//!
+//! Like the original's quadratic-programming step, the constrained fit can
+//! zero out weakly-identified components (the "zero power for data caches"
+//! failure reported in [69, 114]); we surface that in `zeroed_components`.
+
+use std::collections::BTreeMap;
+
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::device::Device;
+use crate::gpusim::kernel::MemBehavior;
+use crate::gpusim::profiler::KernelProfile;
+use crate::isa::class::classify_str;
+use crate::isa::{bucket_of_key, canonicalize, split_key, MemLevel};
+use crate::microbench::{nanosleep_bench, suite};
+use crate::solver::{nnls, Mat};
+use crate::util::stats;
+
+/// AccelWattch's simulator-default cache model (it does not consume the
+/// target's profiled hit rates).
+const ASSUMED_L1_HIT: f64 = 0.60;
+const ASSUMED_L2_HIT: f64 = 0.50;
+
+/// Component granularity: buckets, with global memory split by level.
+/// AccelWattch's V100 model predates a dedicated tensor-core component —
+/// MMA issues are folded into the SP (fp32) pipe, one of the reasons it
+/// under-predicts GEMM energy (§5.1: "low predictions for the respective
+/// matrix ... operations").
+pub fn component_of(key: &str) -> String {
+    let (op, level) = split_key(key);
+    if let Some(level) = level {
+        return format!("gmem_{}", level.tag());
+    }
+    if classify_str(op).is_global_mem() {
+        return "gmem_L2".to_string();
+    }
+    match bucket_of_key(key) {
+        crate::isa::Bucket::TensorUnit => "fp32".to_string(),
+        b => b.name().to_string(),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AccelWattchModel {
+    /// Reference-environment idle (constant + static) power [W].
+    pub idle_power_w: f64,
+    /// Component → energy coefficient [nJ per instruction].
+    pub coeffs: BTreeMap<String, f64>,
+    /// Components the constrained fit pinned to zero (§2.3.1 fragility).
+    pub zeroed_components: Vec<String>,
+}
+
+/// Component rates [instr/s] for a profile under AccelWattch's assumed
+/// cache behaviour.
+fn component_counts(profile: &KernelProfile) -> BTreeMap<String, f64> {
+    let assumed = MemBehavior::new(ASSUMED_L1_HIT, ASSUMED_L2_HIT);
+    let mut out: BTreeMap<String, f64> = BTreeMap::new();
+    for (raw, &count) in &profile.counts {
+        let g = canonicalize(raw);
+        let eff = g.weight * count;
+        let class = classify_str(&g.key);
+        if class.is_global_mem() {
+            for (level, frac) in assumed.split_for(class) {
+                if frac > 0.0 {
+                    let comp = format!("gmem_{}", level.tag());
+                    *out.entry(comp).or_insert(0.0) += eff * frac;
+                }
+            }
+        } else {
+            *out.entry(component_of(&g.key)).or_insert(0.0) += eff;
+        }
+    }
+    out
+}
+
+/// Train the component model on the reference V100 environment.
+pub fn train_reference(seed: u64) -> AccelWattchModel {
+    let cfg = ArchConfig::ref_v100();
+    let mut dev = Device::new(cfg, seed);
+    let bench_secs = 120.0;
+
+    // Idle power from a NANOSLEEP run (AccelWattch folds constant+static
+    // into one idle component).
+    let ns = dev.run(&nanosleep_bench(), Some(bench_secs));
+    let idle = stats::mean(&ns.telemetry.powers());
+    dev.cooldown(60.0);
+
+    // One run per microbenchmark; mean power over the FULL trace (no
+    // steady-state discipline — one of the methodology gaps Wattchmen
+    // fixes, §3.3).
+    let benches = suite(dev.cfg.gen);
+    let mut rows: Vec<BTreeMap<String, f64>> = Vec::new();
+    let mut rhs: Vec<f64> = Vec::new();
+    let mut components: Vec<String> = Vec::new();
+    for bench in &benches {
+        let rec = dev.run(&bench.kernel, Some(bench_secs));
+        let p_mean = stats::mean(&rec.telemetry.powers());
+        let counts = component_counts(&rec.profile);
+        let duration = rec.profile.duration_s;
+        let mut rates = BTreeMap::new();
+        for (comp, count) in counts {
+            if !components.contains(&comp) {
+                components.push(comp.clone());
+            }
+            rates.insert(comp, count / duration);
+        }
+        rows.push(rates);
+        rhs.push((p_mean - idle).max(0.0));
+        dev.cooldown(20.0);
+    }
+    components.sort();
+
+    // Constrained least squares: P_dyn = Σ rate_c × coeff_c, coeff ≥ 0.
+    let mat_rows: Vec<Vec<f64>> = rows
+        .iter()
+        .map(|r| {
+            components
+                .iter()
+                .map(|c| r.get(c).copied().unwrap_or(0.0) * 1e-9) // rate in G-instr/s
+                .collect()
+        })
+        .collect();
+    let (x, _res) = nnls(&Mat::from_rows(&mat_rows), &rhs);
+    let coeffs: BTreeMap<String, f64> = components
+        .iter()
+        .cloned()
+        .zip(x.iter().copied())
+        .collect();
+    let zeroed = components
+        .iter()
+        .filter(|c| coeffs[*c] == 0.0)
+        .cloned()
+        .collect();
+    AccelWattchModel {
+        idle_power_w: idle,
+        coeffs,
+        zeroed_components: zeroed,
+    }
+}
+
+/// The reference part's TDP [W]: AccelWattch's DVFS/power model clamps
+/// its predictions to the board power of the GPU it was validated on
+/// (250 W), which is wrong on the 300 W CloudLab part (§2.3.1).
+pub const REF_TDP_W: f64 = 250.0;
+
+impl AccelWattchModel {
+    /// Predicted average power for one kernel profile [W].
+    pub fn predict_power_w(&self, profile: &KernelProfile) -> f64 {
+        let counts = component_counts(profile);
+        // AccelWattch scales its constant/static component with the active
+        // SM fraction reported by the profiler.
+        let mut p = self.idle_power_w * (0.55 + 0.45 * profile.occupancy);
+        for (comp, count) in counts {
+            if let Some(c) = self.coeffs.get(&comp) {
+                p += (count / profile.duration_s) * 1e-9 * c;
+            }
+        }
+        p.min(REF_TDP_W)
+    }
+
+    /// AccelWattch derives kernel durations from its GPGPU-Sim performance
+    /// model, not from the target part: the reference 1417 MHz clock (the
+    /// CloudLab part boosts to 1530 MHz) plus per-kernel simulation error.
+    /// The error is deterministic per kernel (a simulator mispredicts the
+    /// same kernel the same way every run).
+    fn sim_duration_s(&self, profile: &KernelProfile) -> f64 {
+        let clock_ratio = 1530.0 / 1417.0;
+        let h = crate::util::prng::fnv1a(&profile.name) % 1000;
+        let sim_err = 0.36 + 0.82 * (h as f64 / 999.0); // [0.36, 1.18]
+        profile.duration_s * clock_ratio * sim_err
+    }
+
+    /// Predicted energy for an application [J]: per-kernel average power ×
+    /// simulator-estimated execution time (§4.3 "Configurations").
+    pub fn predict_energy_j(&self, profiles: &[KernelProfile]) -> f64 {
+        profiles
+            .iter()
+            .map(|p| self.predict_power_w(p) * self.sim_duration_s(p))
+            .sum()
+    }
+}
+
+/// Convenience: level tags used by the component model.
+pub fn mem_levels() -> [MemLevel; 3] {
+    MemLevel::all()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::profiler::profile_app;
+    use crate::workloads;
+    use crate::isa::Gen;
+
+    fn model() -> AccelWattchModel {
+        train_reference(2024)
+    }
+
+    #[test]
+    fn coefficients_are_nonnegative_and_fp64_heavy() {
+        let m = model();
+        assert!(m.coeffs.values().all(|&c| c >= 0.0));
+        assert!(m.coeffs["fp64"] > m.coeffs["fp32"]);
+        // The assumed-hit-rate training misattributes cache-level energy —
+        // the documented "zero power for data caches" fragility means the
+        // DRAM/L1 ordering is NOT guaranteed (unlike Wattchmen's table).
+    }
+
+    #[test]
+    fn cooling_blind_identical_predictions() {
+        // The model has no environment input: same profile → same energy
+        // regardless of air/water (§5.2.1).
+        let m = model();
+        let air = ArchConfig::cloudlab_v100();
+        let water = ArchConfig::summit_v100();
+        let w = workloads::rodinia::hotspot(Gen::Volta);
+        let p_air = profile_app(&air, &w.kernels);
+        let p_water = profile_app(&water, &w.kernels);
+        let e_air = m.predict_energy_j(&p_air);
+        let e_water = m.predict_energy_j(&p_water);
+        assert!((e_air - e_water).abs() / e_air < 1e-9);
+    }
+
+    #[test]
+    fn prediction_scales_with_duration() {
+        let m = model();
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = workloads::rodinia::srad_v1(Gen::Volta);
+        let mut profiles = profile_app(&cfg, &w.kernels);
+        let e1 = m.predict_energy_j(&profiles);
+        for p in &mut profiles {
+            p.duration_s *= 2.0;
+            for c in p.counts.values_mut() {
+                *c *= 2.0;
+            }
+        }
+        let e2 = m.predict_energy_j(&profiles);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Comparison baselines: AccelWattch (component power model, §2.3.1) and
+//! Guser (max-power amortization, §4.3).  Both consume only telemetry +
+//! profiles — never the simulator's hidden ground truth.
+
+pub mod accelwattch;
+pub mod guser;
+
+pub use accelwattch::{train_reference as train_accelwattch, AccelWattchModel};
+pub use guser::{train as train_guser, GuserModel};

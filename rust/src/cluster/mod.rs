@@ -1,0 +1,147 @@
+//! Multi-GPU profiling campaigns: the paper profiles on clusters
+//! (CloudLab 12×V100, Summit, Lonestar6); a campaign's benchmarks are
+//! independent, so they shard across devices.
+//!
+//! Worker threads each own a simulated device and collect raw benchmark
+//! captures; the coordinator thread reduces them (PJRT batched integration
+//! — the artifacts are not Sync, so they stay on the coordinator) and
+//! solves the system once.  (tokio is unavailable offline — DESIGN.md
+//! §Offline-crate-substitutions — so this is a std::thread pool.)
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::device::Device;
+use crate::microbench::{suite, BenchSpec};
+use crate::model::train::{
+    assemble_and_solve, calibrate_base_power, collect_bench, reduce_benches, RawBenchData,
+    TrainConfig, TrainResult,
+};
+use crate::runtime::Artifacts;
+
+/// Campaign over `n_gpus` simulated devices.
+pub struct ClusterCampaign {
+    pub cfg: ArchConfig,
+    pub n_gpus: usize,
+    pub seed: u64,
+}
+
+impl ClusterCampaign {
+    pub fn new(cfg: ArchConfig, n_gpus: usize, seed: u64) -> Self {
+        assert!(n_gpus > 0);
+        ClusterCampaign { cfg, n_gpus, seed }
+    }
+
+    /// Round-robin shard of the benchmark suite for one worker.
+    fn shard(&self, worker: usize) -> Vec<BenchSpec> {
+        suite(self.cfg.gen)
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % self.n_gpus == worker)
+            .map(|(_, b)| b)
+            .collect()
+    }
+
+    /// Run the full distributed campaign and train the table.
+    pub fn train(&self, tc: &TrainConfig, arts: Option<&Artifacts>) -> Result<TrainResult> {
+        // Base-power calibration on GPU 0 (all devices are the same SKU).
+        let mut dev0 = Device::new(self.cfg.clone(), self.seed);
+        let (const_power, static_power) = calibrate_base_power(&mut dev0, tc);
+
+        let (tx, rx) = mpsc::channel::<(usize, Vec<RawBenchData>)>();
+        thread::scope(|scope| {
+            for worker in 0..self.n_gpus {
+                let benches = self.shard(worker);
+                let cfg = self.cfg.clone();
+                let tc = tc.clone();
+                let tx = tx.clone();
+                let seed = self.seed.wrapping_add(1 + worker as u64);
+                scope.spawn(move || {
+                    let mut dev = Device::new(cfg, seed);
+                    let raws: Vec<RawBenchData> = benches
+                        .iter()
+                        .map(|b| collect_bench(&mut dev, b, &tc))
+                        .collect();
+                    let _ = tx.send((worker, raws));
+                });
+            }
+        });
+        drop(tx);
+
+        // Deterministic merge order regardless of thread completion order.
+        let mut by_worker: Vec<(usize, Vec<RawBenchData>)> = rx.iter().collect();
+        by_worker.sort_by_key(|(w, _)| *w);
+        let mut raws: Vec<RawBenchData> =
+            by_worker.into_iter().flat_map(|(_, r)| r).collect();
+        raws.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let measurements = reduce_benches(&raws, arts)?;
+        assemble_and_solve(&self.cfg.name, const_power, static_power, measurements, arts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tc() -> TrainConfig {
+        TrainConfig {
+            reps: 1,
+            bench_secs: 45.0,
+            cooldown_secs: 10.0,
+            idle_secs: 15.0,
+            cov_threshold: 0.02,
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_suite() {
+        let c = ClusterCampaign::new(ArchConfig::cloudlab_v100(), 4, 1);
+        let total: usize = (0..4).map(|w| c.shard(w).len()).sum();
+        assert_eq!(total, suite(c.cfg.gen).len());
+        // No benchmark in two shards.
+        let mut names: Vec<String> = (0..4)
+            .flat_map(|w| c.shard(w).into_iter().map(|b| b.name))
+            .collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), suite(c.cfg.gen).len());
+    }
+
+    #[test]
+    fn cluster_training_matches_single_device_closely() {
+        let tc = tc();
+        let cluster = ClusterCampaign::new(ArchConfig::cloudlab_v100(), 4, 5);
+        let r_cluster = cluster.train(&tc, None).unwrap();
+        let mut dev = Device::new(ArchConfig::cloudlab_v100(), 6);
+        let r_single = crate::model::train::train(&mut dev, None, &tc).unwrap();
+        assert_eq!(r_cluster.columns, r_single.columns);
+        // Same physics, different noise streams: tables agree to a few %.
+        let mut close = 0;
+        let mut total = 0;
+        for (k, &e) in &r_cluster.table.entries {
+            let e2 = r_single.table.entries[k];
+            if e.max(e2) > 0.05 {
+                total += 1;
+                if (e - e2).abs() / e.max(e2) < 0.25 {
+                    close += 1;
+                }
+            }
+        }
+        assert!(
+            close as f64 / total as f64 > 0.85,
+            "only {close}/{total} columns agree"
+        );
+    }
+
+    #[test]
+    fn single_gpu_cluster_is_just_training() {
+        let c = ClusterCampaign::new(ArchConfig::cloudlab_v100(), 1, 9);
+        let r = c.train(&tc(), None).unwrap();
+        assert_eq!(r.columns.len(), 90);
+        assert!(r.residual < 0.1);
+    }
+}

@@ -1,0 +1,260 @@
+//! Device + environment configuration: the four evaluated systems from
+//! paper Table 2 plus AccelWattch's *reference* V100 environment.
+//!
+//! The reproduction's substitution for real clusters: each `ArchConfig` is
+//! a simulated GPU with its own TDP, clocks, cooling loop, and sensor
+//! behaviour.  The differences between `cloudlab_v100` and `ref_v100`
+//! mirror the mismatches the paper calls out in §2.3.1 (300 W vs 250 W TDP,
+//! 1530 vs 1417 MHz, 16 vs 32 GB) and are what break AccelWattch.
+
+use crate::isa::Gen;
+
+/// Cooling loop model: lumped thermal resistance/capacitance to ambient.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cooling {
+    pub kind: CoolingKind,
+    /// Thermal resistance die→coolant [°C/W].
+    pub r_th: f64,
+    /// Thermal capacitance [J/°C] (sets the warm-up time constant).
+    pub c_th: f64,
+    /// Coolant / ambient temperature [°C].
+    pub t_ambient: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoolingKind {
+    Air,
+    Water,
+}
+
+impl Cooling {
+    pub fn air() -> Cooling {
+        // τ = r*c ≈ 56 s: steady state well inside a 180 s run.
+        Cooling {
+            kind: CoolingKind::Air,
+            r_th: 0.22,
+            c_th: 220.0,
+            t_ambient: 27.0,
+        }
+    }
+
+    pub fn water() -> Cooling {
+        Cooling {
+            kind: CoolingKind::Water,
+            r_th: 0.09,
+            c_th: 280.0,
+            t_ambient: 18.0,
+        }
+    }
+}
+
+/// One simulated GPU model in one deployment environment.
+#[derive(Clone, Debug)]
+pub struct ArchConfig {
+    pub name: String,
+    pub gen: Gen,
+    pub sm_count: u32,
+    /// Boost clock the device runs at when not power-throttled [GHz].
+    pub clock_ghz: f64,
+    /// Reference clock for the generation's energy calibration [GHz];
+    /// per-op energy scales as (clock/clock_ref)^2 (≈ V² at the top bins).
+    pub clock_ref_ghz: f64,
+    /// Board power cap [W]; exceeding it engages DVFS throttling.
+    pub tdp_w: f64,
+    /// Lowest-power-state draw [W] (paper: "constant" power).
+    pub const_power_w: f64,
+    /// Active-but-idle power above constant at t_ref, all SMs on [W]
+    /// (paper §3.3.1 cites ~80 W for Summit V100s incl. constant).
+    pub static_power_w: f64,
+    /// Fraction of static power burned even when an SM has no resident
+    /// work (clock gating is imperfect).
+    pub static_floor: f64,
+    /// Fractional static-power increase per °C above `t_ref_c` (leakage).
+    pub leakage_per_c: f64,
+    pub t_ref_c: f64,
+    pub cooling: Cooling,
+    pub dram_bw_gbs: f64,
+    pub mem_gb: u32,
+    /// NVML emulation: sample period [s], power quantization [W],
+    /// multiplicative gaussian sensor noise (σ as a fraction).
+    pub nvml_period_s: f64,
+    pub nvml_quant_w: f64,
+    pub nvml_noise_frac: f64,
+    /// Issue-overlap discount strength δ: effective dynamic energy is
+    /// scaled by 1 − δ·(1 − Σ fᵢ²) for instruction mix fractions fᵢ.
+    pub overlap_delta: f64,
+}
+
+impl ArchConfig {
+    /// CloudLab's air-cooled V100 (Fig 1 / Fig 6 system).
+    pub fn cloudlab_v100() -> ArchConfig {
+        ArchConfig {
+            name: "cloudlab-v100".into(),
+            gen: Gen::Volta,
+            sm_count: 80,
+            clock_ghz: 1.530,
+            clock_ref_ghz: 1.380,
+            tdp_w: 300.0,
+            const_power_w: 38.0,
+            static_power_w: 40.0,
+            static_floor: 0.25,
+            leakage_per_c: 0.016,
+            t_ref_c: 46.0,
+            cooling: Cooling::air(),
+            dram_bw_gbs: 900.0,
+            mem_gb: 16,
+            nvml_period_s: 0.1,
+            nvml_quant_w: 1.0,
+            nvml_noise_frac: 0.008,
+            overlap_delta: 0.02,
+        }
+    }
+
+    /// Summit's water-cooled V100 (Fig 7 system).
+    pub fn summit_v100() -> ArchConfig {
+        ArchConfig {
+            name: "summit-v100".into(),
+            cooling: Cooling::water(),
+            mem_gb: 16,
+            ..ArchConfig::cloudlab_v100()
+        }
+    }
+
+    /// AccelWattch's validated reference V100 environment (§2.3.1): lower
+    /// TDP, lower boost clock, 32 GB board, slightly different board power.
+    pub fn ref_v100() -> ArchConfig {
+        ArchConfig {
+            name: "ref-v100".into(),
+            clock_ghz: 1.417,
+            tdp_w: 250.0,
+            const_power_w: 35.0,
+            static_power_w: 40.0,
+            mem_gb: 32,
+            cooling: Cooling {
+                // Same air class but a different heatsink/chassis.
+                r_th: 0.19,
+                ..Cooling::air()
+            },
+            ..ArchConfig::cloudlab_v100()
+        }
+    }
+
+    /// Lonestar6 air-cooled A100.
+    pub fn lonestar_a100() -> ArchConfig {
+        ArchConfig {
+            name: "lonestar-a100".into(),
+            gen: Gen::Ampere,
+            sm_count: 108,
+            clock_ghz: 1.410,
+            clock_ref_ghz: 1.410,
+            tdp_w: 400.0,
+            const_power_w: 48.0,
+            static_power_w: 48.0,
+            static_floor: 0.24,
+            leakage_per_c: 0.012,
+            t_ref_c: 44.0,
+            cooling: Cooling::air(),
+            dram_bw_gbs: 1555.0,
+            mem_gb: 40,
+            nvml_period_s: 0.1,
+            nvml_quant_w: 1.0,
+            nvml_noise_frac: 0.008,
+            overlap_delta: 0.02,
+        }
+    }
+
+    /// Lonestar6 air-cooled H100 (PCIe class).
+    pub fn lonestar_h100() -> ArchConfig {
+        ArchConfig {
+            name: "lonestar-h100".into(),
+            gen: Gen::Hopper,
+            sm_count: 114,
+            clock_ghz: 1.755,
+            clock_ref_ghz: 1.755,
+            tdp_w: 350.0,
+            const_power_w: 55.0,
+            static_power_w: 54.0,
+            static_floor: 0.22,
+            leakage_per_c: 0.011,
+            t_ref_c: 43.0,
+            cooling: Cooling::air(),
+            dram_bw_gbs: 2000.0,
+            mem_gb: 80,
+            nvml_period_s: 0.1,
+            nvml_quant_w: 1.0,
+            nvml_noise_frac: 0.008,
+            overlap_delta: 0.02,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ArchConfig> {
+        match name {
+            "cloudlab-v100" | "v100" | "v100-air" => Some(ArchConfig::cloudlab_v100()),
+            "summit-v100" | "v100-water" => Some(ArchConfig::summit_v100()),
+            "ref-v100" => Some(ArchConfig::ref_v100()),
+            "lonestar-a100" | "a100" => Some(ArchConfig::lonestar_a100()),
+            "lonestar-h100" | "h100" => Some(ArchConfig::lonestar_h100()),
+            _ => None,
+        }
+    }
+
+    /// Per-op dynamic-energy multiplier for this environment's clock bin.
+    /// Voltage rises superlinearly through the top frequency bins, so the
+    /// effective per-op energy scales steeper than f² between bins.
+    pub fn clock_energy_factor(&self) -> f64 {
+        (self.clock_ghz / self.clock_ref_ghz).powf(2.6)
+    }
+
+    /// Static power at temperature `t_c` with `occ` of SMs holding work.
+    pub fn static_power_at(&self, t_c: f64, occ: f64) -> f64 {
+        let occ_factor = self.static_floor + (1.0 - self.static_floor) * occ.clamp(0.0, 1.0);
+        let thermal = 1.0 + self.leakage_per_c * (t_c - self.t_ref_c);
+        self.static_power_w * occ_factor * thermal.max(0.2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for n in ["cloudlab-v100", "summit-v100", "ref-v100", "a100", "h100"] {
+            assert!(ArchConfig::by_name(n).is_some(), "{n}");
+        }
+        assert!(ArchConfig::by_name("mi300").is_none());
+    }
+
+    #[test]
+    fn cloudlab_vs_ref_mismatch_matches_paper() {
+        let cl = ArchConfig::cloudlab_v100();
+        let rf = ArchConfig::ref_v100();
+        assert_eq!(cl.tdp_w, 300.0);
+        assert_eq!(rf.tdp_w, 250.0);
+        assert!(cl.clock_ghz > rf.clock_ghz);
+        assert_eq!(cl.mem_gb, 16);
+        assert_eq!(rf.mem_gb, 32);
+        // CloudLab's higher clock bin costs more energy per op.
+        assert!(cl.clock_energy_factor() > rf.clock_energy_factor());
+    }
+
+    #[test]
+    fn water_cooling_runs_cooler() {
+        let air = Cooling::air();
+        let water = Cooling::water();
+        // At 200 W steady: ΔT = P * r.
+        assert!(200.0 * water.r_th < 200.0 * air.r_th);
+    }
+
+    #[test]
+    fn static_power_scales_with_temp_and_occupancy() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let hot = cfg.static_power_at(cfg.t_ref_c + 20.0, 1.0);
+        let ref_t = cfg.static_power_at(cfg.t_ref_c, 1.0);
+        let cold = cfg.static_power_at(cfg.t_ref_c - 20.0, 1.0);
+        assert!(hot > ref_t && ref_t > cold);
+        let low_occ = cfg.static_power_at(cfg.t_ref_c, 0.2);
+        assert!(low_occ < ref_t);
+        assert!(low_occ >= cfg.static_power_w * cfg.static_floor * 0.9);
+    }
+}

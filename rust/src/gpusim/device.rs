@@ -1,0 +1,309 @@
+//! The simulated GPU device: executes kernel specs against the hidden
+//! energy model + thermal/DVFS dynamics and produces NVML-style telemetry
+//! plus NSight-style profiles.
+
+use crate::isa::class::classify_str;
+use crate::util::prng::Rng;
+
+use super::config::ArchConfig;
+use super::energy::true_energy_nj;
+use super::kernel::KernelSpec;
+use super::profiler::{self, KernelProfile};
+use super::telemetry::{sensor_read, Sample, Telemetry};
+use super::thermal::ThermalState;
+use super::timing;
+
+/// Result of executing one kernel (or an idle window) on the device.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub telemetry: Telemetry,
+    pub profile: KernelProfile,
+    /// Actual wall duration [s] (post-DVFS).
+    pub duration_s: f64,
+    /// Did the run hit the power cap?
+    pub throttled: bool,
+}
+
+pub struct Device {
+    pub cfg: ArchConfig,
+    thermal: ThermalState,
+    rng: Rng,
+}
+
+impl Device {
+    pub fn new(cfg: ArchConfig, seed: u64) -> Device {
+        let thermal = ThermalState::at_ambient(&cfg.cooling);
+        Device {
+            cfg,
+            thermal,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn temperature_c(&self) -> f64 {
+        self.thermal.t_c
+    }
+
+    /// TRUE total dynamic energy of a kernel [J] — internal only.
+    fn true_dynamic_energy_j(&self, spec: &KernelSpec) -> f64 {
+        let mut nj = 0.0;
+        for (op, count) in spec.total_counts() {
+            let class = classify_str(&op);
+            if class.is_global_mem() {
+                for (level, frac) in spec.mem.split_for(class) {
+                    if frac > 0.0 {
+                        nj += count * frac * true_energy_nj(&self.cfg, &op, Some(level));
+                    }
+                }
+            } else {
+                nj += count * true_energy_nj(&self.cfg, &op, None);
+            }
+        }
+        // Issue-overlap discount: diverse mixes overlap execution and spend
+        // slightly less energy per instruction than homogeneous streams.
+        let discount = 1.0 - self.cfg.overlap_delta * (1.0 - spec.mix_concentration());
+        nj * discount * 1e-9
+    }
+
+    /// Let the device sit idle (clock-gated, constant power only) without
+    /// recording telemetry — the inter-experiment cooldown (§6 Profiler
+    /// Overhead: "60 seconds after the run completes to cool down").
+    pub fn cooldown(&mut self, secs: f64) {
+        let dt = self.cfg.nvml_period_s;
+        let steps = (secs / dt).ceil() as usize;
+        for _ in 0..steps {
+            self.thermal.step(&self.cfg.cooling, self.cfg.const_power_w, dt);
+        }
+    }
+
+    /// Record an idle window (lowest power state) — used to calibrate
+    /// constant power (§3.3.1).
+    pub fn idle(&mut self, secs: f64) -> Telemetry {
+        let mut tel = Telemetry {
+            period_s: self.cfg.nvml_period_s,
+            ..Telemetry::default()
+        };
+        let dt = self.cfg.nvml_period_s;
+        let steps = (secs / dt).ceil() as usize;
+        for i in 0..steps {
+            let p_true = self.cfg.const_power_w;
+            self.thermal.step(&self.cfg.cooling, p_true, dt);
+            tel.energy_counter_j += p_true * dt;
+            tel.samples.push(Sample {
+                t_s: i as f64 * dt,
+                power_w: sensor_read(
+                    p_true,
+                    self.cfg.nvml_quant_w,
+                    self.cfg.nvml_noise_frac,
+                    &mut self.rng,
+                ),
+                util_pct: 0.0,
+                temp_c: self.thermal.t_c,
+            });
+        }
+        tel
+    }
+
+    /// Execute a kernel.  If `target_secs` is set, the spec's iteration
+    /// count is rescaled so the run lasts approximately that long (the
+    /// microbenchmark "user-defined iteration count", §3.2).
+    pub fn run(&mut self, spec: &KernelSpec, target_secs: Option<f64>) -> RunRecord {
+        let mut spec = spec.clone();
+        let nominal = timing::duration_s(&self.cfg, &spec);
+        if let Some(target) = target_secs {
+            if nominal > 0.0 {
+                spec.iters *= target / nominal;
+            }
+        }
+        // Run-to-run duration jitter (clock dithering, scheduling).
+        let jitter = 1.0 + 0.003 * self.rng.normal();
+        let mut duration = timing::duration_s(&self.cfg, &spec) * jitter.max(0.9);
+        let e_dyn = self.true_dynamic_energy_j(&spec);
+        let mut p_dyn = if duration > 0.0 { e_dyn / duration } else { 0.0 };
+
+        // DVFS power capping: find the throttle factor s (clock multiplier)
+        // such that const + static(T_steady) + p_dyn * s^3 <= TDP.
+        let mut throttled = false;
+        let mut s = 1.0f64;
+        for _ in 0..4 {
+            let t_guess = ThermalState::steady(
+                &self.cfg.cooling,
+                self.cfg.const_power_w
+                    + self.cfg.static_power_at(self.thermal.t_c, spec.occupancy)
+                    + p_dyn * s.powi(3),
+            );
+            let p_stat = self.cfg.static_power_at(t_guess, spec.occupancy);
+            let headroom = self.cfg.tdp_w - self.cfg.const_power_w - p_stat;
+            if p_dyn > 0.0 && p_dyn * s.powi(2) > headroom && headroom > 0.0 {
+                s = (headroom / p_dyn).sqrt().min(1.0);
+                throttled = true;
+            }
+        }
+        if throttled {
+            // Near the cap the voltage regulator sits at its floor, so
+            // per-op energy only falls ∝ s (not s²): E ∝ s, t ∝ 1/s ⇒
+            // P ∝ s².
+            duration /= s;
+            p_dyn *= s.powi(2);
+        }
+
+        // Step the thermal + telemetry loop.
+        let dt = self.cfg.nvml_period_s;
+        let steps = (duration / dt).ceil().max(1.0) as usize;
+        let mut tel = Telemetry {
+            period_s: dt,
+            ..Telemetry::default()
+        };
+        tel.samples.reserve(steps);
+        for i in 0..steps {
+            let p_static = self
+                .cfg
+                .static_power_at(self.thermal.t_c, spec.occupancy);
+            let p_true = self.cfg.const_power_w + p_static + p_dyn;
+            self.thermal.step(&self.cfg.cooling, p_true, dt);
+            let step_len = dt.min(duration - i as f64 * dt).max(0.0);
+            tel.energy_counter_j += p_true * step_len;
+            tel.samples.push(Sample {
+                t_s: i as f64 * dt,
+                power_w: sensor_read(
+                    p_true,
+                    self.cfg.nvml_quant_w,
+                    self.cfg.nvml_noise_frac,
+                    &mut self.rng,
+                ),
+                util_pct: 100.0 * spec.occupancy,
+                temp_c: self.thermal.t_c,
+            });
+        }
+
+        let mut profile = profiler::profile(&self.cfg, &spec);
+        profile.duration_s = duration; // NSight reports the achieved time
+        RunRecord {
+            telemetry: tel,
+            profile,
+            duration_s: duration,
+            throttled,
+        }
+    }
+
+    /// Execute a whole application (sequence of kernels, optionally
+    /// repeated) and return the concatenated record per kernel.
+    pub fn run_app(&mut self, kernels: &[KernelSpec]) -> Vec<RunRecord> {
+        kernels.iter().map(|k| self.run(k, None)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::MemBehavior;
+    use crate::util::stats;
+
+    fn dev() -> Device {
+        Device::new(ArchConfig::cloudlab_v100(), 42)
+    }
+
+    fn ffma_bench() -> KernelSpec {
+        KernelSpec::new("ffma", vec![("FFMA".into(), 1.0)])
+            .with_iters(1e9)
+            .with_issue_eff(0.45)
+    }
+
+    #[test]
+    fn idle_power_is_constant_power() {
+        let mut d = dev();
+        let tel = d.idle(30.0);
+        let mean = tel.mean_power_w();
+        assert!((mean - d.cfg.const_power_w).abs() < 1.5, "mean {mean}");
+    }
+
+    #[test]
+    fn nanosleep_run_shows_const_plus_static() {
+        let mut d = dev();
+        let spec = KernelSpec::new("sleep", vec![("NANOSLEEP".into(), 1.0)]).with_iters(1e6);
+        let rec = d.run(&spec, Some(120.0));
+        let mean = rec.telemetry.mean_power_w();
+        let expect = d.cfg.const_power_w + d.cfg.static_power_w; // ~T_ref-ish
+        assert!(
+            (mean - expect).abs() < 12.0,
+            "mean {mean} expect≈{expect}"
+        );
+    }
+
+    #[test]
+    fn target_secs_controls_duration() {
+        let mut d = dev();
+        let rec = d.run(&ffma_bench(), Some(60.0));
+        assert!((rec.duration_s - 60.0).abs() < 2.0, "{}", rec.duration_s);
+        assert_eq!(rec.telemetry.samples.len(), (rec.duration_s / 0.1).ceil() as usize);
+    }
+
+    #[test]
+    fn energy_counter_close_to_trace_integration() {
+        let mut d = dev();
+        let rec = d.run(&ffma_bench(), Some(90.0));
+        let integrated = stats::trapz(&rec.telemetry.powers(), 0.1);
+        let diff = (integrated - rec.telemetry.energy_counter_j).abs()
+            / rec.telemetry.energy_counter_j;
+        // Paper §3.3: integration vs counter differ < 1 %.
+        assert!(diff < 0.01, "diff {diff}");
+    }
+
+    #[test]
+    fn power_reaches_steady_state() {
+        let mut d = dev();
+        let rec = d.run(&ffma_bench(), Some(180.0));
+        let p = rec.telemetry.powers();
+        let tail = &p[p.len() - 200..];
+        assert!(stats::cov(tail) < 0.02, "cov {}", stats::cov(tail));
+        // Warm-up should be visible: early power below late power.
+        let head = stats::mean(&p[..50]);
+        assert!(stats::mean(tail) > head, "no warmup visible");
+    }
+
+    #[test]
+    fn dvfs_throttles_power_hungry_kernels() {
+        let mut d = dev();
+        // A dense FP64+tensor mix pushed way past TDP.
+        let spec = KernelSpec::new(
+            "hot",
+            vec![("DFMA".into(), 4.0), ("HMMA.884.F32.STEP0".into(), 4.0)],
+        )
+        .with_iters(3e9)
+        .with_issue_eff(1.0);
+        let rec = d.run(&spec, Some(60.0));
+        assert!(rec.throttled);
+        let peak = rec
+            .telemetry
+            .powers()
+            .iter()
+            .cloned()
+            .fold(f64::MIN, f64::max);
+        assert!(peak <= d.cfg.tdp_w * 1.03, "peak {peak}");
+    }
+
+    #[test]
+    fn water_cooling_lowers_measured_energy() {
+        let spec = ffma_bench();
+        let mut air = Device::new(ArchConfig::cloudlab_v100(), 7);
+        let mut water = Device::new(ArchConfig::summit_v100(), 7);
+        // Warm both up first so leakage differences show.
+        air.run(&spec, Some(60.0));
+        water.run(&spec, Some(60.0));
+        let e_air = air.run(&spec, Some(120.0)).telemetry.energy_counter_j;
+        let e_water = water.run(&spec, Some(120.0)).telemetry.energy_counter_j;
+        let drop = (e_air - e_water) / e_air;
+        assert!(drop > 0.03 && drop < 0.30, "drop {drop}");
+    }
+
+    #[test]
+    fn low_occupancy_burns_less_static_power() {
+        let mut d = dev();
+        let full = KernelSpec::new("f", vec![("NANOSLEEP".into(), 1.0)]).with_iters(1e6);
+        let low = full.clone().with_occupancy(0.25);
+        let p_full = d.run(&full, Some(60.0)).telemetry.mean_power_w();
+        d.cooldown(120.0);
+        let p_low = d.run(&low, Some(60.0)).telemetry.mean_power_w();
+        assert!(p_low < p_full - 10.0, "{p_low} vs {p_full}");
+    }
+}

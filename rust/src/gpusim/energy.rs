@@ -1,0 +1,232 @@
+//! HIDDEN ground-truth per-instruction energy model.
+//!
+//! This is the "physics" of the simulated GPUs.  The Wattchmen trainer, the
+//! baselines, and the predictor must NEVER call into this module — they see
+//! only NVML-style telemetry and profiler histograms (enforced by module
+//! discipline; `model/`, `baselines/` have no `use crate::gpusim::energy`).
+//!
+//! Energies are per warp-level instruction in nanojoules, composed of:
+//!   class base (Volta calibration)
+//!   × deterministic per-opcode jitter   (hash of the opcode string)
+//!   × generation process scale          (Volta 1.0 / Ampere 0.8 / Hopper 0.68)
+//!   × environment clock-bin factor      ((f/f_ref)² ≈ V² scaling)
+//! Memory operations instead use fixed-per-access + per-byte costs per
+//! hierarchy level; tensor ops have per-shape costs.
+
+use crate::isa::class::{classify, InstrClass, MemLevel};
+use crate::isa::opcode::Opcode;
+use crate::util::prng::fnv1a;
+
+use super::config::ArchConfig;
+
+/// Deterministic per-opcode jitter in [0.86, 1.14] — real instruction
+/// energies are not exactly class-uniform.
+fn opcode_jitter(opcode: &str) -> f64 {
+    let h = fnv1a(opcode) % 10_000;
+    0.86 + 0.28 * (h as f64 / 9_999.0)
+}
+
+/// Volta-calibrated class base energies [nJ per warp instruction].
+fn class_base_nj(class: InstrClass) -> f64 {
+    use InstrClass::*;
+    match class {
+        IntAlu => 0.80,
+        IntMul => 1.10,
+        Fp32 => 1.30,
+        Fp64 => 3.60,
+        Fp16 => 0.90,
+        Sfu => 2.60,
+        Conv => 1.40,
+        Move => 0.55,
+        Pred => 0.75,
+        Shuffle => 1.30,
+        Control => 0.70,
+        Sync => 0.45,
+        Uniform => 0.42,
+        ConstMem => 1.60,
+        LocalMem => 7.00,
+        Atomic => 10.00,
+        Sleep => 0.02,
+        Misc => 0.38,
+        // Memory + tensor handled by dedicated paths below; these values
+        // are only reached for unlevelled queries.
+        GlobalLoad => 4.0,
+        GlobalStore => 4.5,
+        SharedLoad => 1.9,
+        SharedStore => 2.1,
+        Tensor => 14.0,
+    }
+}
+
+/// Per-level access costs for global memory: (fixed nJ, nJ per byte).
+fn level_cost(level: MemLevel, is_store: bool) -> (f64, f64) {
+    match (level, is_store) {
+        (MemLevel::L1, false) => (1.2, 0.006),
+        (MemLevel::L1, true) => (1.3, 0.007), // write-through allocate
+        (MemLevel::L2, false) => (2.8, 0.022),
+        (MemLevel::L2, true) => (2.6, 0.020),
+        (MemLevel::Dram, false) => (5.5, 0.045),
+        (MemLevel::Dram, true) => (5.0, 0.038),
+    }
+}
+
+/// Conversion specials: F2F involving FP64 runs on the FP64 pipe.
+fn conv_special(op: &Opcode) -> Option<f64> {
+    if op.base == "F2F" && op.mods.iter().any(|m| m == "F64") {
+        return Some(2.40);
+    }
+    None
+}
+
+/// Tensor-op energies (Volta-calibrated per logical issue; V100 HMMA steps
+/// are per-step — four steps make one logical 8x8x4 MMA).
+fn tensor_base_nj(op: &Opcode) -> f64 {
+    match op.base.as_str() {
+        "HMMA" => {
+            if op.mods.iter().any(|m| m == "884") {
+                // Per .STEPn micro-instruction (128 FLOP each): Volta
+                // tensor cores land around 25 pJ/FLOP.
+                if op.mods.iter().any(|m| m == "F32") {
+                    3.4
+                } else {
+                    2.9
+                }
+            } else {
+                // HMMA.16816 (Ampere+): one instruction, 4096 FLOP.
+                if op.mods.iter().any(|m| m == "F32") {
+                    10.0
+                } else {
+                    8.0
+                }
+            }
+        }
+        "DMMA" => 10.0,
+        "IMMA" => 5.0,
+        "BMMA" => 4.0,
+        // Warp-group MMA (Hopper): 64x64x16 = 131 kFLOP per instruction —
+        // two orders of magnitude more math per issue than HMMA.884.
+        "HGMMA" => {
+            if op.mods.iter().any(|m| m == "F32") {
+                85.0
+            } else {
+                75.0
+            }
+        }
+        "QGMMA" | "IGMMA" => 60.0,
+        // TMA copies: per-issue cost; bulk bytes are charged via DRAM path
+        // at the kernel level.
+        "UTMALDG" | "UTMASTG" => 25.0,
+        _ => 14.0,
+    }
+}
+
+/// Shared-memory access: fixed + per-byte.
+fn shared_cost(op: &Opcode) -> f64 {
+    1.45 + 0.0065 * op.warp_bytes()
+}
+
+/// TRUE energy of one warp-level instruction [nJ].
+///
+/// `level` must be `Some` for global loads/stores (the serviced level) and
+/// is ignored otherwise.
+pub fn true_energy_nj(cfg: &ArchConfig, opcode: &str, level: Option<MemLevel>) -> f64 {
+    let op = Opcode::parse(opcode);
+    let class = classify(&op);
+    let jitter = opcode_jitter(opcode);
+    let env = cfg.gen.energy_scale() * cfg.clock_energy_factor();
+
+    let base = match class {
+        InstrClass::GlobalLoad | InstrClass::GlobalStore => {
+            let is_store = class == InstrClass::GlobalStore;
+            let lvl = level.unwrap_or(MemLevel::L2);
+            let (fixed, per_byte) = level_cost(lvl, is_store);
+            fixed + per_byte * op.warp_bytes()
+        }
+        InstrClass::SharedLoad | InstrClass::SharedStore => shared_cost(&op),
+        InstrClass::Tensor => tensor_base_nj(&op),
+        InstrClass::Conv => conv_special(&op).unwrap_or_else(|| class_base_nj(class)),
+        c => class_base_nj(c),
+    };
+    base * jitter * env
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MemLevel;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::cloudlab_v100()
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = true_energy_nj(&cfg(), "FFMA", None);
+        let b = true_energy_nj(&cfg(), "FFMA", None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fp64_costs_more_than_fp32() {
+        let c = cfg();
+        assert!(
+            true_energy_nj(&c, "DFMA", None) > 2.0 * true_energy_nj(&c, "FFMA", None)
+        );
+    }
+
+    #[test]
+    fn memory_hierarchy_ordering() {
+        let c = cfg();
+        let l1 = true_energy_nj(&c, "LDG.E.64", Some(MemLevel::L1));
+        let l2 = true_energy_nj(&c, "LDG.E.64", Some(MemLevel::L2));
+        let dram = true_energy_nj(&c, "LDG.E.64", Some(MemLevel::Dram));
+        assert!(l1 < l2 && l2 < dram, "{l1} {l2} {dram}");
+    }
+
+    #[test]
+    fn wider_accesses_cost_more() {
+        let c = cfg();
+        for lvl in MemLevel::all() {
+            let e32 = true_energy_nj(&c, "LDG.E.32", Some(lvl));
+            let e128 = true_energy_nj(&c, "LDG.E.128", Some(lvl));
+            assert!(e128 > e32, "{lvl:?}");
+        }
+    }
+
+    #[test]
+    fn later_generations_more_efficient_per_op() {
+        let v = ArchConfig::cloudlab_v100();
+        let a = ArchConfig::lonestar_a100();
+        // Same clock_ref on A100 (factor 1.0) but 0.8 process scale; V100
+        // cloudlab runs a hot clock bin (factor > 1).
+        assert!(
+            true_energy_nj(&a, "FFMA", None) < true_energy_nj(&v, "FFMA", None)
+        );
+    }
+
+    #[test]
+    fn hgmma_is_two_orders_above_ffma() {
+        let h = ArchConfig::lonestar_h100();
+        let r = true_energy_nj(&h, "HGMMA.64x64x16.F16", None)
+            / true_energy_nj(&h, "FFMA", None);
+        assert!(r > 30.0, "ratio {r}");
+    }
+
+    #[test]
+    fn f2f_f64_uses_fp64_pipe_energy() {
+        let c = cfg();
+        assert!(
+            true_energy_nj(&c, "F2F.F64.F32", None)
+                > 2.0 * true_energy_nj(&c, "F2F.F32.F16", None)
+        );
+    }
+
+    #[test]
+    fn clock_bin_changes_energy_between_environments() {
+        let cl = ArchConfig::cloudlab_v100();
+        let rf = ArchConfig::ref_v100();
+        let e_cl = true_energy_nj(&cl, "FFMA", None);
+        let e_rf = true_energy_nj(&rf, "FFMA", None);
+        assert!(e_cl > 1.1 * e_rf, "{e_cl} vs {e_rf}");
+    }
+}

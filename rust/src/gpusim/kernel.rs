@@ -1,0 +1,214 @@
+//! Kernel workload description: the unit both the simulator executes and
+//! the profiler reports on.
+
+use std::collections::BTreeMap;
+
+use crate::isa::class::{classify_str, InstrClass, MemLevel};
+use crate::isa::opcode::Opcode;
+
+/// Cache behaviour of a kernel's global-memory accesses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemBehavior {
+    /// Fraction of global *loads* served by L1.
+    pub l1_hit: f64,
+    /// Of L1 misses (and all stores), the fraction served by L2.
+    pub l2_hit: f64,
+}
+
+impl MemBehavior {
+    pub fn new(l1_hit: f64, l2_hit: f64) -> MemBehavior {
+        assert!((0.0..=1.0).contains(&l1_hit), "l1_hit {l1_hit}");
+        assert!((0.0..=1.0).contains(&l2_hit), "l2_hit {l2_hit}");
+        MemBehavior { l1_hit, l2_hit }
+    }
+
+    /// Level split (L1, L2, DRAM fractions) for loads.
+    pub fn load_split(&self) -> [(MemLevel, f64); 3] {
+        let l1 = self.l1_hit;
+        let l2 = (1.0 - l1) * self.l2_hit;
+        [
+            (MemLevel::L1, l1),
+            (MemLevel::L2, l2),
+            (MemLevel::Dram, (1.0 - l1 - l2).max(0.0)),
+        ]
+    }
+
+    /// Level split for stores (write-through: never satisfied by L1).
+    pub fn store_split(&self) -> [(MemLevel, f64); 3] {
+        [
+            (MemLevel::L1, 0.0),
+            (MemLevel::L2, self.l2_hit),
+            (MemLevel::Dram, 1.0 - self.l2_hit),
+        ]
+    }
+
+    /// Split for a specific opcode class.
+    pub fn split_for(&self, class: InstrClass) -> [(MemLevel, f64); 3] {
+        if class == InstrClass::GlobalStore {
+            self.store_split()
+        } else {
+            self.load_split()
+        }
+    }
+}
+
+/// A GPU kernel as an instruction-mix specification.
+///
+/// `mix` counts are warp-level instructions per loop iteration summed over
+/// the whole grid; the effective totals are `mix * iters`.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub name: String,
+    pub mix: Vec<(String, f64)>,
+    pub iters: f64,
+    pub mem: MemBehavior,
+    /// Fraction of SMs with resident work.
+    pub occupancy: f64,
+    /// Achieved fraction of peak issue rate (latency-hiding quality).
+    pub issue_eff: f64,
+}
+
+impl KernelSpec {
+    pub fn new(name: &str, mix: Vec<(String, f64)>) -> KernelSpec {
+        KernelSpec {
+            name: name.to_string(),
+            mix,
+            iters: 1.0,
+            mem: MemBehavior::new(0.8, 0.7),
+            occupancy: 1.0,
+            issue_eff: 0.75,
+        }
+    }
+
+    pub fn with_iters(mut self, iters: f64) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    pub fn with_mem(mut self, mem: MemBehavior) -> Self {
+        self.mem = mem;
+        self
+    }
+
+    pub fn with_occupancy(mut self, occ: f64) -> Self {
+        assert!(occ > 0.0 && occ <= 1.0);
+        self.occupancy = occ;
+        self
+    }
+
+    pub fn with_issue_eff(mut self, eff: f64) -> Self {
+        assert!(eff > 0.0 && eff <= 1.0);
+        self.issue_eff = eff;
+        self
+    }
+
+    /// Total warp-instruction histogram (mix × iters).
+    pub fn total_counts(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (op, n) in &self.mix {
+            *out.entry(op.clone()).or_insert(0.0) += n * self.iters;
+        }
+        out
+    }
+
+    /// Total warp instructions.
+    pub fn total_instructions(&self) -> f64 {
+        self.mix.iter().map(|(_, n)| n).sum::<f64>() * self.iters
+    }
+
+    /// Herfindahl concentration of the mix (Σ fᵢ²) — 1.0 for a single-op
+    /// kernel; used by the simulator's issue-overlap discount.
+    pub fn mix_concentration(&self) -> f64 {
+        let total: f64 = self.mix.iter().map(|(_, n)| n).sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.mix
+            .iter()
+            .map(|(_, n)| (n / total) * (n / total))
+            .sum()
+    }
+
+    /// Bytes that reach DRAM (drives the bandwidth roofline).
+    pub fn dram_bytes(&self) -> f64 {
+        let mut bytes = 0.0;
+        for (opname, count) in self.total_counts() {
+            let class = classify_str(&opname);
+            if class.is_global_mem() {
+                let dram_frac = self
+                    .mem
+                    .split_for(class)
+                    .iter()
+                    .find(|(l, _)| *l == MemLevel::Dram)
+                    .map(|(_, f)| *f)
+                    .unwrap_or(0.0);
+                bytes += count * Opcode::parse(&opname).warp_bytes() * dram_frac;
+            }
+        }
+        bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> KernelSpec {
+        KernelSpec::new(
+            "t",
+            vec![
+                ("FFMA".into(), 32.0),
+                ("LDG.E.64".into(), 8.0),
+                ("STG.E.64".into(), 4.0),
+                ("IADD3".into(), 2.0),
+            ],
+        )
+        .with_iters(10.0)
+        .with_mem(MemBehavior::new(0.5, 0.5))
+    }
+
+    #[test]
+    fn totals_scale_with_iters() {
+        let s = spec();
+        assert_eq!(s.total_counts()["FFMA"], 320.0);
+        assert_eq!(s.total_instructions(), 460.0);
+    }
+
+    #[test]
+    fn load_split_sums_to_one() {
+        let m = MemBehavior::new(0.6, 0.5);
+        let sum: f64 = m.load_split().iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(m.load_split()[0], (MemLevel::L1, 0.6));
+        assert_eq!(m.load_split()[1], (MemLevel::L2, 0.2));
+    }
+
+    #[test]
+    fn stores_never_hit_l1() {
+        let m = MemBehavior::new(0.9, 0.4);
+        assert_eq!(m.store_split()[0].1, 0.0);
+        assert!((m.store_split()[1].1 - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_bytes_counts_miss_traffic() {
+        let s = spec();
+        // loads: 80 * 256B * 0.25 dram + stores: 40 * 256B * 0.5 dram
+        let expect = 80.0 * 256.0 * 0.25 + 40.0 * 256.0 * 0.5;
+        assert!((s.dram_bytes() - expect).abs() < 1e-9, "{}", s.dram_bytes());
+    }
+
+    #[test]
+    fn concentration_bounds() {
+        let single = KernelSpec::new("x", vec![("FADD".into(), 10.0)]);
+        assert!((single.mix_concentration() - 1.0).abs() < 1e-12);
+        let s = spec();
+        assert!(s.mix_concentration() < 1.0 && s.mix_concentration() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_hit_rate_panics() {
+        MemBehavior::new(1.5, 0.0);
+    }
+}

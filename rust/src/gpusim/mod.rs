@@ -1,0 +1,25 @@
+//! GPU device simulator substrate (the reproduction's stand-in for the
+//! paper's physical V100/A100/H100 clusters — see DESIGN.md §1).
+//!
+//! Observable surface for the modeling side:
+//!   * [`telemetry::Telemetry`] — NVML-style power/util/temp samples,
+//!   * [`profiler::KernelProfile`] — NSight-style opcode counts + hit rates.
+//!
+//! Everything else (the per-instruction ground truth in [`energy`], the
+//! thermal/DVFS dynamics in [`device`]) is the hidden "hardware".  Modules
+//! under `model/` and `baselines/` must not import `gpusim::energy`.
+
+pub mod config;
+pub mod device;
+pub mod energy;
+pub mod kernel;
+pub mod profiler;
+pub mod telemetry;
+pub mod thermal;
+pub mod timing;
+
+pub use config::{ArchConfig, Cooling, CoolingKind};
+pub use device::{Device, RunRecord};
+pub use kernel::{KernelSpec, MemBehavior};
+pub use profiler::KernelProfile;
+pub use telemetry::{Sample, Telemetry};

@@ -1,0 +1,100 @@
+//! NVML-emulating telemetry: the ONLY power observable the modeling side
+//! is allowed to consume.
+//!
+//! Reproduces the vendor counters' known coarseness (paper §6 Measurement
+//! Granularity): fixed sampling period, watt-level quantization, and
+//! multiplicative sensor noise.  A separate internal energy counter
+//! integrates the true power at simulation resolution — mirroring NVML's
+//! `nvmlDeviceGetTotalEnergyConsumption`, which the paper found to agree
+//! with trace integration within 1 %.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    /// Timestamp [s] relative to the start of the run.
+    pub t_s: f64,
+    /// Reported board power [W] (quantized + noisy).
+    pub power_w: f64,
+    /// Reported GPU utilization [%].
+    pub util_pct: f64,
+    /// Reported die temperature [°C].
+    pub temp_c: f64,
+}
+
+/// A telemetry capture for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub samples: Vec<Sample>,
+    /// Integrated true energy [J] (the NVML energy-counter analogue).
+    pub energy_counter_j: f64,
+    /// Sample period [s].
+    pub period_s: f64,
+}
+
+impl Telemetry {
+    pub fn powers(&self) -> Vec<f64> {
+        self.samples.iter().map(|s| s.power_w).collect()
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.samples.last().map(|s| s.t_s).unwrap_or(0.0)
+    }
+
+    /// Mean reported power over all samples [W].
+    pub fn mean_power_w(&self) -> f64 {
+        crate::util::stats::mean(&self.powers())
+    }
+}
+
+/// Quantize + perturb a true power value the way the emulated NVML does.
+pub fn sensor_read(
+    true_power_w: f64,
+    quant_w: f64,
+    noise_frac: f64,
+    rng: &mut crate::util::prng::Rng,
+) -> f64 {
+    let noisy = true_power_w * (1.0 + noise_frac * rng.normal());
+    if quant_w > 0.0 {
+        (noisy / quant_w).round() * quant_w
+    } else {
+        noisy
+    }
+    .max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn sensor_quantizes_to_watts() {
+        let mut rng = Rng::new(1);
+        let v = sensor_read(150.4, 1.0, 0.0, &mut rng);
+        assert_eq!(v, 150.0);
+    }
+
+    #[test]
+    fn sensor_noise_is_unbiased() {
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| sensor_read(200.0, 1.0, 0.01, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 200.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn telemetry_duration_and_mean() {
+        let t = Telemetry {
+            samples: vec![
+                Sample { t_s: 0.0, power_w: 100.0, util_pct: 100.0, temp_c: 40.0 },
+                Sample { t_s: 0.1, power_w: 110.0, util_pct: 100.0, temp_c: 41.0 },
+            ],
+            energy_counter_j: 10.5,
+            period_s: 0.1,
+        };
+        assert_eq!(t.duration_s(), 0.1);
+        assert_eq!(t.mean_power_w(), 105.0);
+    }
+}

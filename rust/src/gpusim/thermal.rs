@@ -1,0 +1,67 @@
+//! Lumped RC thermal model of the die + cooling loop.
+//!
+//!   C · dT/dt = P − (T − T_amb) / R
+//!
+//! Air vs water cooling differ in R (and coolant temperature), which sets
+//! both the steady-state die temperature and — through temperature-
+//! dependent leakage — the measurable energy difference between otherwise
+//! identical runs (§5.2.1: water-cooled V100s used ~12 % less energy).
+
+use super::config::Cooling;
+
+#[derive(Clone, Debug)]
+pub struct ThermalState {
+    pub t_c: f64,
+}
+
+impl ThermalState {
+    pub fn at_ambient(cooling: &Cooling) -> ThermalState {
+        ThermalState {
+            t_c: cooling.t_ambient,
+        }
+    }
+
+    /// Advance by `dt` seconds under dissipated power `p_w` (explicit
+    /// Euler; dt is the 0.1 s telemetry step, far below the RC constant).
+    pub fn step(&mut self, cooling: &Cooling, p_w: f64, dt: f64) {
+        let dtemp = (p_w - (self.t_c - cooling.t_ambient) / cooling.r_th) / cooling.c_th;
+        self.t_c += dtemp * dt;
+    }
+
+    /// Steady-state temperature under constant power.
+    pub fn steady(cooling: &Cooling, p_w: f64) -> f64 {
+        cooling.t_ambient + p_w * cooling.r_th
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::config::Cooling;
+
+    #[test]
+    fn converges_to_steady_state() {
+        let cool = Cooling::air();
+        let mut st = ThermalState::at_ambient(&cool);
+        for _ in 0..(400.0 / 0.1) as usize {
+            st.step(&cool, 200.0, 0.1);
+        }
+        let expect = ThermalState::steady(&cool, 200.0);
+        assert!((st.t_c - expect).abs() < 0.5, "{} vs {expect}", st.t_c);
+    }
+
+    #[test]
+    fn water_steadies_cooler_than_air() {
+        let air = ThermalState::steady(&Cooling::air(), 250.0);
+        let water = ThermalState::steady(&Cooling::water(), 250.0);
+        assert!(water + 20.0 < air, "water {water} air {air}");
+    }
+
+    #[test]
+    fn cooling_decays_toward_ambient() {
+        let cool = Cooling::air();
+        let mut st = ThermalState { t_c: 80.0 };
+        st.step(&cool, 0.0, 1.0);
+        assert!(st.t_c < 80.0 && st.t_c > cool.t_ambient);
+    }
+}

@@ -1,0 +1,133 @@
+//! Analytic kernel timing: dual-roofline over issue throughput and DRAM
+//! bandwidth.  Deliberately simple — energy attribution, not cycle
+//! accuracy, is the object of study — but it produces the qualitative
+//! behaviours that matter: FP64 at half rate, SFU/tensor at low issue
+//! rates, memory-bound kernels pinned by bandwidth, NANOSLEEP idling.
+
+use crate::isa::class::{classify_str, InstrClass};
+
+use super::config::ArchConfig;
+use super::kernel::KernelSpec;
+
+/// Peak issue throughput per class [warp instructions / cycle / SM].
+pub fn issue_rate(class: InstrClass) -> f64 {
+    use InstrClass::*;
+    match class {
+        IntAlu | IntMul => 1.0,
+        Fp32 => 2.0,
+        Fp64 => 1.0,
+        Fp16 => 2.0,
+        Sfu => 0.25,
+        Conv => 1.0,
+        Move => 2.0,
+        Pred => 1.0,
+        Shuffle => 0.5,
+        Control => 1.0,
+        Sync => 0.25,
+        Uniform => 2.0,
+        GlobalLoad | GlobalStore => 0.5,
+        SharedLoad | SharedStore => 1.0,
+        LocalMem => 0.25,
+        ConstMem => 1.0,
+        Atomic => 0.125,
+        Tensor => 0.5,
+        // NANOSLEEP retires ~one per several thousand cycles.
+        Sleep => 2.5e-4,
+        Misc => 2.0,
+    }
+}
+
+/// Per-op issue rate: class rate with opcode-level overrides (warp-group
+/// MMA instructions occupy the tensor pipes for many cycles each).
+pub fn issue_rate_op(op: &str) -> f64 {
+    if op.starts_with("HGMMA") || op.starts_with("QGMMA") || op.starts_with("IGMMA") {
+        return 0.03;
+    }
+    issue_rate(classify_str(op))
+}
+
+/// Issue-limited time [s].
+pub fn issue_time_s(cfg: &ArchConfig, spec: &KernelSpec) -> f64 {
+    let cycles_per_sm: f64 = spec
+        .total_counts()
+        .iter()
+        .map(|(op, count)| count / issue_rate_op(op))
+        .sum();
+    let active_sms = (cfg.sm_count as f64 * spec.occupancy).max(1.0);
+    cycles_per_sm / active_sms / (cfg.clock_ghz * 1e9) / spec.issue_eff
+}
+
+/// Bandwidth-limited time [s].
+pub fn mem_time_s(cfg: &ArchConfig, spec: &KernelSpec) -> f64 {
+    spec.dram_bytes() / (cfg.dram_bw_gbs * 1e9)
+}
+
+/// Kernel duration at the configured boost clock (before DVFS throttling).
+pub fn duration_s(cfg: &ArchConfig, spec: &KernelSpec) -> f64 {
+    issue_time_s(cfg, spec).max(mem_time_s(cfg, spec))
+}
+
+/// Is the kernel DRAM-bandwidth bound?
+pub fn is_memory_bound(cfg: &ArchConfig, spec: &KernelSpec) -> bool {
+    mem_time_s(cfg, spec) > issue_time_s(cfg, spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::MemBehavior;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::cloudlab_v100()
+    }
+
+    #[test]
+    fn duration_scales_linearly_with_iters() {
+        let s1 = KernelSpec::new("x", vec![("FFMA".into(), 1000.0)]).with_iters(1e6);
+        let s2 = s1.clone().with_iters(2e6);
+        let d1 = duration_s(&cfg(), &s1);
+        let d2 = duration_s(&cfg(), &s2);
+        assert!((d2 / d1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp64_slower_than_fp32() {
+        let f = KernelSpec::new("f", vec![("FFMA".into(), 1e9)]);
+        let d = KernelSpec::new("d", vec![("DFMA".into(), 1e9)]);
+        assert!(duration_s(&cfg(), &d) > 1.5 * duration_s(&cfg(), &f));
+    }
+
+    #[test]
+    fn streaming_kernel_is_memory_bound() {
+        let s = KernelSpec::new("stream", vec![("LDG.E.128".into(), 1e9), ("FADD".into(), 1e9)])
+            .with_mem(MemBehavior::new(0.0, 0.05));
+        assert!(is_memory_bound(&cfg(), &s));
+    }
+
+    #[test]
+    fn cached_kernel_is_compute_bound() {
+        let s = KernelSpec::new(
+            "hot",
+            vec![("LDG.E.32".into(), 1e8), ("FFMA".into(), 4e9)],
+        )
+        .with_mem(MemBehavior::new(0.99, 0.99));
+        assert!(!is_memory_bound(&cfg(), &s));
+    }
+
+    #[test]
+    fn low_occupancy_stretches_duration() {
+        let s = KernelSpec::new("x", vec![("FFMA".into(), 1e9)]);
+        let slow = s.clone().with_occupancy(0.25);
+        assert!(
+            duration_s(&cfg(), &slow) > 3.9 * duration_s(&cfg(), &s),
+            "occupancy scaling"
+        );
+    }
+
+    #[test]
+    fn nanosleep_is_extremely_slow_to_issue() {
+        let s = KernelSpec::new("sleep", vec![("NANOSLEEP".into(), 1e6)]);
+        let c = KernelSpec::new("add", vec![("IADD3".into(), 1e6)]);
+        assert!(duration_s(&cfg(), &s) > 1000.0 * duration_s(&cfg(), &c));
+    }
+}

@@ -1,0 +1,107 @@
+//! GPU generations and their ISA deltas.
+
+/// Hardware generation (determines ISA variant + process scaling of the
+/// hidden ground-truth energy model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gen {
+    Volta,  // V100, CUDA 11.0 toolchain in the paper
+    Ampere, // A100, CUDA 12.0
+    Hopper, // H100, CUDA 12.0
+}
+
+impl Gen {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Gen::Volta => "volta",
+            Gen::Ampere => "ampere",
+            Gen::Hopper => "hopper",
+        }
+    }
+
+    /// Dynamic-energy process/voltage scale relative to Volta (12 nm →
+    /// 7 nm → 4 nm class nodes).  Applied to every per-instruction energy
+    /// in the hidden ground truth.
+    pub fn energy_scale(&self) -> f64 {
+        match self {
+            Gen::Volta => 1.0,
+            Gen::Ampere => 0.80,
+            Gen::Hopper => 0.68,
+        }
+    }
+
+    /// Tensor-core matrix ops this generation's compiler emits for GEMM
+    /// kernels (half, float-accumulate, double, int8).
+    pub fn tensor_ops(&self) -> &'static [&'static str] {
+        match self {
+            // V100 HMMA is a 4-step sequence; the profiler reports steps.
+            Gen::Volta => &["HMMA.884.F16", "HMMA.884.F32"],
+            Gen::Ampere => &["HMMA.16816.F16", "HMMA.16816.F32", "DMMA.884", "IMMA.16816"],
+            // Hopper adds warp-group MMA; plain HMMA remains for small tiles.
+            Gen::Hopper => &[
+                "HGMMA.64x64x16.F16",
+                "HGMMA.64x64x16.F32",
+                "HMMA.16816.F32",
+                "DMMA.884",
+            ],
+        }
+    }
+
+    /// Uniform-datapath ops that show up in compiler output on this
+    /// generation (none on Volta).
+    pub fn uniform_ops(&self) -> &'static [&'static str] {
+        match self {
+            Gen::Volta => &[],
+            Gen::Ampere => &["UMOV", "ULDC", "R2UR", "UIADD3", "ULOP3", "USEL"],
+            Gen::Hopper => &["UMOV", "ULDC", "R2UR", "UIADD3", "ULOP3", "USEL", "UISETP"],
+        }
+    }
+
+    /// Generation-specific memory-path ops.
+    pub fn mem_ops_extra(&self) -> &'static [&'static str] {
+        match self {
+            Gen::Volta => &[],
+            Gen::Ampere => &["LDGSTS.E.128", "LDGSTS.E.BYPASS.128"],
+            Gen::Hopper => &["LDGSTS.E.128", "UTMALDG", "LDSM.16.M88.4"],
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Gen> {
+        match s.to_ascii_lowercase().as_str() {
+            "volta" | "v100" => Some(Gen::Volta),
+            "ampere" | "a100" => Some(Gen::Ampere),
+            "hopper" | "h100" => Some(Gen::Hopper),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_scale_monotone_with_process() {
+        assert!(Gen::Volta.energy_scale() > Gen::Ampere.energy_scale());
+        assert!(Gen::Ampere.energy_scale() > Gen::Hopper.energy_scale());
+    }
+
+    #[test]
+    fn hopper_has_warpgroup_mma() {
+        assert!(Gen::Hopper.tensor_ops().iter().any(|o| o.starts_with("HGMMA")));
+        assert!(!Gen::Volta.tensor_ops().iter().any(|o| o.starts_with("HGMMA")));
+    }
+
+    #[test]
+    fn volta_has_no_uniform_path() {
+        assert!(Gen::Volta.uniform_ops().is_empty());
+        assert!(Gen::Ampere.uniform_ops().contains(&"R2UR"));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Gen::from_str("V100"), Some(Gen::Volta));
+        assert_eq!(Gen::from_str("a100"), Some(Gen::Ampere));
+        assert_eq!(Gen::from_str("h100"), Some(Gen::Hopper));
+        assert_eq!(Gen::from_str("mi300"), None);
+    }
+}

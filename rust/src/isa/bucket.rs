@@ -1,0 +1,119 @@
+//! Microarchitectural component buckets (paper §3.4 "Bucketing").
+//!
+//! Buckets serve two roles: Wattchmen-Pred approximates an unknown
+//! instruction's energy by its bucket's average of *known* energies, and
+//! the AccelWattch baseline models power at exactly this component
+//! granularity.
+
+use super::class::{classify_str, InstrClass};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Bucket {
+    IntUnit,
+    Fp32Unit,
+    Fp64Unit,
+    Fp16Unit,
+    SfuUnit,
+    TensorUnit,
+    MoveCtl,   // moves, predicates, control flow, uniform datapath
+    GlobalMem, // LDG/STG/atomics (level-split handled separately)
+    SharedMem,
+    OtherMem, // local + constant
+    Idle,     // NANOSLEEP
+    /// Scheduler/fabric odds and ends (NOP, CCTL, YIELD): no benchmark
+    /// isolates them, so even bucketing cannot attribute them — the
+    /// residual coverage gap of Wattchmen-Pred (<100 %, paper Figs 8–9).
+    MiscUnit,
+}
+
+impl Bucket {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bucket::IntUnit => "int",
+            Bucket::Fp32Unit => "fp32",
+            Bucket::Fp64Unit => "fp64",
+            Bucket::Fp16Unit => "fp16",
+            Bucket::SfuUnit => "sfu",
+            Bucket::TensorUnit => "tensor",
+            Bucket::MoveCtl => "move_ctl",
+            Bucket::GlobalMem => "global_mem",
+            Bucket::SharedMem => "shared_mem",
+            Bucket::OtherMem => "other_mem",
+            Bucket::Idle => "idle",
+            Bucket::MiscUnit => "misc",
+        }
+    }
+
+    pub fn all() -> &'static [Bucket] {
+        &[
+            Bucket::IntUnit,
+            Bucket::Fp32Unit,
+            Bucket::Fp64Unit,
+            Bucket::Fp16Unit,
+            Bucket::SfuUnit,
+            Bucket::TensorUnit,
+            Bucket::MoveCtl,
+            Bucket::GlobalMem,
+            Bucket::SharedMem,
+            Bucket::OtherMem,
+            Bucket::Idle,
+            Bucket::MiscUnit,
+        ]
+    }
+}
+
+pub fn bucket_of_class(class: InstrClass) -> Bucket {
+    use InstrClass::*;
+    match class {
+        IntAlu | IntMul => Bucket::IntUnit,
+        Fp32 | Conv => Bucket::Fp32Unit,
+        Fp64 => Bucket::Fp64Unit,
+        Fp16 => Bucket::Fp16Unit,
+        Sfu => Bucket::SfuUnit,
+        Tensor => Bucket::TensorUnit,
+        Move | Pred | Shuffle | Control | Sync | Uniform => Bucket::MoveCtl,
+        Misc => Bucket::MiscUnit,
+        GlobalLoad | GlobalStore | Atomic => Bucket::GlobalMem,
+        SharedLoad | SharedStore => Bucket::SharedMem,
+        LocalMem | ConstMem => Bucket::OtherMem,
+        Sleep => Bucket::Idle,
+    }
+}
+
+/// Bucket for a (possibly level-tagged) energy-table column key, e.g.
+/// `LDG.E.64@L2` or `FADD`.
+pub fn bucket_of_key(key: &str) -> Bucket {
+    let opcode = key.split('@').next().unwrap_or(key);
+    bucket_of_class(classify_str(opcode))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn representative_mappings() {
+        assert_eq!(bucket_of_key("IADD3"), Bucket::IntUnit);
+        assert_eq!(bucket_of_key("FFMA"), Bucket::Fp32Unit);
+        assert_eq!(bucket_of_key("DFMA"), Bucket::Fp64Unit);
+        assert_eq!(bucket_of_key("MUFU.RCP"), Bucket::SfuUnit);
+        assert_eq!(bucket_of_key("HGMMA.64x64x16.F16"), Bucket::TensorUnit);
+        assert_eq!(bucket_of_key("LDG.E.64@DRAM"), Bucket::GlobalMem);
+        assert_eq!(bucket_of_key("LDS.128"), Bucket::SharedMem);
+        assert_eq!(bucket_of_key("LDC"), Bucket::OtherMem);
+        assert_eq!(bucket_of_key("R2UR"), Bucket::MoveCtl);
+        assert_eq!(bucket_of_key("MOV"), Bucket::MoveCtl);
+    }
+
+    #[test]
+    fn every_class_has_a_bucket() {
+        use InstrClass::*;
+        for c in [
+            IntAlu, IntMul, Fp32, Fp64, Fp16, Sfu, Conv, Move, Pred, Shuffle, Control,
+            Sync, Uniform, GlobalLoad, GlobalStore, SharedLoad, SharedStore, LocalMem,
+            ConstMem, Atomic, Tensor, Sleep, Misc,
+        ] {
+            let _ = bucket_of_class(c); // must not panic / be exhaustive
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Instruction classification: every SASS base mnemonic maps to a
+//! functional class.  Classes drive the simulator's timing + hidden energy
+//! model and Wattchmen's bucketing fallback (paper §3.4).
+
+use super::opcode::Opcode;
+
+/// Functional instruction class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InstrClass {
+    IntAlu,
+    IntMul,
+    Fp32,
+    Fp64,
+    Fp16,
+    Sfu,
+    Conv,
+    Move,
+    Pred,
+    Shuffle,
+    Control,
+    Sync,
+    Uniform,
+    GlobalLoad,
+    GlobalStore,
+    SharedLoad,
+    SharedStore,
+    LocalMem,
+    ConstMem,
+    Atomic,
+    Tensor,
+    Sleep,
+    Misc,
+}
+
+/// Memory-hierarchy level an access is served from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemLevel {
+    L1,
+    L2,
+    Dram,
+}
+
+impl MemLevel {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            MemLevel::L1 => "L1",
+            MemLevel::L2 => "L2",
+            MemLevel::Dram => "DRAM",
+        }
+    }
+
+    pub fn all() -> [MemLevel; 3] {
+        [MemLevel::L1, MemLevel::L2, MemLevel::Dram]
+    }
+
+    pub fn from_tag(tag: &str) -> Option<MemLevel> {
+        match tag {
+            "L1" => Some(MemLevel::L1),
+            "L2" => Some(MemLevel::L2),
+            "DRAM" => Some(MemLevel::Dram),
+            _ => None,
+        }
+    }
+}
+
+impl InstrClass {
+    /// True for classes whose energy depends on the serviced cache level.
+    pub fn is_global_mem(&self) -> bool {
+        matches!(self, InstrClass::GlobalLoad | InstrClass::GlobalStore)
+    }
+
+    pub fn is_memory(&self) -> bool {
+        matches!(
+            self,
+            InstrClass::GlobalLoad
+                | InstrClass::GlobalStore
+                | InstrClass::SharedLoad
+                | InstrClass::SharedStore
+                | InstrClass::LocalMem
+                | InstrClass::ConstMem
+                | InstrClass::Atomic
+        )
+    }
+}
+
+/// Classify a parsed opcode.
+pub fn classify(op: &Opcode) -> InstrClass {
+    use InstrClass::*;
+    match op.base.as_str() {
+        // Integer ALU
+        "IADD3" | "IABS" | "IMNMX" | "LEA" | "LOP3" | "SHF" | "SGXT" | "POPC" | "FLO"
+        | "VABSDIFF" | "BMSK" | "PLOP3" => IntAlu,
+        "IMAD" => {
+            // IMAD.MOV / IMAD.IADD are assembler idioms for moves/adds on
+            // the integer pipe; real multiplies are plain IMAD / IMAD.WIDE.
+            if op.has_mod("MOV") {
+                Move
+            } else if op.has_mod("IADD") {
+                IntAlu
+            } else {
+                IntMul
+            }
+        }
+        // FP32
+        "FADD" | "FMUL" | "FFMA" | "FMNMX" | "FSEL" | "FCHK" | "FSWZADD" => Fp32,
+        // FP64
+        "DADD" | "DMUL" | "DFMA" => Fp64,
+        // FP16 (packed half2)
+        "HADD2" | "HMUL2" | "HFMA2" => Fp16,
+        // Special function unit
+        "MUFU" => Sfu,
+        // Conversions
+        "F2F" | "F2I" | "I2F" | "I2I" | "FRND" | "I2IP" => Conv,
+        // Moves & selects
+        "MOV" | "MOV32I" | "SEL" | "PRMT" | "S2R" | "CS2R" => Move,
+        // Predicate setters
+        "ISETP" | "FSETP" | "DSETP" | "HSETP2" | "PSETP" | "P2R" | "R2P" => Pred,
+        // Warp shuffles / votes
+        "SHFL" | "VOTE" | "VOTEU" => Shuffle,
+        // Control flow
+        "BRA" | "BRX" | "JMP" | "CAL" | "RET" | "EXIT" | "BSSY" | "BSYNC" | "BREAK"
+        | "KILL" | "RPCMOV" => Control,
+        // Barriers / fences
+        "BAR" | "MEMBAR" | "ERRBAR" | "DEPBAR" | "WARPGROUP" => Sync,
+        // Uniform datapath (Turing/Ampere+)
+        "UMOV" | "ULDC" | "R2UR" | "UR2R" | "UIADD3" | "UIMAD" | "ULOP3" | "USHF"
+        | "USEL" | "UISETP" | "UPOPC" | "UFLO" => Uniform,
+        // Global memory
+        "LDG" => GlobalLoad,
+        "STG" => GlobalStore,
+        "LDGSTS" => GlobalLoad, // async global->shared copy (Ampere+)
+        "LD" => GlobalLoad,
+        "ST" => GlobalStore,
+        // Shared memory
+        "LDS" => SharedLoad,
+        "STS" => SharedStore,
+        "LDSM" => SharedLoad, // tensor-core shared fragment load
+        // Local / constant
+        "LDL" | "STL" => LocalMem,
+        "LDC" => ConstMem,
+        // Atomics
+        "ATOM" | "ATOMG" | "ATOMS" | "RED" => Atomic,
+        // Tensor / matrix units
+        "HMMA" | "DMMA" | "IMMA" | "BMMA" | "HGMMA" | "QGMMA" | "IGMMA" | "UTMALDG"
+        | "UTMASTG" => Tensor,
+        // Idle spin
+        "NANOSLEEP" => Sleep,
+        "NOP" | "CCTL" | "CCTLL" | "YIELD" => Misc,
+        _ => Misc,
+    }
+}
+
+/// Classify from the textual opcode.
+pub fn classify_str(opcode: &str) -> InstrClass {
+    classify(&Opcode::parse(opcode))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_cover_major_mnemonics() {
+        assert_eq!(classify_str("IADD3"), InstrClass::IntAlu);
+        assert_eq!(classify_str("IMAD.WIDE"), InstrClass::IntMul);
+        assert_eq!(classify_str("IMAD.MOV.U32"), InstrClass::Move);
+        assert_eq!(classify_str("IMAD.IADD"), InstrClass::IntAlu);
+        assert_eq!(classify_str("FFMA"), InstrClass::Fp32);
+        assert_eq!(classify_str("DFMA"), InstrClass::Fp64);
+        assert_eq!(classify_str("HFMA2"), InstrClass::Fp16);
+        assert_eq!(classify_str("MUFU.RCP"), InstrClass::Sfu);
+        assert_eq!(classify_str("F2F.F64.F32"), InstrClass::Conv);
+        assert_eq!(classify_str("ISETP.GE.AND"), InstrClass::Pred);
+        assert_eq!(classify_str("SHFL.BFLY"), InstrClass::Shuffle);
+        assert_eq!(classify_str("BRA"), InstrClass::Control);
+        assert_eq!(classify_str("BAR.SYNC"), InstrClass::Sync);
+        assert_eq!(classify_str("LDG.E.64"), InstrClass::GlobalLoad);
+        assert_eq!(classify_str("STG.E.128"), InstrClass::GlobalStore);
+        assert_eq!(classify_str("LDS.64"), InstrClass::SharedLoad);
+        assert_eq!(classify_str("LDC"), InstrClass::ConstMem);
+        assert_eq!(classify_str("ATOMG.ADD"), InstrClass::Atomic);
+        assert_eq!(classify_str("HMMA.884.F32.STEP0"), InstrClass::Tensor);
+        assert_eq!(classify_str("HGMMA.64x64x16.F16"), InstrClass::Tensor);
+        assert_eq!(classify_str("R2UR"), InstrClass::Uniform);
+        assert_eq!(classify_str("NANOSLEEP"), InstrClass::Sleep);
+        assert_eq!(classify_str("XYZZY"), InstrClass::Misc);
+    }
+
+    #[test]
+    fn mem_level_tags_roundtrip() {
+        for l in MemLevel::all() {
+            assert_eq!(MemLevel::from_tag(l.tag()), Some(l));
+        }
+        assert_eq!(MemLevel::from_tag("L3"), None);
+    }
+}

@@ -1,0 +1,167 @@
+//! Modifier grouping / canonicalization (paper §3.4 "Grouping").
+//!
+//! GPU ISAs append modifiers that matter architecturally but not
+//! energetically: eviction hints (`STG.E.EF.64` ≡ `STG.E.64`), predicate
+//! comparison/boolean variants (`ISETP.LE.OR` ≡ `ISETP.GE.AND`), cache
+//! scope hints, etc.  Grouping accumulates their counts under one canonical
+//! key.  Multi-step tensor sequences (V100 `HMMA.*.STEPn`) are collapsed to
+//! a single logical instruction with weight 1/n_steps.
+
+use super::opcode::Opcode;
+
+/// Modifiers that never change a grouped instruction's energy identity.
+const IGNORED_MODS: &[&str] = &[
+    "EF",       // evict-first hint
+    "EL",       // evict-last hint
+    "LTC64B",   // L2 sector hint
+    "LTC128B",
+    "STRONG",   // memory ordering scopes
+    "WEAK",
+    "SYS",
+    "GPU",
+    "CTA",
+    "PRIVATE",
+    "CONSTANT",
+    "MMIO",
+    "ZD",       // zero-detect
+    "NODEP",
+    "reuse",    // register reuse-cache flag (lowercase in SASS dumps)
+];
+
+/// Comparison predicates: `ISETP.<CMP>.<BOOL>` variants group together.
+const CMP_MODS: &[&str] = &[
+    "F", "LT", "EQ", "LE", "GT", "NE", "GE", "T", "EQU", "NEU", "LTU", "GTU", "GEU",
+    "LEU", "NUM", "NAN", "MAX", "MIN",
+];
+const BOOL_MODS: &[&str] = &["AND", "OR", "XOR"];
+
+/// A canonicalized opcode plus the count weight one raw instruction
+/// contributes (1.0 normally, 1/4 for V100 HMMA steps).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grouped {
+    pub key: String,
+    pub weight: f64,
+}
+
+/// Canonicalize a raw SASS opcode string into its energy-group key.
+pub fn canonicalize(raw: &str) -> Grouped {
+    let op = Opcode::parse(raw);
+    let mut weight = 1.0;
+
+    // Predicate setters: all comparison/boolean combinations behave alike.
+    if matches!(
+        op.base.as_str(),
+        "ISETP" | "FSETP" | "DSETP" | "HSETP2" | "UISETP"
+    ) {
+        let dtype = op
+            .mods
+            .iter()
+            .find(|m| matches!(m.as_str(), "U32" | "S32" | "U64" | "S64" | "F64" | "F16"))
+            .cloned();
+        let mut key = op.base.clone();
+        if let Some(d) = dtype {
+            // Signedness does not change energy; width might, keep 64-bit.
+            if d.ends_with("64") {
+                key.push_str(".64");
+            }
+        }
+        return Grouped { key, weight };
+    }
+
+    // Tensor step sequences: fold .STEPn into one logical op at 1/4 weight.
+    if op.step().is_some() {
+        let mods: Vec<String> = op
+            .mods
+            .iter()
+            .filter(|m| !m.starts_with("STEP"))
+            .cloned()
+            .collect();
+        weight = 0.25;
+        let mut key = op.base.clone();
+        for m in mods {
+            key.push('.');
+            key.push_str(&m);
+        }
+        return Grouped { key, weight };
+    }
+
+    // Generic path: drop purely architectural modifiers.
+    let mut key = op.base.clone();
+    for m in &op.mods {
+        if IGNORED_MODS.contains(&m.as_str()) {
+            continue;
+        }
+        // Comparison/boolean mods on non-SETP ops (e.g. SEL) are harmless
+        // to keep; only strip them on the SETP family handled above.
+        let _ = (CMP_MODS, BOOL_MODS);
+        key.push('.');
+        key.push_str(m);
+    }
+    Grouped { key, weight }
+}
+
+/// Group a raw histogram into canonical keys (weights applied).
+pub fn group_counts<'a, I>(raw: I) -> std::collections::BTreeMap<String, f64>
+where
+    I: IntoIterator<Item = (&'a String, &'a f64)>,
+{
+    let mut out = std::collections::BTreeMap::new();
+    for (op, count) in raw {
+        let g = canonicalize(op);
+        *out.entry(g.key).or_insert(0.0) += g.weight * count;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn eviction_hints_grouped() {
+        assert_eq!(canonicalize("STG.E.EF.64").key, "STG.E.64");
+        assert_eq!(canonicalize("LDG.E.LTC128B.128").key, "LDG.E.128");
+        assert_eq!(canonicalize("STG.E.64").key, "STG.E.64");
+    }
+
+    #[test]
+    fn isetp_variants_collapse() {
+        for v in ["ISETP.GE.AND", "ISETP.LE.OR", "ISETP.NE.XOR", "ISETP.GT.AND.U32"] {
+            assert_eq!(canonicalize(v).key, "ISETP", "{v}");
+        }
+        // 64-bit compares stay distinct (different datapath energy).
+        assert_eq!(canonicalize("ISETP.GE.AND.U64").key, "ISETP.64");
+    }
+
+    #[test]
+    fn hmma_steps_collapse_quarter_weight() {
+        let g = canonicalize("HMMA.884.F32.STEP2");
+        assert_eq!(g.key, "HMMA.884.F32");
+        assert_eq!(g.weight, 0.25);
+    }
+
+    #[test]
+    fn f2f_precision_stays_distinct() {
+        assert_eq!(canonicalize("F2F.F64.F32").key, "F2F.F64.F32");
+        assert_eq!(canonicalize("F2F.F32.F16").key, "F2F.F32.F16");
+        assert_ne!(
+            canonicalize("F2F.F64.F32").key,
+            canonicalize("F2F.F32.F64").key
+        );
+    }
+
+    #[test]
+    fn group_counts_accumulates() {
+        let mut raw: BTreeMap<String, f64> = BTreeMap::new();
+        raw.insert("HMMA.884.F32.STEP0".into(), 100.0);
+        raw.insert("HMMA.884.F32.STEP1".into(), 100.0);
+        raw.insert("HMMA.884.F32.STEP2".into(), 100.0);
+        raw.insert("HMMA.884.F32.STEP3".into(), 100.0);
+        raw.insert("ISETP.LT.OR".into(), 5.0);
+        raw.insert("ISETP.GE.AND".into(), 7.0);
+        let grouped = group_counts(raw.iter());
+        assert_eq!(grouped["HMMA.884.F32"], 100.0); // 400 steps -> 100 logical
+        assert_eq!(grouped["ISETP"], 12.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! SASS-like instruction-set model: opcode parsing, functional classes,
+//! per-generation ISA deltas, modifier grouping, and component buckets.
+//!
+//! Both sides of the reproduction share this vocabulary: the simulator
+//! substrate keys its hidden ground-truth energies by full opcode + memory
+//! level, while the Wattchmen model consumes profiler opcode histograms and
+//! canonicalizes them via [`grouping`].
+
+pub mod arch;
+pub mod bucket;
+pub mod class;
+pub mod grouping;
+pub mod opcode;
+
+pub use arch::Gen;
+pub use bucket::{bucket_of_class, bucket_of_key, Bucket};
+pub use class::{classify, classify_str, InstrClass, MemLevel};
+pub use grouping::{canonicalize, group_counts, Grouped};
+pub use opcode::Opcode;
+
+/// Energy-table column key for an opcode, optionally tagged with the memory
+/// level it is served from: `"FADD"`, `"LDG.E.64@L2"`.
+pub fn column_key(opcode: &str, level: Option<MemLevel>) -> String {
+    match level {
+        Some(l) => format!("{opcode}@{}", l.tag()),
+        None => opcode.to_string(),
+    }
+}
+
+/// Split a column key back into opcode and optional level.
+pub fn split_key(key: &str) -> (&str, Option<MemLevel>) {
+    match key.split_once('@') {
+        Some((op, tag)) => (op, MemLevel::from_tag(tag)),
+        None => (key, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_key_roundtrip() {
+        let k = column_key("LDG.E.64", Some(MemLevel::L2));
+        assert_eq!(k, "LDG.E.64@L2");
+        assert_eq!(split_key(&k), ("LDG.E.64", Some(MemLevel::L2)));
+        assert_eq!(split_key("FADD"), ("FADD", None));
+    }
+}

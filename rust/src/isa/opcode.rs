@@ -1,0 +1,105 @@
+//! SASS-style opcode representation and parsing.
+//!
+//! NVIDIA SASS opcodes are dot-separated: a base mnemonic plus modifiers,
+//! e.g. `LDG.E.64`, `ISETP.GE.AND`, `HMMA.884.F32.STEP2`, `F2F.F64.F32`.
+//! The simulator, the profiler, and the Wattchmen model all key on the full
+//! textual opcode; this module provides structured access to its parts.
+
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Opcode {
+    /// Base mnemonic, e.g. `LDG`.
+    pub base: String,
+    /// Modifiers in order, e.g. `["E", "64"]`.
+    pub mods: Vec<String>,
+}
+
+impl Opcode {
+    pub fn parse(text: &str) -> Opcode {
+        let mut parts = text.split('.');
+        let base = parts.next().unwrap_or("").to_string();
+        Opcode {
+            base,
+            mods: parts.map(|m| m.to_string()).collect(),
+        }
+    }
+
+    pub fn has_mod(&self, m: &str) -> bool {
+        self.mods.iter().any(|x| x == m)
+    }
+
+    /// Data width in bits per thread, if a width modifier is present.
+    /// SASS memory ops default to 32-bit when no width modifier is given.
+    pub fn width_bits(&self) -> Option<u32> {
+        for m in &self.mods {
+            if let Ok(w) = m.parse::<u32>() {
+                if matches!(w, 8 | 16 | 32 | 64 | 128) {
+                    return Some(w);
+                }
+            }
+        }
+        None
+    }
+
+    /// Width with the SASS default of 32 bits for memory operations.
+    pub fn width_or_default(&self) -> u32 {
+        self.width_bits().unwrap_or(32)
+    }
+
+    /// Bytes moved per warp-level execution (32 threads coalesced).
+    pub fn warp_bytes(&self) -> f64 {
+        32.0 * self.width_or_default() as f64 / 8.0
+    }
+
+    /// The `.STEPn` index for multi-step tensor sequences (V100 HMMA).
+    pub fn step(&self) -> Option<u32> {
+        self.mods.iter().find_map(|m| {
+            m.strip_prefix("STEP").and_then(|s| s.parse::<u32>().ok())
+        })
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.base)?;
+        for m in &self.mods {
+            write!(f, ".{m}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["LDG.E.64", "ISETP.GE.AND", "MOV", "HMMA.884.F32.STEP2"] {
+            assert_eq!(Opcode::parse(s).to_string(), s);
+        }
+    }
+
+    #[test]
+    fn width_extraction() {
+        assert_eq!(Opcode::parse("LDG.E.128").width_bits(), Some(128));
+        assert_eq!(Opcode::parse("LDG.E.8").width_bits(), Some(8));
+        assert_eq!(Opcode::parse("LDG.E").width_bits(), None);
+        assert_eq!(Opcode::parse("LDG.E").width_or_default(), 32);
+        // 884 must not be mistaken for a width.
+        assert_eq!(Opcode::parse("HMMA.884.F32").width_bits(), None);
+    }
+
+    #[test]
+    fn warp_bytes() {
+        assert_eq!(Opcode::parse("LDG.E.64").warp_bytes(), 256.0);
+        assert_eq!(Opcode::parse("STG.E").warp_bytes(), 128.0);
+    }
+
+    #[test]
+    fn step_extraction() {
+        assert_eq!(Opcode::parse("HMMA.884.F16.STEP3").step(), Some(3));
+        assert_eq!(Opcode::parse("HMMA.884.F16").step(), None);
+    }
+}

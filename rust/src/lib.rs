@@ -1,0 +1,23 @@
+//! # Wattchmen — high-fidelity, flexible GPU energy modeling
+//!
+//! Reproduction of Tran et al., ICS'26 (see DESIGN.md).  The crate is a
+//! three-layer system: this rust coordinator (simulation substrate,
+//! training/prediction pipelines, experiment harness) drives AOT-compiled
+//! JAX/Pallas compute artifacts through PJRT (`runtime/`).
+
+pub mod gpusim;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod trace;
+pub mod isa;
+pub mod microbench;
+pub mod baselines;
+pub mod cluster;
+pub mod model;
+pub mod util;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,205 @@
+//! Wattchmen CLI — the Layer-3 coordinator entrypoint.
+//!
+//! Commands:
+//!   report <fig...|all>   reproduce paper tables/figures (DESIGN.md §4)
+//!   train                 run a training campaign, save the energy table
+//!   predict               predict a workload's energy from a saved table
+//!   list                  list environments / workloads / experiments
+//!   version
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::isa::Gen;
+use wattchmen::model::{self, EnergyTable, Mode};
+use wattchmen::report::{self, EvalCtx};
+use wattchmen::runtime::Artifacts;
+use wattchmen::util::cli::Args;
+use wattchmen::workloads;
+
+fn load_artifacts(args: &Args) -> Option<Artifacts> {
+    if args.flag("no-artifacts") {
+        eprintln!("[wattchmen] --no-artifacts: using native solver/integrator");
+        return None;
+    }
+    match Artifacts::load_default() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("[wattchmen] PJRT artifacts unavailable ({e:#}); falling back to native paths");
+            None
+        }
+    }
+}
+
+fn arch_from(args: &Args) -> Result<ArchConfig> {
+    let name = args.get_or("arch", "cloudlab-v100");
+    ArchConfig::by_name(name).ok_or_else(|| anyhow!("unknown arch '{name}' (see `wattchmen list`)"))
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args);
+    let fast = args.flag("fast");
+    let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    let out_dir = PathBuf::from(args.get_or("out", "reports"));
+    let mut ctx = EvalCtx::new(fast, seed, arts.as_ref());
+
+    let mut names: Vec<String> = args.positional.clone();
+    if names.is_empty() || names.iter().any(|n| n == "all") {
+        names = report::all_names().iter().map(|s| s.to_string()).collect();
+    }
+    for name in &names {
+        let t0 = Instant::now();
+        let result = report::run(name, &mut ctx)
+            .with_context(|| format!("experiment {name}"))?;
+        println!("{}", result.text);
+        for (metric, got, paper) in &result.metrics {
+            if paper.is_nan() {
+                println!("  [{name}] {metric}: {got:.3}");
+            } else {
+                println!("  [{name}] {metric}: {got:.3} (paper: {paper})");
+            }
+        }
+        println!("  [{name}] completed in {:.1}s\n", t0.elapsed().as_secs_f64());
+        result.save(&out_dir)?;
+    }
+    println!("reports written to {}/", out_dir.display());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args);
+    let cfg = arch_from(args)?;
+    let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    let gpus = args.get_usize("gpus", 4).map_err(anyhow::Error::msg)?;
+    let ctx = EvalCtx::new(args.flag("fast"), seed, arts.as_ref());
+    let tc = ctx.train_cfg();
+    let t0 = Instant::now();
+    let result = ClusterCampaign::new(cfg.clone(), gpus, seed).train(&tc, arts.as_ref())?;
+    println!(
+        "trained {} on {} simulated GPUs in {:.1}s: {} instruction groups, residual {:.3e}, solver {:?}",
+        cfg.name,
+        gpus,
+        t0.elapsed().as_secs_f64(),
+        result.columns.len(),
+        result.residual,
+        result.solver
+    );
+    println!(
+        "constant power {:.1} W, static power {:.1} W",
+        result.table.const_power_w, result.table.static_power_w
+    );
+    let out = PathBuf::from(
+        args.get("out")
+            .map(String::from)
+            .unwrap_or_else(|| format!("{}.table.json", cfg.name)),
+    );
+    result.table.save(&out)?;
+    println!("energy table saved to {}", out.display());
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args);
+    let cfg = arch_from(args)?;
+    let table_path = args
+        .get("table")
+        .ok_or_else(|| anyhow!("--table <file> required (run `wattchmen train` first)"))?;
+    let table = EnergyTable::load(Path::new(table_path))?;
+    let mode = match args.get_or("mode", "pred") {
+        "direct" => Mode::Direct,
+        "pred" => Mode::Pred,
+        m => bail!("unknown mode '{m}' (direct|pred)"),
+    };
+    let suite = workloads::evaluation_suite(cfg.gen);
+    let wanted = args.get("workload");
+    let apps: Vec<_> = suite
+        .iter()
+        .filter(|w| wanted.map(|n| w.name == n).unwrap_or(true))
+        .collect();
+    if apps.is_empty() {
+        bail!("no workload matches {:?}", wanted);
+    }
+    for w in apps {
+        let scaled = report::scaled_workload(&cfg, w, report::context::WORKLOAD_SECS);
+        let profiles = profile_app(&cfg, &scaled.kernels);
+        let pred = model::predict_app(&table, &w.name, &profiles, mode);
+        println!(
+            "{:<18} total {:>9.1} J  (base {:>8.1} J + dynamic {:>8.1} J)  coverage {:>5.1}%  runtime {:>6.1} s",
+            pred.workload,
+            pred.energy_j,
+            pred.base_j,
+            pred.dynamic_j,
+            100.0 * pred.coverage,
+            pred.duration_s
+        );
+        if args.flag("breakdown") {
+            for (bucket, joules) in &pred.by_bucket {
+                println!("    {bucket:<12} {joules:>9.1} J");
+            }
+            for (key, joules, src) in pred.by_key.iter().take(8) {
+                println!("    top: {key:<20} {joules:>9.1} J  [{src:?}]");
+            }
+        }
+    }
+    let _ = arts;
+    Ok(())
+}
+
+fn cmd_list() {
+    println!("environments:");
+    for n in ["cloudlab-v100", "summit-v100", "ref-v100", "lonestar-a100", "lonestar-h100"] {
+        let cfg = ArchConfig::by_name(n).unwrap();
+        println!(
+            "  {n:<15} {:?} {} SMs, {:.0} W TDP, {:?} cooled",
+            cfg.gen, cfg.sm_count, cfg.tdp_w, cfg.cooling.kind
+        );
+    }
+    println!("workloads (V100 set):");
+    for w in workloads::evaluation_suite(Gen::Volta) {
+        println!("  {}", w.name);
+    }
+    println!("experiments: {}", report::all_names().join(" "));
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("report") => cmd_report(&args),
+        Some("train") => cmd_train(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("list") => {
+            cmd_list();
+            Ok(())
+        }
+        Some("version") => {
+            println!("wattchmen {}", wattchmen::version());
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: wattchmen <report|train|predict|list|version> [options]\n\
+                 \n\
+                 report <fig1..fig14|all> [--fast] [--seed N] [--out DIR] [--no-artifacts]\n\
+                 train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
+                 predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred] [--breakdown]\n\
+                 list"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Microbenchmark suite (paper §3.2 / §4.2): ~90 per-architecture
+//! instruction-isolation kernels, generated from a spec table.
+//!
+//! Every benchmark follows the paper's structure — an unrolled loop body
+//! dominated by the target instruction plus the unavoidable *ancillary*
+//! instructions (loop counter IADD3, exit ISETP, backward BRA, address
+//! IMADs for memory ops, fragment LDS for tensor ops).  Ancillary
+//! contamination is exactly why Wattchmen solves a joint system of
+//! equations rather than amortizing per benchmark (§3.1, Fig 3).
+
+pub mod suite;
+
+pub use suite::{covered_columns, nanosleep_bench, suite, BenchSpec};
+
+use crate::gpusim::kernel::{KernelSpec, MemBehavior};
+use crate::isa::MemLevel;
+
+/// Unroll factor for compute targets (fraction of target ops ≈ 90 %).
+pub const UNROLL: f64 = 32.0;
+/// Memory ops per loop iteration.
+pub const MEM_UNROLL: f64 = 16.0;
+
+/// Per-iteration loop overhead every benchmark carries.
+pub fn loop_overhead() -> Vec<(String, f64)> {
+    vec![
+        ("IADD3".into(), 1.0),
+        ("ISETP.GE.AND".into(), 1.0),
+        ("BRA".into(), 1.0),
+    ]
+}
+
+/// A compute-instruction benchmark: UNROLL copies of `op` + loop overhead
+/// + a MOV of the accumulator seed.
+pub fn compute_bench(op: &str, issue_eff: f64) -> KernelSpec {
+    let mut mix = vec![(op.to_string(), UNROLL), ("MOV".into(), 1.0)];
+    mix.extend(loop_overhead());
+    KernelSpec::new(&format!("{}_bench", op.replace('.', "_")), mix)
+        .with_mem(MemBehavior::new(1.0, 1.0)) // no global traffic anyway
+        .with_issue_eff(issue_eff)
+}
+
+/// A tensor benchmark: the MMA sequence plus shared-memory fragment loads.
+/// V100 HMMA.884 expands to its four .STEPn micro-instructions, matching
+/// what NSight reports on real Volta parts.
+pub fn tensor_bench(op: &str, expand_steps: bool) -> KernelSpec {
+    let mut mix: Vec<(String, f64)> = Vec::new();
+    if expand_steps {
+        for s in 0..4 {
+            mix.push((format!("{op}.STEP{s}"), 8.0));
+        }
+    } else {
+        mix.push((op.to_string(), 8.0));
+    }
+    mix.push(("LDS.128".into(), 2.0));
+    mix.push(("MOV".into(), 4.0));
+    mix.push(("IADD3".into(), 4.0));
+    mix.extend(loop_overhead());
+    // Tensor streams are dependency-chained in the benchmark to stay under
+    // the power cap (a free-running MMA loop would throttle immediately
+    // and corrupt the energy measurement).
+    KernelSpec::new(&format!("{}_bench", op.replace('.', "_")), mix).with_issue_eff(0.35)
+}
+
+/// A global-memory benchmark targeting one hierarchy level: MEM_UNROLL
+/// accesses + address IMADs + loop overhead.  The working-set/stride
+/// choice of the real benchmarks is abstracted to the level's hit rates.
+pub fn mem_bench(op: &str, level: MemLevel) -> KernelSpec {
+    let mut mix = vec![
+        (op.to_string(), MEM_UNROLL),
+        ("IMAD".into(), MEM_UNROLL), // address arithmetic
+    ];
+    mix.extend(loop_overhead());
+    let mem = match level {
+        MemLevel::L1 => MemBehavior::new(1.0, 1.0),
+        MemLevel::L2 => MemBehavior::new(0.0, 1.0),
+        MemLevel::Dram => MemBehavior::new(0.0, 0.0),
+    };
+    let name = format!("{}_{}_bench", op.replace('.', "_"), level.tag());
+    KernelSpec::new(&name, mix)
+        .with_mem(mem)
+        .with_issue_eff(match level {
+            // L2-resident streams are dependency-padded (like the tensor
+            // benchmarks) to stay under the power cap.
+            MemLevel::L1 => 0.45,
+            MemLevel::L2 => 0.15,
+            MemLevel::Dram => 0.35,
+        })
+}
+
+/// Shared/local/constant-memory benchmark (no level split).
+pub fn onchip_mem_bench(op: &str) -> KernelSpec {
+    let mut mix = vec![
+        (op.to_string(), MEM_UNROLL),
+        ("IMAD".into(), MEM_UNROLL / 2.0),
+    ];
+    mix.extend(loop_overhead());
+    KernelSpec::new(&format!("{}_bench", op.replace('.', "_")), mix).with_issue_eff(0.28)
+}
+
+/// Atomic benchmark: fewer ops per iteration (serialization).
+pub fn atomic_bench(op: &str) -> KernelSpec {
+    let mut mix = vec![(op.to_string(), 8.0), ("IMAD".into(), 8.0)];
+    mix.extend(loop_overhead());
+    KernelSpec::new(&format!("{}_bench", op.replace('.', "_")), mix)
+        .with_mem(MemBehavior::new(0.0, 1.0))
+        .with_issue_eff(0.4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::grouping::group_counts;
+
+    #[test]
+    fn compute_bench_is_target_dominated() {
+        let k = compute_bench("FFMA", 0.75);
+        let total = k.total_instructions();
+        let target = k.mix.iter().find(|(o, _)| o == "FFMA").unwrap().1;
+        assert!(target / total > 0.85, "{}", target / total);
+    }
+
+    #[test]
+    fn tensor_bench_expands_steps_on_volta() {
+        let k = tensor_bench("HMMA.884.F32", true);
+        let grouped = group_counts(k.total_counts().iter());
+        // 4 steps × 8 at weight 1/4 → 8 logical HMMA.
+        assert_eq!(grouped["HMMA.884.F32"], 8.0);
+        assert!(k.total_counts().contains_key("HMMA.884.F32.STEP0"));
+    }
+
+    #[test]
+    fn mem_bench_levels_configure_hit_rates() {
+        let l1 = mem_bench("LDG.E.64", MemLevel::L1);
+        assert_eq!(l1.mem.l1_hit, 1.0);
+        let dram = mem_bench("LDG.E.64", MemLevel::Dram);
+        assert_eq!(dram.mem.l1_hit, 0.0);
+        assert_eq!(dram.mem.l2_hit, 0.0);
+        assert!(dram.dram_bytes() > 0.0);
+    }
+
+    #[test]
+    fn every_bench_carries_loop_overhead() {
+        for k in [
+            compute_bench("FADD", 0.75),
+            mem_bench("LDG.E.32", MemLevel::L2),
+            onchip_mem_bench("LDS.64"),
+            atomic_bench("ATOMG.ADD"),
+        ] {
+            let counts = k.total_counts();
+            assert!(counts.contains_key("IADD3"), "{}", k.name);
+            assert!(counts.contains_key("BRA"), "{}", k.name);
+            assert!(counts.contains_key("ISETP.GE.AND"), "{}", k.name);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Profile → grouped, level-split instruction counts.
+//!
+//! Bridges the profiler's raw SASS histograms to the energy table's column
+//! keys: modifier grouping (isa::grouping) plus the §3.5 hit-rate split of
+//! global memory ops across hierarchy levels ("if we have an L1 hit rate
+//! of 90 % and 100 LDG.E instructions, 90 of them hit in the L1...").
+
+use std::collections::BTreeMap;
+
+use crate::gpusim::profiler::KernelProfile;
+use crate::gpusim::kernel::MemBehavior;
+use crate::isa::class::classify_str;
+use crate::isa::{canonicalize, column_key};
+
+/// Grouped counts keyed by energy-table column (`FFMA`, `LDG.E.64@L2`, ...).
+pub fn grouped_level_counts(profile: &KernelProfile) -> BTreeMap<String, f64> {
+    let mem = MemBehavior::new(
+        profile.l1_hit.clamp(0.0, 1.0),
+        profile.l2_hit.clamp(0.0, 1.0),
+    );
+    let mut out: BTreeMap<String, f64> = BTreeMap::new();
+    for (raw, &count) in &profile.counts {
+        let g = canonicalize(raw);
+        let eff = g.weight * count;
+        let class = classify_str(&g.key);
+        if class.is_global_mem() {
+            for (level, frac) in mem.split_for(class) {
+                if frac > 0.0 {
+                    *out.entry(column_key(&g.key, Some(level))).or_insert(0.0) +=
+                        eff * frac;
+                }
+            }
+        } else {
+            *out.entry(g.key).or_insert(0.0) += eff;
+        }
+    }
+    out
+}
+
+/// Merge grouped counts across an application's kernels.
+pub fn merge_counts(per_kernel: &[BTreeMap<String, f64>]) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for counts in per_kernel {
+        for (k, v) in counts {
+            *out.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::profiler::KernelProfile;
+
+    fn profile_with(counts: &[(&str, f64)], l1: f64, l2: f64) -> KernelProfile {
+        KernelProfile {
+            name: "t".into(),
+            duration_s: 1.0,
+            counts: counts
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+            l1_hit: l1,
+            l2_hit: l2,
+            occupancy: 1.0,
+            dram_bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn hit_rate_split_matches_paper_example() {
+        // 90 % L1 hit, 100 LDG.E → 90 @L1; remaining 10 split by l2_hit.
+        let p = profile_with(&[("LDG.E", 100.0)], 0.9, 0.5);
+        let g = grouped_level_counts(&p);
+        assert!((g["LDG.E@L1"] - 90.0).abs() < 1e-9);
+        assert!((g["LDG.E@L2"] - 5.0).abs() < 1e-9);
+        assert!((g["LDG.E@DRAM"] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn modifier_variants_accumulate() {
+        let p = profile_with(
+            &[
+                ("ISETP.GE.AND", 10.0),
+                ("ISETP.LT.OR", 5.0),
+                ("STG.E.EF.64", 8.0),
+                ("STG.E.64", 2.0),
+            ],
+            1.0,
+            1.0,
+        );
+        let g = grouped_level_counts(&p);
+        assert_eq!(g["ISETP"], 15.0);
+        // Stores never hit L1; l2_hit = 1 → all @L2, EF grouped away.
+        assert_eq!(g["STG.E.64@L2"], 10.0);
+    }
+
+    #[test]
+    fn hmma_steps_fold() {
+        let p = profile_with(
+            &[
+                ("HMMA.884.F32.STEP0", 40.0),
+                ("HMMA.884.F32.STEP1", 40.0),
+                ("HMMA.884.F32.STEP2", 40.0),
+                ("HMMA.884.F32.STEP3", 40.0),
+            ],
+            1.0,
+            1.0,
+        );
+        let g = grouped_level_counts(&p);
+        assert_eq!(g["HMMA.884.F32"], 40.0);
+    }
+
+    #[test]
+    fn merge_accumulates_across_kernels() {
+        let a = grouped_level_counts(&profile_with(&[("FADD", 5.0)], 1.0, 1.0));
+        let b = grouped_level_counts(&profile_with(&[("FADD", 7.0)], 1.0, 1.0));
+        let m = merge_counts(&[a, b]);
+        assert_eq!(m["FADD"], 12.0);
+    }
+}

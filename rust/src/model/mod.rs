@@ -1,0 +1,17 @@
+//! The paper's primary contribution: the Wattchmen energy model.
+//!
+//! Training (`train`) consumes ONLY telemetry + profiles from the device
+//! under test; prediction (`predict`) consumes ONLY profiles + the trained
+//! table.  Neither may import `gpusim::energy` (the hidden ground truth).
+
+pub mod ablation;
+pub mod grouping;
+pub mod predict;
+pub mod table;
+pub mod train;
+pub mod transfer;
+
+pub use predict::{predict_app, predict_app_with, predict_suite, resolve_energy, Mode, Prediction, Source, StaticModel};
+pub use table::EnergyTable;
+pub use train::{calibrate_static_floor, train, SolverPath, TrainConfig, TrainResult};
+pub use transfer::{random_subset, table_r_squared, transfer_table, TransferResult};

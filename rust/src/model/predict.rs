@@ -1,0 +1,407 @@
+//! The Wattchmen prediction phase (paper §3.5): profile → grouped counts →
+//! hit-rate level split → per-instruction energies (direct / scaled /
+//! bucketed) → total energy + fine-grained attribution.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::gpusim::profiler::KernelProfile;
+use crate::isa::opcode::Opcode;
+use crate::isa::{bucket_of_key, split_key, MemLevel};
+use crate::runtime::Artifacts;
+
+use super::grouping::{grouped_level_counts, merge_counts};
+use super::table::EnergyTable;
+
+/// Prediction mode: `Direct` uses only directly-solved table entries;
+/// `Pred` adds the §3.4 coverage extensions (scaling + bucketing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Direct,
+    Pred,
+}
+
+/// How a column's energy was obtained (for attribution/diagnostics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    Direct,
+    Scaled,
+    Bucketed,
+    Unattributed,
+}
+
+/// Static-power model used at prediction time.
+///
+/// The paper's base model charges full-GPU static power regardless of how
+/// many SMs hold work (§6 "SM activity" limitation) — the main error
+/// source for the low-occupancy RNNs.  `OccupancyScaled` is the paper's
+/// proposed extension: an occupancy sweep of the NANOSLEEP kernel
+/// (`train::calibrate_static_floor`) yields the idle-SM leakage floor, and
+/// prediction scales static power with each kernel's achieved occupancy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StaticModel {
+    /// Paper §3.5 behaviour: full-GPU static power.
+    FullGpu,
+    /// §6 extension: static scaled by `floor + (1-floor)·occupancy`.
+    OccupancyScaled { floor: f64 },
+}
+
+/// Fine-grained energy prediction for one workload.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub workload: String,
+    /// Total predicted energy [J].
+    pub energy_j: f64,
+    /// Constant+static contribution [J].
+    pub base_j: f64,
+    /// Attributed dynamic energy [J].
+    pub dynamic_j: f64,
+    /// Fraction of instructions whose energy was attributed.
+    pub coverage: f64,
+    /// Total runtime [s].
+    pub duration_s: f64,
+    /// Dynamic energy per component bucket name [J].
+    pub by_bucket: BTreeMap<String, f64>,
+    /// Per-column attribution, sorted descending by energy.
+    pub by_key: Vec<(String, f64, Source)>,
+}
+
+/// Resolve a column's per-instruction energy under a prediction mode.
+pub fn resolve_energy(table: &EnergyTable, key: &str, mode: Mode) -> (Option<f64>, Source) {
+    if let Some(e) = table.get(key) {
+        return (Some(e), Source::Direct);
+    }
+    if mode == Mode::Direct {
+        return (None, Source::Unattributed);
+    }
+    // ---- Scaling (memory width/level transfer, §3.4) ----
+    if let Some(e) = scale_memory_key(table, key) {
+        return (Some(e), Source::Scaled);
+    }
+    // ---- Bucketing (component average, §3.4) ----
+    let bucket = bucket_of_key(key);
+    if let Some(&avg) = table.bucket_averages().get(&bucket) {
+        return (Some(avg), Source::Bucketed);
+    }
+    (None, Source::Unattributed)
+}
+
+/// Scaling: derive `OP.w@L` from a reference width with known energies at
+/// both the target level and a level where `OP.w` itself is known:
+///   e(op.w@L) = e(op.w@L') × e(op.w'@L) / e(op.w'@L')
+/// falling back to sub-linear byte-ratio width scaling at the same level.
+fn scale_memory_key(table: &EnergyTable, key: &str) -> Option<f64> {
+    let (op, level) = split_key(key);
+    let opc = Opcode::parse(op);
+    let width = opc.width_or_default();
+    let base = family_prefix(op)?;
+    let widths = [8u32, 16, 32, 64, 128];
+
+    // Level-free memory families (shared/local): width scaling only.
+    let Some(level) = level else {
+        if opc.width_bits().is_none() {
+            return None; // not a width-variant key
+        }
+        let mut ref_widths: Vec<u32> =
+            widths.iter().cloned().filter(|&w| w != width).collect();
+        ref_widths.sort_by_key(|w| (*w as i64 - width as i64).unsigned_abs());
+        for &rw in &ref_widths {
+            if let Some(e_ref) = table.get(&format!("{base}.{rw}")) {
+                let ratio = width as f64 / rw as f64;
+                return Some(e_ref * ratio.powf(0.7));
+            }
+        }
+        return None;
+    };
+
+    // Level-transfer via a reference width (prefer nearest).
+    let mut ref_widths: Vec<u32> = widths.iter().cloned().filter(|&w| w != width).collect();
+    ref_widths.sort_by_key(|w| (*w as i64 - width as i64).unsigned_abs());
+    for anchor in [MemLevel::L1, MemLevel::L2, MemLevel::Dram] {
+        if anchor == level {
+            continue;
+        }
+        let own_anchor = table.get(&format!("{base}.{width}@{}", anchor.tag()));
+        let Some(own_anchor) = own_anchor else { continue };
+        for &rw in &ref_widths {
+            let r_target = table.get(&format!("{base}.{rw}@{}", level.tag()));
+            let r_anchor = table.get(&format!("{base}.{rw}@{}", anchor.tag()));
+            if let (Some(rt), Some(ra)) = (r_target, r_anchor) {
+                if ra > 0.0 {
+                    return Some(own_anchor * rt / ra);
+                }
+            }
+        }
+    }
+    // Width scaling at the same level (sub-linear in bytes — the fixed
+    // per-access cost does not scale, hence the paper's §5.1 note that
+    // scaled memory energies can overpredict).
+    for &rw in &ref_widths {
+        if let Some(e_ref) = table.get(&format!("{base}.{rw}@{}", level.tag())) {
+            let ratio = width as f64 / rw as f64;
+            return Some(e_ref * ratio.powf(0.7));
+        }
+    }
+    None
+}
+
+/// `LDG.E.64` → `LDG.E`; `LDGSTS.E.BYPASS.128` → family without width.
+fn family_prefix(op: &str) -> Option<String> {
+    let parts: Vec<&str> = op.split('.').collect();
+    let keep: Vec<&str> = parts
+        .iter()
+        .filter(|p| p.parse::<u32>().is_err())
+        .cloned()
+        .collect();
+    if keep.is_empty() {
+        None
+    } else {
+        Some(keep.join("."))
+    }
+}
+
+/// Predict one workload from its kernel profiles (paper base model).
+pub fn predict_app(
+    table: &EnergyTable,
+    workload: &str,
+    profiles: &[KernelProfile],
+    mode: Mode,
+) -> Prediction {
+    predict_app_with(table, workload, profiles, mode, StaticModel::FullGpu)
+}
+
+/// Predict with an explicit static-power model.
+pub fn predict_app_with(
+    table: &EnergyTable,
+    workload: &str,
+    profiles: &[KernelProfile],
+    mode: Mode,
+    static_model: StaticModel,
+) -> Prediction {
+    let per_kernel: Vec<_> = profiles.iter().map(grouped_level_counts).collect();
+    let counts = merge_counts(&per_kernel);
+    let duration: f64 = profiles.iter().map(|p| p.duration_s).sum();
+
+    let base_j = match static_model {
+        StaticModel::FullGpu => table.base_power_w() * duration,
+        StaticModel::OccupancyScaled { floor } => profiles
+            .iter()
+            .map(|p| {
+                let occ_factor = floor + (1.0 - floor) * p.occupancy.clamp(0.0, 1.0);
+                (table.const_power_w + table.static_power_w * occ_factor) * p.duration_s
+            })
+            .sum(),
+    };
+    let mut dynamic_j = 0.0;
+    let mut attributed_instr = 0.0;
+    let total_instr: f64 = counts.values().sum();
+    let mut by_bucket: BTreeMap<String, f64> = BTreeMap::new();
+    let mut by_key: Vec<(String, f64, Source)> = Vec::new();
+
+    for (key, count) in &counts {
+        let (energy, source) = resolve_energy(table, key, mode);
+        match energy {
+            Some(e) => {
+                let joules = count * e * 1e-9;
+                dynamic_j += joules;
+                attributed_instr += count;
+                *by_bucket
+                    .entry(bucket_of_key(key).name().to_string())
+                    .or_insert(0.0) += joules;
+                by_key.push((key.clone(), joules, source));
+            }
+            None => by_key.push((key.clone(), 0.0, Source::Unattributed)),
+        }
+    }
+    by_key.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    Prediction {
+        workload: workload.to_string(),
+        energy_j: base_j + dynamic_j,
+        base_j,
+        dynamic_j,
+        coverage: if total_instr > 0.0 {
+            attributed_instr / total_instr
+        } else {
+            1.0
+        },
+        duration_s: duration,
+        by_bucket,
+        by_key,
+    }
+}
+
+/// Predict a batch of workloads, computing the final energy accumulation
+/// through the PJRT `predict` artifact when available (the native value is
+/// retained in the attribution fields; both agree to f32 precision).
+pub fn predict_suite(
+    table: &EnergyTable,
+    apps: &[(String, Vec<KernelProfile>)],
+    mode: Mode,
+    arts: Option<&Artifacts>,
+) -> Result<Vec<Prediction>> {
+    let mut preds: Vec<Prediction> = apps
+        .iter()
+        .map(|(name, profiles)| predict_app(table, name, profiles, mode))
+        .collect();
+
+    if let Some(arts) = arts {
+        // Union of attributed columns across workloads.
+        let mut keys: Vec<String> = Vec::new();
+        for p in &preds {
+            for (k, _, s) in &p.by_key {
+                if *s != Source::Unattributed && !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+        let groups = keys.len();
+        if groups > 0 && groups <= crate::runtime::PREDICT_I {
+            let e: Vec<f64> = keys
+                .iter()
+                .map(|k| resolve_energy(table, k, mode).0.unwrap_or(0.0))
+                .collect();
+            let mut c = vec![0.0f64; preds.len() * groups];
+            let mut p0 = Vec::with_capacity(preds.len());
+            let mut t = Vec::with_capacity(preds.len());
+            for (w, (_, profiles)) in apps.iter().enumerate() {
+                let per_kernel: Vec<_> =
+                    profiles.iter().map(grouped_level_counts).collect();
+                let counts = merge_counts(&per_kernel);
+                for (g, key) in keys.iter().enumerate() {
+                    // giga-instructions × nJ = joules.
+                    c[w * groups + g] = counts.get(key).copied().unwrap_or(0.0) * 1e-9;
+                }
+                p0.push(table.base_power_w());
+                t.push(preds[w].duration_s);
+            }
+            let totals = arts.predict(&c, preds.len(), groups, &e, &p0, &t)?;
+            for (p, total) in preds.iter_mut().zip(totals) {
+                p.energy_j = total;
+            }
+        }
+    }
+    Ok(preds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> EnergyTable {
+        EnergyTable {
+            arch: "test".into(),
+            const_power_w: 40.0,
+            static_power_w: 40.0,
+            entries: [
+                ("FADD", 1.0),
+                ("FFMA", 1.2),
+                ("MOV", 0.4),
+                ("IADD3", 0.6),
+                ("LDG.E.32@L1", 2.5),
+                ("LDG.E.32@L2", 8.0),
+                ("LDG.E.32@DRAM", 40.0),
+                ("LDG.E.8@L1", 2.0),
+                ("LDG.E.64@L1", 4.0),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+        }
+    }
+
+    fn profile(counts: &[(&str, f64)], l1: f64, l2: f64, dur: f64) -> KernelProfile {
+        KernelProfile {
+            name: "k".into(),
+            duration_s: dur,
+            counts: counts.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            l1_hit: l1,
+            l2_hit: l2,
+            occupancy: 1.0,
+            dram_bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn direct_prediction_charges_known_keys() {
+        let t = table();
+        let p = profile(&[("FADD", 1e9), ("MOV", 1e9)], 1.0, 1.0, 10.0);
+        let pred = predict_app(&t, "w", &[p], Mode::Direct);
+        // base 80 W × 10 s + (1.0 + 0.4) nJ × 1e9 = 800 + 1.4 J
+        assert!((pred.base_j - 800.0).abs() < 1e-9);
+        assert!((pred.dynamic_j - 1.4).abs() < 1e-9);
+        assert!((pred.coverage - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn level_scaling_transfers_hierarchy_ratio() {
+        let t = table();
+        // LDG.E.8@L2 unknown; anchor L1 known for 8; reference width 32
+        // known at both L1 and L2 → e = 2.0 × 8.0 / 2.5 = 6.4.
+        let (e, src) = resolve_energy(&t, "LDG.E.8@L2", Mode::Pred);
+        assert_eq!(src, Source::Scaled);
+        assert!((e.unwrap() - 6.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn width_scaling_is_sublinear() {
+        let t = table();
+        // LDG.E.128@L1 unknown; nearest known width 64@L1=4.0 →
+        // 4.0 × 2^0.7 ≈ 6.50.
+        let (e, src) = resolve_energy(&t, "LDG.E.128@L1", Mode::Pred);
+        assert_eq!(src, Source::Scaled);
+        assert!((e.unwrap() - 4.0 * 2f64.powf(0.7)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucketing_covers_unknown_compute_ops() {
+        let t = table();
+        let (e, src) = resolve_energy(&t, "R2UR", Mode::Pred);
+        assert_eq!(src, Source::Bucketed);
+        // MoveCtl bucket: MOV 0.4, IADD3 is IntUnit → avg over {MOV}=0.4.
+        assert!((e.unwrap() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn direct_mode_leaves_unknowns_unattributed() {
+        let t = table();
+        let p = profile(&[("FADD", 5e8), ("R2UR", 5e8)], 1.0, 1.0, 1.0);
+        let direct = predict_app(&t, "w", &[p.clone()], Mode::Direct);
+        let pred = predict_app(&t, "w", &[p], Mode::Pred);
+        assert!((direct.coverage - 0.5).abs() < 1e-9);
+        assert!((pred.coverage - 1.0).abs() < 1e-9);
+        assert!(pred.energy_j > direct.energy_j);
+    }
+
+    #[test]
+    fn hit_rates_blend_memory_levels() {
+        let t = table();
+        let p = profile(&[("LDG.E.32", 1e9)], 0.9, 1.0, 1.0);
+        let pred = predict_app(&t, "w", &[p], Mode::Direct);
+        // 0.9×2.5 + 0.1×8.0 = 3.05 J dynamic.
+        assert!((pred.dynamic_j - 3.05).abs() < 1e-6, "{}", pred.dynamic_j);
+    }
+
+    #[test]
+    fn attribution_sums_to_dynamic_energy() {
+        let t = table();
+        let p = profile(
+            &[("FADD", 1e9), ("FFMA", 2e9), ("LDG.E.32", 1e8)],
+            0.5,
+            0.5,
+            2.0,
+        );
+        let pred = predict_app(&t, "w", &[p], Mode::Pred);
+        let key_sum: f64 = pred.by_key.iter().map(|(_, j, _)| j).sum();
+        let bucket_sum: f64 = pred.by_bucket.values().sum();
+        assert!((key_sum - pred.dynamic_j).abs() < 1e-9);
+        assert!((bucket_sum - pred.dynamic_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn family_prefix_strips_width() {
+        assert_eq!(family_prefix("LDG.E.64"), Some("LDG.E".into()));
+        assert_eq!(family_prefix("STG.E"), Some("STG.E".into()));
+    }
+}

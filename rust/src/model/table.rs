@@ -1,0 +1,157 @@
+//! The per-instruction energy table — Wattchmen's trained model state.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::isa::{bucket_of_key, Bucket};
+use crate::util::json::{parse, Json};
+
+/// Trained model: calibrated powers + per-instruction-group energies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyTable {
+    /// Environment the table was trained on (e.g. "cloudlab-v100").
+    pub arch: String,
+    /// Constant (lowest-power-state) power [W].
+    pub const_power_w: f64,
+    /// Static (active-idle, all SMs) power above constant [W].
+    pub static_power_w: f64,
+    /// Column key → dynamic energy per warp instruction [nJ].
+    pub entries: BTreeMap<String, f64>,
+}
+
+impl EnergyTable {
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.entries.get(key).copied()
+    }
+
+    /// Baseline power charged for any run: constant + static (§3.5).
+    pub fn base_power_w(&self) -> f64 {
+        self.const_power_w + self.static_power_w
+    }
+
+    /// Mean known energy per component bucket (the §3.4 bucketing
+    /// fallback for unmeasured instructions).
+    pub fn bucket_averages(&self) -> BTreeMap<Bucket, f64> {
+        let mut sums: BTreeMap<Bucket, (f64, usize)> = BTreeMap::new();
+        for (key, &e) in &self.entries {
+            let b = bucket_of_key(key);
+            let s = sums.entry(b).or_insert((0.0, 0));
+            s.0 += e;
+            s.1 += 1;
+        }
+        sums.into_iter()
+            .map(|(b, (sum, n))| (b, sum / n as f64))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("const_power_w", Json::Num(self.const_power_w)),
+            ("static_power_w", Json::Num(self.static_power_w)),
+            (
+                "entries",
+                Json::Obj(
+                    self.entries
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<EnergyTable> {
+        let get_num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing numeric field '{k}'"))
+        };
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing 'entries'"))?
+            .iter()
+            .map(|(k, v)| {
+                v.as_f64()
+                    .map(|x| (k.clone(), x))
+                    .ok_or_else(|| anyhow!("non-numeric entry '{k}'"))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(EnergyTable {
+            arch: j
+                .get("arch")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            const_power_w: get_num("const_power_w")?,
+            static_power_w: get_num("static_power_w")?,
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<EnergyTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        EnergyTable::from_json(&parse(&text).map_err(|e| anyhow!(e))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> EnergyTable {
+        EnergyTable {
+            arch: "test-v100".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: [
+                ("FADD", 1.0),
+                ("FMUL", 1.2),
+                ("DFMA", 3.0),
+                ("LDG.E.64@L1", 5.0),
+                ("LDG.E.64@DRAM", 45.0),
+                ("MOV", 0.4),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = table();
+        let j = t.to_json();
+        let back = EnergyTable::from_json(&j).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = table();
+        let dir = std::env::temp_dir().join("wattchmen_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        t.save(&path).unwrap();
+        assert_eq!(EnergyTable::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn bucket_averages_group_correctly() {
+        let t = table();
+        let avgs = t.bucket_averages();
+        assert!((avgs[&Bucket::Fp32Unit] - 1.1).abs() < 1e-12); // FADD, FMUL
+        assert!((avgs[&Bucket::Fp64Unit] - 3.0).abs() < 1e-12);
+        assert!((avgs[&Bucket::GlobalMem] - 25.0).abs() < 1e-12);
+        assert_eq!(t.base_power_w(), 82.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-system table transfer (paper §6 "Profiler Overhead" / Fig 14):
+//! per-instruction energies of two systems of the same generation are
+//! strongly linearly related (R² ≈ 0.988 air↔water V100), so a table for a
+//! new system can be built from a small measured subset + an affine map of
+//! the source table.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::Artifacts;
+use crate::util::prng::Rng;
+use crate::util::stats;
+
+use super::table::EnergyTable;
+
+/// Result of an affine table transfer.
+#[derive(Clone, Debug)]
+pub struct TransferResult {
+    pub table: EnergyTable,
+    pub slope: f64,
+    pub intercept: f64,
+    /// Keys that were actually measured on the destination system.
+    pub measured_keys: Vec<String>,
+}
+
+/// Build a destination table from `src` plus a measured subset of
+/// destination energies.  Measured keys keep their measured values; all
+/// other keys get `slope · e_src + intercept`.
+pub fn transfer_table(
+    src: &EnergyTable,
+    dst_subset: &BTreeMap<String, f64>,
+    dst_const_power_w: f64,
+    dst_static_power_w: f64,
+    arts: Option<&Artifacts>,
+) -> Result<TransferResult> {
+    let mut xs = Vec::with_capacity(dst_subset.len());
+    let mut ys = Vec::with_capacity(dst_subset.len());
+    let mut measured_keys = Vec::with_capacity(dst_subset.len());
+    for (key, &e_dst) in dst_subset {
+        if let Some(e_src) = src.get(key) {
+            xs.push(e_src);
+            ys.push(e_dst);
+            measured_keys.push(key.clone());
+        }
+    }
+    let (slope, intercept) = match arts {
+        Some(arts) if !xs.is_empty() => arts.affine_fit(&xs, &ys)?,
+        _ => stats::linfit(&xs, &ys),
+    };
+
+    let mut entries = BTreeMap::new();
+    for (key, &e_src) in &src.entries {
+        let e = match dst_subset.get(key) {
+            Some(&measured) => measured,
+            None => (slope * e_src + intercept).max(0.0),
+        };
+        entries.insert(key.clone(), e);
+    }
+    Ok(TransferResult {
+        table: EnergyTable {
+            arch: format!("{}-transfer", src.arch),
+            const_power_w: dst_const_power_w,
+            static_power_w: dst_static_power_w,
+            entries,
+        },
+        slope,
+        intercept,
+        measured_keys,
+    })
+}
+
+/// Pick a random fraction of a table's keys (the Fig-14 10 % / 50 %
+/// subsets).  Deterministic under `seed`.
+pub fn random_subset(
+    table: &EnergyTable,
+    fraction: f64,
+    seed: u64,
+) -> Vec<String> {
+    let keys: Vec<String> = table.entries.keys().cloned().collect();
+    let k = ((keys.len() as f64 * fraction).round() as usize).clamp(2, keys.len());
+    let mut rng = Rng::new(seed);
+    rng.sample_indices(keys.len(), k)
+        .into_iter()
+        .map(|i| keys[i].clone())
+        .collect()
+}
+
+/// R² between two tables over their common keys (§6: 0.988 air↔water).
+pub fn table_r_squared(a: &EnergyTable, b: &EnergyTable) -> f64 {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (k, &ea) in &a.entries {
+        if let Some(eb) = b.get(k) {
+            xs.push(ea);
+            ys.push(eb);
+        }
+    }
+    stats::r_squared(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src_table() -> EnergyTable {
+        EnergyTable {
+            arch: "air".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: (0..40)
+                .map(|i| (format!("OP{i}"), 0.5 + 0.25 * i as f64))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn exact_affine_relation_recovered() {
+        let src = src_table();
+        // Destination = 0.9·src + 0.05 everywhere; measure 8 keys.
+        let subset: BTreeMap<String, f64> = src
+            .entries
+            .iter()
+            .take(8)
+            .map(|(k, &v)| (k.clone(), 0.9 * v + 0.05))
+            .collect();
+        let r = transfer_table(&src, &subset, 36.0, 40.0, None).unwrap();
+        assert!((r.slope - 0.9).abs() < 1e-9);
+        assert!((r.intercept - 0.05).abs() < 1e-9);
+        for (k, &e_src) in &src.entries {
+            let expect = 0.9 * e_src + 0.05;
+            assert!((r.table.entries[k] - expect).abs() < 1e-9);
+        }
+        assert_eq!(r.table.const_power_w, 36.0);
+    }
+
+    #[test]
+    fn measured_keys_keep_measured_values() {
+        let src = src_table();
+        let mut subset = BTreeMap::new();
+        subset.insert("OP0".to_string(), 123.0); // outlier measurement
+        subset.insert("OP1".to_string(), 0.7);
+        subset.insert("OP2".to_string(), 0.95);
+        let r = transfer_table(&src, &subset, 36.0, 40.0, None).unwrap();
+        assert_eq!(r.table.entries["OP0"], 123.0);
+    }
+
+    #[test]
+    fn random_subset_is_deterministic_and_sized() {
+        let src = src_table();
+        let a = random_subset(&src, 0.1, 7);
+        let b = random_subset(&src, 0.1, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4); // 10% of 40
+        let big = random_subset(&src, 0.5, 7);
+        assert_eq!(big.len(), 20);
+    }
+
+    #[test]
+    fn r_squared_of_affine_tables_is_one() {
+        let src = src_table();
+        let mut dst = src.clone();
+        for v in dst.entries.values_mut() {
+            *v = 0.85 * *v + 0.1;
+        }
+        assert!((table_r_squared(&src, &dst) - 1.0).abs() < 1e-12);
+    }
+}

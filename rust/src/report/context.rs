@@ -1,0 +1,269 @@
+//! Shared evaluation pipeline for the experiment reproductions: train the
+//! models per environment, measure ground-truth workload energies, and
+//! build model-vs-measured comparisons.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::baselines::{train_accelwattch, AccelWattchModel, GuserModel};
+use crate::cluster::ClusterCampaign;
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::device::Device;
+use crate::gpusim::profiler::{profile_app, KernelProfile};
+use crate::gpusim::timing;
+use crate::model::{self, Mode, Prediction, TrainConfig, TrainResult};
+use crate::runtime::Artifacts;
+use crate::util::stats;
+use crate::workloads::Workload;
+
+/// How long each measured workload run should last (the paper alters the
+/// Rodinia benchmarks to repeat their target kernel so it dominates the
+/// measurement, §4.2).
+// (public so the CLI can reuse the measurement protocol)
+pub const WORKLOAD_SECS: f64 = 90.0;
+
+/// Evaluation context: lazily trains/caches per-environment state.
+pub struct EvalCtx<'a> {
+    pub fast: bool,
+    pub seed: u64,
+    pub arts: Option<&'a Artifacts>,
+    trained: BTreeMap<String, TrainResult>,
+    guser: BTreeMap<String, GuserModel>,
+    accelwattch: Option<AccelWattchModel>,
+}
+
+impl<'a> EvalCtx<'a> {
+    pub fn new(fast: bool, seed: u64, arts: Option<&'a Artifacts>) -> Self {
+        EvalCtx {
+            fast,
+            seed,
+            arts,
+            trained: BTreeMap::new(),
+            guser: BTreeMap::new(),
+            accelwattch: None,
+        }
+    }
+
+    pub fn train_cfg(&self) -> TrainConfig {
+        if self.fast {
+            TrainConfig {
+                reps: 2,
+                bench_secs: 60.0,
+                cooldown_secs: 15.0,
+                idle_secs: 20.0,
+                cov_threshold: 0.02,
+            }
+        } else {
+            TrainConfig::default()
+        }
+    }
+
+    /// Wattchmen training campaign for an environment (cached).
+    pub fn wattchmen(&mut self, cfg: &ArchConfig) -> Result<&TrainResult> {
+        if !self.trained.contains_key(&cfg.name) {
+            let campaign = ClusterCampaign::new(cfg.clone(), 4, self.seed);
+            let result = campaign.train(&self.train_cfg(), self.arts)?;
+            self.trained.insert(cfg.name.clone(), result);
+        }
+        Ok(&self.trained[&cfg.name])
+    }
+
+    /// Guser model for an environment (cached).
+    pub fn guser(&mut self, cfg: &ArchConfig) -> &GuserModel {
+        if !self.guser.contains_key(&cfg.name) {
+            let mut dev = Device::new(cfg.clone(), self.seed.wrapping_add(101));
+            let secs = if self.fast { 40.0 } else { 120.0 };
+            let m = crate::baselines::train_guser(&mut dev, secs);
+            self.guser.insert(cfg.name.clone(), m);
+        }
+        &self.guser[&cfg.name]
+    }
+
+    /// AccelWattch reference-environment model (cached; V100 only).
+    pub fn accelwattch(&mut self) -> &AccelWattchModel {
+        if self.accelwattch.is_none() {
+            self.accelwattch = Some(train_accelwattch(self.seed.wrapping_add(202)));
+        }
+        self.accelwattch.as_ref().unwrap()
+    }
+}
+
+/// Scale a workload's iteration counts so its natural duration on `cfg` is
+/// ~`target_secs` (preserving inter-kernel ratios, unlike per-kernel
+/// target times — the QMCPACK bug lives in those ratios).
+pub fn scaled_workload(cfg: &ArchConfig, w: &Workload, target_secs: f64) -> Workload {
+    let natural: f64 = w
+        .kernels
+        .iter()
+        .map(|k| timing::duration_s(cfg, k))
+        .sum();
+    let factor = if natural > 0.0 { target_secs / natural } else { 1.0 };
+    let mut out = w.clone();
+    for k in &mut out.kernels {
+        k.iters *= factor;
+    }
+    out
+}
+
+/// Ground-truth measurement of one (already scaled) workload [J]: fresh
+/// thermal state, NVML energy counters summed over kernels.
+pub fn measure_workload(cfg: &ArchConfig, w: &Workload, seed: u64) -> MeasuredWorkload {
+    let mut dev = Device::new(cfg.clone(), seed);
+    dev.cooldown(120.0);
+    // Warm-up pass (paper §4.2: benchmarks repeat their target kernel, so
+    // the measured window sits at operating temperature).
+    for k in &w.kernels {
+        let _ = dev.run(k, None);
+    }
+    let mut energy = 0.0;
+    let mut duration = 0.0;
+    let mut records = Vec::new();
+    for k in &w.kernels {
+        let rec = dev.run(k, None);
+        energy += rec.telemetry.energy_counter_j;
+        duration += rec.duration_s;
+        records.push(rec);
+    }
+    MeasuredWorkload {
+        name: w.name.clone(),
+        energy_j: energy,
+        duration_s: duration,
+        records,
+    }
+}
+
+pub struct MeasuredWorkload {
+    pub name: String,
+    pub energy_j: f64,
+    pub duration_s: f64,
+    pub records: Vec<crate::gpusim::device::RunRecord>,
+}
+
+/// One model's predictions vs measured ground truth across a suite.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub workloads: Vec<String>,
+    pub measured_j: Vec<f64>,
+    /// label → per-workload predicted energy [J].
+    pub predictions: BTreeMap<String, Vec<f64>>,
+    /// label → per-workload coverage (Wattchmen modes only).
+    pub coverage: BTreeMap<String, Vec<f64>>,
+}
+
+impl Comparison {
+    pub fn mape(&self, label: &str) -> f64 {
+        stats::mape(&self.predictions[label], &self.measured_j)
+    }
+
+    pub fn mean_coverage(&self, label: &str) -> f64 {
+        stats::mean(&self.coverage[label])
+    }
+
+    pub fn normalized(&self, label: &str) -> Vec<f64> {
+        self.predictions[label]
+            .iter()
+            .zip(&self.measured_j)
+            .map(|(p, m)| p / m)
+            .collect()
+    }
+}
+
+/// Full comparison on one environment.  `labels` picks the models:
+/// "A" AccelWattch, "G" Guser, "B" Wattchmen-Direct, "C" Wattchmen-Pred.
+pub fn compare_models(
+    ctx: &mut EvalCtx,
+    cfg: &ArchConfig,
+    suite: &[Workload],
+    labels: &[&str],
+) -> Result<Comparison> {
+    // Scale + profile + measure every workload.
+    let scaled: Vec<Workload> = suite
+        .iter()
+        .map(|w| scaled_workload(cfg, w, WORKLOAD_SECS))
+        .collect();
+    let profiles: Vec<(String, Vec<KernelProfile>)> = scaled
+        .iter()
+        .map(|w| (w.name.clone(), profile_app(cfg, &w.kernels)))
+        .collect();
+    let mut measured = Vec::new();
+    for (i, w) in scaled.iter().enumerate() {
+        measured.push(measure_workload(cfg, w, ctx.seed.wrapping_add(1000 + i as u64)));
+    }
+
+    let mut cmp = Comparison {
+        workloads: scaled.iter().map(|w| w.name.clone()).collect(),
+        measured_j: measured.iter().map(|m| m.energy_j).collect(),
+        predictions: BTreeMap::new(),
+        coverage: BTreeMap::new(),
+    };
+
+    for &label in labels {
+        match label {
+            "A" => {
+                let m = ctx.accelwattch();
+                let preds: Vec<f64> = profiles
+                    .iter()
+                    .map(|(_, p)| m.predict_energy_j(p))
+                    .collect();
+                cmp.predictions.insert("A".into(), preds);
+            }
+            "G" => {
+                let m = ctx.guser(cfg).clone();
+                let preds: Vec<f64> = profiles
+                    .iter()
+                    .map(|(_, p)| m.predict_energy_j(p))
+                    .collect();
+                cmp.predictions.insert("G".into(), preds);
+            }
+            "B" | "C" => {
+                let mode = if label == "B" { Mode::Direct } else { Mode::Pred };
+                let table = ctx.wattchmen(cfg)?.table.clone();
+                let preds: Vec<Prediction> =
+                    model::predict_suite(&table, &profiles, mode, ctx.arts)?;
+                cmp.predictions
+                    .insert(label.into(), preds.iter().map(|p| p.energy_j).collect());
+                cmp.coverage
+                    .insert(label.into(), preds.iter().map(|p| p.coverage).collect());
+            }
+            other => anyhow::bail!("unknown model label {other}"),
+        }
+    }
+    Ok(cmp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Gen;
+    use crate::workloads;
+
+    #[test]
+    fn scaling_preserves_kernel_ratios() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = workloads::qmcpack::qmcpack(Gen::Volta, false);
+        let s = scaled_workload(&cfg, &w, 30.0);
+        let r0 = s.kernels[2].iters / w.kernels[2].iters;
+        let r1 = s.kernels[0].iters / w.kernels[0].iters;
+        assert!((r0 - r1).abs() / r1 < 1e-12);
+        let total: f64 = s
+            .kernels
+            .iter()
+            .map(|k| timing::duration_s(&cfg, k))
+            .sum();
+        assert!((total - 30.0).abs() < 1.5, "total {total}");
+    }
+
+    #[test]
+    fn measured_energy_is_plausible() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = scaled_workload(
+            &cfg,
+            &workloads::rodinia::hotspot(Gen::Volta),
+            20.0,
+        );
+        let m = measure_workload(&cfg, &w, 7);
+        // 20 s at somewhere between idle (38 W) and TDP (300 W).
+        assert!(m.energy_j > 38.0 * 15.0 && m.energy_j < 300.0 * 25.0);
+    }
+}

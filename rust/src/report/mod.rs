@@ -1,0 +1,99 @@
+//! Experiment reproduction harness: one driver per paper table/figure
+//! (DESIGN.md §4), shared evaluation context, and JSON result emission for
+//! EXPERIMENTS.md.
+
+pub mod context;
+pub mod experiments;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+pub use context::{compare_models, measure_workload, scaled_workload, EvalCtx};
+pub use experiments::{all_names, run, ExperimentResult};
+
+impl ExperimentResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("title", Json::Str(self.title.clone())),
+            (
+                "metrics",
+                Json::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v, paper)| {
+                            Json::obj(vec![
+                                ("metric", Json::Str(k.clone())),
+                                ("reproduced", Json::Num(*v)),
+                                ("paper", Json::Num(*paper)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<out_dir>/<name>.json` next to the textual report.
+    pub fn save(&self, out_dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(
+            out_dir.join(format!("{}.json", self.name)),
+            self.to_json().to_string_pretty(),
+        )?;
+        std::fs::write(out_dir.join(format!("{}.txt", self.name)), &self.text)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_names_cover_paper_artifacts() {
+        let names = all_names();
+        for expected in ["fig1", "fig6", "fig9", "fig14", "table1", "ablations"] {
+            assert!(names.contains(&expected), "{expected}");
+        }
+        assert_eq!(names.len(), 15);
+    }
+
+    #[test]
+    fn fast_fig5_linearity_runs() {
+        let mut ctx = EvalCtx::new(true, 42, None);
+        let r = run("fig5", &mut ctx).unwrap();
+        let (_, r2, _) = &r.metrics[0];
+        assert!(*r2 > 0.95, "linearity R² {r2}");
+        assert!(r.text.contains("Fig 5"));
+    }
+
+    #[test]
+    fn fig4_reaches_steady_state() {
+        let mut ctx = EvalCtx::new(true, 42, None);
+        let r = run("fig4", &mut ctx).unwrap();
+        let steady = r.metrics[0].1;
+        assert!((100.0..260.0).contains(&steady), "steady {steady}");
+    }
+
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        let mut ctx = EvalCtx::new(true, 42, None);
+        assert!(run("fig99", &mut ctx).is_err());
+    }
+
+    #[test]
+    fn result_json_roundtrip() {
+        let r = ExperimentResult {
+            name: "figX".into(),
+            title: "t".into(),
+            text: "body".into(),
+            metrics: vec![("m".into(), 1.5, 2.0)],
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("figX"));
+    }
+}

@@ -1,0 +1,356 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python never runs at request time — `make artifacts` is a build step;
+//! this module gives the coordinator typed, padded entry points over the
+//! compiled executables (one per model entry point, compiled once).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Fixed artifact shape contract (must match python/compile/model.py).
+pub const NNLS_N: usize = 128;
+pub const TRACE_B: usize = 128;
+pub const TRACE_T: usize = 4096;
+pub const AFFINE_N: usize = 256;
+pub const PREDICT_W: usize = 32;
+pub const PREDICT_I: usize = 256;
+
+pub struct Artifacts {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    nnls: xla::PjRtLoadedExecutable,
+    integrate: xla::PjRtLoadedExecutable,
+    affine: xla::PjRtLoadedExecutable,
+    predict: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    if !path.is_file() {
+        bail!(
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+    }
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))
+}
+
+fn lit_f32_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+fn lit_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+impl Artifacts {
+    /// Load + compile every artifact from `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Artifacts {
+            nnls: load_exe(&client, dir, &format!("nnls_{NNLS_N}"))?,
+            integrate: load_exe(&client, dir, &format!("integrate_{TRACE_B}x{TRACE_T}"))?,
+            affine: load_exe(&client, dir, &format!("affine_fit_{AFFINE_N}"))?,
+            predict: load_exe(&client, dir, &format!("predict_{PREDICT_W}x{PREDICT_I}"))?,
+            client,
+        })
+    }
+
+    /// Default artifact location: `$WATTCHMEN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("WATTCHMEN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// Non-negative least squares over an `n`-column system (n ≤ 128).
+    ///
+    /// `a` is row-major `rows × n`; rows are padded into the square
+    /// 128-system the artifact expects (rows > 128 are rejected —
+    /// Wattchmen keeps a square system by construction, paper §3.1).
+    pub fn nnls(&self, a: &[f64], rows: usize, n: usize, b: &[f64]) -> Result<Vec<f64>> {
+        if n > NNLS_N || rows > NNLS_N {
+            bail!("nnls: system {rows}x{n} exceeds artifact size {NNLS_N}");
+        }
+        assert_eq!(a.len(), rows * n);
+        assert_eq!(b.len(), rows);
+        let mut ap = vec![0.0f32; NNLS_N * NNLS_N];
+        for r in 0..rows {
+            for c in 0..n {
+                ap[r * NNLS_N + c] = a[r * n + c] as f32;
+            }
+        }
+        let mut bp = vec![0.0f32; NNLS_N];
+        for r in 0..rows {
+            bp[r] = b[r] as f32;
+        }
+        let mut mask = vec![0.0f32; NNLS_N];
+        for m in mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+        let result = self.nnls.execute::<xla::Literal>(&[
+            lit_f32_2d(&ap, NNLS_N, NNLS_N)?,
+            lit_f32_1d(&bp),
+            lit_f32_1d(&mask),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let x = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(x[..n].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Batched masked trapezoidal integration: returns `(energy_j,
+    /// mean_power_w)` per trace.  Traces longer than 4096 samples are
+    /// rejected (the campaign samples at 10 Hz ⇒ 180 s = 1800 samples);
+    /// batches larger than 128 are chunked internally.
+    pub fn integrate(
+        &self,
+        traces: &[Vec<f64>],
+        windows: &[(usize, usize)],
+        dt: f64,
+    ) -> Result<Vec<(f64, f64)>> {
+        assert_eq!(traces.len(), windows.len());
+        let mut out = Vec::with_capacity(traces.len());
+        for chunk_start in (0..traces.len()).step_by(TRACE_B) {
+            let chunk_end = (chunk_start + TRACE_B).min(traces.len());
+            let nrows = chunk_end - chunk_start;
+            let mut p = vec![0.0f32; TRACE_B * TRACE_T];
+            let mut v = vec![0.0f32; TRACE_B * TRACE_T];
+            for (i, idx) in (chunk_start..chunk_end).enumerate() {
+                let tr = &traces[idx];
+                if tr.len() > TRACE_T {
+                    bail!("trace {idx} has {} samples > {TRACE_T}", tr.len());
+                }
+                let (lo, hi) = windows[idx];
+                if lo > hi || hi > tr.len() {
+                    bail!("bad window ({lo}, {hi}) for trace of {}", tr.len());
+                }
+                for (t, &pw) in tr.iter().enumerate() {
+                    p[i * TRACE_T + t] = pw as f32;
+                }
+                for t in lo..hi {
+                    v[i * TRACE_T + t] = 1.0;
+                }
+            }
+            let result = self.integrate.execute::<xla::Literal>(&[
+                lit_f32_2d(&p, TRACE_B, TRACE_T)?,
+                lit_f32_2d(&v, TRACE_B, TRACE_T)?,
+                lit_f32_scalar(dt as f32),
+            ])?[0][0]
+                .to_literal_sync()?;
+            let (energy, mean) = result.to_tuple2()?;
+            let energy = energy.to_vec::<f32>()?;
+            let mean = mean.to_vec::<f32>()?;
+            for i in 0..nrows {
+                out.push((energy[i] as f64, mean[i] as f64));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Masked affine fit `y ≈ slope·x + intercept` over up to 256 points.
+    pub fn affine_fit(&self, x: &[f64], y: &[f64]) -> Result<(f64, f64)> {
+        assert_eq!(x.len(), y.len());
+        if x.len() > AFFINE_N {
+            bail!("affine_fit: {} points > {AFFINE_N}", x.len());
+        }
+        let mut xp = vec![0.0f32; AFFINE_N];
+        let mut yp = vec![0.0f32; AFFINE_N];
+        let mut mp = vec![0.0f32; AFFINE_N];
+        for i in 0..x.len() {
+            xp[i] = x[i] as f32;
+            yp[i] = y[i] as f32;
+            mp[i] = 1.0;
+        }
+        let result = self.affine.execute::<xla::Literal>(&[
+            lit_f32_1d(&xp),
+            lit_f32_1d(&yp),
+            lit_f32_1d(&mp),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (s, i) = result.to_tuple2()?;
+        Ok((
+            s.get_first_element::<f32>()? as f64,
+            i.get_first_element::<f32>()? as f64,
+        ))
+    }
+
+    /// Batched energy prediction: `E_w = p0_w·t_w + C[w,:]·e` for up to 32
+    /// workloads × 256 instruction groups per call (chunked above that).
+    pub fn predict(
+        &self,
+        c: &[f64],
+        workloads: usize,
+        groups: usize,
+        e: &[f64],
+        p0: &[f64],
+        t: &[f64],
+    ) -> Result<Vec<f64>> {
+        if groups > PREDICT_I {
+            bail!("predict: {groups} groups > {PREDICT_I}");
+        }
+        assert_eq!(c.len(), workloads * groups);
+        assert_eq!(e.len(), groups);
+        assert_eq!(p0.len(), workloads);
+        assert_eq!(t.len(), workloads);
+        let mut ep = vec![0.0f32; PREDICT_I];
+        for (i, &v) in e.iter().enumerate() {
+            ep[i] = v as f32;
+        }
+        let mut out = Vec::with_capacity(workloads);
+        for chunk_start in (0..workloads).step_by(PREDICT_W) {
+            let chunk_end = (chunk_start + PREDICT_W).min(workloads);
+            let nrows = chunk_end - chunk_start;
+            let mut cp = vec![0.0f32; PREDICT_W * PREDICT_I];
+            let mut p0p = vec![0.0f32; PREDICT_W];
+            let mut tp = vec![0.0f32; PREDICT_W];
+            for (i, w) in (chunk_start..chunk_end).enumerate() {
+                for g in 0..groups {
+                    cp[i * PREDICT_I + g] = c[w * groups + g] as f32;
+                }
+                p0p[i] = p0[w] as f32;
+                tp[i] = t[w] as f32;
+            }
+            let result = self.predict.execute::<xla::Literal>(&[
+                lit_f32_2d(&cp, PREDICT_W, PREDICT_I)?,
+                lit_f32_1d(&ep),
+                lit_f32_1d(&p0p),
+                lit_f32_1d(&tp),
+            ])?[0][0]
+                .to_literal_sync()?;
+            let vals = result.to_tuple1()?.to_vec::<f32>()?;
+            for v in vals.iter().take(nrows) {
+                out.push(*v as f64);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{nnls as native_nnls, Mat};
+    use crate::util::prng::Rng;
+    use crate::util::stats;
+
+    fn artifacts() -> Option<Artifacts> {
+        let dir = Artifacts::default_dir();
+        match Artifacts::load(&dir) {
+            Ok(a) => Some(a),
+            Err(e) => {
+                eprintln!("SKIP runtime tests (artifacts unavailable): {e:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn nnls_artifact_matches_native_solver() {
+        let Some(art) = artifacts() else { return };
+        let mut rng = Rng::new(17);
+        let n = 24;
+        let mut rows = Vec::new();
+        for i in 0..n {
+            let mut row: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 0.08)).collect();
+            row[i] = rng.uniform(0.7, 0.95);
+            rows.push(row);
+        }
+        let a = Mat::from_rows(&rows);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 4.0)).collect();
+        let b = a.mul_vec(&x_true);
+        let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
+        let x_art = art.nnls(&flat, n, n, &b).unwrap();
+        let (x_nat, _) = native_nnls(&a, &b);
+        for i in 0..n {
+            assert!(
+                (x_art[i] - x_nat[i]).abs() < 5e-3,
+                "col {i}: artifact {} vs native {}",
+                x_art[i],
+                x_nat[i]
+            );
+            assert!((x_art[i] - x_true[i]).abs() < 5e-3);
+        }
+    }
+
+    #[test]
+    fn integrate_artifact_matches_native_trapz() {
+        let Some(art) = artifacts() else { return };
+        let mut rng = Rng::new(23);
+        let traces: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..1800).map(|_| rng.uniform(120.0, 180.0)).collect())
+            .collect();
+        let windows: Vec<(usize, usize)> = vec![(600, 1800); 5];
+        let out = art.integrate(&traces, &windows, 0.1).unwrap();
+        for (i, (e, m)) in out.iter().enumerate() {
+            let slice = &traces[i][600..1800];
+            let e_ref = stats::trapz(slice, 0.1);
+            let m_ref = stats::mean(slice);
+            assert!((e - e_ref).abs() / e_ref < 1e-4, "energy {e} vs {e_ref}");
+            assert!((m - m_ref).abs() / m_ref < 1e-4);
+        }
+    }
+
+    #[test]
+    fn affine_artifact_recovers_line() {
+        let Some(art) = artifacts() else { return };
+        let x: Vec<f64> = (0..100).map(|i| i as f64 * 0.1).collect();
+        let y: Vec<f64> = x.iter().map(|v| 0.88 * v + 0.35).collect();
+        let (s, i) = art.affine_fit(&x, &y).unwrap();
+        assert!((s - 0.88).abs() < 1e-3, "slope {s}");
+        assert!((i - 0.35).abs() < 1e-3, "intercept {i}");
+    }
+
+    #[test]
+    fn predict_artifact_matches_manual_dot() {
+        let Some(art) = artifacts() else { return };
+        let workloads = 40; // forces chunking over the 32-row artifact
+        let groups = 50;
+        let mut rng = Rng::new(31);
+        let c: Vec<f64> = (0..workloads * groups)
+            .map(|_| rng.uniform(0.0, 10.0))
+            .collect();
+        let e: Vec<f64> = (0..groups).map(|_| rng.uniform(0.0, 4.0)).collect();
+        let p0: Vec<f64> = (0..workloads).map(|_| rng.uniform(60.0, 120.0)).collect();
+        let t: Vec<f64> = (0..workloads).map(|_| rng.uniform(1.0, 200.0)).collect();
+        let out = art.predict(&c, workloads, groups, &e, &p0, &t).unwrap();
+        for w in 0..workloads {
+            let dot: f64 = (0..groups).map(|g| c[w * groups + g] * e[g]).sum();
+            let expect = p0[w] * t[w] + dot;
+            assert!(
+                (out[w] - expect).abs() / expect < 1e-4,
+                "w{w}: {} vs {expect}",
+                out[w]
+            );
+        }
+    }
+
+    #[test]
+    fn oversize_requests_rejected() {
+        let Some(art) = artifacts() else { return };
+        assert!(art
+            .nnls(&vec![0.0; 130 * 130], 130, 130, &vec![0.0; 130])
+            .is_err());
+        let long = vec![vec![1.0; TRACE_T + 1]];
+        assert!(art.integrate(&long, &[(0, 10)], 0.1).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Dense linear algebra helpers for the native solver: column-major-free,
+//! Vec<f64>-based, sized for the ≤128-column systems Wattchmen builds.
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows_data: &[Vec<f64>]) -> Mat {
+        let rows = rows_data.len();
+        let cols = rows_data.first().map(|r| r.len()).unwrap_or(0);
+        let mut m = Mat::zeros(rows, cols);
+        for (i, r) in rows_data.iter().enumerate() {
+            assert_eq!(r.len(), cols, "ragged rows");
+            m.data[i * cols..(i + 1) * cols].copy_from_slice(r);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// A^T A (cols × cols).
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for k in 0..self.rows {
+            let row = &self.data[k * n..(k + 1) * n];
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in i..n {
+                    g.data[i * n + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g.data[i * n + j] = g.data[j * n + i];
+            }
+        }
+        g
+    }
+
+    /// A^T b (length cols).
+    pub fn t_mul_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for k in 0..self.rows {
+            let row = &self.data[k * self.cols..(k + 1) * self.cols];
+            let bk = b[k];
+            if bk == 0.0 {
+                continue;
+            }
+            for (o, r) in out.iter_mut().zip(row) {
+                *o += r * bk;
+            }
+        }
+        out
+    }
+
+    /// A x (length rows).
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.data[i * self.cols..(i + 1) * self.cols]
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+/// Solve the SPD system `G x = h` by Cholesky with diagonal regularization
+/// fallback.  Panics on non-finite inputs.
+pub fn solve_spd(g: &Mat, h: &[f64]) -> Vec<f64> {
+    assert_eq!(g.rows, g.cols);
+    assert_eq!(h.len(), g.rows);
+    let n = g.rows;
+    let mut reg = 0.0f64;
+    for attempt in 0..6 {
+        let mut l = vec![0.0f64; n * n];
+        let mut ok = true;
+        'outer: for i in 0..n {
+            for j in 0..=i {
+                let mut sum = g.at(i, j) + if i == j { reg } else { 0.0 };
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        ok = false;
+                        break 'outer;
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        if ok {
+            // Forward then backward substitution.
+            let mut y = vec![0.0; n];
+            for i in 0..n {
+                let mut s = h[i];
+                for k in 0..i {
+                    s -= l[i * n + k] * y[k];
+                }
+                y[i] = s / l[i * n + i];
+            }
+            let mut x = vec![0.0; n];
+            for i in (0..n).rev() {
+                let mut s = y[i];
+                for k in (i + 1)..n {
+                    s -= l[k * n + i] * x[k];
+                }
+                x[i] = s / l[i * n + i];
+            }
+            return x;
+        }
+        // Escalate ridge: trace-scaled.
+        let tr: f64 = (0..n).map(|i| g.at(i, i)).sum::<f64>().max(1e-12);
+        reg = (tr / n as f64) * 1e-10 * 10f64.powi(attempt as i32 + 1);
+    }
+    panic!("solve_spd: matrix not SPD even with regularization");
+}
+
+/// Least-squares solve of (possibly rectangular) `A x = b` via normal
+/// equations.
+pub fn solve_lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    solve_spd(&a.gram(), &a.t_mul_vec(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_and_matvec() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = a.gram();
+        assert_eq!(g.at(0, 0), 35.0);
+        assert_eq!(g.at(0, 1), 44.0);
+        assert_eq!(g.at(1, 1), 56.0);
+        assert_eq!(a.t_mul_vec(&[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+        assert_eq!(a.mul_vec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn spd_solve_exact() {
+        // G = [[4,2],[2,3]], x = [1, 2] -> h = [8, 8]
+        let g = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let x = solve_spd(&g, &[8.0, 8.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lstsq_recovers_overdetermined() {
+        // y = 2x + 1 sampled at x=0..4 -> columns [x, 1].
+        let a = Mat::from_rows(
+            &(0..5).map(|i| vec![i as f64, 1.0]).collect::<Vec<_>>(),
+        );
+        let b: Vec<f64> = (0..5).map(|i| 2.0 * i as f64 + 1.0).collect();
+        let x = solve_lstsq(&a, &b);
+        assert!((x[0] - 2.0).abs() < 1e-10);
+        assert!((x[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn regularization_handles_rank_deficiency() {
+        // Duplicate columns: the regularized solve must still return
+        // something finite with small residual.
+        let a = Mat::from_rows(&[vec![1.0, 1.0], vec![2.0, 2.0], vec![3.0, 3.0]]);
+        let b = vec![2.0, 4.0, 6.0];
+        let x = solve_lstsq(&a, &b);
+        let r = a.mul_vec(&x);
+        for (ri, bi) in r.iter().zip(&b) {
+            assert!((ri - bi).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Native numeric solvers: Lawson–Hanson NNLS and dense least squares.
+//!
+//! These mirror the PJRT artifacts (authored in JAX/Pallas, see
+//! `python/compile/`) for verification and serve as the fitting engine of
+//! the AccelWattch baseline.  The Wattchmen trainer's production path goes
+//! through `runtime::Artifacts::nnls`.
+
+pub mod linalg;
+pub mod nnls;
+
+pub use linalg::{solve_lstsq, solve_spd, Mat};
+pub use nnls::nnls;

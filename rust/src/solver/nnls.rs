@@ -1,0 +1,207 @@
+//! Native Lawson–Hanson active-set NNLS.
+//!
+//! This is the verification mirror of the PJRT `nnls_128` artifact (the
+//! projected-gradient solver authored in JAX/Pallas): the trainer solves
+//! through the artifact on the hot path and cross-checks the residual
+//! against this implementation.  It is also used standalone by the
+//! AccelWattch baseline's component fit.
+
+use super::linalg::{solve_spd, Mat};
+
+/// Solve `min ||A x - b||` s.t. `x >= 0` (Lawson & Hanson, 1974).
+///
+/// Returns `(x, residual_norm)`.
+pub fn nnls(a: &Mat, b: &[f64]) -> (Vec<f64>, f64) {
+    assert_eq!(a.rows, b.len());
+    let n = a.cols;
+    let mut passive = vec![false; n];
+    let mut x = vec![0.0f64; n];
+
+    // w = A^T (b - A x), the negative gradient.
+    let gradient = |x: &[f64]| -> Vec<f64> {
+        let ax = a.mul_vec(x);
+        let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+        a.t_mul_vec(&r)
+    };
+
+    let tol = {
+        let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        1e-10 * (bnorm + 1.0)
+    };
+
+    for _outer in 0..(3 * n + 30) {
+        let w = gradient(&x);
+        // Most-violated inactive coordinate.
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..n {
+            if !passive[j] && w[j] > tol {
+                if best.map(|(_, bw)| w[j] > bw).unwrap_or(true) {
+                    best = Some((j, w[j]));
+                }
+            }
+        }
+        let Some((j_add, _)) = best else { break };
+        passive[j_add] = true;
+
+        // Inner loop: LS solve on the passive set; backtrack if any
+        // passive coordinate would go negative.
+        loop {
+            let idx: Vec<usize> = (0..n).filter(|&j| passive[j]).collect();
+            if idx.is_empty() {
+                break;
+            }
+            // Sub-matrix gram solve.
+            let mut sub = Mat::zeros(a.rows, idx.len());
+            for r in 0..a.rows {
+                for (c, &j) in idx.iter().enumerate() {
+                    sub.set(r, c, a.at(r, j));
+                }
+            }
+            let z_sub = solve_spd(&sub.gram(), &sub.t_mul_vec(b));
+
+            if z_sub.iter().all(|&v| v > 0.0) {
+                for (c, &j) in idx.iter().enumerate() {
+                    x[j] = z_sub[c];
+                }
+                for j in 0..n {
+                    if !passive[j] {
+                        x[j] = 0.0;
+                    }
+                }
+                break;
+            }
+            // Backtracking step toward z.
+            let mut alpha = f64::INFINITY;
+            for (c, &j) in idx.iter().enumerate() {
+                if z_sub[c] <= 0.0 {
+                    let denom = x[j] - z_sub[c];
+                    if denom > 0.0 {
+                        alpha = alpha.min(x[j] / denom);
+                    }
+                }
+            }
+            if !alpha.is_finite() {
+                alpha = 0.0;
+            }
+            for (c, &j) in idx.iter().enumerate() {
+                x[j] += alpha * (z_sub[c] - x[j]);
+                if x[j] <= tol {
+                    x[j] = 0.0;
+                    passive[j] = false;
+                }
+            }
+        }
+    }
+
+    let ax = a.mul_vec(&x);
+    let res = b
+        .iter()
+        .zip(&ax)
+        .map(|(bi, axi)| (bi - axi) * (bi - axi))
+        .sum::<f64>()
+        .sqrt();
+    (x, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::{check, close};
+
+    #[test]
+    fn exact_recovery_of_nonnegative_solution() {
+        // Diagonally dominant system with interior solution.
+        let a = Mat::from_rows(&[
+            vec![0.9, 0.05, 0.05],
+            vec![0.1, 0.8, 0.1],
+            vec![0.05, 0.15, 0.8],
+        ]);
+        let x_true = [1.5, 0.7, 3.0];
+        let b = a.mul_vec(&x_true);
+        let (x, res) = nnls(&a, &b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8, "{x:?}");
+        }
+        assert!(res < 1e-8);
+    }
+
+    #[test]
+    fn clamps_negative_ls_solution() {
+        // LS solution of this system has a negative coordinate; NNLS must
+        // return 0 there.
+        let a = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0], vec![1.0, 0.0]]);
+        let b = vec![1.0, 1.0, 2.0];
+        let (x, _) = nnls(&a, &b);
+        assert!(x.iter().all(|&v| v >= 0.0), "{x:?}");
+        // scipy.optimize.nnls gives [1.333..., 0.0]
+        assert!((x[0] - 4.0 / 3.0).abs() < 1e-9, "{x:?}");
+        assert_eq!(x[1], 0.0);
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let a = Mat::from_rows(&[vec![1.0, 0.2], vec![0.3, 1.0]]);
+        let (x, res) = nnls(&a, &[0.0, 0.0]);
+        assert_eq!(x, vec![0.0, 0.0]);
+        assert_eq!(res, 0.0);
+    }
+
+    #[test]
+    fn property_residual_never_worse_than_zero_vector() {
+        check("nnls-vs-zero", 40, |rng| {
+            let n = 2 + rng.below(20);
+            let rows: Vec<Vec<f64>> = (0..n + rng.below(5))
+                .map(|_| (0..n).map(|_| rng.uniform(0.0, 1.0)).collect())
+                .collect();
+            let a = Mat::from_rows(&rows);
+            let b: Vec<f64> = (0..a.rows).map(|_| rng.uniform(-1.0, 2.0)).collect();
+            let (x, res) = nnls(&a, &b);
+            if x.iter().any(|&v| v < 0.0) {
+                return Err("negative coordinate".into());
+            }
+            let bnorm = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if res > bnorm + 1e-9 {
+                return Err(format!("residual {res} > ||b|| {bnorm}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_recovers_diag_dominant_systems() {
+        check("nnls-recovery", 40, |rng| {
+            let n = 2 + rng.below(30);
+            let mut rows = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut row: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 0.1)).collect();
+                row[i] = rng.uniform(0.7, 1.0);
+                rows.push(row);
+            }
+            let a = Mat::from_rows(&rows);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 5.0)).collect();
+            let b = a.mul_vec(&x_true);
+            let (x, res) = nnls(&a, &b);
+            for (xi, ti) in x.iter().zip(&x_true) {
+                close(*xi, *ti, 1e-6, 1e-8)?;
+            }
+            close(res, 0.0, 0.0, 1e-6)
+        });
+    }
+
+    #[test]
+    fn handles_rectangular_overdetermined() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..8).map(|_| rng.uniform(0.0, 1.0)).collect())
+            .collect();
+        let a = Mat::from_rows(&rows);
+        let x_true: Vec<f64> = (0..8).map(|_| rng.uniform(0.0, 3.0)).collect();
+        let b = a.mul_vec(&x_true);
+        let (x, res) = nnls(&a, &b);
+        assert!(res < 1e-6, "res {res}");
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Power-trace processing: steady-state window detection and energy
+//! extraction (paper §3.3 "Ensuring Consistent and Stable Measurements").
+//!
+//! The numeric integration itself runs through the PJRT `integrate`
+//! artifact on the training path; [`integrate_native`] is the in-process
+//! mirror used for verification and small one-off traces.
+
+use crate::gpusim::telemetry::Telemetry;
+use crate::util::stats;
+
+/// A detected steady-state window over a trace (sample index range).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SteadyWindow {
+    pub start: usize,
+    pub end: usize, // exclusive
+}
+
+impl SteadyWindow {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// Detect the steady-state window of a power trace.
+///
+/// Strategy: discard a warm-up prefix, then grow the window backward from
+/// the end while the rolling coefficient of variation stays below
+/// `cov_threshold`.  Microbenchmark traces (Fig 4) plateau after the
+/// thermal transient; the plateau is what we integrate.
+pub fn steady_window(powers: &[f64], cov_threshold: f64) -> SteadyWindow {
+    let n = powers.len();
+    if n < 8 {
+        return SteadyWindow { start: 0, end: n };
+    }
+    // Never trust the first 25% (thermal + clock ramp).
+    let min_start = n / 4;
+    let tail_mean = stats::mean(&powers[n - n / 4..]);
+
+    // Walk forward from min_start until samples enter a band around the
+    // tail mean, then verify stability of the remainder.
+    let band = 0.03 * tail_mean.abs().max(1.0);
+    let mut start = min_start;
+    while start < n - 4 && (powers[start] - tail_mean).abs() > band {
+        start += 1;
+    }
+    // Shrink until the window CoV is acceptable (guards against slow
+    // drift that stays inside the band).
+    let mut window = SteadyWindow { start, end: n };
+    for _ in 0..16 {
+        let cov = stats::cov(&powers[window.start..window.end]);
+        if cov <= cov_threshold || window.len() <= n / 8 {
+            break;
+        }
+        window.start += (window.end - window.start) / 8;
+    }
+    window
+}
+
+/// Energy + mean power over a window by native trapezoidal integration.
+pub fn integrate_native(powers: &[f64], window: SteadyWindow, dt: f64) -> (f64, f64) {
+    let slice = &powers[window.start..window.end];
+    (stats::trapz(slice, dt), stats::mean(slice))
+}
+
+/// Summary of one telemetry capture after steady-state processing.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    /// Steady-state mean power [W].
+    pub steady_power_w: f64,
+    /// Steady window duration [s].
+    pub steady_secs: f64,
+    /// Full-trace energy [J] (trapezoidal, all samples).
+    pub total_energy_j: f64,
+    /// Full-trace duration [s].
+    pub total_secs: f64,
+    pub window: SteadyWindow,
+}
+
+/// Process a telemetry capture natively (the artifact-based batched path
+/// lives in `model::train`).
+pub fn summarize(tel: &Telemetry, cov_threshold: f64) -> TraceSummary {
+    let powers = tel.powers();
+    let w = steady_window(&powers, cov_threshold);
+    let (_, steady_mean) = integrate_native(&powers, w, tel.period_s);
+    let (total, _) = integrate_native(
+        &powers,
+        SteadyWindow {
+            start: 0,
+            end: powers.len(),
+        },
+        tel.period_s,
+    );
+    TraceSummary {
+        steady_power_w: steady_mean,
+        steady_secs: w.len() as f64 * tel.period_s,
+        total_energy_j: total,
+        total_secs: tel.duration_s(),
+        window: w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Synthetic trace: exponential warmup to a plateau + noise.
+    fn warmup_trace(n: usize, plateau: f64, tau: f64, noise: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let t = i as f64 * 0.1;
+                let base = plateau * (1.0 - (-t / tau).exp());
+                base + noise * rng.normal()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn window_excludes_warmup() {
+        let p = warmup_trace(1800, 150.0, 20.0, 1.0, 3);
+        let w = steady_window(&p, 0.02);
+        // Warmup (~3 tau = 60 s = 600 samples) must be excluded.
+        assert!(w.start >= 450, "start {}", w.start);
+        assert_eq!(w.end, 1800);
+        let (_, mean) = integrate_native(&p, w, 0.1);
+        assert!((mean - 150.0).abs() < 2.0, "mean {mean}");
+    }
+
+    #[test]
+    fn flat_trace_keeps_most_samples() {
+        let p = vec![100.0; 400];
+        let w = steady_window(&p, 0.02);
+        assert!(w.len() >= 280);
+    }
+
+    #[test]
+    fn short_trace_returns_whole_range() {
+        let p = vec![50.0; 5];
+        let w = steady_window(&p, 0.02);
+        assert_eq!((w.start, w.end), (0, 5));
+    }
+
+    #[test]
+    fn integrate_matches_constant_power() {
+        let p = vec![200.0; 101];
+        let w = SteadyWindow { start: 0, end: 101 };
+        let (e, m) = integrate_native(&p, w, 0.1);
+        assert!((e - 200.0 * 10.0).abs() < 1e-9);
+        assert_eq!(m, 200.0);
+    }
+
+    #[test]
+    fn summarize_full_pipeline() {
+        use crate::gpusim::telemetry::{Sample, Telemetry};
+        let powers = warmup_trace(900, 180.0, 15.0, 1.5, 9);
+        let tel = Telemetry {
+            samples: powers
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| Sample {
+                    t_s: i as f64 * 0.1,
+                    power_w: p,
+                    util_pct: 100.0,
+                    temp_c: 60.0,
+                })
+                .collect(),
+            energy_counter_j: 0.0,
+            period_s: 0.1,
+        };
+        let s = summarize(&tel, 0.02);
+        assert!((s.steady_power_w - 180.0).abs() < 4.0, "steady {}", s.steady_power_w);
+        assert!(s.steady_secs > 30.0);
+        assert!(s.total_energy_j > 0.0);
+    }
+}

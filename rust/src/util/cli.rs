@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `wattchmen <command> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| format!("--{name}: bad number '{s}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| format!("--{name}: bad integer '{s}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse(&["report", "fig6", "fig7"]);
+        assert_eq!(a.command.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["fig6", "fig7"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse(&["train", "--arch", "v100", "--seed=7", "--verbose"]);
+        assert_eq!(a.get("arch"), Some("v100"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--deep"]);
+        assert!(a.flag("fast") && a.flag("deep"));
+    }
+
+    #[test]
+    fn numeric_getters() {
+        let a = parse(&["x", "--reps", "5", "--dt", "0.1"]);
+        assert_eq!(a.get_usize("reps", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("dt", 1.0).unwrap(), 0.1);
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+        assert!(parse(&["x", "--reps", "zz"]).get_usize("reps", 1).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared infrastructure: CLI parsing, JSON, PRNG, statistics, text tables,
+//! and the in-tree property-test harness.  All of these replace crates that
+//! are unavailable in the offline build environment (see DESIGN.md
+//! §Offline-crate-substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod text;

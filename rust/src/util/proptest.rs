@@ -1,0 +1,74 @@
+//! In-tree property-test harness (proptest/quickcheck are unavailable
+//! offline).  Runs a closure over many seeded PRNG streams; on failure it
+//! panics with the case seed so the exact input can be replayed with
+//! `replay(seed, f)`.
+
+use super::prng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `f` over `cases` independent random streams.  `f` returns
+/// `Err(description)` to fail the property.
+pub fn check<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    // Base seed is stable per property name so failures are reproducible
+    // across runs without recording anything.
+    let base = super::prng::fnv1a(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, f: F) -> Result<(), String>
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    f(&mut rng)
+}
+
+/// Assert helper: approximate equality with mixed abs/rel tolerance.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let tol = abs + rel * b.abs().max(a.abs());
+    if diff <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (diff {diff:.3e} > tol {tol:.3e})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0usize);
+        check("trivial", 10, |_| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get_mut(), &10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0005, 1e-3, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-3, 0.0).is_err());
+        assert!(close(0.0, 1e-9, 0.0, 1e-8).is_ok());
+    }
+}

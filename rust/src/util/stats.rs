@@ -1,0 +1,168 @@
+//! Small statistics helpers shared by trace processing, training, and the
+//! report generators.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for len < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Coefficient of variation (sd / mean); inf when mean == 0.
+pub fn cov(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return f64::INFINITY;
+    }
+    std_dev(xs) / m.abs()
+}
+
+/// Mean absolute percent error of predictions vs ground truth, in percent.
+/// Entries with zero truth are skipped.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        if *t != 0.0 {
+            acc += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * acc / n as f64
+    }
+}
+
+/// Pearson correlation squared (R^2 of a linear fit y ~ x).
+pub fn r_squared(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    (sxy * sxy) / (sxx * syy)
+}
+
+/// Ordinary least-squares line fit: returns (slope, intercept).
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len().max(1) as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+    }
+    let _ = n;
+    if sxx == 0.0 {
+        return (0.0, my);
+    }
+    let slope = sxy / sxx;
+    (slope, my - slope * mx)
+}
+
+/// Trapezoidal integral of uniformly sampled values (native mirror of the
+/// L1 Pallas integrator — used for cross-checks and unit tests).
+pub fn trapz(xs: &[f64], dt: f64) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for w in xs.windows(2) {
+        acc += 0.5 * (w[0] + w[1]);
+    }
+    acc * dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn mape_basic() {
+        // |110-100|/100 = 10%, |90-100|/100 = 10% -> 10%
+        assert!((mape(&[110.0, 90.0], &[100.0, 100.0]) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_skips_zero_truth() {
+        assert_eq!(mape(&[5.0, 110.0], &[0.0, 100.0]), 10.0);
+    }
+
+    #[test]
+    fn r2_perfect_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((r_squared(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v - 7.0).collect();
+        let (s, i) = linfit(&x, &y);
+        assert!((s - 3.0).abs() < 1e-10);
+        assert!((i + 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trapz_constant() {
+        let xs = vec![5.0; 11];
+        assert!((trapz(&xs, 0.1) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_zero_for_constant() {
+        assert_eq!(cov(&[2.0, 2.0, 2.0]), 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Plain-text table / figure-series rendering for the report generators.
+
+/// Render an aligned text table. `rows` must all have `headers.len()` cells.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:w$}", c, w = widths[i]));
+            line.push_str(" | ");
+        }
+        line.trim_end().to_string()
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&sep, &widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// ASCII sparkline-style horizontal bar chart for figure series.
+pub fn render_bars(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("{title}\n");
+    let maxv = items
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let label_w = items.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+    for (k, v) in items {
+        let n = ((v / maxv) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "  {:label_w$} | {:>10.3} | {}\n",
+            k,
+            v,
+            "#".repeat(n.min(width)),
+        ));
+    }
+    out
+}
+
+/// Format a float with a fixed number of decimals (helper for table cells).
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["workload", "MAPE"],
+            &[
+                vec!["backprop_k1".into(), "14.0".into()],
+                vec!["gemm".into(), "9.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+        assert!(t.contains("backprop_k1"));
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let b = render_bars(
+            "fig",
+            &[("a".into(), 1.0), ("b".into(), 2.0)],
+            10,
+        );
+        let a_hashes = b.lines().nth(1).unwrap().matches('#').count();
+        let b_hashes = b.lines().nth(2).unwrap().matches('#').count();
+        assert_eq!(b_hashes, 10);
+        assert_eq!(a_hashes, 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_row_panics() {
+        render_table(&["a", "b"], &[vec!["1".into()]]);
+    }
+}

@@ -1,0 +1,185 @@
+//! DeepBench GEMM and RNN workloads (Table 3: GEMM_c1 1760×128×1760,
+//! GEMM_c2 3072×128×1024; vanilla RNN, 1760 hidden, batch 16, 50 steps).
+//!
+//! Precision variants map to the generation's math pipes: double →
+//! DFMA (Volta) / DMMA (Ampere+), float → FFMA, half → the generation's
+//! tensor MMA (V100 4-step HMMA.884, A100 HMMA.16816, H100 warp-group
+//! HGMMA — the §5.2.3 coverage gap).
+//!
+//! RNNs underutilize the GPU (paper §5.1: ≈80 % of their energy is static
+//! + constant because small batch sizes leave SMs idle [87, 96, 118]) —
+//! modeled as low occupancy and low issue efficiency.
+
+use crate::gpusim::kernel::{KernelSpec, MemBehavior};
+use crate::isa::Gen;
+
+use super::{with_longtail, Workload};
+
+/// Tensor-pipe mix fragment for a half-precision GEMM on `gen`.
+fn half_math(gen: Gen) -> Vec<(String, f64)> {
+    match gen {
+        Gen::Volta => (0..4)
+            .map(|s| (format!("HMMA.884.F16.STEP{s}"), 6.0))
+            .collect(),
+        Gen::Ampere => vec![("HMMA.16816.F16".into(), 8.0)],
+        Gen::Hopper => vec![
+            ("HGMMA.64x64x16.F16".into(), 1.0),
+            ("LDSM.16.M88.4".into(), 2.0),
+            ("UTMALDG".into(), 0.25),
+            ("WARPGROUP.ARRIVE".into(), 0.5),
+        ],
+    }
+}
+
+/// Double-precision math fragment.
+fn double_math(gen: Gen) -> Vec<(String, f64)> {
+    match gen {
+        Gen::Volta => vec![("DFMA".into(), 32.0)],
+        // Ampere+ route dense FP64 GEMM through DMMA.
+        _ => vec![("DMMA.884".into(), 8.0), ("DFMA".into(), 4.0)],
+    }
+}
+
+/// DeepBench GEMM (`config` 1 or 2).
+pub fn gemm(gen: Gen, config: u8, precision: &str) -> Workload {
+    let mut mix: Vec<(String, f64)> = match precision {
+        "double" => double_math(gen),
+        "float" => vec![("FFMA".into(), 32.0)],
+        "half" => half_math(gen),
+        _ => panic!("unknown precision {precision}"),
+    };
+    // Tiled loads through shared memory + epilogue stores.
+    mix.extend([
+        ("LDG.E.128".into(), 2.0),
+        ("LDS.128".into(), 6.0),
+        ("STS.128".into(), 2.0),
+        ("STG.E.64".into(), 0.5),
+        ("IMAD".into(), 4.0),
+        ("IADD3".into(), 2.0),
+        ("ISETP.GE.AND".into(), 0.5),
+        ("BRA".into(), 0.5),
+        ("MOV".into(), 1.0),
+        ("BAR.SYNC".into(), 0.5),
+    ]);
+    // c2 (3072×128×1024) streams more data per FLOP than c1.
+    let (mem, iters) = if config == 1 {
+        (MemBehavior::new(0.88, 0.80), 1.6e9)
+    } else {
+        (MemBehavior::new(0.80, 0.70), 1.9e9)
+    };
+    // FP64 GEMMs pipeline-stall more than FP32/tensor paths; they also sit
+    // right at the power cap, so their achieved issue rate is lower.
+    let eff = if precision == "double" { 0.60 } else { 0.85 };
+    let k = KernelSpec::new(&format!("gemm_c{config}_{precision}"), mix)
+        .with_iters(iters)
+        .with_mem(mem)
+        .with_occupancy(1.0)
+        .with_issue_eff(eff);
+    Workload::new(
+        &format!("gemm_c{config}_{precision}"),
+        vec![with_longtail(k, gen)],
+    )
+}
+
+/// DeepBench vanilla RNN (train or inference).
+pub fn rnn(gen: Gen, phase: &str, precision: &str) -> Workload {
+    let math: Vec<(String, f64)> = match precision {
+        "double" => vec![("DFMA".into(), 16.0), ("DADD".into(), 4.0)],
+        "float" => vec![("FFMA".into(), 16.0), ("FADD".into(), 4.0)],
+        "half" => vec![("HFMA2".into(), 16.0), ("HADD2".into(), 4.0)],
+        _ => panic!("unknown precision {precision}"),
+    };
+    let mut mix = math;
+    mix.extend([
+        // Gate activations + recurrent pointwise work.
+        ("MUFU.EX2".into(), 2.0),
+        ("MUFU.RCP".into(), 1.0),
+        ("LDG.E.32".into(), 8.0),
+        ("LDS.32".into(), 6.0),
+        ("STG.E.32".into(), 2.0),
+        ("SHFL.DOWN".into(), 1.0),
+        ("IMAD".into(), 6.0),
+        ("IADD3".into(), 3.0),
+        ("ISETP.GE.AND".into(), 1.5),
+        ("BRA".into(), 1.5),
+        ("MOV".into(), 3.0),
+        ("BAR.SYNC".into(), 1.0),
+    ]);
+    if phase == "train" {
+        // Backward pass: extra accumulations + weight-gradient stores.
+        mix.extend([
+            ("FADD".into(), 4.0),
+            ("STG.E.32".into(), 2.0),
+            ("ATOMG.ADD".into(), 0.5),
+        ]);
+    }
+    // Batch 16 on 80+ SMs: most of the GPU idles (occupancy ~0.3) and the
+    // recurrent dependence kills issue efficiency.
+    let k = KernelSpec::new(&format!("rnn_{phase}_{precision}"), mix)
+        .with_iters(6.0e8)
+        .with_mem(MemBehavior::new(0.80, 0.65))
+        .with_occupancy(0.28)
+        .with_issue_eff(0.30);
+    Workload::new(
+        &format!("rnn_{phase}_{precision}"),
+        vec![with_longtail(k, gen)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::config::ArchConfig;
+    use crate::gpusim::device::Device;
+
+    #[test]
+    fn half_gemm_uses_generation_tensor_ops() {
+        let v = gemm(Gen::Volta, 1, "half");
+        assert!(v.kernels[0].mix.iter().any(|(o, _)| o.starts_with("HMMA.884")));
+        let h = gemm(Gen::Hopper, 1, "half");
+        assert!(h.kernels[0].mix.iter().any(|(o, _)| o.starts_with("HGMMA")));
+        assert!(!h.kernels[0].mix.iter().any(|(o, _)| o.starts_with("HMMA.884")));
+    }
+
+    #[test]
+    fn ampere_double_gemm_uses_dmma() {
+        let a = gemm(Gen::Ampere, 1, "double");
+        assert!(a.kernels[0].mix.iter().any(|(o, _)| o == "DMMA.884"));
+        let v = gemm(Gen::Volta, 1, "double");
+        assert!(!v.kernels[0].mix.iter().any(|(o, _)| o == "DMMA.884"));
+    }
+
+    #[test]
+    fn rnn_is_static_dominated() {
+        // Paper §5.1: static+constant ≈ 80 % of RNN energy.
+        let mut dev = Device::new(ArchConfig::cloudlab_v100(), 99);
+        let w = rnn(Gen::Volta, "inf", "float");
+        let rec = dev.run(&w.kernels[0], Some(30.0));
+        let mean_power = rec.telemetry.mean_power_w();
+        let base = dev.cfg.const_power_w
+            + dev.cfg.static_power_at(55.0, w.kernels[0].occupancy);
+        let static_share = base / mean_power;
+        assert!(
+            (0.55..=0.95).contains(&static_share),
+            "static share {static_share} at {mean_power} W"
+        );
+    }
+
+    #[test]
+    fn gemms_run_hot_rnns_run_cold() {
+        let mut dev = Device::new(ArchConfig::cloudlab_v100(), 7);
+        let g = gemm(Gen::Volta, 1, "float");
+        let hot = dev.run(&g.kernels[0], Some(30.0)).telemetry.mean_power_w();
+        dev.cooldown(200.0);
+        let r = rnn(Gen::Volta, "inf", "float");
+        let cold = dev.run(&r.kernels[0], Some(30.0)).telemetry.mean_power_w();
+        assert!(hot > 1.8 * cold, "gemm {hot} W vs rnn {cold} W");
+    }
+
+    #[test]
+    fn train_has_more_work_than_inference() {
+        let t = rnn(Gen::Volta, "train", "float");
+        let i = rnn(Gen::Volta, "inf", "float");
+        assert!(t.total_instructions() > i.total_instructions());
+    }
+}

@@ -1,0 +1,51 @@
+//! Graph analytics: PageRank as SPMV over the `pre2` matrix (659033²,
+//! Table 3) — the paper's memory-bandwidth-bound, irregular workload
+//! (§4.2, evaluated on A100/H100 where kmeans is unavailable).
+
+use crate::gpusim::kernel::{KernelSpec, MemBehavior};
+use crate::isa::Gen;
+
+use super::{with_longtail, Workload};
+
+pub fn pagerank(gen: Gen) -> Workload {
+    let mix = vec![
+        // Irregular gather: column indices + values + x[col].
+        ("LDG.E.32".into(), 14.0),
+        ("LDG.E.64".into(), 6.0),
+        ("LDG.E.8".into(), 8.0), // row-degree / flag bytes
+        ("FFMA".into(), 6.0),
+        ("FADD".into(), 4.0),
+        ("STG.E.32".into(), 1.0),
+        ("ATOMG.ADD".into(), 0.5),
+        ("IMAD".into(), 10.0),
+        ("IADD3".into(), 6.0),
+        ("ISETP.GE.AND".into(), 3.0),
+        ("BRA".into(), 3.0),
+        ("MOV".into(), 3.0),
+        ("SHFL.DOWN".into(), 1.5), // warp-level row reduction
+        ("S2R".into(), 0.5),
+    ];
+    // pre2 blows out the caches: low L1/L2 hit rates, DRAM-bound.
+    let k = KernelSpec::new("spmv_csr_kernel", mix)
+        .with_iters(1.5e9)
+        .with_mem(MemBehavior::new(0.15, 0.20))
+        .with_occupancy(0.80)
+        .with_issue_eff(0.60);
+    Workload::new("pagerank", vec![with_longtail(k, gen)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{config::ArchConfig, timing};
+
+    #[test]
+    fn pagerank_is_memory_bound() {
+        let w = pagerank(Gen::Ampere);
+        let cfg = ArchConfig::lonestar_a100();
+        assert!(
+            timing::is_memory_bound(&cfg, &w.kernels[0]),
+            "SPMV over pre2 must be bandwidth-bound (paper §4.2)"
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! The paper's 16-workload evaluation suite (Table 3) + case-study
+//! variants, expressed as per-kernel SASS instruction-mix specifications.
+//!
+//! Each workload's mix is modeled from its published characterization:
+//! Rodinia GPGPU kernels [19, 20], DeepBench GEMM/RNN [73, 74], PageRank
+//! SPMV over the `pre2` matrix [25, 85], and QMCPACK NiO S64 [52, 54].
+//! Mixes include the modifier-variant "long tail" real compilers emit
+//! (carry-chain IADD3.X / IMAD.X, uniform-datapath R2UR, 64-bit compares,
+//! Hopper warp-group ops) — the instructions Wattchmen-Direct cannot
+//! attribute and §3.4's bucketing must cover.
+
+pub mod deepbench;
+pub mod graph;
+pub mod qmcpack;
+pub mod rodinia;
+
+use crate::gpusim::kernel::KernelSpec;
+use crate::isa::Gen;
+
+/// A named application: an ordered list of kernels.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub kernels: Vec<KernelSpec>,
+}
+
+impl Workload {
+    pub fn new(name: &str, kernels: Vec<KernelSpec>) -> Workload {
+        Workload {
+            name: name.to_string(),
+            kernels,
+        }
+    }
+
+    pub fn total_instructions(&self) -> f64 {
+        self.kernels.iter().map(|k| k.total_instructions()).sum()
+    }
+}
+
+/// Modifier-variant long tail appended to every kernel's mix, scaled to
+/// `share` of the kernel's base instruction count.  None of these keys has
+/// a dedicated microbenchmark.
+pub fn longtail(gen: Gen, base_total: f64, share: f64) -> Vec<(String, f64)> {
+    let volta: &[(&str, f64)] = &[
+        ("IADD3.X", 2.0),
+        ("IMAD.X", 1.5),
+        ("LEA.HI", 1.5),
+        ("ISETP.GE.AND.U64", 1.0), // groups to ISETP.64 — unbenched
+        ("PLOP3", 1.0),
+        ("P2R", 0.5),
+        ("R2P", 0.5),
+        ("F2I.U32.F32.TRUNC", 1.0),
+        ("VOTE.ANY", 0.5),
+        ("BRX", 0.8),
+        ("CAL", 0.3),
+        ("RET", 0.3),
+        ("LDL.64", 1.5), // register-spill traffic, 64-bit
+        ("STL.64", 1.0),
+        ("NOP", 1.2),  // alignment padding — no benchmark, no bucket
+        ("CCTL", 0.6), // cache control
+    ];
+    let ampere_extra: &[(&str, f64)] = &[
+        ("R2UR", 3.0),
+        ("UIMAD", 2.0),
+        ("USHF", 1.5),
+        ("VOTEU", 1.0),
+        ("BMSK", 1.0),
+        ("I2IP", 0.5),
+    ];
+    let hopper_extra: &[(&str, f64)] = &[("WARPGROUP.ARRIVE", 1.0), ("UR2R", 0.8)];
+
+    let mut tail: Vec<(&str, f64)> = volta.to_vec();
+    if gen != Gen::Volta {
+        tail.extend_from_slice(ampere_extra);
+    }
+    if gen == Gen::Hopper {
+        tail.extend_from_slice(hopper_extra);
+    }
+    let weight_sum: f64 = tail.iter().map(|(_, w)| w).sum();
+    let scale = base_total * share / weight_sum;
+    tail.iter()
+        .map(|(op, w)| (op.to_string(), w * scale))
+        .collect()
+}
+
+/// Default long-tail share of instruction counts per generation: newer
+/// toolchains emit more uniform-datapath and carry-chain variants.
+pub fn longtail_share(gen: Gen) -> f64 {
+    match gen {
+        Gen::Volta => 0.28,
+        Gen::Ampere => 0.32,
+        Gen::Hopper => 0.35,
+    }
+}
+
+/// Attach the generation's long tail to a kernel mix.
+pub fn with_longtail(mut kernel: KernelSpec, gen: Gen) -> KernelSpec {
+    let base: f64 = kernel.mix.iter().map(|(_, n)| n).sum();
+    kernel
+        .mix
+        .extend(longtail(gen, base, longtail_share(gen)));
+    kernel
+}
+
+/// The 16-workload evaluation set for a generation (paper §4.2/§5.2.2:
+/// V100 runs kmeans; CUDA 12 deprecated its texture path, so A100/H100
+/// drop kmeans and add PageRank).
+pub fn evaluation_suite(gen: Gen) -> Vec<Workload> {
+    let mut v = vec![
+        rodinia::backprop_k1(gen),
+        rodinia::backprop_k2(gen, false),
+        rodinia::hotspot(gen),
+    ];
+    if gen == Gen::Volta {
+        v.push(rodinia::kmeans(gen));
+    }
+    v.push(rodinia::srad_v1(gen));
+    for prec in ["double", "float", "half"] {
+        v.push(deepbench::gemm(gen, 1, prec));
+        v.push(deepbench::gemm(gen, 2, prec));
+    }
+    for prec in ["double", "float"] {
+        v.push(deepbench::rnn(gen, "train", prec));
+    }
+    for prec in ["double", "float", "half"] {
+        v.push(deepbench::rnn(gen, "inf", prec));
+    }
+    if gen != Gen::Volta {
+        v.push(graph::pagerank(gen));
+    }
+    assert_eq!(v.len(), 16);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_workloads_per_generation() {
+        for gen in [Gen::Volta, Gen::Ampere, Gen::Hopper] {
+            let suite = evaluation_suite(gen);
+            assert_eq!(suite.len(), 16);
+            let names: std::collections::BTreeSet<_> =
+                suite.iter().map(|w| w.name.clone()).collect();
+            assert_eq!(names.len(), 16, "duplicate names");
+        }
+    }
+
+    #[test]
+    fn volta_has_kmeans_ampere_has_pagerank() {
+        let names = |g: Gen| -> Vec<String> {
+            evaluation_suite(g).iter().map(|w| w.name.clone()).collect()
+        };
+        assert!(names(Gen::Volta).iter().any(|n| n == "kmeans"));
+        assert!(!names(Gen::Volta).iter().any(|n| n == "pagerank"));
+        assert!(names(Gen::Ampere).iter().any(|n| n == "pagerank"));
+        assert!(!names(Gen::Ampere).iter().any(|n| n == "kmeans"));
+    }
+
+    #[test]
+    fn longtail_share_scales_with_generation() {
+        let base = 100.0;
+        let volta: f64 = longtail(Gen::Volta, base, longtail_share(Gen::Volta))
+            .iter()
+            .map(|(_, n)| n)
+            .sum();
+        let hopper: f64 = longtail(Gen::Hopper, base, longtail_share(Gen::Hopper))
+            .iter()
+            .map(|(_, n)| n)
+            .sum();
+        assert!((volta - 28.0).abs() < 1e-9);
+        assert!((hopper - 35.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ampere_longtail_contains_r2ur() {
+        let tail = longtail(Gen::Ampere, 100.0, 0.27);
+        assert!(tail.iter().any(|(op, _)| op == "R2UR"));
+        let volta_tail = longtail(Gen::Volta, 100.0, 0.12);
+        assert!(!volta_tail.iter().any(|(op, _)| op == "R2UR"));
+    }
+
+    #[test]
+    fn workloads_have_positive_instruction_counts() {
+        for w in evaluation_suite(Gen::Volta) {
+            assert!(w.total_instructions() > 1e9, "{} too small", w.name);
+            for k in &w.kernels {
+                assert!(k.occupancy > 0.0 && k.occupancy <= 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! QMCPACK NiO S64 (256 atoms, 3072 edges — Table 3): real-space quantum
+//! Monte Carlo.  Three kernel families dominate the mixed-precision DMC
+//! runs: B-spline orbital evaluation, distance tables, and the walker
+//! update/drift computation.
+//!
+//! The §5.3.2 case study: the mixed-precision build unintentionally called
+//! the update path at a much higher frequency than intended, visible as
+//! recurring power spikes (Fig 12a).  `qmcpack(gen, fixed=false)` models
+//! that bug by multiplying the update kernel's invocation count; the fixed
+//! build (Fig 12b) removes the unnecessary computations for ≈35 % less
+//! energy per update cycle (Fig 13).
+
+use crate::gpusim::kernel::{KernelSpec, MemBehavior};
+use crate::isa::Gen;
+
+use super::{with_longtail, Workload};
+
+/// B-spline orbital evaluation (single precision in the mixed build).
+fn spline_eval(gen: Gen) -> KernelSpec {
+    let mix = vec![
+        ("FFMA".into(), 22.0),
+        ("FMUL".into(), 6.0),
+        ("FADD".into(), 6.0),
+        ("LDG.E.64".into(), 8.0),
+        ("LDG.E.32".into(), 4.0),
+        ("LDS.32".into(), 4.0),
+        ("STG.E.32".into(), 2.0),
+        ("IMAD".into(), 8.0),
+        ("IADD3".into(), 4.0),
+        ("ISETP.GE.AND".into(), 1.5),
+        ("BRA".into(), 1.5),
+        ("MOV".into(), 2.5),
+    ];
+    with_longtail(
+        KernelSpec::new("qmc_spline_eval", mix)
+            .with_iters(1.1e9)
+            .with_mem(MemBehavior::new(0.70, 0.55))
+            .with_occupancy(0.92)
+            .with_issue_eff(0.60),
+        gen,
+    )
+}
+
+/// Distance-table construction (sqrt-heavy).
+fn distance_tables(gen: Gen) -> KernelSpec {
+    let mix = vec![
+        ("FFMA".into(), 12.0),
+        ("FADD".into(), 6.0),
+        ("MUFU.SQRT".into(), 3.0),
+        ("MUFU.RCP".into(), 1.5),
+        ("LDG.E.32".into(), 8.0),
+        ("STS.32".into(), 3.0),
+        ("LDS.32".into(), 3.0),
+        ("IMAD".into(), 6.0),
+        ("IADD3".into(), 3.0),
+        ("ISETP.GE.AND".into(), 1.5),
+        ("BRA".into(), 1.5),
+        ("MOV".into(), 2.0),
+    ];
+    with_longtail(
+        KernelSpec::new("qmc_distance_tables", mix)
+            .with_iters(7.0e8)
+            .with_mem(MemBehavior::new(0.78, 0.60))
+            .with_occupancy(0.90)
+            .with_issue_eff(0.55),
+        gen,
+    )
+}
+
+/// Walker update / drift-diffusion: double-precision accumulation — the
+/// power-spike kernel of Fig 12.
+fn walker_update(gen: Gen, invocation_scale: f64) -> KernelSpec {
+    let mix = vec![
+        ("DFMA".into(), 14.0),
+        ("DADD".into(), 6.0),
+        ("DMUL".into(), 4.0),
+        ("F2F.F64.F32".into(), 3.0),
+        ("F2F.F32.F64".into(), 3.0),
+        ("LDG.E.64".into(), 6.0),
+        ("STG.E.64".into(), 3.0),
+        ("IMAD".into(), 5.0),
+        ("IADD3".into(), 3.0),
+        ("ISETP.GE.AND".into(), 1.0),
+        ("BRA".into(), 1.0),
+        ("MOV".into(), 2.0),
+    ];
+    with_longtail(
+        KernelSpec::new("qmc_walker_update", mix)
+            .with_iters(5.5e8 * invocation_scale)
+            .with_mem(MemBehavior::new(0.60, 0.55))
+            .with_occupancy(0.95)
+            .with_issue_eff(0.55),
+        gen,
+    )
+}
+
+/// Mixed-precision QMCPACK.  `fixed == false`: the §5.3.2 bug — the update
+/// path runs ~2.6× more often than intended.
+pub fn qmcpack(gen: Gen, fixed: bool) -> Workload {
+    let update_scale = if fixed { 1.0 } else { 2.6 };
+    let name = if fixed { "qmcpack_fixed" } else { "qmcpack" };
+    Workload::new(
+        name,
+        vec![
+            spline_eval(gen),
+            distance_tables(gen),
+            walker_update(gen, update_scale),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bug_inflates_update_kernel_only() {
+        let buggy = qmcpack(Gen::Volta, false);
+        let fixed = qmcpack(Gen::Volta, true);
+        let upd = |w: &Workload| {
+            w.kernels
+                .iter()
+                .find(|k| k.name == "qmc_walker_update")
+                .unwrap()
+                .total_instructions()
+        };
+        let ratio = upd(&buggy) / upd(&fixed);
+        assert!((ratio - 2.6).abs() < 1e-9);
+        // Other kernels unchanged.
+        assert_eq!(
+            buggy.kernels[0].total_instructions(),
+            fixed.kernels[0].total_instructions()
+        );
+    }
+
+    #[test]
+    fn update_kernel_is_fp64_heavy() {
+        let w = qmcpack(Gen::Volta, false);
+        let k = &w.kernels[2];
+        let d: f64 = k
+            .mix
+            .iter()
+            .filter(|(o, _)| o.starts_with('D') || o.contains("F64"))
+            .map(|(_, n)| n)
+            .sum();
+        let total: f64 = k.mix.iter().map(|(_, n)| n).sum();
+        assert!(d / total > 0.4, "fp64 share {}", d / total);
+    }
+}

@@ -1,0 +1,220 @@
+//! Rodinia GPGPU workloads (Table 3: backprop 64K, hotspot 1024, kmeans
+//! 819200 points, srad_v1 502×458).  Per §4.2 the target kernel is
+//! repeated so it dominates the measured energy.
+
+use crate::gpusim::kernel::{KernelSpec, MemBehavior};
+use crate::isa::Gen;
+
+use super::{with_longtail, Workload};
+
+/// backprop layerforward kernel: dense fan-in accumulation + sigmoid.
+pub fn backprop_k1(gen: Gen) -> Workload {
+    let mix = vec![
+        ("FFMA".into(), 24.0),
+        ("FADD".into(), 4.0),
+        ("MUFU.EX2".into(), 1.0), // sigmoid via exp2
+        ("MUFU.RCP".into(), 0.5),
+        ("LDG.E.32".into(), 6.0),
+        ("LDG.E.16".into(), 5.0), // half-precision weight reads
+
+        ("LDS.32".into(), 8.0),
+        ("STG.E.32".into(), 2.0),
+        ("IMAD".into(), 6.0),
+        ("IADD3".into(), 3.0),
+        ("ISETP.GE.AND".into(), 1.0),
+        ("BRA".into(), 1.0),
+        ("MOV".into(), 2.0),
+        ("BAR.SYNC".into(), 0.5),
+        ("S2R".into(), 0.5),
+    ];
+    let k = KernelSpec::new("bpnn_layerforward", mix)
+        .with_iters(3.2e9)
+        .with_mem(MemBehavior::new(0.85, 0.60))
+        .with_occupancy(0.90)
+        .with_issue_eff(0.60);
+    Workload::new("backprop_k1", vec![with_longtail(k, gen)])
+}
+
+/// backprop adjust_weights kernel.  `fixed == false` reproduces the §5.3.1
+/// bug: two `#define`s defaulted to double precision, so the kernel does
+/// double math + F2F.F64.F32 conversions (~25 % of instructions, Fig 10).
+pub fn backprop_k2(gen: Gen, fixed: bool) -> Workload {
+    let mix: Vec<(String, f64)> = if fixed {
+        vec![
+            ("FFMA".into(), 9.0),
+            ("FMUL".into(), 2.0),
+            ("FADD".into(), 2.0),
+            ("LDG.E.32".into(), 7.0),
+            ("LDG.E.16".into(), 10.0),
+            ("STG.E.32".into(), 14.0),
+            ("IMAD".into(), 4.0),
+            ("IADD3".into(), 2.0),
+            ("ISETP.GE.AND".into(), 1.0),
+            ("BRA".into(), 1.0),
+            ("MOV".into(), 2.0),
+            ("S2R".into(), 0.5),
+        ]
+    } else {
+        vec![
+            // Unintended double-precision path + conversions.
+            ("F2F.F64.F32".into(), 24.0),
+            ("DADD".into(), 2.0),
+            ("DMUL".into(), 2.0),
+            ("F2F.F32.F64".into(), 2.0),
+            ("FFMA".into(), 6.0),
+            ("FADD".into(), 1.0),
+            ("LDG.E.32".into(), 7.0),
+            ("LDG.E.16".into(), 10.0),
+            ("STG.E.32".into(), 14.0),
+            ("IMAD".into(), 4.0),
+            ("IADD3".into(), 2.0),
+            ("ISETP.GE.AND".into(), 1.0),
+            ("BRA".into(), 1.0),
+            ("MOV".into(), 2.0),
+            ("S2R".into(), 0.5),
+        ]
+    };
+    // Memory-bound-ish: the fix removes compute without much runtime
+    // change (§5.3.1 reports 16 % energy, only 1 % performance).
+    let k = KernelSpec::new("bpnn_adjust_weights", mix)
+        .with_iters(2.6e9)
+        .with_mem(MemBehavior::new(0.25, 0.30))
+        .with_occupancy(0.90)
+        .with_issue_eff(0.70);
+    let name = if fixed { "backprop_k2_fixed" } else { "backprop_k2" };
+    Workload::new(name, vec![with_longtail(k, gen)])
+}
+
+/// hotspot thermal stencil: shared-memory tiled 2D stencil.
+pub fn hotspot(gen: Gen) -> Workload {
+    let mix = vec![
+        ("FFMA".into(), 18.0),
+        ("FADD".into(), 6.0),
+        ("FMUL".into(), 4.0),
+        ("LDG.E.32".into(), 6.0),
+        ("LDG.E.16".into(), 4.0), // halo rows in half precision
+        ("LDS.32".into(), 5.0),
+        ("LDS.16".into(), 5.0),
+        ("STS.32".into(), 3.0),
+        ("STG.E.32".into(), 2.0),
+        ("SEL".into(), 2.0),
+        ("FSETP.GE.AND".into(), 1.0),
+        ("ISETP.GE.AND".into(), 2.0),
+        ("IMAD".into(), 6.0),
+        ("IADD3".into(), 3.0),
+        ("BRA".into(), 1.5),
+        ("MOV".into(), 2.0),
+        ("BAR.SYNC".into(), 1.0),
+        ("BSSY".into(), 0.5),
+        ("BSYNC".into(), 0.5),
+    ];
+    let k = KernelSpec::new("hotspot_kernel", mix)
+        .with_iters(2.8e9)
+        .with_mem(MemBehavior::new(0.92, 0.70))
+        .with_occupancy(0.95)
+        .with_issue_eff(0.68);
+    Workload::new("hotspot", vec![with_longtail(k, gen)])
+}
+
+/// kmeans distance kernel (V100 only — CUDA 12 dropped its texture path).
+pub fn kmeans(gen: Gen) -> Workload {
+    let mix = vec![
+        ("FFMA".into(), 16.0),
+        ("FADD".into(), 8.0),
+        ("FMNMX".into(), 2.0),
+        ("FSETP.GE.AND".into(), 2.0),
+        ("LDG.E.32".into(), 6.0),
+        ("LDG.E.8".into(), 10.0), // byte feature/membership reads
+        ("LDC".into(), 4.0),
+        ("STG.E.32".into(), 1.0),
+        ("IMAD".into(), 8.0),
+        ("IADD3".into(), 4.0),
+        ("ISETP.GE.AND".into(), 2.0),
+        ("BRA".into(), 2.0),
+        ("MOV".into(), 3.0),
+        ("S2R".into(), 0.5),
+    ];
+    let k = KernelSpec::new("kmeans_kernel_c", mix)
+        .with_iters(2.4e9)
+        .with_mem(MemBehavior::new(0.45, 0.45))
+        .with_occupancy(0.85)
+        .with_issue_eff(0.55);
+    Workload::new("kmeans", vec![with_longtail(k, gen)])
+}
+
+/// srad_v1 speckle-reducing anisotropic diffusion.
+pub fn srad_v1(gen: Gen) -> Workload {
+    let mix = vec![
+        ("MUFU.RCP".into(), 2.0),
+        ("MUFU.SQRT".into(), 1.0),
+        ("FFMA".into(), 14.0),
+        ("FADD".into(), 8.0),
+        ("FMUL".into(), 6.0),
+        ("LDG.E.32".into(), 8.0),
+        ("LDG.E.16".into(), 8.0), // compressed image reads
+        ("STG.E.32".into(), 3.0),
+        ("SEL".into(), 2.0),
+        ("FSETP.GE.AND".into(), 2.0),
+        ("IMAD".into(), 8.0),
+        ("IADD3".into(), 4.0),
+        ("ISETP.GE.AND".into(), 2.0),
+        ("BRA".into(), 2.0),
+        ("MOV".into(), 3.0),
+    ];
+    let k = KernelSpec::new("srad_kernel", mix)
+        .with_iters(2.2e9)
+        .with_mem(MemBehavior::new(0.60, 0.50))
+        .with_occupancy(0.90)
+        .with_issue_eff(0.58);
+    Workload::new("srad_v1", vec![with_longtail(k, gen)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::group_counts;
+
+    #[test]
+    fn buggy_backprop_k2_is_quarter_f2f() {
+        let w = backprop_k2(Gen::Volta, false);
+        let counts = w.kernels[0].total_counts();
+        let total: f64 = counts.values().sum();
+        let f2f = counts["F2F.F64.F32"];
+        let share = f2f / total;
+        assert!(
+            (0.18..=0.30).contains(&share),
+            "F2F.F64.F32 share {share} (paper Fig 10: ≈25 %)"
+        );
+    }
+
+    #[test]
+    fn fixed_backprop_k2_has_no_double_math() {
+        let w = backprop_k2(Gen::Volta, true);
+        let grouped = group_counts(w.kernels[0].total_counts().iter());
+        assert!(!grouped.contains_key("F2F.F64.F32"));
+        assert!(!grouped.contains_key("DADD"));
+    }
+
+    #[test]
+    fn fix_barely_changes_runtime_memory_bound() {
+        use crate::gpusim::{config::ArchConfig, timing};
+        let cfg = ArchConfig::cloudlab_v100();
+        let buggy = &backprop_k2(Gen::Volta, false).kernels[0];
+        let fixed = &backprop_k2(Gen::Volta, true).kernels[0];
+        let d_buggy = timing::duration_s(&cfg, buggy);
+        let d_fixed = timing::duration_s(&cfg, fixed);
+        let speedup = (d_buggy - d_fixed) / d_buggy;
+        assert!(
+            (0.0..0.12).contains(&speedup),
+            "perf change {speedup} (paper reports ~1 %; memory-bound here)"
+        );
+    }
+
+    #[test]
+    fn volta_workloads_have_no_uniform_ops() {
+        let w = hotspot(Gen::Volta);
+        assert!(!w.kernels[0].mix.iter().any(|(op, _)| op == "R2UR"));
+        let w = hotspot(Gen::Ampere);
+        assert!(w.kernels[0].mix.iter().any(|(op, _)| op == "R2UR"));
+    }
+}

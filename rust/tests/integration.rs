@@ -1,0 +1,238 @@
+//! Integration tests: cross-module pipelines (train → save → load →
+//! predict), cluster parity, baseline orderings, case-study directions,
+//! and the artifact/native solver agreement when artifacts are present.
+//!
+//! All tests use the shortened campaign protocol; the full protocol runs
+//! in `examples/full_campaign.rs` and `wattchmen report`.
+
+use std::collections::BTreeMap;
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::device::Device;
+use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::isa::Gen;
+use wattchmen::model::{
+    predict_app, predict_suite, random_subset, table_r_squared, train, transfer_table,
+    EnergyTable, Mode, TrainConfig,
+};
+use wattchmen::report::{measure_workload, scaled_workload};
+use wattchmen::runtime::Artifacts;
+use wattchmen::util::stats;
+use wattchmen::workloads;
+
+fn tc() -> TrainConfig {
+    TrainConfig {
+        reps: 1,
+        bench_secs: 45.0,
+        cooldown_secs: 10.0,
+        idle_secs: 15.0,
+        cov_threshold: 0.02,
+    }
+}
+
+fn quick_table(cfg: &ArchConfig, seed: u64) -> EnergyTable {
+    let mut dev = Device::new(cfg.clone(), seed);
+    train(&mut dev, None, &tc()).unwrap().table
+}
+
+#[test]
+fn train_save_load_predict_roundtrip() {
+    let cfg = ArchConfig::cloudlab_v100();
+    let table = quick_table(&cfg, 1);
+    let dir = std::env::temp_dir().join("wattchmen_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v100.table.json");
+    table.save(&path).unwrap();
+    let loaded = EnergyTable::load(&path).unwrap();
+    assert_eq!(table, loaded);
+
+    let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 60.0);
+    let profiles = profile_app(&cfg, &w.kernels);
+    let a = predict_app(&table, "hotspot", &profiles, Mode::Pred);
+    let b = predict_app(&loaded, "hotspot", &profiles, Mode::Pred);
+    assert_eq!(a.energy_j, b.energy_j);
+}
+
+#[test]
+fn prediction_within_sane_band_of_measurement() {
+    let cfg = ArchConfig::cloudlab_v100();
+    let table = quick_table(&cfg, 2);
+    for w in workloads::evaluation_suite(Gen::Volta).iter().take(5) {
+        let sw = scaled_workload(&cfg, w, 60.0);
+        let profiles = profile_app(&cfg, &sw.kernels);
+        let pred = predict_app(&table, &w.name, &profiles, Mode::Pred);
+        let meas = measure_workload(&cfg, &sw, 77).energy_j;
+        let ratio = pred.energy_j / meas;
+        assert!(
+            (0.6..=1.6).contains(&ratio),
+            "{}: pred/measured {ratio}",
+            w.name
+        );
+    }
+}
+
+#[test]
+fn pred_mode_attributes_more_than_direct_everywhere() {
+    let cfg = ArchConfig::lonestar_h100();
+    let table = quick_table(&cfg, 3);
+    for w in workloads::evaluation_suite(Gen::Hopper) {
+        let sw = scaled_workload(&cfg, &w, 60.0);
+        let profiles = profile_app(&cfg, &sw.kernels);
+        let d = predict_app(&table, &w.name, &profiles, Mode::Direct);
+        let p = predict_app(&table, &w.name, &profiles, Mode::Pred);
+        assert!(p.coverage >= d.coverage, "{}", w.name);
+        assert!(p.dynamic_j >= d.dynamic_j, "{}", w.name);
+        // Bucketing never fully closes the gap (Misc ops stay uncovered).
+        assert!(p.coverage < 1.0, "{}: coverage should stay < 100%", w.name);
+    }
+}
+
+#[test]
+fn hopper_direct_coverage_is_low_pred_recovers() {
+    let cfg = ArchConfig::lonestar_h100();
+    let table = quick_table(&cfg, 4);
+    let w = scaled_workload(
+        &cfg,
+        &workloads::deepbench::gemm(Gen::Hopper, 1, "half"),
+        60.0,
+    );
+    let profiles = profile_app(&cfg, &w.kernels);
+    let d = predict_app(&table, "gemm_half", &profiles, Mode::Direct);
+    let p = predict_app(&table, "gemm_half", &profiles, Mode::Pred);
+    // HGMMA + TMA + warp-group sync are unbenchmarked on Hopper.
+    assert!(d.coverage < 0.85, "direct coverage {}", d.coverage);
+    assert!(p.coverage > d.coverage + 0.1);
+}
+
+#[test]
+fn qmcpack_fix_reduces_both_predicted_and_measured_energy() {
+    let cfg = ArchConfig::cloudlab_v100();
+    let table = quick_table(&cfg, 5);
+    let buggy_nat = workloads::qmcpack::qmcpack(Gen::Volta, false);
+    let buggy = scaled_workload(&cfg, &buggy_nat, 60.0);
+    let scale = buggy.kernels[0].iters / buggy_nat.kernels[0].iters;
+    let mut fixed = workloads::qmcpack::qmcpack(Gen::Volta, true);
+    for k in &mut fixed.kernels {
+        k.iters *= scale;
+    }
+    let pb = predict_app(&table, "q", &profile_app(&cfg, &buggy.kernels), Mode::Pred).energy_j;
+    let pa = predict_app(&table, "q", &profile_app(&cfg, &fixed.kernels), Mode::Pred).energy_j;
+    let mb = measure_workload(&cfg, &buggy, 7).energy_j;
+    let ma = measure_workload(&cfg, &fixed, 7).energy_j;
+    let pred_drop = (pb - pa) / pb;
+    let meas_drop = (mb - ma) / mb;
+    assert!(pred_drop > 0.15, "predicted drop {pred_drop}");
+    assert!(meas_drop > 0.15, "measured drop {meas_drop}");
+    assert!((pred_drop - meas_drop).abs() < 0.10);
+}
+
+#[test]
+fn air_and_water_tables_are_strongly_linear() {
+    let air = quick_table(&ArchConfig::cloudlab_v100(), 8);
+    let water = quick_table(&ArchConfig::summit_v100(), 9);
+    let r2 = table_r_squared(&air, &water);
+    assert!(r2 > 0.95, "R² {r2} (paper: 0.988)");
+
+    // Transfer from a 10% subset reconstructs the water table closely.
+    let keys = random_subset(&water, 0.10, 33);
+    let subset: BTreeMap<String, f64> = keys
+        .iter()
+        .map(|k| (k.clone(), water.entries[k]))
+        .collect();
+    let t = transfer_table(&air, &subset, water.const_power_w, water.static_power_w, None)
+        .unwrap();
+    let mut errs = Vec::new();
+    for (k, &e) in &water.entries {
+        if e > 0.2 {
+            errs.push(((t.table.entries[k] - e) / e).abs());
+        }
+    }
+    assert!(
+        stats::median(&errs) < 0.25,
+        "median transfer error {}",
+        stats::median(&errs)
+    );
+}
+
+#[test]
+fn artifact_and_native_training_agree() {
+    let Ok(arts) = Artifacts::load_default() else {
+        eprintln!("SKIP: artifacts unavailable");
+        return;
+    };
+    let cfg = ArchConfig::cloudlab_v100();
+    let r_art = ClusterCampaign::new(cfg.clone(), 2, 10)
+        .train(&tc(), Some(&arts))
+        .unwrap();
+    let r_nat = ClusterCampaign::new(cfg.clone(), 2, 10).train(&tc(), None).unwrap();
+    // Same seeds → same measurements → solutions match to f32 solver noise.
+    for (k, &e) in &r_art.table.entries {
+        let e2 = r_nat.table.entries[k];
+        assert!(
+            (e - e2).abs() < 0.02 * e.max(e2).max(0.5),
+            "{k}: artifact {e} vs native {e2}"
+        );
+    }
+}
+
+#[test]
+fn predict_suite_artifact_totals_match_native() {
+    let Ok(arts) = Artifacts::load_default() else {
+        eprintln!("SKIP: artifacts unavailable");
+        return;
+    };
+    let cfg = ArchConfig::cloudlab_v100();
+    let table = quick_table(&cfg, 11);
+    let suite = workloads::evaluation_suite(Gen::Volta);
+    let profiles: Vec<(String, Vec<_>)> = suite
+        .iter()
+        .take(6)
+        .map(|w| {
+            let sw = scaled_workload(&cfg, w, 60.0);
+            (w.name.clone(), profile_app(&cfg, &sw.kernels))
+        })
+        .collect();
+    let with_art = predict_suite(&table, &profiles, Mode::Pred, Some(&arts)).unwrap();
+    let native = predict_suite(&table, &profiles, Mode::Pred, None).unwrap();
+    for (a, n) in with_art.iter().zip(&native) {
+        assert!(
+            (a.energy_j - n.energy_j).abs() / n.energy_j < 1e-4,
+            "{}: {} vs {}",
+            a.workload,
+            a.energy_j,
+            n.energy_j
+        );
+    }
+}
+
+#[test]
+fn baselines_are_worse_than_wattchmen_pred() {
+    // Shortened end-to-end ordering check on a 6-workload subset.
+    let cfg = ArchConfig::cloudlab_v100();
+    let table = quick_table(&cfg, 12);
+    let mut gdev = Device::new(cfg.clone(), 13);
+    let guser = wattchmen::baselines::train_guser(&mut gdev, 40.0);
+    let accel = wattchmen::baselines::train_accelwattch(14);
+
+    let mut meas = Vec::new();
+    let mut pred_c = Vec::new();
+    let mut pred_g = Vec::new();
+    let mut pred_a = Vec::new();
+    for (i, w) in workloads::evaluation_suite(Gen::Volta).iter().enumerate() {
+        if i % 3 != 0 {
+            continue; // subset for speed
+        }
+        let sw = scaled_workload(&cfg, w, 60.0);
+        let profiles = profile_app(&cfg, &sw.kernels);
+        meas.push(measure_workload(&cfg, &sw, 20 + i as u64).energy_j);
+        pred_c.push(predict_app(&table, &w.name, &profiles, Mode::Pred).energy_j);
+        pred_g.push(guser.predict_energy_j(&profiles));
+        pred_a.push(accel.predict_energy_j(&profiles));
+    }
+    let mape_c = stats::mape(&pred_c, &meas);
+    let mape_g = stats::mape(&pred_g, &meas);
+    let mape_a = stats::mape(&pred_a, &meas);
+    assert!(mape_c < mape_g, "wattchmen {mape_c} vs guser {mape_g}");
+    assert!(mape_c < mape_a, "wattchmen {mape_c} vs accelwattch {mape_a}");
+}

@@ -1,0 +1,275 @@
+//! Cross-module property tests + failure injection, driven by the in-tree
+//! harness (`util::proptest`).  These fuzz the invariants DESIGN.md §5
+//! promises rather than specific values.
+
+use std::collections::BTreeMap;
+
+use wattchmen::gpusim::config::{ArchConfig, Cooling};
+use wattchmen::gpusim::device::Device;
+use wattchmen::gpusim::kernel::{KernelSpec, MemBehavior};
+use wattchmen::gpusim::profiler::{profile, KernelProfile};
+use wattchmen::gpusim::thermal::ThermalState;
+use wattchmen::gpusim::timing;
+use wattchmen::isa::{canonicalize, classify_str, group_counts, split_key};
+use wattchmen::model::{predict_app, resolve_energy, EnergyTable, Mode, Source};
+use wattchmen::trace::{integrate_native, steady_window};
+use wattchmen::util::prng::Rng;
+use wattchmen::util::proptest::{check, close};
+use wattchmen::util::stats;
+
+const OPS: &[&str] = &[
+    "FFMA", "FADD", "DFMA", "IADD3", "IMAD", "MOV", "ISETP.GE.AND", "BRA",
+    "LDG.E.32", "LDG.E.64", "STG.E.64", "LDS.32", "MUFU.RCP", "HMMA.884.F32.STEP0",
+    "SHFL.IDX", "LDC", "ATOMG.ADD", "NOP",
+];
+
+fn random_spec(rng: &mut Rng) -> KernelSpec {
+    let n_ops = 2 + rng.below(10);
+    let mut mix = Vec::new();
+    for _ in 0..n_ops {
+        mix.push((OPS[rng.below(OPS.len())].to_string(), rng.uniform(0.5, 40.0)));
+    }
+    KernelSpec::new("fuzz", mix)
+        .with_iters(10f64.powf(rng.uniform(6.0, 9.0)))
+        .with_mem(MemBehavior::new(rng.uniform(0.0, 1.0), rng.uniform(0.0, 1.0)))
+        .with_occupancy(rng.uniform(0.05, 1.0))
+        .with_issue_eff(rng.uniform(0.1, 1.0))
+}
+
+#[test]
+fn prop_duration_positive_and_scales_with_iters() {
+    check("duration-scaling", 48, |rng| {
+        let cfg = ArchConfig::cloudlab_v100();
+        let spec = random_spec(rng);
+        let d1 = timing::duration_s(&cfg, &spec);
+        if !(d1 > 0.0 && d1.is_finite()) {
+            return Err(format!("bad duration {d1}"));
+        }
+        let k = rng.uniform(1.5, 8.0);
+        let d2 = timing::duration_s(&cfg, &spec.clone().with_iters(spec.iters * k));
+        close(d2 / d1, k, 1e-9, 0.0)
+    });
+}
+
+#[test]
+fn prop_device_power_bounded_by_cap_and_floor() {
+    check("power-bounds", 24, |rng| {
+        let cfg = ArchConfig::cloudlab_v100();
+        let tdp = cfg.tdp_w;
+        let floor = cfg.const_power_w;
+        let mut dev = Device::new(cfg, rng.next_u64());
+        let spec = random_spec(rng);
+        let rec = dev.run(&spec, Some(rng.uniform(5.0, 60.0)));
+        for s in &rec.telemetry.samples {
+            // Allow sensor noise/quantization slack on both sides.
+            if s.power_w > tdp * 1.06 {
+                return Err(format!("sample {} W above cap {tdp}", s.power_w));
+            }
+            if s.power_w < floor * 0.8 {
+                return Err(format!("sample {} W below constant {floor}", s.power_w));
+            }
+        }
+        if rec.telemetry.energy_counter_j <= 0.0 {
+            return Err("no energy accumulated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_counter_matches_trace_integral() {
+    check("counter-vs-trapz", 16, |rng| {
+        let mut dev = Device::new(ArchConfig::lonestar_a100(), rng.next_u64());
+        let spec = random_spec(rng);
+        let rec = dev.run(&spec, Some(rng.uniform(20.0, 90.0)));
+        let integral = stats::trapz(&rec.telemetry.powers(), 0.1);
+        close(
+            integral,
+            rec.telemetry.energy_counter_j,
+            0.02, // paper §3.3: < 1 %; sensor noise adds a little
+            5.0,
+        )
+    });
+}
+
+#[test]
+fn prop_grouping_preserves_logical_instruction_count() {
+    check("grouping-count", 64, |rng| {
+        let mut raw: BTreeMap<String, f64> = BTreeMap::new();
+        let mut expected = 0.0;
+        for _ in 0..(1 + rng.below(12)) {
+            let op = OPS[rng.below(OPS.len())];
+            let count = rng.uniform(1.0, 1e6);
+            *raw.entry(op.to_string()).or_insert(0.0) += count;
+            // STEPn ops fold 4:1; everything else 1:1.
+            expected += if op.contains(".STEP") { count / 4.0 } else { count };
+        }
+        let grouped = group_counts(raw.iter());
+        let total: f64 = grouped.values().sum();
+        close(total, expected, 1e-12, 1e-9)
+    });
+}
+
+#[test]
+fn prop_canonical_keys_are_fixed_points() {
+    check("canonical-idempotent", 64, |rng| {
+        let op = OPS[rng.below(OPS.len())];
+        let c1 = canonicalize(op);
+        let c2 = canonicalize(&c1.key);
+        if c2.key != c1.key {
+            return Err(format!("{op}: {} re-canonicalizes to {}", c1.key, c2.key));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steady_window_within_trace_and_nonempty() {
+    check("steady-window", 64, |rng| {
+        let n = 8 + rng.below(2000);
+        let plateau = rng.uniform(50.0, 300.0);
+        let tau = rng.uniform(1.0, 60.0);
+        let trace: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = i as f64 * 0.1;
+                plateau * (1.0 - (-t / tau).exp()) + rng.gauss(0.0, 1.0)
+            })
+            .collect();
+        let w = steady_window(&trace, 0.02);
+        if w.end > n || w.is_empty() {
+            return Err(format!("bad window {w:?} for n={n}"));
+        }
+        let (e, m) = integrate_native(&trace, w, 0.1);
+        if e < 0.0 || m < 0.0 {
+            return Err("negative integral".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prediction_monotone_in_counts() {
+    // More instructions (same duration) can never lower predicted energy.
+    let table = test_table();
+    check("prediction-monotone", 32, |rng| {
+        let p1 = random_profile(rng);
+        let mut p2 = p1.clone();
+        for c in p2.counts.values_mut() {
+            *c *= rng.uniform(1.0, 3.0);
+        }
+        let e1 = predict_app(&table, "w", &[p1], Mode::Pred).energy_j;
+        let e2 = predict_app(&table, "w", &[p2], Mode::Pred).energy_j;
+        if e2 + 1e-9 < e1 {
+            return Err(format!("energy dropped {e1} -> {e2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resolved_energies_nonnegative_and_sourced() {
+    let table = test_table();
+    check("resolve-nonneg", 64, |rng| {
+        let key = match rng.below(4) {
+            0 => OPS[rng.below(OPS.len())].to_string(),
+            1 => format!("LDG.E.{}@L2", [8, 16, 32, 64, 128][rng.below(5)]),
+            2 => "R2UR".to_string(),
+            _ => format!("STG.E.{}@DRAM", [8, 32, 128][rng.below(3)]),
+        };
+        let (e, src) = resolve_energy(&table, &key, Mode::Pred);
+        let _ = (classify_str(split_key(&key).0), canonicalize(&key));
+        if let Some(e) = e {
+            if e < 0.0 {
+                return Err(format!("{key}: negative energy {e}"));
+            }
+            if src == Source::Unattributed {
+                return Err(format!("{key}: energy with Unattributed source"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_thermal_never_below_ambient_under_positive_power() {
+    check("thermal-floor", 48, |rng| {
+        let cool = if rng.below(2) == 0 { Cooling::air() } else { Cooling::water() };
+        let mut st = ThermalState::at_ambient(&cool);
+        for _ in 0..500 {
+            st.step(&cool, rng.uniform(0.0, 400.0), 0.1);
+            if st.t_c < cool.t_ambient - 1e-9 {
+                return Err(format!("temp {} below ambient", st.t_c));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- failure injection ----
+
+#[test]
+fn missing_artifacts_dir_is_a_clean_error() {
+    let err = match wattchmen::runtime::Artifacts::load(std::path::Path::new("/nonexistent")) {
+        Err(e) => e,
+        Ok(_) => panic!("load of /nonexistent succeeded"),
+    };
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
+
+#[test]
+fn corrupt_table_json_is_a_clean_error() {
+    let dir = std::env::temp_dir().join("wattchmen_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.json");
+    std::fs::write(&path, "{not json").unwrap();
+    assert!(EnergyTable::load(&path).is_err());
+    std::fs::write(&path, r#"{"arch": "x", "entries": {}}"#).unwrap();
+    assert!(EnergyTable::load(&path).is_err(), "missing power fields");
+}
+
+#[test]
+fn profiler_is_energy_free_surface() {
+    // The profile exposes counts/rates/time — never energy or power.
+    let cfg = ArchConfig::cloudlab_v100();
+    let spec = KernelSpec::new("k", vec![("FFMA".into(), 10.0)]);
+    let p = profile(&cfg, &spec);
+    // (compile-time: KernelProfile has no energy field; this asserts the
+    // run-time values are the spec's, i.e. no hidden channel)
+    assert_eq!(p.counts["FFMA"], 10.0);
+    assert!(p.duration_s > 0.0);
+}
+
+fn test_table() -> EnergyTable {
+    let mut dev = Device::new(ArchConfig::cloudlab_v100(), 1);
+    wattchmen::model::train(
+        &mut dev,
+        None,
+        &wattchmen::model::TrainConfig {
+            reps: 1,
+            bench_secs: 40.0,
+            cooldown_secs: 10.0,
+            idle_secs: 15.0,
+            cov_threshold: 0.02,
+        },
+    )
+    .unwrap()
+    .table
+}
+
+fn random_profile(rng: &mut Rng) -> KernelProfile {
+    let mut counts = BTreeMap::new();
+    for _ in 0..(2 + rng.below(8)) {
+        *counts
+            .entry(OPS[rng.below(OPS.len())].to_string())
+            .or_insert(0.0) += rng.uniform(1e3, 1e9);
+    }
+    KernelProfile {
+        name: "fuzz".into(),
+        duration_s: rng.uniform(0.1, 100.0),
+        counts,
+        l1_hit: rng.uniform(0.0, 1.0),
+        l2_hit: rng.uniform(0.0, 1.0),
+        occupancy: rng.uniform(0.05, 1.0),
+        dram_bytes: 0.0,
+    }
+}

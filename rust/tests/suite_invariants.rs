@@ -1,0 +1,169 @@
+//! Suite-level invariants across all three GPU generations: benchmark
+//! tables, workload mixes, trained-table physics, and report JSON schema.
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::device::Device;
+use wattchmen::gpusim::timing;
+use wattchmen::isa::{classify_str, split_key, Gen, InstrClass};
+use wattchmen::microbench::{covered_columns, suite};
+use wattchmen::model::TrainConfig;
+use wattchmen::report::scaled_workload;
+use wattchmen::util::json;
+use wattchmen::workloads;
+
+fn all_gens() -> [(Gen, ArchConfig); 3] {
+    [
+        (Gen::Volta, ArchConfig::cloudlab_v100()),
+        (Gen::Ampere, ArchConfig::lonestar_a100()),
+        (Gen::Hopper, ArchConfig::lonestar_h100()),
+    ]
+}
+
+#[test]
+fn every_benchmark_stays_under_the_power_cap_on_every_generation() {
+    // Throttled training benchmarks corrupt the energy table (§3.3); the
+    // suite must run cleanly on all three parts.
+    for (gen, cfg) in all_gens() {
+        let mut dev = Device::new(cfg.clone(), 99);
+        for b in suite(gen) {
+            let rec = dev.run(&b.kernel, Some(30.0));
+            assert!(!rec.throttled, "{gen:?}/{} throttled", b.name);
+            dev.cooldown(10.0);
+        }
+    }
+}
+
+#[test]
+fn benchmark_power_is_distinguishable_from_idle() {
+    // A benchmark whose dynamic power vanishes gives the solver a zero
+    // row; every compute/memory benchmark must draw measurable power.
+    let cfg = ArchConfig::cloudlab_v100();
+    let mut dev = Device::new(cfg.clone(), 5);
+    let idle = cfg.const_power_w + cfg.static_power_w;
+    for b in suite(Gen::Volta) {
+        let rec = dev.run(&b.kernel, Some(30.0));
+        let p = rec.telemetry.mean_power_w();
+        assert!(
+            p > idle + 3.0,
+            "{}: {p:.1} W indistinguishable from idle {idle:.1} W",
+            b.name
+        );
+        dev.cooldown(10.0);
+    }
+}
+
+#[test]
+fn workload_mixes_only_use_classifiable_opcodes() {
+    for (gen, _) in all_gens() {
+        for w in workloads::evaluation_suite(gen) {
+            for k in &w.kernels {
+                for (op, count) in &k.mix {
+                    assert!(*count > 0.0, "{}: non-positive count for {op}", w.name);
+                    let class = classify_str(op);
+                    // Misc is allowed (NOP/CCTL) but nothing should be a
+                    // typo that happens to classify as Misc accidentally —
+                    // whitelist the two we emit.
+                    if class == InstrClass::Misc {
+                        assert!(
+                            op == "NOP" || op == "CCTL",
+                            "{}: unexpected Misc opcode {op}",
+                            w.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn workload_durations_land_in_measurable_range() {
+    // After scaling, every workload must run long enough for NVML-grade
+    // sampling (≥ 10 s) and short enough to simulate cheaply (≤ 500 s).
+    for (gen, cfg) in all_gens() {
+        for w in workloads::evaluation_suite(gen) {
+            let sw = scaled_workload(&cfg, &w, 90.0);
+            let total: f64 = sw.kernels.iter().map(|k| timing::duration_s(&cfg, k)).sum();
+            assert!(
+                (80.0..110.0).contains(&total),
+                "{gen:?}/{}: {total:.1} s",
+                w.name
+            );
+        }
+    }
+}
+
+#[test]
+fn trained_tables_keep_physical_orderings_on_all_generations() {
+    let tc = TrainConfig {
+        reps: 1,
+        bench_secs: 45.0,
+        cooldown_secs: 10.0,
+        idle_secs: 15.0,
+        cov_threshold: 0.02,
+    };
+    for (_, cfg) in all_gens() {
+        let t = ClusterCampaign::new(cfg.clone(), 4, 7)
+            .train(&tc, None)
+            .unwrap()
+            .table;
+        assert!(t.entries["DFMA"] > t.entries["FFMA"], "{}", cfg.name);
+        assert!(t.entries["FFMA"] > t.entries["MOV"], "{}", cfg.name);
+        assert!(
+            t.entries["LDG.E.64@DRAM"] > t.entries["LDG.E.64@L2"],
+            "{}",
+            cfg.name
+        );
+        assert!(
+            t.entries["LDG.E.64@L2"] > t.entries["LDG.E.64@L1"],
+            "{}",
+            cfg.name
+        );
+        assert!(t.const_power_w > 20.0 && t.static_power_w > 10.0);
+    }
+}
+
+#[test]
+fn covered_columns_partition_between_compute_and_memory() {
+    for (gen, _) in all_gens() {
+        let cols = covered_columns(gen);
+        let (mem, compute): (Vec<_>, Vec<_>) = cols
+            .iter()
+            .partition(|c| split_key(c).1.is_some() || classify_str(split_key(c).0).is_memory());
+        assert!(mem.len() >= 20, "{gen:?}: only {} memory columns", mem.len());
+        assert!(compute.len() >= 55, "{gen:?}: only {} compute columns", compute.len());
+    }
+}
+
+#[test]
+fn newer_generations_extend_the_suite() {
+    let v = suite(Gen::Volta).len();
+    let a = suite(Gen::Ampere).len();
+    let h = suite(Gen::Hopper).len();
+    assert_eq!(v, 90);
+    assert!(a > v, "ampere suite must add ISA-delta benchmarks");
+    assert!(h > v);
+}
+
+#[test]
+fn report_json_schema_is_stable() {
+    // Saved experiment JSON must parse and expose the agreed fields —
+    // downstream tooling (EXPERIMENTS.md generation) depends on it.
+    let r = wattchmen::report::ExperimentResult {
+        name: "figX".into(),
+        title: "t".into(),
+        text: "body".into(),
+        metrics: vec![("m".into(), 1.5, 2.0), ("n".into(), 3.0, f64::NAN)],
+    };
+    let dir = std::env::temp_dir().join("wattchmen_schema");
+    r.save(&dir).unwrap();
+    let text = std::fs::read_to_string(dir.join("figX.json")).unwrap();
+    let parsed = json::parse(&text).unwrap();
+    assert_eq!(parsed.get("name").unwrap().as_str(), Some("figX"));
+    let metrics = parsed.get("metrics").unwrap().as_arr().unwrap();
+    assert_eq!(metrics.len(), 2);
+    assert_eq!(metrics[0].get("reproduced").unwrap().as_f64(), Some(1.5));
+    // NaN paper values serialize as null (JSON has no NaN).
+    assert_eq!(metrics[1].get("paper").unwrap(), &json::Json::Null);
+}
