@@ -1,8 +1,10 @@
 //! Benchmark harness (`cargo bench`) — criterion is unavailable offline,
 //! so this is a custom `harness = false` driver: warmup + N samples,
-//! median/min/max wall times per benchmark.
+//! median/min/max wall times per benchmark.  PERF.md records the tracked
+//! medians per PR; pass `--json <path>` (e.g. `cargo bench -- --json
+//! BENCH_$(date +%F).json`) to emit them machine-readably.
 //!
-//! One end-to-end benchmark per experiment family (DESIGN.md §4):
+//! One end-to-end benchmark per experiment family (see PERF.md):
 //!   campaign_v100        — Fig 3/6 training pipeline (collect+reduce+solve)
 //!   predict_sweep_v100   — Fig 6 prediction phase over the 16 workloads
 //!   measure_suite_v100   — ground-truth "Real GPU (D)" measurement loop
@@ -15,6 +17,7 @@
 //! Each benchmark also prints the headline numbers it reproduces so
 //! `cargo bench` doubles as a quick regeneration harness.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use wattchmen::cluster::ClusterCampaign;
@@ -28,11 +31,17 @@ use wattchmen::report::{measure_workload, scaled_workload};
 use wattchmen::runtime::Artifacts;
 use wattchmen::solver::{nnls as native_nnls, Mat};
 use wattchmen::trace;
+use wattchmen::util::json::Json;
 use wattchmen::util::prng::Rng;
 use wattchmen::util::stats;
 use wattchmen::workloads;
 
-fn bench<F: FnMut() -> String>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut() -> String>(
+    name: &str,
+    iters: usize,
+    results: &mut Vec<(String, f64)>,
+    mut f: F,
+) {
     let mut note = f(); // warmup
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -44,6 +53,54 @@ fn bench<F: FnMut() -> String>(name: &str, iters: usize, mut f: F) {
     let min = samples.iter().cloned().fold(f64::MAX, f64::min);
     let max = samples.iter().cloned().fold(f64::MIN, f64::max);
     println!("{name:<26} median {med:>10.2} ms   min {min:>10.2}   max {max:>10.2}   [{note}]");
+    results.push((name.to_string(), med));
+}
+
+/// `--json <path>`: emit per-benchmark medians (ms) for the PERF.md
+/// trajectory; unknown flags (e.g. cargo's own) are ignored.
+fn json_path_from_args() -> Option<PathBuf> {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut i = 1;
+    while i < argv.len() {
+        if argv[i] == "--json" {
+            match argv.get(i + 1) {
+                Some(p) => return Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--json requires a path argument");
+                    std::process::exit(2);
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+fn write_json(path: &PathBuf, results: &[(String, f64)]) {
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("wattchmen-bench-v1".into())),
+        ("unix_time", Json::Num(unix_time as f64)),
+        (
+            "median_ms",
+            Json::Obj(
+                results
+                    .iter()
+                    .map(|(n, m)| (n.clone(), Json::Num(*m)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("bench medians written to {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
 }
 
 fn fast_tc() -> TrainConfig {
@@ -71,6 +128,8 @@ fn system_90(rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
 
 fn main() {
     println!("wattchmen bench harness (criterion unavailable offline — custom timer)\n");
+    let json_path = json_path_from_args();
+    let mut results: Vec<(String, f64)> = Vec::new();
     let arts = Artifacts::load_default().ok();
     if arts.is_none() {
         println!("NOTE: artifacts missing — artifact benches will be skipped\n");
@@ -78,7 +137,7 @@ fn main() {
     let cfg = ArchConfig::cloudlab_v100();
 
     // --- device simulator substrate ---
-    bench("device_sim", 5, || {
+    bench("device_sim", 5, &mut results, || {
         let mut dev = Device::new(cfg.clone(), 3);
         let spec = KernelSpec::new("b", vec![("FFMA".into(), 1.0)]).with_issue_eff(0.45);
         let rec = dev.run(&spec, Some(600.0));
@@ -90,12 +149,12 @@ fn main() {
     let (rows, b) = system_90(&mut rng);
     let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
     if let Some(arts) = arts.as_ref() {
-        bench("nnls_artifact_90x90", 10, || {
+        bench("nnls_artifact_90x90", 10, &mut results, || {
             let x = arts.nnls(&flat, 90, 90, &b).unwrap();
             format!("x[0]={:.3}", x[0])
         });
     }
-    bench("nnls_native_90x90", 10, || {
+    bench("nnls_native_90x90", 10, &mut results, || {
         let (x, res) = native_nnls(&Mat::from_rows(&rows), &b);
         format!("x[0]={:.3} res={res:.1e}", x[0])
     });
@@ -109,12 +168,12 @@ fn main() {
         .collect();
     let windows: Vec<(usize, usize)> = vec![(450, 1800); 90];
     if let Some(arts) = arts.as_ref() {
-        bench("integrate_artifact_90", 10, || {
+        bench("integrate_artifact_90", 10, &mut results, || {
             let out = arts.integrate(&traces, &windows, 0.1).unwrap();
             format!("E[0]={:.0} J", out[0].0)
         });
     }
-    bench("integrate_native_90", 10, || {
+    bench("integrate_native_90", 10, &mut results, || {
         let mut acc = 0.0;
         for (t, &(lo, hi)) in traces.iter().zip(&windows) {
             let w = trace::SteadyWindow { start: lo, end: hi };
@@ -124,7 +183,7 @@ fn main() {
     });
 
     // --- training campaign (Fig 3/6 pipeline) ---
-    bench("campaign_v100", 3, || {
+    bench("campaign_v100", 3, &mut results, || {
         let r = ClusterCampaign::new(cfg.clone(), 4, 42)
             .train(&fast_tc(), arts.as_ref())
             .unwrap();
@@ -144,7 +203,7 @@ fn main() {
             (w.name.clone(), profile_app(&cfg, &sw.kernels))
         })
         .collect();
-    bench("predict_sweep_v100", 10, || {
+    bench("predict_sweep_v100", 10, &mut results, || {
         let preds = model::predict_suite(&table, &profiles, Mode::Pred, arts.as_ref()).unwrap();
         format!(
             "16 workloads, sum={:.0} J",
@@ -153,7 +212,7 @@ fn main() {
     });
 
     // --- ground-truth measurement loop ("Real GPU (D)") ---
-    bench("measure_suite_v100", 3, || {
+    bench("measure_suite_v100", 3, &mut results, || {
         let mut acc = 0.0;
         for (i, w) in suite.iter().enumerate().take(4) {
             let sw = scaled_workload(&cfg, w, 90.0);
@@ -166,14 +225,14 @@ fn main() {
     if let Some(arts) = arts.as_ref() {
         let xs: Vec<f64> = (0..90).map(|i| 0.5 + 0.1 * i as f64).collect();
         let ys: Vec<f64> = xs.iter().map(|x| 0.9 * x + 0.05).collect();
-        bench("affine_transfer", 20, || {
+        bench("affine_transfer", 20, &mut results, || {
             let (s, i) = arts.affine_fit(&xs, &ys).unwrap();
             format!("slope {s:.3} icept {i:.3}")
         });
     }
 
     // --- case study pipeline (Fig 10/11) ---
-    bench("case_study_backprop", 3, || {
+    bench("case_study_backprop", 3, &mut results, || {
         let buggy =
             scaled_workload(&cfg, &workloads::rodinia::backprop_k2(Gen::Volta, false), 90.0);
         let fixed =
@@ -183,5 +242,8 @@ fn main() {
         format!("energy drop {:.1}%", 100.0 * (mb - ma) / mb)
     });
 
+    if let Some(path) = &json_path {
+        write_json(path, &results);
+    }
     println!("\nbench complete");
 }

@@ -205,11 +205,31 @@ impl ArchConfig {
         (self.clock_ghz / self.clock_ref_ghz).powf(2.6)
     }
 
+    /// Floor of the leakage thermal factor in [`Self::static_power_at`].
+    pub const LEAKAGE_FACTOR_FLOOR: f64 = 0.2;
+
     /// Static power at temperature `t_c` with `occ` of SMs holding work.
     pub fn static_power_at(&self, t_c: f64, occ: f64) -> f64 {
         let occ_factor = self.static_floor + (1.0 - self.static_floor) * occ.clamp(0.0, 1.0);
         let thermal = 1.0 + self.leakage_per_c * (t_c - self.t_ref_c);
-        self.static_power_w * occ_factor * thermal.max(0.2)
+        self.static_power_w * occ_factor * thermal.max(Self::LEAKAGE_FACTOR_FLOOR)
+    }
+
+    /// Affine decomposition of [`Self::static_power_at`] in temperature:
+    /// `static(T) = s0 + b·T`, exact while the leakage factor sits above
+    /// [`Self::LEAKAGE_FACTOR_FLOOR`], i.e. for `T > static_clamp_temp_c()`.
+    /// Kept adjacent to `static_power_at` so the two models cannot drift.
+    pub fn static_power_affine(&self, occ: f64) -> (f64, f64) {
+        let occ_factor = self.static_floor + (1.0 - self.static_floor) * occ.clamp(0.0, 1.0);
+        let b = self.static_power_w * occ_factor * self.leakage_per_c;
+        let s0 = self.static_power_w * occ_factor * (1.0 - self.leakage_per_c * self.t_ref_c);
+        (s0, b)
+    }
+
+    /// Temperature below which the leakage clamp engages and the affine
+    /// decomposition stops being exact (≈ −4 °C for the V100 table).
+    pub fn static_clamp_temp_c(&self) -> f64 {
+        self.t_ref_c - (1.0 - Self::LEAKAGE_FACTOR_FLOOR) / self.leakage_per_c.max(1e-12)
     }
 }
 

@@ -9,9 +9,27 @@ use super::config::ArchConfig;
 use super::energy::true_energy_nj;
 use super::kernel::KernelSpec;
 use super::profiler::{self, KernelProfile};
-use super::telemetry::{sensor_read, Sample, Telemetry};
+use super::telemetry::{sensor_apply, sensor_read, Sample, Telemetry};
 use super::thermal::ThermalState;
 use super::timing;
+
+/// Affine power/temperature dynamics of one run segment.
+///
+/// While the leakage clamp in `ArchConfig::static_power_at` is inactive,
+/// true power is affine in die temperature — `p(T) = a_pow + b_lin·T` —
+/// and the explicit-Euler thermal recurrence is linear with constant
+/// coefficients: `T' = γT + δ`, fixed point `F = δ/(1−γ)`.  That makes
+/// the whole telemetry loop a geometric sequence the device can
+/// synthesize without per-step physics (see `Device::synth_run_telemetry`).
+struct PowerDynamics {
+    a_pow: f64,
+    b_lin: f64,
+    gamma: f64,
+    fixed: f64,
+    /// False when the clamp region is reachable (or γ degenerate) — the
+    /// caller must fall back to reference Euler stepping.
+    closed_ok: bool,
+}
 
 /// Result of executing one kernel (or an idle window) on the device.
 #[derive(Clone, Debug)]
@@ -68,27 +86,140 @@ impl Device {
     /// Let the device sit idle (clock-gated, constant power only) without
     /// recording telemetry — the inter-experiment cooldown (§6 Profiler
     /// Overhead: "60 seconds after the run completes to cool down").
+    /// O(1): the whole window collapses into one closed-form update.
     pub fn cooldown(&mut self, secs: f64) {
         let dt = self.cfg.nvml_period_s;
         let steps = (secs / dt).ceil() as usize;
-        for _ in 0..steps {
-            self.thermal.step(&self.cfg.cooling, self.cfg.const_power_w, dt);
-        }
+        self.thermal
+            .advance_steps(&self.cfg.cooling, self.cfg.const_power_w, dt, steps as u32);
     }
 
     /// Record an idle window (lowest power state) — used to calibrate
-    /// constant power (§3.3.1).
+    /// constant power (§3.3.1).  Samples are synthesized in bulk: batched
+    /// sensor noise, preallocated buffer, closed-form temperature decay.
     pub fn idle(&mut self, secs: f64) -> Telemetry {
-        let mut tel = Telemetry {
-            period_s: self.cfg.nvml_period_s,
-            ..Telemetry::default()
-        };
         let dt = self.cfg.nvml_period_s;
         let steps = (secs / dt).ceil() as usize;
+        let p_true = self.cfg.const_power_w;
+        let quant = self.cfg.nvml_quant_w;
+        let nf = self.cfg.nvml_noise_frac;
+        let ss = ThermalState::steady(&self.cfg.cooling, p_true);
+        let gamma = ThermalState::euler_gamma(&self.cfg.cooling, dt);
+        let mut noise = vec![0.0f64; steps];
+        self.rng.fill_normal(&mut noise);
+        let mut samples = Vec::with_capacity(steps);
+        let mut delta = self.thermal.t_c - ss;
+        for (i, &z) in noise.iter().enumerate() {
+            delta *= gamma;
+            samples.push(Sample {
+                t_s: i as f64 * dt,
+                power_w: sensor_apply(p_true, quant, nf, z),
+                util_pct: 0.0,
+                temp_c: ss + delta,
+            });
+        }
+        self.thermal.t_c = ss + delta;
+        Telemetry {
+            samples,
+            energy_counter_j: p_true * dt * steps as f64,
+            period_s: dt,
+        }
+    }
+
+    /// Affine power/thermal coefficients for a run segment at constant
+    /// dynamic power `p_dyn` and occupancy `occ`.
+    fn linear_power(&self, occ: f64, p_dyn: f64, dt: f64) -> PowerDynamics {
+        let cool = &self.cfg.cooling;
+        let (s0, b_lin) = self.cfg.static_power_affine(occ);
+        let a_pow = self.cfg.const_power_w + s0 + p_dyn;
+        let gamma = 1.0 - dt / (cool.r_th * cool.c_th) + dt * b_lin / cool.c_th;
+        let one_minus = 1.0 - gamma;
+        let fixed = if one_minus > 0.0 {
+            (dt / cool.c_th) * (a_pow + cool.t_ambient / cool.r_th) / one_minus
+        } else {
+            f64::INFINITY
+        };
+        // The affine static model is exact only above the leakage clamp
+        // temperature; the trajectory is monotone between the start
+        // temperature and the fixed point, so checking both endpoints
+        // (with margin) suffices.
+        let t_clamp = self.cfg.static_clamp_temp_c();
+        let closed_ok = one_minus > 0.0
+            && gamma > 0.0
+            && fixed.is_finite()
+            && self.thermal.t_c.min(fixed) > t_clamp + 1.0;
+        PowerDynamics {
+            a_pow,
+            b_lin,
+            gamma,
+            fixed,
+            closed_ok,
+        }
+    }
+
+    /// Bulk telemetry synthesis for a run segment: closed-form temperature
+    /// recurrence, batched sensor noise, preallocated sample buffer.
+    /// Matches `step_run_telemetry` temperatures to < 1e-6 °C (see the
+    /// parity property test below).
+    fn synth_run_telemetry(
+        &mut self,
+        dynp: &PowerDynamics,
+        occ: f64,
+        duration: f64,
+        steps: usize,
+    ) -> Telemetry {
+        let dt = self.cfg.nvml_period_s;
+        let quant = self.cfg.nvml_quant_w;
+        let nf = self.cfg.nvml_noise_frac;
+        let util = 100.0 * occ;
+        let mut noise = vec![0.0f64; steps];
+        self.rng.fill_normal(&mut noise);
+        let mut samples = Vec::with_capacity(steps);
+        let mut energy = 0.0;
+        let mut t_cur = self.thermal.t_c;
+        for (i, &z) in noise.iter().enumerate() {
+            let p_true = dynp.a_pow + dynp.b_lin * t_cur;
+            let t_next = dynp.fixed + (t_cur - dynp.fixed) * dynp.gamma;
+            let step_len = dt.min(duration - i as f64 * dt).max(0.0);
+            energy += p_true * step_len;
+            samples.push(Sample {
+                t_s: i as f64 * dt,
+                power_w: sensor_apply(p_true, quant, nf, z),
+                util_pct: util,
+                temp_c: t_next,
+            });
+            t_cur = t_next;
+        }
+        self.thermal.t_c = t_cur;
+        Telemetry {
+            samples,
+            energy_counter_j: energy,
+            period_s: dt,
+        }
+    }
+
+    /// Reference explicit-Euler telemetry loop — the fallback when the
+    /// leakage clamp could engage, and the oracle the closed form is
+    /// property-tested against.
+    fn step_run_telemetry(
+        &mut self,
+        occ: f64,
+        p_dyn: f64,
+        duration: f64,
+        steps: usize,
+    ) -> Telemetry {
+        let dt = self.cfg.nvml_period_s;
+        let mut tel = Telemetry {
+            period_s: dt,
+            ..Telemetry::default()
+        };
+        tel.samples.reserve(steps);
         for i in 0..steps {
-            let p_true = self.cfg.const_power_w;
+            let p_static = self.cfg.static_power_at(self.thermal.t_c, occ);
+            let p_true = self.cfg.const_power_w + p_static + p_dyn;
             self.thermal.step(&self.cfg.cooling, p_true, dt);
-            tel.energy_counter_j += p_true * dt;
+            let step_len = dt.min(duration - i as f64 * dt).max(0.0);
+            tel.energy_counter_j += p_true * step_len;
             tel.samples.push(Sample {
                 t_s: i as f64 * dt,
                 power_w: sensor_read(
@@ -97,7 +228,7 @@ impl Device {
                     self.cfg.nvml_noise_frac,
                     &mut self.rng,
                 ),
-                util_pct: 0.0,
+                util_pct: 100.0 * occ,
                 temp_c: self.thermal.t_c,
             });
         }
@@ -147,34 +278,16 @@ impl Device {
             p_dyn *= s.powi(2);
         }
 
-        // Step the thermal + telemetry loop.
+        // Synthesize the thermal + telemetry loop (closed form when the
+        // affine power model holds; reference Euler stepping otherwise).
         let dt = self.cfg.nvml_period_s;
         let steps = (duration / dt).ceil().max(1.0) as usize;
-        let mut tel = Telemetry {
-            period_s: dt,
-            ..Telemetry::default()
+        let dynp = self.linear_power(spec.occupancy, p_dyn, dt);
+        let tel = if dynp.closed_ok {
+            self.synth_run_telemetry(&dynp, spec.occupancy, duration, steps)
+        } else {
+            self.step_run_telemetry(spec.occupancy, p_dyn, duration, steps)
         };
-        tel.samples.reserve(steps);
-        for i in 0..steps {
-            let p_static = self
-                .cfg
-                .static_power_at(self.thermal.t_c, spec.occupancy);
-            let p_true = self.cfg.const_power_w + p_static + p_dyn;
-            self.thermal.step(&self.cfg.cooling, p_true, dt);
-            let step_len = dt.min(duration - i as f64 * dt).max(0.0);
-            tel.energy_counter_j += p_true * step_len;
-            tel.samples.push(Sample {
-                t_s: i as f64 * dt,
-                power_w: sensor_read(
-                    p_true,
-                    self.cfg.nvml_quant_w,
-                    self.cfg.nvml_noise_frac,
-                    &mut self.rng,
-                ),
-                util_pct: 100.0 * spec.occupancy,
-                temp_c: self.thermal.t_c,
-            });
-        }
 
         let mut profile = profiler::profile(&self.cfg, &spec);
         profile.duration_s = duration; // NSight reports the achieved time
@@ -294,6 +407,65 @@ mod tests {
         let e_water = water.run(&spec, Some(120.0)).telemetry.energy_counter_j;
         let drop = (e_air - e_water) / e_air;
         assert!(drop > 0.03 && drop < 0.30, "drop {drop}");
+    }
+
+    #[test]
+    fn closed_form_run_matches_stepped_reference() {
+        use crate::util::proptest::{check, close};
+        check("run-telemetry-closed-form", 24, |rng| {
+            let cfg = if rng.below(2) == 0 {
+                ArchConfig::cloudlab_v100()
+            } else {
+                ArchConfig::summit_v100()
+            };
+            let mut synth = Device::new(cfg.clone(), 1);
+            let mut stepped = Device::new(cfg, 2);
+            let t0 = rng.uniform(synth.cfg.cooling.t_ambient, 90.0);
+            synth.thermal.t_c = t0;
+            stepped.thermal.t_c = t0;
+            let occ = rng.uniform(0.05, 1.0);
+            let p_dyn = rng.uniform(0.0, 220.0);
+            let duration = rng.uniform(1.0, 120.0);
+            let dt = synth.cfg.nvml_period_s;
+            let steps = (duration / dt).ceil().max(1.0) as usize;
+            let dynp = synth.linear_power(occ, p_dyn, dt);
+            if !dynp.closed_ok {
+                return Err("closed form unexpectedly rejected".into());
+            }
+            let ta = synth.synth_run_telemetry(&dynp, occ, duration, steps);
+            let tb = stepped.step_run_telemetry(occ, p_dyn, duration, steps);
+            if ta.samples.len() != tb.samples.len() {
+                return Err("sample count mismatch".into());
+            }
+            for (sa, sb) in ta.samples.iter().zip(&tb.samples) {
+                let diff = (sa.temp_c - sb.temp_c).abs();
+                if diff >= 1e-6 {
+                    return Err(format!("temp diff {diff} °C"));
+                }
+            }
+            close(ta.energy_counter_j, tb.energy_counter_j, 1e-9, 1e-6)?;
+            close(synth.thermal.t_c, stepped.thermal.t_c, 0.0, 1e-6)
+        });
+    }
+
+    #[test]
+    fn cooldown_closed_form_matches_stepped_loop() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let mut fast = Device::new(cfg.clone(), 3);
+        fast.thermal.t_c = 85.0;
+        let mut slow = ThermalState { t_c: 85.0 };
+        let dt = cfg.nvml_period_s;
+        let steps = (60.0 / dt).ceil() as usize;
+        for _ in 0..steps {
+            slow.step(&cfg.cooling, cfg.const_power_w, dt);
+        }
+        fast.cooldown(60.0);
+        assert!(
+            (fast.temperature_c() - slow.t_c).abs() < 1e-6,
+            "{} vs {}",
+            fast.temperature_c(),
+            slow.t_c
+        );
     }
 
     #[test]

@@ -45,6 +45,19 @@ impl Telemetry {
     }
 }
 
+/// Quantize + perturb a true power value given a precomputed standard
+/// normal draw `z` — the bulk telemetry-synthesis path (noise is generated
+/// in batches via `Rng::fill_normal`).
+pub fn sensor_apply(true_power_w: f64, quant_w: f64, noise_frac: f64, z: f64) -> f64 {
+    let noisy = true_power_w * (1.0 + noise_frac * z);
+    let quantized = if quant_w > 0.0 {
+        (noisy / quant_w).round() * quant_w
+    } else {
+        noisy
+    };
+    quantized.max(0.0)
+}
+
 /// Quantize + perturb a true power value the way the emulated NVML does.
 pub fn sensor_read(
     true_power_w: f64,
@@ -52,13 +65,7 @@ pub fn sensor_read(
     noise_frac: f64,
     rng: &mut crate::util::prng::Rng,
 ) -> f64 {
-    let noisy = true_power_w * (1.0 + noise_frac * rng.normal());
-    if quant_w > 0.0 {
-        (noisy / quant_w).round() * quant_w
-    } else {
-        noisy
-    }
-    .max(0.0)
+    sensor_apply(true_power_w, quant_w, noise_frac, rng.normal())
 }
 
 #[cfg(test)]

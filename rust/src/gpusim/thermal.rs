@@ -32,6 +32,23 @@ impl ThermalState {
     pub fn steady(cooling: &Cooling, p_w: f64) -> f64 {
         cooling.t_ambient + p_w * cooling.r_th
     }
+
+    /// Per-step decay factor of the explicit-Euler discretization.
+    pub fn euler_gamma(cooling: &Cooling, dt: f64) -> f64 {
+        1.0 - dt / (cooling.r_th * cooling.c_th)
+    }
+
+    /// Advance by `n` Euler steps of `dt` under constant power in O(1):
+    /// the recurrence `T' = γT + δ` is linear with constant coefficients,
+    /// so its n-step composition is `T_n = T_ss + (T_0 − T_ss)·γⁿ`.  This
+    /// reproduces the *discrete* trajectory `step` walks (not the
+    /// continuous exponential), so telemetry semantics are unchanged; the
+    /// property test below pins agreement to < 1e-6 °C.
+    pub fn advance_steps(&mut self, cooling: &Cooling, p_w: f64, dt: f64, n: u32) {
+        let ss = ThermalState::steady(cooling, p_w);
+        let gamma = ThermalState::euler_gamma(cooling, dt);
+        self.t_c = ss + (self.t_c - ss) * gamma.powi(n as i32);
+    }
 }
 
 #[cfg(test)]
@@ -63,5 +80,43 @@ mod tests {
         let mut st = ThermalState { t_c: 80.0 };
         st.step(&cool, 0.0, 1.0);
         assert!(st.t_c < 80.0 && st.t_c > cool.t_ambient);
+    }
+
+    #[test]
+    fn closed_form_matches_stepped_euler_on_random_schedules() {
+        use crate::util::proptest::check;
+        check("thermal-closed-form", 64, |rng| {
+            let cool = if rng.below(2) == 0 {
+                Cooling::air()
+            } else {
+                Cooling::water()
+            };
+            let dt = 0.1;
+            let mut stepped = ThermalState {
+                t_c: rng.uniform(cool.t_ambient, 95.0),
+            };
+            let mut closed = stepped.clone();
+            for _seg in 0..(1 + rng.below(6)) {
+                let p = rng.uniform(0.0, 400.0);
+                let n = 1 + rng.below(1200);
+                for _ in 0..n {
+                    stepped.step(&cool, p, dt);
+                }
+                closed.advance_steps(&cool, p, dt, n as u32);
+                let diff = (stepped.t_c - closed.t_c).abs();
+                if diff >= 1e-6 {
+                    return Err(format!("closed form off by {diff} °C after {n} steps"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn advance_zero_steps_is_identity() {
+        let cool = Cooling::air();
+        let mut st = ThermalState { t_c: 55.0 };
+        st.advance_steps(&cool, 120.0, 0.1, 0);
+        assert_eq!(st.t_c, 55.0);
     }
 }

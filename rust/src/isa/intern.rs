@@ -1,0 +1,257 @@
+//! Symbol interner for grouped column keys.
+//!
+//! The modeling hot paths (profile grouping, count merging, system
+//! assembly, prediction resolution) used to shuttle `BTreeMap<String, f64>`
+//! histograms around, re-canonicalizing and re-formatting the same few
+//! hundred key strings for every profile.  The interner assigns each
+//! canonical column key (`"FFMA"`, `"LDG.E.64@L2"`, ...) a dense
+//! [`KeyId`] so those paths operate on `Vec`-indexed counts instead;
+//! strings survive only at the serialization/report boundary
+//! (`model::table`, `util::json`).
+//!
+//! The raw-opcode memo additionally caches the full canonicalization of a
+//! profiler opcode (modifier grouping + STEP folding + the memory-level
+//! key triple), so repeated opcodes cost one map lookup instead of a parse
+//! and several `format!` calls.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Mutex, OnceLock};
+
+use super::class::{classify_str, InstrClass, MemLevel};
+use super::grouping::canonicalize;
+
+/// Dense identifier of an interned column key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct KeyId(pub u32);
+
+impl KeyId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Memoized canonicalization of one raw profiler opcode.
+#[derive(Clone, Copy, Debug)]
+pub enum RawGroup {
+    /// Non-global-memory op: a single column key.
+    Plain { id: KeyId, weight: f64 },
+    /// Global-memory op: one column key per hierarchy level, ordered
+    /// `[L1, L2, DRAM]` to match `MemBehavior::load_split`/`store_split`.
+    Mem {
+        level_ids: [KeyId; 3],
+        weight: f64,
+        store: bool,
+    },
+}
+
+#[derive(Default)]
+struct InternerState {
+    keys: Vec<String>,
+    by_key: HashMap<String, u32>,
+    raw_memo: HashMap<String, RawGroup>,
+}
+
+fn state() -> &'static Mutex<InternerState> {
+    static S: OnceLock<Mutex<InternerState>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(InternerState::default()))
+}
+
+fn intern_in(st: &mut InternerState, key: &str) -> KeyId {
+    if let Some(&id) = st.by_key.get(key) {
+        return KeyId(id);
+    }
+    let id = st.keys.len() as u32;
+    st.keys.push(key.to_string());
+    st.by_key.insert(key.to_string(), id);
+    KeyId(id)
+}
+
+/// Intern a column key (idempotent).
+pub fn intern(key: &str) -> KeyId {
+    intern_in(&mut state().lock().unwrap(), key)
+}
+
+/// Look a key up without inserting it.
+pub fn lookup(key: &str) -> Option<KeyId> {
+    state().lock().unwrap().by_key.get(key).map(|&id| KeyId(id))
+}
+
+/// Resolve an id back to its key string (the serialization boundary).
+pub fn resolve_key(id: KeyId) -> String {
+    state()
+        .lock()
+        .unwrap()
+        .keys
+        .get(id.index())
+        .cloned()
+        .unwrap_or_else(|| format!("<key#{}>", id.0))
+}
+
+/// Number of keys interned so far — an upper bound for dense id-indexed
+/// lookup tables.
+pub fn interned_count() -> usize {
+    state().lock().unwrap().keys.len()
+}
+
+/// Canonicalize a raw profiler opcode into its grouped column id(s),
+/// memoized on the raw string.
+pub fn raw_group(raw: &str) -> RawGroup {
+    let mut st = state().lock().unwrap();
+    if let Some(rg) = st.raw_memo.get(raw) {
+        return *rg;
+    }
+    let g = canonicalize(raw);
+    let class = classify_str(&g.key);
+    let rg = if class.is_global_mem() {
+        let levels = MemLevel::all();
+        let mut level_ids = [KeyId(0); 3];
+        for i in 0..3 {
+            let key = super::column_key(&g.key, Some(levels[i]));
+            level_ids[i] = intern_in(&mut st, &key);
+        }
+        RawGroup::Mem {
+            level_ids,
+            weight: g.weight,
+            store: class == InstrClass::GlobalStore,
+        }
+    } else {
+        RawGroup::Plain {
+            id: intern_in(&mut st, &g.key),
+            weight: g.weight,
+        }
+    };
+    st.raw_memo.insert(raw.to_string(), rg);
+    rg
+}
+
+/// Dense count accumulator indexed by [`KeyId`] — the hot-path
+/// replacement for `BTreeMap<String, f64>` histograms.  Absent keys and
+/// zero counts are indistinguishable (both read as 0.0).
+#[derive(Clone, Debug, Default)]
+pub struct KeyCounts {
+    vals: Vec<f64>,
+}
+
+impl KeyCounts {
+    pub fn new() -> KeyCounts {
+        KeyCounts::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, id: KeyId, v: f64) {
+        let i = id.index();
+        if i >= self.vals.len() {
+            self.vals.resize(i + 1, 0.0);
+        }
+        self.vals[i] += v;
+    }
+
+    #[inline]
+    pub fn get(&self, id: KeyId) -> f64 {
+        self.vals.get(id.index()).copied().unwrap_or(0.0)
+    }
+
+    /// String-keyed lookup for the report/ablation boundary.
+    pub fn get_key(&self, key: &str) -> Option<f64> {
+        lookup(key).map(|id| self.get(id))
+    }
+
+    /// Iterate nonzero (id, count) pairs in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (KeyId, f64)> + '_ {
+        self.vals
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &v)| if v != 0.0 { Some((KeyId(i as u32), v)) } else { None })
+    }
+
+    pub fn total(&self) -> f64 {
+        self.vals.iter().sum()
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.vals {
+            *v *= s;
+        }
+    }
+
+    /// Convert back to a string-keyed map (serialization boundary only).
+    pub fn to_string_map(&self) -> BTreeMap<String, f64> {
+        self.iter().map(|(id, v)| (resolve_key(id), v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent_and_resolves() {
+        let a = intern("TEST.INTERN.FFMA");
+        let b = intern("TEST.INTERN.FFMA");
+        assert_eq!(a, b);
+        assert_eq!(resolve_key(a), "TEST.INTERN.FFMA");
+        assert_eq!(lookup("TEST.INTERN.FFMA"), Some(a));
+        assert!(lookup("TEST.INTERN.NEVER_SEEN").is_none());
+    }
+
+    #[test]
+    fn raw_group_matches_canonicalize() {
+        match raw_group("ISETP.GE.AND") {
+            RawGroup::Plain { id, weight } => {
+                assert_eq!(resolve_key(id), "ISETP");
+                assert_eq!(weight, 1.0);
+            }
+            g => panic!("unexpected {g:?}"),
+        }
+        match raw_group("HMMA.884.F32.STEP2") {
+            RawGroup::Plain { id, weight } => {
+                assert_eq!(resolve_key(id), "HMMA.884.F32");
+                assert_eq!(weight, 0.25);
+            }
+            g => panic!("unexpected {g:?}"),
+        }
+    }
+
+    #[test]
+    fn raw_group_splits_memory_ops_by_level() {
+        match raw_group("LDG.E.EF.64") {
+            RawGroup::Mem {
+                level_ids,
+                weight,
+                store,
+            } => {
+                assert_eq!(resolve_key(level_ids[0]), "LDG.E.64@L1");
+                assert_eq!(resolve_key(level_ids[1]), "LDG.E.64@L2");
+                assert_eq!(resolve_key(level_ids[2]), "LDG.E.64@DRAM");
+                assert_eq!(weight, 1.0);
+                assert!(!store);
+            }
+            g => panic!("unexpected {g:?}"),
+        }
+        match raw_group("STG.E.64") {
+            RawGroup::Mem { store, .. } => assert!(store),
+            g => panic!("unexpected {g:?}"),
+        }
+    }
+
+    #[test]
+    fn key_counts_accumulate_and_roundtrip() {
+        let a = intern("TEST.COUNTS.A");
+        let b = intern("TEST.COUNTS.B");
+        let mut c = KeyCounts::new();
+        c.add(a, 2.0);
+        c.add(b, 3.0);
+        c.add(a, 0.5);
+        assert_eq!(c.get(a), 2.5);
+        assert_eq!(c.total(), 5.5);
+        assert_eq!(c.get_key("TEST.COUNTS.A"), Some(2.5));
+        assert_eq!(c.get_key("TEST.COUNTS.NEVER_SEEN"), None);
+        let m = c.to_string_map();
+        assert_eq!(m["TEST.COUNTS.A"], 2.5);
+        assert_eq!(m["TEST.COUNTS.B"], 3.0);
+        c.scale(2.0);
+        assert_eq!(c.get(a), 5.0);
+        assert_eq!(c.iter().count(), 2);
+    }
+}

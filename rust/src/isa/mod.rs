@@ -10,12 +10,14 @@ pub mod arch;
 pub mod bucket;
 pub mod class;
 pub mod grouping;
+pub mod intern;
 pub mod opcode;
 
 pub use arch::Gen;
 pub use bucket::{bucket_of_class, bucket_of_key, Bucket};
 pub use class::{classify, classify_str, InstrClass, MemLevel};
 pub use grouping::{canonicalize, group_counts, Grouped};
+pub use intern::{KeyCounts, KeyId};
 pub use opcode::Opcode;
 
 /// Energy-table column key for an opcode, optionally tagged with the memory

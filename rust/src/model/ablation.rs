@@ -28,7 +28,7 @@ use super::train::{BenchMeasurement, TrainResult};
 pub fn amortized_table(tr: &TrainResult) -> EnergyTable {
     let mut entries = BTreeMap::new();
     for m in &tr.measurements {
-        let target_frac = m.fractions.get(&m.target_key).copied().unwrap_or(0.0);
+        let target_frac = m.fractions.get_key(&m.target_key).unwrap_or(0.0);
         if target_frac > 0.0 {
             // rhs_nj is dynamic energy per (total) instruction; amortizing
             // everything onto the target inflates it by 1/target_frac.

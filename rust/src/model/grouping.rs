@@ -4,40 +4,62 @@
 //! keys: modifier grouping (isa::grouping) plus the §3.5 hit-rate split of
 //! global memory ops across hierarchy levels ("if we have an L1 hit rate
 //! of 90 % and 100 LDG.E instructions, 90 of them hit in the L1...").
+//!
+//! The hot path works on interned [`KeyId`]s and dense [`KeyCounts`]
+//! (see `isa::intern`); the string-keyed entry points survive for the
+//! report/serialization boundary and tests.
 
 use std::collections::BTreeMap;
 
-use crate::gpusim::profiler::KernelProfile;
 use crate::gpusim::kernel::MemBehavior;
-use crate::isa::class::classify_str;
-use crate::isa::{canonicalize, column_key};
+use crate::gpusim::profiler::KernelProfile;
+use crate::isa::intern::{self, KeyCounts, RawGroup};
 
-/// Grouped counts keyed by energy-table column (`FFMA`, `LDG.E.64@L2`, ...).
-pub fn grouped_level_counts(profile: &KernelProfile) -> BTreeMap<String, f64> {
+/// Accumulate a profile's grouped, level-split counts into `out`.
+pub fn accumulate_grouped_ids(profile: &KernelProfile, out: &mut KeyCounts) {
     let mem = MemBehavior::new(
         profile.l1_hit.clamp(0.0, 1.0),
         profile.l2_hit.clamp(0.0, 1.0),
     );
-    let mut out: BTreeMap<String, f64> = BTreeMap::new();
     for (raw, &count) in &profile.counts {
-        let g = canonicalize(raw);
-        let eff = g.weight * count;
-        let class = classify_str(&g.key);
-        if class.is_global_mem() {
-            for (level, frac) in mem.split_for(class) {
-                if frac > 0.0 {
-                    *out.entry(column_key(&g.key, Some(level))).or_insert(0.0) +=
-                        eff * frac;
+        match intern::raw_group(raw) {
+            RawGroup::Plain { id, weight } => out.add(id, weight * count),
+            RawGroup::Mem {
+                level_ids,
+                weight,
+                store,
+            } => {
+                let split = if store {
+                    mem.store_split()
+                } else {
+                    mem.load_split()
+                };
+                let eff = weight * count;
+                for (i, &(_, frac)) in split.iter().enumerate() {
+                    if frac > 0.0 {
+                        out.add(level_ids[i], eff * frac);
+                    }
                 }
             }
-        } else {
-            *out.entry(g.key).or_insert(0.0) += eff;
         }
     }
+}
+
+/// Grouped counts keyed by energy-table column id.
+pub fn grouped_level_ids(profile: &KernelProfile) -> KeyCounts {
+    let mut out = KeyCounts::new();
+    accumulate_grouped_ids(profile, &mut out);
     out
 }
 
-/// Merge grouped counts across an application's kernels.
+/// Grouped counts keyed by energy-table column (`FFMA`, `LDG.E.64@L2`, ...)
+/// — string-keyed boundary wrapper over [`grouped_level_ids`].
+pub fn grouped_level_counts(profile: &KernelProfile) -> BTreeMap<String, f64> {
+    grouped_level_ids(profile).to_string_map()
+}
+
+/// Merge grouped counts across an application's kernels (string boundary;
+/// the dense path accumulates directly via [`accumulate_grouped_ids`]).
 pub fn merge_counts(per_kernel: &[BTreeMap<String, f64>]) -> BTreeMap<String, f64> {
     let mut out = BTreeMap::new();
     for counts in per_kernel {
@@ -118,5 +140,30 @@ mod tests {
         let b = grouped_level_counts(&profile_with(&[("FADD", 7.0)], 1.0, 1.0));
         let m = merge_counts(&[a, b]);
         assert_eq!(m["FADD"], 12.0);
+    }
+
+    #[test]
+    fn dense_and_string_paths_agree() {
+        let p = profile_with(
+            &[("FFMA", 100.0), ("LDG.E.64", 10.0), ("ISETP.GE.AND", 3.0)],
+            0.5,
+            0.5,
+        );
+        let dense = grouped_level_ids(&p);
+        let strings = grouped_level_counts(&p);
+        assert!((dense.total() - strings.values().sum::<f64>()).abs() < 1e-12);
+        for (k, v) in &strings {
+            assert!((dense.get_key(k).unwrap() - v).abs() < 1e-12, "{k}");
+        }
+    }
+
+    #[test]
+    fn accumulate_matches_string_merge() {
+        let p1 = profile_with(&[("FADD", 5.0), ("LDG.E.32", 4.0)], 0.25, 0.5);
+        let p2 = profile_with(&[("FADD", 7.0), ("MOV", 2.0)], 1.0, 1.0);
+        let mut dense = grouped_level_ids(&p1);
+        accumulate_grouped_ids(&p2, &mut dense);
+        let strings = merge_counts(&[grouped_level_counts(&p1), grouped_level_counts(&p2)]);
+        assert_eq!(dense.to_string_map(), strings);
     }
 }

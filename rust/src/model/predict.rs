@@ -7,11 +7,12 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::gpusim::profiler::KernelProfile;
+use crate::isa::intern::{self, KeyCounts, KeyId};
 use crate::isa::opcode::Opcode;
 use crate::isa::{bucket_of_key, split_key, MemLevel};
 use crate::runtime::Artifacts;
 
-use super::grouping::{grouped_level_counts, merge_counts};
+use super::grouping::accumulate_grouped_ids;
 use super::table::EnergyTable;
 
 /// Prediction mode: `Direct` uses only directly-solved table entries;
@@ -161,6 +162,41 @@ fn family_prefix(op: &str) -> Option<String> {
     }
 }
 
+/// Per-call memo of `resolve_energy` results, dense-indexed by interned
+/// key id — one scaling/bucketing walk per distinct column instead of one
+/// per (workload × column).
+struct ResolveCache {
+    slots: Vec<Option<(Option<f64>, Source)>>,
+}
+
+impl ResolveCache {
+    fn new() -> ResolveCache {
+        ResolveCache { slots: Vec::new() }
+    }
+
+    fn get(&mut self, table: &EnergyTable, id: KeyId, mode: Mode) -> (Option<f64>, Source) {
+        let i = id.index();
+        if i >= self.slots.len() {
+            self.slots.resize(i + 1, None);
+        }
+        if let Some(v) = self.slots[i] {
+            return v;
+        }
+        let v = resolve_energy(table, &intern::resolve_key(id), mode);
+        self.slots[i] = Some(v);
+        v
+    }
+}
+
+/// Merged grouped counts over an application's kernel profiles.
+fn merged_counts(profiles: &[KernelProfile]) -> KeyCounts {
+    let mut out = KeyCounts::new();
+    for p in profiles {
+        accumulate_grouped_ids(p, &mut out);
+    }
+    out
+}
+
 /// Predict one workload from its kernel profiles (paper base model).
 pub fn predict_app(
     table: &EnergyTable,
@@ -179,8 +215,23 @@ pub fn predict_app_with(
     mode: Mode,
     static_model: StaticModel,
 ) -> Prediction {
-    let per_kernel: Vec<_> = profiles.iter().map(grouped_level_counts).collect();
-    let counts = merge_counts(&per_kernel);
+    let counts = merged_counts(profiles);
+    let mut cache = ResolveCache::new();
+    predict_from_counts(table, workload, profiles, &counts, mode, static_model, &mut cache)
+}
+
+/// Core prediction over precomputed merged counts (shared by the per-app
+/// entry points and the batched suite path, which reuses both the counts
+/// and the resolve cache across workloads).
+fn predict_from_counts(
+    table: &EnergyTable,
+    workload: &str,
+    profiles: &[KernelProfile],
+    counts: &KeyCounts,
+    mode: Mode,
+    static_model: StaticModel,
+    cache: &mut ResolveCache,
+) -> Prediction {
     let duration: f64 = profiles.iter().map(|p| p.duration_s).sum();
 
     let base_j = match static_model {
@@ -195,23 +246,24 @@ pub fn predict_app_with(
     };
     let mut dynamic_j = 0.0;
     let mut attributed_instr = 0.0;
-    let total_instr: f64 = counts.values().sum();
+    let total_instr = counts.total();
     let mut by_bucket: BTreeMap<String, f64> = BTreeMap::new();
     let mut by_key: Vec<(String, f64, Source)> = Vec::new();
 
-    for (key, count) in &counts {
-        let (energy, source) = resolve_energy(table, key, mode);
+    for (id, count) in counts.iter() {
+        let (energy, source) = cache.get(table, id, mode);
         match energy {
             Some(e) => {
+                let key = intern::resolve_key(id);
                 let joules = count * e * 1e-9;
                 dynamic_j += joules;
                 attributed_instr += count;
                 *by_bucket
-                    .entry(bucket_of_key(key).name().to_string())
+                    .entry(bucket_of_key(&key).name().to_string())
                     .or_insert(0.0) += joules;
-                by_key.push((key.clone(), joules, source));
+                by_key.push((key, joules, source));
             }
-            None => by_key.push((key.clone(), 0.0, Source::Unattributed)),
+            None => by_key.push((intern::resolve_key(id), 0.0, Source::Unattributed)),
         }
     }
     by_key.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
@@ -241,18 +293,42 @@ pub fn predict_suite(
     mode: Mode,
     arts: Option<&Artifacts>,
 ) -> Result<Vec<Prediction>> {
+    // Group each workload's profiles once; both the native predictions and
+    // the artifact batch below reuse the merged counts and resolve cache.
+    let merged: Vec<KeyCounts> = apps
+        .iter()
+        .map(|(_, profiles)| merged_counts(profiles))
+        .collect();
+    let mut cache = ResolveCache::new();
     let mut preds: Vec<Prediction> = apps
         .iter()
-        .map(|(name, profiles)| predict_app(table, name, profiles, mode))
+        .zip(&merged)
+        .map(|((name, profiles), counts)| {
+            predict_from_counts(
+                table,
+                name,
+                profiles,
+                counts,
+                mode,
+                StaticModel::FullGpu,
+                &mut cache,
+            )
+        })
         .collect();
 
     if let Some(arts) = arts {
-        // Union of attributed columns across workloads.
-        let mut keys: Vec<String> = Vec::new();
-        for p in &preds {
-            for (k, _, s) in &p.by_key {
-                if *s != Source::Unattributed && !keys.contains(k) {
-                    keys.push(k.clone());
+        // Union of attributed columns across workloads (first-seen order).
+        let mut keys: Vec<KeyId> = Vec::new();
+        let mut seen = vec![false; intern::interned_count()];
+        for counts in &merged {
+            for (id, _) in counts.iter() {
+                if seen[id.index()] {
+                    continue;
+                }
+                seen[id.index()] = true;
+                let (energy, source) = cache.get(table, id, mode);
+                if energy.is_some() && source != Source::Unattributed {
+                    keys.push(id);
                 }
             }
         }
@@ -260,18 +336,15 @@ pub fn predict_suite(
         if groups > 0 && groups <= crate::runtime::PREDICT_I {
             let e: Vec<f64> = keys
                 .iter()
-                .map(|k| resolve_energy(table, k, mode).0.unwrap_or(0.0))
+                .map(|&id| cache.get(table, id, mode).0.unwrap_or(0.0))
                 .collect();
             let mut c = vec![0.0f64; preds.len() * groups];
             let mut p0 = Vec::with_capacity(preds.len());
             let mut t = Vec::with_capacity(preds.len());
-            for (w, (_, profiles)) in apps.iter().enumerate() {
-                let per_kernel: Vec<_> =
-                    profiles.iter().map(grouped_level_counts).collect();
-                let counts = merge_counts(&per_kernel);
-                for (g, key) in keys.iter().enumerate() {
+            for (w, counts) in merged.iter().enumerate() {
+                for (g, &id) in keys.iter().enumerate() {
                     // giga-instructions × nJ = joules.
-                    c[w * groups + g] = counts.get(key).copied().unwrap_or(0.0) * 1e-9;
+                    c[w * groups + g] = counts.get(id) * 1e-9;
                 }
                 p0.push(table.base_power_w());
                 t.push(preds[w].duration_s);

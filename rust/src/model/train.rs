@@ -16,13 +16,14 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use crate::gpusim::device::Device;
+use crate::isa::intern::{self, KeyCounts};
 use crate::microbench::{nanosleep_bench, suite, BenchSpec};
 use crate::runtime::Artifacts;
 use crate::solver::{nnls as native_nnls, Mat};
 use crate::trace::{steady_window, SteadyWindow};
 use crate::util::stats;
 
-use super::grouping::grouped_level_counts;
+use super::grouping::grouped_level_ids;
 use super::table::EnergyTable;
 
 /// Campaign configuration (defaults follow the paper's §6 protocol:
@@ -70,8 +71,9 @@ pub struct BenchMeasurement {
     pub steady_power_w: f64,
     /// Dynamic power after constant+static subtraction [W].
     pub dyn_power_w: f64,
-    /// Column fractions of the benchmark's instruction mix.
-    pub fractions: BTreeMap<String, f64>,
+    /// Column fractions of the benchmark's instruction mix, dense-indexed
+    /// by interned column key (string lookup via `KeyCounts::get_key`).
+    pub fractions: KeyCounts,
     /// Right-hand side: mean dynamic energy per instruction [nJ].
     pub rhs_nj: f64,
     /// Total instruction issue rate [instr/s].
@@ -145,7 +147,8 @@ pub fn collect_bench(device: &mut Device, bench: &BenchSpec, tc: &TrainConfig) -
 /// through the PJRT integrator in full 128-trace batches (a campaign is
 /// 90 × reps traces — per-benchmark calls would pad each tiny batch to the
 /// artifact's 128×4096 shape and waste >90 % of the FLOPs; see
-/// EXPERIMENTS.md §Perf).
+/// PERF.md).  Traces are borrowed, not cloned: a 450-trace campaign must
+/// not double its peak memory just to batch the integration.
 pub fn reduce_benches(
     raws: &[RawBenchData],
     arts: Option<&Artifacts>,
@@ -153,11 +156,13 @@ pub fn reduce_benches(
     let Some(arts) = arts else {
         return raws.iter().map(|r| reduce_bench(r, None)).collect();
     };
-    let mut traces: Vec<Vec<f64>> = Vec::new();
+    let mut traces: Vec<&[f64]> = Vec::new();
     let mut windows: Vec<(usize, usize)> = Vec::new();
     for raw in raws {
-        traces.extend(raw.traces.iter().cloned());
-        windows.extend(raw.windows.iter().cloned());
+        for t in &raw.traces {
+            traces.push(t.as_slice());
+        }
+        windows.extend(raw.windows.iter().copied());
     }
     let period = raws.first().map(|r| r.period_s).unwrap_or(0.1);
     let integrated = arts.integrate(&traces, &windows, period)?;
@@ -176,12 +181,9 @@ pub fn reduce_benches(
 
 /// Build the measurement row once the steady power is known.
 fn measurement_from(raw: &RawBenchData, steady: f64) -> BenchMeasurement {
-    let counts = grouped_level_counts(&raw.profile);
-    let total: f64 = counts.values().sum();
-    let fractions = counts
-        .iter()
-        .map(|(k, v)| (k.clone(), v / total))
-        .collect();
+    let mut fractions = grouped_level_ids(&raw.profile);
+    let total = fractions.total();
+    fractions.scale(1.0 / total);
     BenchMeasurement {
         name: raw.name.clone(),
         target_key: raw.target_key.clone(),
@@ -251,20 +253,26 @@ pub fn assemble_and_solve(
             n
         );
     }
-    let col_index: BTreeMap<&str, usize> = columns
-        .iter()
-        .enumerate()
-        .map(|(i, c)| (c.as_str(), i))
-        .collect();
+    // Dense id → column lookup (system assembly never touches strings).
+    let col_ids: Vec<intern::KeyId> = columns.iter().map(|c| intern::intern(c)).collect();
+    let mut id_to_col = vec![usize::MAX; intern::interned_count()];
+    for (c, id) in col_ids.iter().enumerate() {
+        id_to_col[id.index()] = c;
+    }
     let rows = measurements.len();
     let mut a = vec![0.0f64; rows * n];
     let mut b = vec![0.0f64; rows];
     for (r, m) in measurements.iter().enumerate() {
-        for (key, frac) in &m.fractions {
-            let Some(&c) = col_index.get(key.as_str()) else {
-                bail!("benchmark {} emits uncovered column {key}", m.name);
-            };
-            a[r * n + c] = *frac;
+        for (id, frac) in m.fractions.iter() {
+            let c = id_to_col.get(id.index()).copied().unwrap_or(usize::MAX);
+            if c == usize::MAX {
+                bail!(
+                    "benchmark {} emits uncovered column {}",
+                    m.name,
+                    intern::resolve_key(id)
+                );
+            }
+            a[r * n + c] = frac;
         }
         b[r] = m.rhs_nj;
     }

@@ -106,7 +106,7 @@ pub fn fig3(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
         };
         let mut row = vec![bname.to_string()];
         for col in show_cols {
-            let frac = m.fractions.get(col).copied().unwrap_or(0.0);
+            let frac = m.fractions.get_key(col).unwrap_or(0.0);
             row.push(if frac == 0.0 {
                 "-".into()
             } else {

@@ -121,10 +121,12 @@ impl Artifacts {
     /// Batched masked trapezoidal integration: returns `(energy_j,
     /// mean_power_w)` per trace.  Traces longer than 4096 samples are
     /// rejected (the campaign samples at 10 Hz ⇒ 180 s = 1800 samples);
-    /// batches larger than 128 are chunked internally.
-    pub fn integrate(
+    /// batches larger than 128 are chunked internally.  Accepts both
+    /// owned (`&[Vec<f64>]`) and borrowed (`&[&[f64]]`) trace batches so
+    /// callers never have to clone a campaign's traces just to batch them.
+    pub fn integrate<T: AsRef<[f64]>>(
         &self,
-        traces: &[Vec<f64>],
+        traces: &[T],
         windows: &[(usize, usize)],
         dt: f64,
     ) -> Result<Vec<(f64, f64)>> {
@@ -136,7 +138,7 @@ impl Artifacts {
             let mut p = vec![0.0f32; TRACE_B * TRACE_T];
             let mut v = vec![0.0f32; TRACE_B * TRACE_T];
             for (i, idx) in (chunk_start..chunk_end).enumerate() {
-                let tr = &traces[idx];
+                let tr = traces[idx].as_ref();
                 if tr.len() > TRACE_T {
                     bail!("trace {idx} has {} samples > {TRACE_T}", tr.len());
                 }
