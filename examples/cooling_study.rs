@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     // Table linearity + affine transfer from a 10 % subset.
     let r2 = table_r_squared(&air.table, &water.table);
     println!("air↔water per-instruction energy R² = {r2:.3} (paper: 0.988)");
-    let keys = random_subset(&water.table, 0.10, 99);
+    let keys = random_subset(&water.table, 0.10, 99)?;
     let subset: std::collections::BTreeMap<String, f64> = keys
         .iter()
         .map(|k| (k.clone(), water.table.entries[k]))

@@ -1,0 +1,201 @@
+//! serve_demo: boot the batched prediction service, fire a 64-request
+//! concurrent client burst at it, verify CLI parity and coalescing, and
+//! shut it down cleanly.  Exit code 0 means the full loop — bind, burst,
+//! drain, join — completed; CI runs this as the serve smoke test.
+//!
+//!     cargo run --release --example serve_demo
+//!
+//! Uses the PJRT artifacts when `artifacts/` has been built (the burst
+//! then coalesces into batched `predict` executable calls), otherwise the
+//! batched native path.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use wattchmen::cluster::ClusterCampaign;
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::model::{predict_suite, Mode, TrainConfig};
+use wattchmen::report::context::WORKLOAD_SECS;
+use wattchmen::report::scaled_workload;
+use wattchmen::runtime::Artifacts;
+use wattchmen::service::{protocol, PredictServer, ServeConfig};
+use wattchmen::util::json::{parse, Json};
+use wattchmen::workloads;
+
+const BURST: usize = 64;
+
+/// Fire `BURST` concurrent predict requests and check each response
+/// against the precomputed CLI result for its workload.  `exact` asks
+/// for byte-identical lines (native path); with artifacts the batched
+/// f32 key-union ordering can differ from the per-workload calls by
+/// ulps, so parity is asserted on the energy within 1e-4 instead.
+fn run_burst(
+    addr: std::net::SocketAddr,
+    names: &[String],
+    expected: &Arc<BTreeMap<String, (String, f64)>>,
+    exact: bool,
+) -> Result<Duration> {
+    let barrier = Arc::new(Barrier::new(BURST));
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..BURST {
+        let workload = names[i % names.len()].clone();
+        let expected = expected.clone();
+        let barrier = barrier.clone();
+        clients.push(thread::spawn(move || -> Result<()> {
+            barrier.wait();
+            let stream = TcpStream::connect(addr)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut writer = stream;
+            let req = protocol::predict_request("cloudlab-v100", &workload, Mode::Pred);
+            writer.write_all(req.to_string_compact().as_bytes())?;
+            writer.write_all(b"\n")?;
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let resp = parse(line.trim()).map_err(anyhow::Error::msg)?;
+            if resp.get("ok") != Some(&Json::Bool(true)) {
+                bail!("{workload}: error response {line}");
+            }
+            let (cli_line, cli_energy) = &expected[&workload];
+            let text = resp.get("text").and_then(Json::as_str).unwrap_or("");
+            if exact && text != *cli_line {
+                bail!(
+                    "{workload}: served line diverged from the CLI\n  served: {text}\n  cli:    {cli_line}"
+                );
+            }
+            let energy = resp
+                .get("energy_j")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN);
+            if !((energy - cli_energy).abs() <= 1e-4 * cli_energy.abs().max(1.0)) {
+                bail!(
+                    "{workload}: served energy {energy} J vs CLI {cli_energy} J"
+                );
+            }
+            Ok(())
+        }));
+    }
+    let mut failure = None;
+    for c in clients {
+        match c.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => failure = Some(e),
+            Err(_) => failure = Some(anyhow::anyhow!("client thread panicked")),
+        }
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(t0.elapsed()),
+    }
+}
+
+fn send_shutdown(addr: std::net::SocketAddr) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writer.write_all(b"{\"cmd\":\"shutdown\"}\n")?;
+    let mut ack = String::new();
+    reader.read_line(&mut ack)?;
+    if !ack.contains("\"ok\":true") {
+        bail!("shutdown not acknowledged: {ack}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let arts = Artifacts::load_default()
+        .map_err(|e| eprintln!("(artifacts unavailable: {e:#}; serving native paths)"))
+        .ok();
+
+    // 1. Train a table with the shortened protocol and stage it where the
+    //    registry will find it.
+    let cfg = ArchConfig::cloudlab_v100();
+    let tc = TrainConfig {
+        reps: 2,
+        bench_secs: 60.0,
+        cooldown_secs: 15.0,
+        idle_secs: 20.0,
+        cov_threshold: 0.02,
+    };
+    println!("training {} table for the demo...", cfg.name);
+    let table = ClusterCampaign::new(cfg.clone(), 4, 42)
+        .train(&tc, arts.as_ref())?
+        .table;
+    let dir = std::env::temp_dir().join("wattchmen_serve_demo");
+    std::fs::create_dir_all(&dir)?;
+    table.save(&dir.join("cloudlab-v100.table.json"))?;
+
+    // 2. Precompute what `wattchmen predict` would print per workload
+    //    (artifact parity requires computing before the artifacts move to
+    //    the serving thread — they are not Sync).
+    let suite = workloads::evaluation_suite(cfg.gen);
+    let expected: Arc<BTreeMap<String, (String, f64)>> = Arc::new(
+        suite
+            .iter()
+            .map(|w| {
+                let scaled = scaled_workload(&cfg, w, WORKLOAD_SECS);
+                let apps = vec![(w.name.clone(), profile_app(&cfg, &scaled.kernels))];
+                let pred = predict_suite(&table, &apps, Mode::Pred, arts.as_ref())?
+                    .into_iter()
+                    .next()
+                    .unwrap();
+                Ok((
+                    w.name.clone(),
+                    (protocol::render_line(&pred), pred.energy_j),
+                ))
+            })
+            .collect::<Result<_>>()?,
+    );
+    let names: Vec<String> = suite.iter().map(|w| w.name.clone()).collect();
+    let exact_parity = arts.is_none();
+
+    // 3. Bind the server; drive the burst from client threads while the
+    //    main thread runs the coalescer (where the artifacts live).
+    let server = PredictServer::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: BURST,
+        linger: Duration::from_millis(500),
+        tables_dir: dir,
+        default_duration_s: WORKLOAD_SECS,
+    })?;
+    let addr = server.local_addr();
+    println!("wattchmen serve listening on {addr}");
+
+    let burst = thread::spawn(move || {
+        let result = run_burst(addr, &names, &expected, exact_parity);
+        // Shut the server down whether or not the burst succeeded — the
+        // main thread is blocked in run() until we do.
+        let shutdown = send_shutdown(addr);
+        result.and_then(|elapsed| shutdown.map(|()| elapsed))
+    });
+
+    server.run(arts.as_ref())?;
+    let elapsed = burst
+        .join()
+        .expect("burst thread panicked")
+        .context("client burst failed")?;
+
+    // 4. Assert the burst actually coalesced (≤ ⌈64/32⌉ batched calls).
+    let batches = server.batch_calls();
+    println!(
+        "answered {} predictions in {:.1} ms across {} batched predict call(s)",
+        server.served(),
+        elapsed.as_secs_f64() * 1e3,
+        batches
+    );
+    if server.served() != BURST {
+        bail!("served {} of {BURST} burst requests", server.served());
+    }
+    if batches > BURST.div_ceil(32) {
+        bail!("burst fanned out into {batches} batched calls (want ≤ {})", BURST.div_ceil(32));
+    }
+    println!("serve_demo: clean shutdown");
+    Ok(())
+}

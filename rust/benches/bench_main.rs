@@ -13,12 +13,17 @@
 //!   device_sim           — raw simulator substrate throughput
 //!   affine_transfer      — Fig 14 transfer fit
 //!   case_study_backprop  — Fig 10/11 pipeline
+//!   serve_batch_64       — 64-request burst through `wattchmen serve`
 //!
 //! Each benchmark also prints the headline numbers it reproduces so
 //! `cargo bench` doubles as a quick regeneration harness.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use wattchmen::cluster::ClusterCampaign;
 use wattchmen::gpusim::config::ArchConfig;
@@ -29,6 +34,7 @@ use wattchmen::isa::Gen;
 use wattchmen::model::{self, Mode, TrainConfig};
 use wattchmen::report::{measure_workload, scaled_workload};
 use wattchmen::runtime::Artifacts;
+use wattchmen::service::{protocol, PredictServer, ServeConfig};
 use wattchmen::solver::{nnls as native_nnls, Mat};
 use wattchmen::trace;
 use wattchmen::util::json::Json;
@@ -241,6 +247,59 @@ fn main() {
         let ma = measure_workload(&cfg, &fixed, 11).energy_j;
         format!("energy drop {:.1}%", 100.0 * (mb - ma) / mb)
     });
+
+    // --- serve: 64-request concurrent burst through the TCP service ---
+    {
+        let dir = std::env::temp_dir().join("wattchmen_bench_serve");
+        std::fs::create_dir_all(&dir).unwrap();
+        table.save(&dir.join("cloudlab-v100.table.json")).unwrap();
+        let server = Arc::new(
+            PredictServer::bind(ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 64,
+                linger: Duration::from_millis(5),
+                tables_dir: dir,
+                default_duration_s: 90.0,
+            })
+            .unwrap(),
+        );
+        let addr = server.local_addr();
+        let runner = {
+            let server = server.clone();
+            // The serving thread runs the batched native path; the artifact
+            // predict executable is covered by predict_sweep_v100.
+            thread::spawn(move || server.run(None).unwrap())
+        };
+        let names: Vec<String> = suite.iter().map(|w| w.name.clone()).collect();
+        bench("serve_batch_64", 5, &mut results, || {
+            let mut clients = Vec::new();
+            for i in 0..64 {
+                let workload = names[i % names.len()].clone();
+                clients.push(thread::spawn(move || {
+                    let stream = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut writer = stream;
+                    let req = protocol::predict_request("cloudlab-v100", &workload, Mode::Pred);
+                    writer.write_all(req.to_string_compact().as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.contains("\"ok\":true"), "{line}");
+                }));
+            }
+            for c in clients {
+                c.join().unwrap();
+            }
+            format!("{} batched calls total", server.batch_calls())
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
+        let mut ack = String::new();
+        reader.read_line(&mut ack).unwrap();
+        runner.join().unwrap();
+    }
 
     if let Some(path) = &json_path {
         write_json(path, &results);

@@ -8,6 +8,7 @@
 pub mod gpusim;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod solver;
 pub mod trace;
 pub mod isa;

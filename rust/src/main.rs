@@ -4,21 +4,23 @@
 //!   report <fig...|all>   reproduce paper tables/figures (DESIGN.md §4)
 //!   train                 run a training campaign, save the energy table
 //!   predict               predict a workload's energy from a saved table
+//!   serve                 JSON-over-TCP batched prediction service
 //!   list                  list environments / workloads / experiments
 //!   version
 
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use wattchmen::cluster::ClusterCampaign;
 use wattchmen::gpusim::config::ArchConfig;
-use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::gpusim::profiler::{profile_app, KernelProfile};
 use wattchmen::isa::Gen;
-use wattchmen::model::{self, EnergyTable, Mode};
+use wattchmen::model::{self, EnergyTable};
 use wattchmen::report::{self, EvalCtx};
 use wattchmen::runtime::Artifacts;
+use wattchmen::service::{protocol, PredictServer, ServeConfig};
 use wattchmen::util::cli::Args;
 use wattchmen::workloads;
 
@@ -110,11 +112,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         .get("table")
         .ok_or_else(|| anyhow!("--table <file> required (run `wattchmen train` first)"))?;
     let table = EnergyTable::load(Path::new(table_path))?;
-    let mode = match args.get_or("mode", "pred") {
-        "direct" => Mode::Direct,
-        "pred" => Mode::Pred,
-        m => bail!("unknown mode '{m}' (direct|pred)"),
-    };
+    let mode = protocol::parse_mode(args.get_or("mode", "pred")).map_err(|e| anyhow!(e))?;
     let suite = workloads::evaluation_suite(cfg.gen);
     let wanted = args.get("workload");
     let apps: Vec<_> = suite
@@ -124,19 +122,19 @@ fn cmd_predict(args: &Args) -> Result<()> {
     if apps.is_empty() {
         bail!("no workload matches {:?}", wanted);
     }
-    for w in apps {
-        let scaled = report::scaled_workload(&cfg, w, report::context::WORKLOAD_SECS);
-        let profiles = profile_app(&cfg, &scaled.kernels);
-        let pred = model::predict_app(&table, &w.name, &profiles, mode);
-        println!(
-            "{:<18} total {:>9.1} J  (base {:>8.1} J + dynamic {:>8.1} J)  coverage {:>5.1}%  runtime {:>6.1} s",
-            pred.workload,
-            pred.energy_j,
-            pred.base_j,
-            pred.dynamic_j,
-            100.0 * pred.coverage,
-            pred.duration_s
-        );
+    // One batched predict_many call for the whole selection: with
+    // artifacts loaded, the energy accumulation runs through the PJRT
+    // predict executable (32 workloads × 256 groups per call).
+    let profiled: Vec<(String, Vec<KernelProfile>)> = apps
+        .iter()
+        .map(|w| {
+            let scaled = report::scaled_workload(&cfg, w, report::context::WORKLOAD_SECS);
+            (w.name.clone(), profile_app(&cfg, &scaled.kernels))
+        })
+        .collect();
+    let preds = model::predict_suite(&table, &profiled, mode, arts.as_ref())?;
+    for pred in &preds {
+        println!("{}", protocol::render_line(pred));
         if args.flag("breakdown") {
             for (bucket, joules) in &pred.by_bucket {
                 println!("    {bucket:<12} {joules:>9.1} J");
@@ -146,7 +144,32 @@ fn cmd_predict(args: &Args) -> Result<()> {
             }
         }
     }
-    let _ = arts;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args);
+    let linger_ms = args.get_f64("linger-ms", 10.0).map_err(anyhow::Error::msg)?;
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7117").to_string(),
+        workers: args.get_usize("workers", 64).map_err(anyhow::Error::msg)?,
+        linger: Duration::from_micros((linger_ms * 1000.0) as u64),
+        tables_dir: PathBuf::from(args.get_or("tables", ".")),
+        default_duration_s: report::context::WORKLOAD_SECS,
+    };
+    let server = PredictServer::bind(cfg)?;
+    if let Some(path) = args.get("table") {
+        let arch = args.get_or("arch", protocol::DEFAULT_ARCH);
+        server.registry().register(arch, PathBuf::from(path));
+    }
+    // Scripts (CI, serve_demo) parse this line for the bound port.
+    println!("wattchmen serve listening on {}", server.local_addr());
+    server.run(arts.as_ref())?;
+    println!(
+        "wattchmen serve: clean shutdown after {} predictions in {} batched predict calls",
+        server.served(),
+        server.batch_calls()
+    );
     Ok(())
 }
 
@@ -178,6 +201,7 @@ fn main() {
         Some("report") => cmd_report(&args),
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
         Some("list") => {
             cmd_list();
             Ok(())
@@ -188,11 +212,12 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: wattchmen <report|train|predict|list|version> [options]\n\
+                "usage: wattchmen <report|train|predict|serve|list|version> [options]\n\
                  \n\
                  report <fig1..fig14|all> [--fast] [--seed N] [--out DIR] [--no-artifacts]\n\
                  train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
                  predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred] [--breakdown]\n\
+                 serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N] [--linger-ms MS]\n\
                  list"
             );
             std::process::exit(2);

@@ -284,12 +284,34 @@ fn predict_from_counts(
     }
 }
 
-/// Predict a batch of workloads, computing the final energy accumulation
-/// through the PJRT `predict` artifact when available (the native value is
-/// retained in the attribution fields; both agree to f32 precision).
+/// Predict a batch of workloads from owned `(name, profiles)` pairs.
+/// Thin wrapper over [`predict_many`] for callers that already own their
+/// profile vectors (the Fig-6 report path, the CLI).
 pub fn predict_suite(
     table: &EnergyTable,
     apps: &[(String, Vec<KernelProfile>)],
+    mode: Mode,
+    arts: Option<&Artifacts>,
+) -> Result<Vec<Prediction>> {
+    let view: Vec<(&str, &[KernelProfile])> = apps
+        .iter()
+        .map(|(name, profiles)| (name.as_str(), profiles.as_slice()))
+        .collect();
+    predict_many(table, &view, mode, arts)
+}
+
+/// Predict a batch of workloads, computing the final energy accumulation
+/// through the PJRT `predict` artifact when available (the native value is
+/// retained in the attribution fields; both agree to f32 precision).
+///
+/// This is the single batched entry point every prediction consumer shares:
+/// the CLI `predict` command, the Fig-6 report pipeline, and the `serve`
+/// coalescer all route here, so the artifact path is exercised (and parity
+/// tested) identically everywhere.  Borrowed slices let the service batch
+/// `Arc`-cached profiles from concurrent requests without cloning them.
+pub fn predict_many(
+    table: &EnergyTable,
+    apps: &[(&str, &[KernelProfile])],
     mode: Mode,
     arts: Option<&Artifacts>,
 ) -> Result<Vec<Prediction>> {
@@ -333,7 +355,9 @@ pub fn predict_suite(
             }
         }
         let groups = keys.len();
-        if groups > 0 && groups <= crate::runtime::PREDICT_I {
+        // No upper bound: `Artifacts::predict` chunks over both the
+        // workload and group dimensions.
+        if groups > 0 {
             let e: Vec<f64> = keys
                 .iter()
                 .map(|&id| cache.get(table, id, mode).0.unwrap_or(0.0))
@@ -349,9 +373,18 @@ pub fn predict_suite(
                 p0.push(table.base_power_w());
                 t.push(preds[w].duration_s);
             }
-            let totals = arts.predict(&c, preds.len(), groups, &e, &p0, &t)?;
-            for (p, total) in preds.iter_mut().zip(totals) {
-                p.energy_j = total;
+            // The native f64 predictions above are already correct; a
+            // failing artifact execution must not discard them (in the
+            // serve coalescer it would error a whole batched group).
+            match arts.predict(&c, preds.len(), groups, &e, &p0, &t) {
+                Ok(totals) => {
+                    for (p, total) in preds.iter_mut().zip(totals) {
+                        p.energy_j = total;
+                    }
+                }
+                Err(err) => eprintln!(
+                    "[wattchmen] artifact predict failed ({err:#}); serving native predictions"
+                ),
             }
         }
     }
@@ -470,6 +503,30 @@ mod tests {
         let bucket_sum: f64 = pred.by_bucket.values().sum();
         assert!((key_sum - pred.dynamic_j).abs() < 1e-9);
         assert!((bucket_sum - pred.dynamic_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predict_many_matches_per_app_predictions_bitwise() {
+        let t = table();
+        let p1 = profile(&[("FADD", 1e9), ("MOV", 1e9)], 1.0, 1.0, 10.0);
+        let p2 = profile(&[("FFMA", 2e9), ("LDG.E.32", 1e8)], 0.5, 0.5, 2.0);
+        let apps: Vec<(&str, &[KernelProfile])> = vec![
+            ("a", std::slice::from_ref(&p1)),
+            ("b", std::slice::from_ref(&p2)),
+        ];
+        let many = predict_many(&t, &apps, Mode::Pred, None).unwrap();
+        let a = predict_app(&t, "a", &[p1.clone()], Mode::Pred);
+        let b = predict_app(&t, "b", &[p2.clone()], Mode::Pred);
+        assert_eq!(many[0].energy_j.to_bits(), a.energy_j.to_bits());
+        assert_eq!(many[1].energy_j.to_bits(), b.energy_j.to_bits());
+        // The owned wrapper delegates to the same path.
+        let owned = vec![
+            ("a".to_string(), vec![p1.clone()]),
+            ("b".to_string(), vec![p2]),
+        ];
+        let suite = predict_suite(&t, &owned, Mode::Pred, None).unwrap();
+        assert_eq!(suite[0].energy_j.to_bits(), a.energy_j.to_bits());
+        assert_eq!(suite[1].energy_j.to_bits(), b.energy_j.to_bits());
     }
 
     #[test]

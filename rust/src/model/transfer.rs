@@ -6,9 +6,9 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::runtime::Artifacts;
+use crate::runtime::{Artifacts, AFFINE_N};
 use crate::util::prng::Rng;
 use crate::util::stats;
 
@@ -34,6 +34,13 @@ pub fn transfer_table(
     dst_static_power_w: f64,
     arts: Option<&Artifacts>,
 ) -> Result<TransferResult> {
+    if dst_subset.is_empty() {
+        bail!(
+            "transfer_table: empty destination subset — measure at least one \
+             instruction on the destination system before transferring '{}'",
+            src.arch
+        );
+    }
     let mut xs = Vec::with_capacity(dst_subset.len());
     let mut ys = Vec::with_capacity(dst_subset.len());
     let mut measured_keys = Vec::with_capacity(dst_subset.len());
@@ -44,8 +51,21 @@ pub fn transfer_table(
             measured_keys.push(key.clone());
         }
     }
+    if xs.is_empty() {
+        bail!(
+            "transfer_table: none of the {} measured destination keys exist in \
+             the source table '{}' ({} entries) — no overlap to fit the affine \
+             map through",
+            dst_subset.len(),
+            src.arch,
+            src.entries.len()
+        );
+    }
+    // The affine_fit artifact is compiled for ≤ AFFINE_N (256) points;
+    // larger measured subsets fall back to the native fit instead of
+    // erroring.
     let (slope, intercept) = match arts {
-        Some(arts) if !xs.is_empty() => arts.affine_fit(&xs, &ys)?,
+        Some(arts) if xs.len() <= AFFINE_N => arts.affine_fit(&xs, &ys)?,
         _ => stats::linfit(&xs, &ys),
     };
 
@@ -56,6 +76,11 @@ pub fn transfer_table(
             None => (slope * e_src + intercept).max(0.0),
         };
         entries.insert(key.clone(), e);
+    }
+    // Measured keys absent from the source table carry a real destination
+    // measurement — keep them instead of silently dropping them.
+    for (key, &measured) in dst_subset {
+        entries.entry(key.clone()).or_insert(measured);
     }
     Ok(TransferResult {
         table: EnergyTable {
@@ -71,19 +96,30 @@ pub fn transfer_table(
 }
 
 /// Pick a random fraction of a table's keys (the Fig-14 10 % / 50 %
-/// subsets).  Deterministic under `seed`.
+/// subsets), never fewer than the 2 points an affine fit needs.
+/// Deterministic under `seed`.  Errors on tables with <2 keys (where
+/// `clamp(2, len)` would otherwise panic with `min > max`).
 pub fn random_subset(
     table: &EnergyTable,
     fraction: f64,
     seed: u64,
-) -> Vec<String> {
+) -> Result<Vec<String>> {
     let keys: Vec<String> = table.entries.keys().cloned().collect();
+    if keys.len() < 2 {
+        bail!(
+            "random_subset: table '{}' has {} entries — an affine transfer \
+             needs at least 2 measured points",
+            table.arch,
+            keys.len()
+        );
+    }
     let k = ((keys.len() as f64 * fraction).round() as usize).clamp(2, keys.len());
     let mut rng = Rng::new(seed);
-    rng.sample_indices(keys.len(), k)
+    Ok(rng
+        .sample_indices(keys.len(), k)
         .into_iter()
         .map(|i| keys[i].clone())
-        .collect()
+        .collect())
 }
 
 /// R² between two tables over their common keys (§6: 0.988 air↔water).
@@ -148,12 +184,75 @@ mod tests {
     #[test]
     fn random_subset_is_deterministic_and_sized() {
         let src = src_table();
-        let a = random_subset(&src, 0.1, 7);
-        let b = random_subset(&src, 0.1, 7);
+        let a = random_subset(&src, 0.1, 7).unwrap();
+        let b = random_subset(&src, 0.1, 7).unwrap();
         assert_eq!(a, b);
         assert_eq!(a.len(), 4); // 10% of 40
-        let big = random_subset(&src, 0.5, 7);
+        let big = random_subset(&src, 0.5, 7).unwrap();
         assert_eq!(big.len(), 20);
+    }
+
+    #[test]
+    fn random_subset_of_tiny_table_is_an_error_not_a_panic() {
+        let mut src = src_table();
+        src.entries = [("OP0".to_string(), 1.0)].into_iter().collect();
+        let err = random_subset(&src, 0.1, 7).unwrap_err().to_string();
+        assert!(err.contains("at least 2"), "{err}");
+        src.entries.clear();
+        assert!(random_subset(&src, 0.5, 7).is_err());
+    }
+
+    #[test]
+    fn zero_overlap_subset_is_a_descriptive_error() {
+        let src = src_table();
+        let subset: BTreeMap<String, f64> =
+            [("UNRELATED.OP".to_string(), 1.0)].into_iter().collect();
+        let err = transfer_table(&src, &subset, 36.0, 40.0, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no overlap"), "{err}");
+        assert!(transfer_table(&src, &BTreeMap::new(), 36.0, 40.0, None).is_err());
+    }
+
+    #[test]
+    fn measured_only_keys_survive_the_transfer() {
+        let src = src_table();
+        let mut subset: BTreeMap<String, f64> = src
+            .entries
+            .iter()
+            .take(4)
+            .map(|(k, &v)| (k.clone(), 0.9 * v + 0.05))
+            .collect();
+        // Measured on the destination but never benchmarked on the source:
+        // the measurement must reach the output table.
+        subset.insert("DST.ONLY.OP".to_string(), 7.5);
+        let r = transfer_table(&src, &subset, 36.0, 40.0, None).unwrap();
+        assert_eq!(r.table.entries["DST.ONLY.OP"], 7.5);
+        // ...without polluting the fit (slope still from overlapping keys).
+        assert!((r.slope - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversized_subsets_fit_natively() {
+        // 300 keys > AFFINE_N (256): the artifact path would reject this;
+        // the native fallback must still recover the line.  (With artifacts
+        // present the `xs.len() <= AFFINE_N` guard routes here too.)
+        let src = EnergyTable {
+            arch: "air".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: (0..300)
+                .map(|i| (format!("OP{i:03}"), 0.5 + 0.05 * i as f64))
+                .collect(),
+        };
+        let subset: BTreeMap<String, f64> = src
+            .entries
+            .iter()
+            .map(|(k, &v)| (k.clone(), 1.1 * v - 0.2))
+            .collect();
+        let r = transfer_table(&src, &subset, 36.0, 40.0, None).unwrap();
+        assert!((r.slope - 1.1).abs() < 1e-9, "slope {}", r.slope);
+        assert_eq!(r.measured_keys.len(), 300);
     }
 
     #[test]

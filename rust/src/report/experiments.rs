@@ -581,7 +581,7 @@ pub fn fig14(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
         let table = if frac >= 1.0 {
             water_table.clone()
         } else {
-            let keys = model::random_subset(&water_table, frac, ctx.seed ^ 0xF16);
+            let keys = model::random_subset(&water_table, frac, ctx.seed ^ 0xF16)?;
             let subset: std::collections::BTreeMap<String, f64> = keys
                 .iter()
                 .map(|k| (k.clone(), water_table.entries[k]))

@@ -196,8 +196,11 @@ impl Artifacts {
         ))
     }
 
-    /// Batched energy prediction: `E_w = p0_w·t_w + C[w,:]·e` for up to 32
-    /// workloads × 256 instruction groups per call (chunked above that).
+    /// Batched energy prediction: `E_w = p0_w·t_w + C[w,:]·e`, 32 workloads
+    /// × 256 instruction groups per executable call, chunked above that in
+    /// BOTH dimensions: workload chunks below, and group chunks here — the
+    /// dot product is additive over group ranges, so chunks past the first
+    /// contribute with zeroed base power and their partial sums accumulate.
     pub fn predict(
         &self,
         c: &[f64],
@@ -208,7 +211,29 @@ impl Artifacts {
         t: &[f64],
     ) -> Result<Vec<f64>> {
         if groups > PREDICT_I {
-            bail!("predict: {groups} groups > {PREDICT_I}");
+            assert_eq!(c.len(), workloads * groups);
+            assert_eq!(e.len(), groups);
+            let zeros = vec![0.0f64; workloads];
+            let mut totals = vec![0.0f64; workloads];
+            for (chunk, g0) in (0..groups).step_by(PREDICT_I).enumerate() {
+                let g1 = (g0 + PREDICT_I).min(groups);
+                let width = g1 - g0;
+                let mut sub = vec![0.0f64; workloads * width];
+                for w in 0..workloads {
+                    sub[w * width..(w + 1) * width]
+                        .copy_from_slice(&c[w * groups + g0..w * groups + g1]);
+                }
+                let (p0k, tk) = if chunk == 0 {
+                    (p0, t)
+                } else {
+                    (&zeros[..], &zeros[..])
+                };
+                let part = self.predict(&sub, workloads, width, &e[g0..g1], p0k, tk)?;
+                for (total, p) in totals.iter_mut().zip(part) {
+                    *total += p;
+                }
+            }
+            return Ok(totals);
         }
         assert_eq!(c.len(), workloads * groups);
         assert_eq!(e.len(), groups);
@@ -328,6 +353,30 @@ mod tests {
         let workloads = 40; // forces chunking over the 32-row artifact
         let groups = 50;
         let mut rng = Rng::new(31);
+        let c: Vec<f64> = (0..workloads * groups)
+            .map(|_| rng.uniform(0.0, 10.0))
+            .collect();
+        let e: Vec<f64> = (0..groups).map(|_| rng.uniform(0.0, 4.0)).collect();
+        let p0: Vec<f64> = (0..workloads).map(|_| rng.uniform(60.0, 120.0)).collect();
+        let t: Vec<f64> = (0..workloads).map(|_| rng.uniform(1.0, 200.0)).collect();
+        let out = art.predict(&c, workloads, groups, &e, &p0, &t).unwrap();
+        for w in 0..workloads {
+            let dot: f64 = (0..groups).map(|g| c[w * groups + g] * e[g]).sum();
+            let expect = p0[w] * t[w] + dot;
+            assert!(
+                (out[w] - expect).abs() / expect < 1e-4,
+                "w{w}: {} vs {expect}",
+                out[w]
+            );
+        }
+    }
+
+    #[test]
+    fn predict_artifact_chunks_oversized_group_sets() {
+        let Some(art) = artifacts() else { return };
+        let workloads = 3;
+        let groups = 300; // > PREDICT_I forces the group-chunking path
+        let mut rng = Rng::new(37);
         let c: Vec<f64> = (0..workloads * groups)
             .map(|_| rng.uniform(0.0, 10.0))
             .collect();

@@ -1,0 +1,130 @@
+//! Memoized application profiling for the prediction service.
+//!
+//! `profile_app` is pure static analysis, so its result for a given
+//! (arch, workload, scaling duration) never changes — the service profiles
+//! each combination once and answers every later request from the cache.
+//! Profiles are `Arc`-shared straight into the coalescer's batches, so a
+//! 64-request burst over 16 workloads profiles at most 16 times and clones
+//! nothing.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::profiler::{profile_app, KernelProfile};
+use crate::report::scaled_workload;
+use crate::workloads;
+
+type Key = (String, String, u64);
+
+/// Retention bound: `duration_s` is client-controlled, so an adversarial
+/// (or merely chatty) client could otherwise grow the cache without
+/// limit.  When full the cache is cleared — steady-state serving uses a
+/// handful of (arch, workload, duration) triples, so a wipe is rare and
+/// repopulates in one burst.
+const MAX_ENTRIES: usize = 1024;
+
+pub struct ProfileCache {
+    cache: Mutex<BTreeMap<Key, Arc<Vec<KernelProfile>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ProfileCache {
+    pub fn new() -> ProfileCache {
+        ProfileCache {
+            cache: Mutex::new(BTreeMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::SeqCst)
+    }
+
+    /// Profiles for `workload` scaled to `duration_s` on `cfg`, memoized.
+    /// The pipeline (evaluation suite lookup → `scaled_workload` →
+    /// `profile_app`) is exactly the CLI's, so served predictions match
+    /// `wattchmen predict` byte for byte.
+    pub fn get(
+        &self,
+        cfg: &ArchConfig,
+        workload: &str,
+        duration_s: f64,
+    ) -> Result<Arc<Vec<KernelProfile>>> {
+        let key = (
+            cfg.name.clone(),
+            workload.to_string(),
+            duration_s.to_bits(),
+        );
+        if let Some(p) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return Ok(p.clone());
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        let w = workloads::evaluation_suite(cfg.gen)
+            .into_iter()
+            .find(|w| w.name == workload)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown workload '{workload}' for {} (see `wattchmen list`)",
+                    cfg.name
+                )
+            })?;
+        let scaled = scaled_workload(cfg, &w, duration_s);
+        let profiles = Arc::new(profile_app(cfg, &scaled.kernels));
+        // A concurrent miss may have raced us here; either instance is
+        // identical, last insert wins.
+        let mut cache = self.cache.lock().unwrap();
+        if cache.len() >= MAX_ENTRIES {
+            cache.clear();
+        }
+        cache.insert(key, profiles.clone());
+        Ok(profiles)
+    }
+}
+
+impl Default for ProfileCache {
+    fn default() -> ProfileCache {
+        ProfileCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memoizes_per_arch_workload_duration() {
+        let cache = ProfileCache::new();
+        let cfg = ArchConfig::cloudlab_v100();
+        let a = cache.get(&cfg, "hotspot", 90.0).unwrap();
+        let b = cache.get(&cfg, "hotspot", 90.0).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // A different duration is a different profile (different iters).
+        let c = cache.get(&cfg, "hotspot", 45.0).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        assert!(a[0].duration_s > c[0].duration_s);
+    }
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        let cache = ProfileCache::new();
+        let cfg = ArchConfig::cloudlab_v100();
+        let err = cache.get(&cfg, "nosuch", 90.0).unwrap_err().to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+        // kmeans exists on V100 but not on A100 (CUDA 12 dropped it).
+        let a100 = ArchConfig::by_name("lonestar-a100").unwrap();
+        assert!(cache.get(&a100, "kmeans", 90.0).is_err());
+    }
+}

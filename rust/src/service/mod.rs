@@ -1,0 +1,334 @@
+//! `wattchmen serve` — the batched multi-table prediction service.
+//!
+//! A std-only JSON-over-TCP server (tokio is unavailable offline — same
+//! constraint DESIGN.md applied to `cluster/`) that turns the per-table
+//! prediction pipeline into an online service:
+//!
+//! * acceptor thread — hands sockets to the worker pool;
+//! * worker pool — parses newline-delimited JSON requests, resolves
+//!   tables through [`TableRegistry`] (mtime-based hot reload) and
+//!   profiles through [`ProfileCache`] (memoized `profile_app`), then
+//!   enqueues [`PredictJob`]s and blocks on their replies;
+//! * coordinator — [`PredictServer::run`] drives the request
+//!   [`Coalescer`] on the *calling* thread, where the non-Sync PJRT
+//!   artifacts may live; concurrent requests against the same table
+//!   batch into single `model::predict_many` calls.
+//!
+//! Every layer shares the CLI's exact pipeline (suite lookup →
+//! `scaled_workload` → `profile_app` → `predict_many` → `render_line`),
+//! so a served prediction is byte-identical to `wattchmen predict`.
+
+pub mod cache;
+pub mod coalescer;
+pub mod protocol;
+pub mod registry;
+
+pub use cache::ProfileCache;
+pub use coalescer::{submit_and_wait, Coalescer, PredictJob};
+pub use registry::TableRegistry;
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::gpusim::config::ArchConfig;
+use crate::model::{Mode, Prediction};
+use crate::report::context::WORKLOAD_SECS;
+use crate::runtime::Artifacts;
+use crate::util::json::Json;
+
+use protocol::Request;
+
+/// Server configuration (all CLI-settable; see `wattchmen serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, demo).
+    pub addr: String,
+    /// Worker threads.  Workers block while their batch lingers in the
+    /// coalescer, so the pool must cover the expected concurrent burst
+    /// (default 64 — two full predict-artifact chunks).
+    pub workers: usize,
+    /// How long the coalescer holds a batch open for more requests.
+    pub linger: Duration,
+    /// Directory `TableRegistry` resolves `<arch>.table.json` under.
+    pub tables_dir: PathBuf,
+    /// Workload scaling target used when a request omits `duration_s`
+    /// (the CLI's measurement protocol, for byte-identical parity).
+    pub default_duration_s: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 64,
+            linger: Duration::from_millis(10),
+            tables_dir: PathBuf::from("."),
+            default_duration_s: WORKLOAD_SECS,
+        }
+    }
+}
+
+/// State shared by the worker pool and the coordinator.
+struct Shared {
+    addr: SocketAddr,
+    registry: TableRegistry,
+    profiles: ProfileCache,
+    coalescer: Coalescer,
+    shutdown: AtomicBool,
+    served: AtomicUsize,
+    default_duration_s: f64,
+}
+
+pub struct PredictServer {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl PredictServer {
+    /// Bind the listener and spawn the acceptor + worker pool.  Call
+    /// [`run`](Self::run) (blocking) to start answering predictions.
+    pub fn bind(cfg: ServeConfig) -> Result<PredictServer> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let (coalescer, jobs_tx) = Coalescer::new(cfg.linger);
+        let shared = Arc::new(Shared {
+            addr,
+            registry: TableRegistry::new(cfg.tables_dir),
+            profiles: ProfileCache::new(),
+            coalescer,
+            shutdown: AtomicBool::new(false),
+            served: AtomicUsize::new(0),
+            default_duration_s: cfg.default_duration_s,
+        });
+
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handles = Vec::with_capacity(cfg.workers + 1);
+        for _ in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let conn_rx = conn_rx.clone();
+            let jobs_tx = jobs_tx.clone();
+            handles.push(thread::spawn(move || loop {
+                let conn = conn_rx.lock().unwrap().recv();
+                let Ok(stream) = conn else { break };
+                let _ = handle_conn(stream, &shared, &jobs_tx);
+            }));
+        }
+        // jobs_tx's original drops here: once the acceptor exits and the
+        // workers drain, the coalescer's receiver disconnects and run()
+        // returns — that IS clean shutdown.
+        // Non-blocking accept loop so the acceptor can observe the
+        // shutdown flag regardless of bind address or platform (a
+        // wake-by-self-connect would not reach e.g. an 0.0.0.0 bind
+        // everywhere).
+        listener.set_nonblocking(true)?;
+        {
+            let shared = shared.clone();
+            handles.push(thread::spawn(move || loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Accepted sockets must not inherit non-blocking
+                        // mode (platform-dependent otherwise).
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        if conn_tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(20)),
+                }
+            }));
+        }
+        Ok(PredictServer {
+            shared,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn registry(&self) -> &TableRegistry {
+        &self.shared.registry
+    }
+
+    pub fn profile_cache(&self) -> &ProfileCache {
+        &self.shared.profiles
+    }
+
+    /// Batched predict calls issued so far (the coalescing counter).
+    pub fn batch_calls(&self) -> usize {
+        self.shared.coalescer.batch_calls()
+    }
+
+    /// Predict requests answered successfully so far.
+    pub fn served(&self) -> usize {
+        self.shared.served.load(Ordering::SeqCst)
+    }
+
+    /// Answer requests until a `shutdown` request arrives, then join every
+    /// thread.  Runs the coalescer on the calling thread — the PJRT
+    /// artifacts are not Sync, so they stay with the coordinator (the same
+    /// design as the cluster campaign).
+    pub fn run(&self, arts: Option<&Artifacts>) -> Result<()> {
+        self.shared.coalescer.run(arts);
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Largest accepted request line; a predict request is <200 bytes, so
+/// 64 KiB is generous while bounding per-connection memory.
+const MAX_REQUEST_BYTES: usize = 64 * 1024;
+
+fn handle_conn(
+    stream: TcpStream,
+    shared: &Shared,
+    jobs: &Sender<PredictJob>,
+) -> std::io::Result<()> {
+    // Periodic read timeouts let idle keep-alive connections notice
+    // shutdown instead of pinning their worker forever.
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        // Byte-budgeted read: each call may append at most what is left
+        // of the request bound, so a client streaming newline-free bytes
+        // can never grow the buffer past MAX_REQUEST_BYTES + 1.
+        if line.len() > MAX_REQUEST_BYTES {
+            let err = protocol::error_json("request line too long");
+            writer.write_all(err.to_string_compact().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            break;
+        }
+        let budget = (MAX_REQUEST_BYTES + 1 - line.len()) as u64;
+        match std::io::Read::by_ref(&mut reader).take(budget).read_line(&mut line) {
+            Ok(0) => break, // EOF (budget is always ≥ 1 here)
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    // Mid-line: budget cap hit or sender paused — keep
+                    // accumulating (the bound above catches overruns).
+                    continue;
+                }
+                let request = line.trim().to_string();
+                line.clear();
+                if request.is_empty() {
+                    continue;
+                }
+                let (response, done) = respond(&request, shared, jobs);
+                writer.write_all(response.to_string_compact().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                if done {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Partial bytes (if any) stay accumulated in `line`.
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+/// Build the response for one request line; the bool asks the connection
+/// loop to close afterwards.
+fn respond(request: &str, shared: &Shared, jobs: &Sender<PredictJob>) -> (Json, bool) {
+    match protocol::parse_request(request) {
+        Err(e) => (protocol::error_json(&e), false),
+        Ok(Request::Status) => (status_json(shared), false),
+        Ok(Request::Shutdown) => {
+            // The acceptor polls this flag (non-blocking accept loop) and
+            // idle connections see it via their read timeouts.
+            shared.shutdown.store(true, Ordering::SeqCst);
+            (protocol::ack_json("shutting down"), true)
+        }
+        Ok(Request::Predict {
+            arch,
+            workload,
+            mode,
+            duration_s,
+        }) => {
+            let secs = duration_s.unwrap_or(shared.default_duration_s);
+            match serve_predict(shared, jobs, &arch, &workload, mode, secs) {
+                Ok(pred) => {
+                    shared.served.fetch_add(1, Ordering::SeqCst);
+                    (protocol::prediction_json(&pred), false)
+                }
+                Err(e) => (protocol::error_json(&e), false),
+            }
+        }
+    }
+}
+
+fn serve_predict(
+    shared: &Shared,
+    jobs: &Sender<PredictJob>,
+    arch: &str,
+    workload: &str,
+    mode: Mode,
+    duration_s: f64,
+) -> Result<Prediction, String> {
+    let cfg = ArchConfig::by_name(arch)
+        .ok_or_else(|| format!("unknown arch '{arch}' (see `wattchmen list`)"))?;
+    let table = shared.registry.get(arch).map_err(|e| format!("{e:#}"))?;
+    let profiles = shared
+        .profiles
+        .get(&cfg, workload, duration_s)
+        .map_err(|e| format!("{e:#}"))?;
+    submit_and_wait(jobs, table, workload.to_string(), profiles, mode)
+}
+
+fn status_json(shared: &Shared) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "served",
+            Json::Num(shared.served.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "batched_predict_calls",
+            Json::Num(shared.coalescer.batch_calls() as f64),
+        ),
+        (
+            "table_reloads",
+            Json::Num(shared.registry.reloads() as f64),
+        ),
+        (
+            "profile_cache_hits",
+            Json::Num(shared.profiles.hits() as f64),
+        ),
+        (
+            "profile_cache_misses",
+            Json::Num(shared.profiles.misses() as f64),
+        ),
+    ])
+}

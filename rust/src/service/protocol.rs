@@ -1,0 +1,235 @@
+//! Wire protocol for `wattchmen serve`: newline-delimited JSON over TCP.
+//!
+//! One request per line, one response per line; a connection may pipeline
+//! any number of requests before closing.  Three commands:
+//!
+//!   {"cmd":"predict","arch":"cloudlab-v100","workload":"hotspot",
+//!    "mode":"pred","duration_s":90}       → prediction (or error)
+//!   {"cmd":"status"}                      → counters (served, batches, …)
+//!   {"cmd":"shutdown"}                    → ack, then the server drains
+//!
+//! The `text` field of a predict response is byte-identical to the line
+//! `wattchmen predict` prints for the same workload — both render through
+//! [`render_line`], and both compute through `model::predict_many`.
+
+use crate::model::{Mode, Prediction};
+use crate::util::json::{parse, Json};
+
+/// Arch assumed when a predict request omits `arch`.
+pub const DEFAULT_ARCH: &str = "cloudlab-v100";
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Predict {
+        arch: String,
+        workload: String,
+        mode: Mode,
+        /// Workload scaling target; `None` means the server default (the
+        /// CLI's `WORKLOAD_SECS` measurement protocol).
+        duration_s: Option<f64>,
+    },
+    Status,
+    Shutdown,
+}
+
+pub fn parse_mode(s: &str) -> Result<Mode, String> {
+    match s {
+        "direct" => Ok(Mode::Direct),
+        "pred" => Ok(Mode::Pred),
+        m => Err(format!("unknown mode '{m}' (direct|pred)")),
+    }
+}
+
+pub fn mode_tag(mode: Mode) -> &'static str {
+    match mode {
+        Mode::Direct => "direct",
+        Mode::Pred => "pred",
+    }
+}
+
+/// Parse one request line.  Errors are plain strings so the server can
+/// ship them back verbatim in an error response.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = parse(line).map_err(|e| format!("bad JSON request: {e}"))?;
+    let cmd = j
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "request needs a string 'cmd' field (predict|status|shutdown)".to_string())?;
+    match cmd {
+        "predict" => {
+            let arch = j
+                .get("arch")
+                .and_then(Json::as_str)
+                .unwrap_or(DEFAULT_ARCH)
+                .to_string();
+            let workload = j
+                .get("workload")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "predict needs a 'workload' field (see `wattchmen list`)".to_string())?
+                .to_string();
+            let mode = parse_mode(j.get("mode").and_then(Json::as_str).unwrap_or("pred"))?;
+            let duration_s = j.get("duration_s").and_then(Json::as_f64);
+            Ok(Request::Predict {
+                arch,
+                workload,
+                mode,
+                duration_s,
+            })
+        }
+        "status" => Ok(Request::Status),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!("unknown cmd '{other}' (predict|status|shutdown)")),
+    }
+}
+
+/// Client-side helper: build a predict request line's JSON.
+pub fn predict_request(arch: &str, workload: &str, mode: Mode) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("predict".into())),
+        ("arch", Json::Str(arch.into())),
+        ("workload", Json::Str(workload.into())),
+        ("mode", Json::Str(mode_tag(mode).into())),
+    ])
+}
+
+/// The one-line summary `wattchmen predict` prints per workload.  Shared
+/// between the CLI and the served `text` field so the two are
+/// byte-identical by construction.
+pub fn render_line(p: &Prediction) -> String {
+    format!(
+        "{:<18} total {:>9.1} J  (base {:>8.1} J + dynamic {:>8.1} J)  coverage {:>5.1}%  runtime {:>6.1} s",
+        p.workload,
+        p.energy_j,
+        p.base_j,
+        p.dynamic_j,
+        100.0 * p.coverage,
+        p.duration_s
+    )
+}
+
+pub fn prediction_json(p: &Prediction) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("workload", Json::Str(p.workload.clone())),
+        ("energy_j", Json::Num(p.energy_j)),
+        ("base_j", Json::Num(p.base_j)),
+        ("dynamic_j", Json::Num(p.dynamic_j)),
+        ("coverage", Json::Num(p.coverage)),
+        ("duration_s", Json::Num(p.duration_s)),
+        (
+            "by_bucket",
+            Json::Obj(
+                p.by_bucket
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            ),
+        ),
+        ("text", Json::Str(render_line(p))),
+    ])
+}
+
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+    ])
+}
+
+pub fn ack_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("ack", Json::Str(msg.into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn predict_request_roundtrips() {
+        let line = predict_request("summit-v100", "hotspot", Mode::Direct).to_string_compact();
+        match parse_request(&line).unwrap() {
+            Request::Predict {
+                arch,
+                workload,
+                mode,
+                duration_s,
+            } => {
+                assert_eq!(arch, "summit-v100");
+                assert_eq!(workload, "hotspot");
+                assert_eq!(mode, Mode::Direct);
+                assert_eq!(duration_s, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_and_explicit_duration() {
+        let r = parse_request(r#"{"cmd":"predict","workload":"hotspot","duration_s":45}"#).unwrap();
+        match r {
+            Request::Predict {
+                arch,
+                mode,
+                duration_s,
+                ..
+            } => {
+                assert_eq!(arch, DEFAULT_ARCH);
+                assert_eq!(mode, Mode::Pred);
+                assert_eq!(duration_s, Some(45.0));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_descriptive_errors() {
+        assert!(parse_request("not json").unwrap_err().contains("bad JSON"));
+        assert!(parse_request(r#"{"cmd":"predict"}"#)
+            .unwrap_err()
+            .contains("workload"));
+        assert!(parse_request(r#"{"cmd":"frobnicate"}"#)
+            .unwrap_err()
+            .contains("unknown cmd"));
+        assert!(parse_request(r#"{"cmd":"predict","workload":"x","mode":"best"}"#)
+            .unwrap_err()
+            .contains("unknown mode"));
+    }
+
+    #[test]
+    fn status_and_shutdown_parse() {
+        assert!(matches!(
+            parse_request(r#"{"cmd":"status"}"#).unwrap(),
+            Request::Status
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn rendered_line_matches_cli_format() {
+        let p = Prediction {
+            workload: "hotspot".into(),
+            energy_j: 12345.67,
+            base_j: 7380.0,
+            dynamic_j: 4965.67,
+            coverage: 0.987,
+            duration_s: 90.0,
+            by_bucket: BTreeMap::new(),
+            by_key: Vec::new(),
+        };
+        let line = render_line(&p);
+        assert!(line.starts_with("hotspot "), "{line}");
+        assert!(line.contains("total   12345.7 J"), "{line}");
+        assert!(line.contains("coverage  98.7%"), "{line}");
+        let j = prediction_json(&p);
+        assert_eq!(j.get("text").unwrap().as_str(), Some(line.as_str()));
+        assert_eq!(j.get("energy_j").unwrap().as_f64(), Some(12345.67));
+    }
+}

@@ -1,0 +1,157 @@
+//! Per-arch energy-table loading with mtime-based hot reload.
+//!
+//! The serve coordinator keeps one `EnergyTable` per arch in memory and
+//! rechecks the backing file's `(mtime, len)` on every lookup: a
+//! re-trained table dropped in place is picked up on the next request
+//! without restarting the service.  Tables are shared as `Arc`s — the
+//! coalescer groups requests by table identity, so all requests answered
+//! from one cached instance batch into one predict call.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use anyhow::{Context, Result};
+
+use crate::model::EnergyTable;
+
+struct CacheEntry {
+    table: Arc<EnergyTable>,
+    mtime: SystemTime,
+    len: u64,
+}
+
+pub struct TableRegistry {
+    /// Directory `<arch>.table.json` files are resolved under.
+    dir: PathBuf,
+    /// Explicit arch → file overrides (the CLI's `--table FILE`).
+    overrides: Mutex<BTreeMap<String, PathBuf>>,
+    cache: Mutex<BTreeMap<String, CacheEntry>>,
+    reloads: AtomicUsize,
+}
+
+impl TableRegistry {
+    pub fn new(dir: PathBuf) -> TableRegistry {
+        TableRegistry {
+            dir,
+            overrides: Mutex::new(BTreeMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
+            reloads: AtomicUsize::new(0),
+        }
+    }
+
+    /// Map an arch to an explicit table file instead of
+    /// `<dir>/<arch>.table.json`.
+    pub fn register(&self, arch: &str, path: PathBuf) {
+        self.overrides.lock().unwrap().insert(arch.to_string(), path);
+    }
+
+    pub fn path_for(&self, arch: &str) -> PathBuf {
+        if let Some(p) = self.overrides.lock().unwrap().get(arch) {
+            return p.clone();
+        }
+        self.dir.join(format!("{arch}.table.json"))
+    }
+
+    /// Number of loads from disk so far (first loads + hot reloads).
+    pub fn reloads(&self) -> usize {
+        self.reloads.load(Ordering::SeqCst)
+    }
+
+    /// Fetch the table for an arch, reloading if the file changed since it
+    /// was cached.  `(mtime, len)` is the change fingerprint: length
+    /// catches rewrites on filesystems with coarse timestamps.
+    pub fn get(&self, arch: &str) -> Result<Arc<EnergyTable>> {
+        let path = self.path_for(arch);
+        let meta = std::fs::metadata(&path).with_context(|| {
+            format!(
+                "no energy table for '{arch}' at {} (train one with `wattchmen train`)",
+                path.display()
+            )
+        })?;
+        let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        let len = meta.len();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(arch) {
+                if e.mtime == mtime && e.len == len {
+                    return Ok(e.table.clone());
+                }
+            }
+        }
+        let table = Arc::new(
+            EnergyTable::load(&path)
+                .with_context(|| format!("loading energy table for '{arch}'"))?,
+        );
+        self.reloads.fetch_add(1, Ordering::SeqCst);
+        self.cache.lock().unwrap().insert(
+            arch.to_string(),
+            CacheEntry {
+                table: table.clone(),
+                mtime,
+                len,
+            },
+        );
+        Ok(table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(e_fadd: f64, extra: usize) -> EnergyTable {
+        EnergyTable {
+            arch: "cloudlab-v100".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: std::iter::once(("FADD".to_string(), e_fadd))
+                .chain((0..extra).map(|i| (format!("OP{i}"), 1.0)))
+                .collect(),
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("wattchmen_registry_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn caches_until_the_file_changes() {
+        let dir = temp_dir("reload");
+        let path = dir.join("cloudlab-v100.table.json");
+        table(1.0, 0).save(&path).unwrap();
+        let reg = TableRegistry::new(dir);
+        let t1 = reg.get("cloudlab-v100").unwrap();
+        let t2 = reg.get("cloudlab-v100").unwrap();
+        assert!(Arc::ptr_eq(&t1, &t2), "unchanged file must not reload");
+        assert_eq!(reg.reloads(), 1);
+        // Rewrite with different content (different length beats coarse
+        // mtime granularity deterministically).
+        table(2.25, 3).save(&path).unwrap();
+        let t3 = reg.get("cloudlab-v100").unwrap();
+        assert_eq!(t3.entries["FADD"], 2.25);
+        assert_eq!(reg.reloads(), 2);
+    }
+
+    #[test]
+    fn missing_table_is_a_descriptive_error() {
+        let reg = TableRegistry::new(temp_dir("missing"));
+        let err = format!("{:#}", reg.get("cloudlab-v100").unwrap_err());
+        assert!(err.contains("wattchmen train"), "{err}");
+    }
+
+    #[test]
+    fn override_wins_over_directory_layout() {
+        let dir = temp_dir("override");
+        let custom = dir.join("my-table.json");
+        table(3.5, 0).save(&custom).unwrap();
+        let reg = TableRegistry::new(dir);
+        reg.register("summit-v100", custom);
+        assert_eq!(reg.get("summit-v100").unwrap().entries["FADD"], 3.5);
+    }
+}

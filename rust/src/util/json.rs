@@ -62,6 +62,14 @@ impl Json {
         out
     }
 
+    /// Single-line form (no interior newlines) — required by the
+    /// newline-delimited `serve` wire protocol.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |n: usize| "  ".repeat(n);
         match self {
@@ -342,6 +350,18 @@ mod tests {
         ]);
         let text = v.to_string_pretty();
         assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_form_is_single_line_and_roundtrips() {
+        let v = Json::obj(vec![
+            ("cmd", Json::Str("predict".into())),
+            ("workloads", Json::Arr(vec![Json::Str("hotspot".into())])),
+            ("duration_s", Json::Num(90.0)),
+        ]);
+        let line = v.to_string_compact();
+        assert!(!line.contains('\n'));
+        assert_eq!(parse(&line).unwrap(), v);
     }
 
     #[test]

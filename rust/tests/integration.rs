@@ -135,7 +135,7 @@ fn air_and_water_tables_are_strongly_linear() {
     assert!(r2 > 0.95, "R² {r2} (paper: 0.988)");
 
     // Transfer from a 10% subset reconstructs the water table closely.
-    let keys = random_subset(&water, 0.10, 33);
+    let keys = random_subset(&water, 0.10, 33).unwrap();
     let subset: BTreeMap<String, f64> = keys
         .iter()
         .map(|k| (k.clone(), water.entries[k]))

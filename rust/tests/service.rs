@@ -1,0 +1,312 @@
+//! Service-layer end-to-end tests: CLI/served byte parity across the V100
+//! evaluation suite, 64-request burst coalescing, and TableRegistry hot
+//! reload — all over real TCP connections against an in-process server.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use wattchmen::gpusim::config::ArchConfig;
+use wattchmen::gpusim::profiler::profile_app;
+use wattchmen::isa::Gen;
+use wattchmen::model::{predict_suite, EnergyTable, Mode};
+use wattchmen::report::context::WORKLOAD_SECS;
+use wattchmen::report::scaled_workload;
+use wattchmen::service::{protocol, PredictServer, ServeConfig};
+use wattchmen::util::json::{parse, Json};
+use wattchmen::workloads;
+
+fn test_table(scale: f64) -> EnergyTable {
+    EnergyTable {
+        arch: "cloudlab-v100".into(),
+        const_power_w: 38.0,
+        static_power_w: 44.0,
+        entries: [
+            ("FADD", 1.0),
+            ("FFMA", 1.2),
+            ("FMUL", 1.1),
+            ("DFMA", 3.0),
+            ("HADD2", 0.7),
+            ("MOV", 0.4),
+            ("IADD3", 0.6),
+            ("IMAD", 0.9),
+            ("ISETP.GE.AND", 0.5),
+            ("LDG.E.32@L1", 2.5),
+            ("LDG.E.32@L2", 8.0),
+            ("LDG.E.32@DRAM", 40.0),
+            ("LDG.E.64@L1", 4.0),
+            ("STG.E.32@L2", 7.0),
+            ("LDS.32", 1.8),
+            ("BAR.SYNC", 1.5),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v * scale))
+        .collect(),
+    }
+}
+
+fn temp_tables_dir(tag: &str, table: &EnergyTable) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wattchmen_service_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    table.save(&dir.join("cloudlab-v100.table.json")).unwrap();
+    dir
+}
+
+fn start_server(
+    tables_dir: PathBuf,
+    workers: usize,
+    linger: Duration,
+) -> (Arc<PredictServer>, thread::JoinHandle<()>) {
+    let server = Arc::new(
+        PredictServer::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            linger,
+            tables_dir,
+            default_duration_s: WORKLOAD_SECS,
+        })
+        .unwrap(),
+    );
+    let runner = {
+        let server = server.clone();
+        thread::spawn(move || server.run(None).unwrap())
+    };
+    (server, runner)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn request(&mut self, req: &Json) -> Json {
+        self.writer
+            .write_all(req.to_string_compact().as_bytes())
+            .unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        parse(line.trim()).unwrap()
+    }
+
+    fn shutdown(mut self) {
+        let ack = self.request(&Json::obj(vec![("cmd", Json::Str("shutdown".into()))]));
+        assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true));
+    }
+}
+
+/// What `wattchmen predict --workload <name>` prints, computed through the
+/// same shared pipeline the CLI uses.
+fn cli_lines(table: &EnergyTable, cfg: &ArchConfig) -> BTreeMap<String, String> {
+    workloads::evaluation_suite(cfg.gen)
+        .iter()
+        .map(|w| {
+            let scaled = scaled_workload(cfg, w, WORKLOAD_SECS);
+            let apps = vec![(w.name.clone(), profile_app(cfg, &scaled.kernels))];
+            let pred = predict_suite(table, &apps, Mode::Pred, None)
+                .unwrap()
+                .into_iter()
+                .next()
+                .unwrap();
+            (w.name.clone(), protocol::render_line(&pred))
+        })
+        .collect()
+}
+
+#[test]
+fn served_predictions_match_cli_bytes_for_every_v100_workload() {
+    let table = test_table(1.0);
+    let cfg = ArchConfig::cloudlab_v100();
+    let expected = cli_lines(&table, &cfg);
+
+    let dir = temp_tables_dir("parity", &table);
+    let (server, runner) = start_server(dir, 4, Duration::from_millis(1));
+    let mut client = Client::connect(server.local_addr());
+    for w in workloads::evaluation_suite(Gen::Volta) {
+        let resp = client.request(&protocol::predict_request(
+            "cloudlab-v100",
+            &w.name,
+            Mode::Pred,
+        ));
+        assert_eq!(
+            resp.get("ok").unwrap(),
+            &Json::Bool(true),
+            "{}: {resp:?}",
+            w.name
+        );
+        let text = resp.get("text").unwrap().as_str().unwrap();
+        assert_eq!(text, expected[&w.name], "served vs CLI line for {}", w.name);
+    }
+    assert_eq!(server.served(), 16);
+    client.shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn burst_of_64_requests_coalesces_into_at_most_two_batched_calls() {
+    let table = test_table(1.0);
+    let cfg = ArchConfig::cloudlab_v100();
+    let expected = Arc::new(cli_lines(&table, &cfg));
+    let suite: Vec<String> = workloads::evaluation_suite(Gen::Volta)
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+
+    let dir = temp_tables_dir("burst", &table);
+    let (server, runner) = start_server(dir, 64, Duration::from_millis(1000));
+    let addr = server.local_addr();
+
+    // Warm the table cache so every burst request hits the same Arc'd
+    // table instance (one group ⇒ one batched call).
+    Client::connect(addr).request(&protocol::predict_request(
+        "cloudlab-v100",
+        &suite[0],
+        Mode::Pred,
+    ));
+    let warmup_batches = server.batch_calls();
+
+    let barrier = Arc::new(Barrier::new(64));
+    let mut clients = Vec::new();
+    for i in 0..64 {
+        let workload = suite[i % suite.len()].clone();
+        let expected = expected.clone();
+        let barrier = barrier.clone();
+        clients.push(thread::spawn(move || {
+            barrier.wait();
+            let mut c = Client::connect(addr);
+            let resp = c.request(&protocol::predict_request(
+                "cloudlab-v100",
+                &workload,
+                Mode::Pred,
+            ));
+            assert_eq!(resp.get("ok").unwrap(), &Json::Bool(true), "{resp:?}");
+            assert_eq!(
+                resp.get("text").unwrap().as_str().unwrap(),
+                expected[&workload],
+                "burst response for {workload} diverged from the CLI"
+            );
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let burst_batches = server.batch_calls() - warmup_batches;
+    assert!(
+        burst_batches <= 2,
+        "64-request burst took {burst_batches} batched predict calls (want ≤ 2)"
+    );
+    assert_eq!(server.served(), 65);
+
+    Client::connect(addr).shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn table_registry_hot_reload_is_visible_to_served_requests() {
+    let v1 = test_table(1.0);
+    let cfg = ArchConfig::cloudlab_v100();
+    let dir = temp_tables_dir("reload", &v1);
+    let path = dir.join("cloudlab-v100.table.json");
+
+    let (server, runner) = start_server(dir, 2, Duration::from_millis(1));
+    let mut client = Client::connect(server.local_addr());
+
+    let before = client.request(&protocol::predict_request(
+        "cloudlab-v100",
+        "hotspot",
+        Mode::Pred,
+    ));
+    assert_eq!(
+        before.get("text").unwrap().as_str().unwrap(),
+        cli_lines(&v1, &cfg)["hotspot"]
+    );
+
+    // Retrain-in-place: doubled per-instruction energies (and a longer
+    // file, so the change fingerprint moves on any filesystem).
+    let mut v2 = test_table(2.0);
+    v2.entries.insert("NEWLY.MEASURED.OP".into(), 1.0);
+    v2.save(&path).unwrap();
+
+    let after = client.request(&protocol::predict_request(
+        "cloudlab-v100",
+        "hotspot",
+        Mode::Pred,
+    ));
+    assert_eq!(
+        after.get("text").unwrap().as_str().unwrap(),
+        cli_lines(&v2, &cfg)["hotspot"],
+        "served prediction must reflect the rewritten table"
+    );
+    assert!(
+        after.get("energy_j").unwrap().as_f64().unwrap()
+            > before.get("energy_j").unwrap().as_f64().unwrap(),
+        "doubled energies must raise the prediction"
+    );
+    client.shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn bad_requests_get_error_responses_not_hangups() {
+    let table = test_table(1.0);
+    let dir = temp_tables_dir("errors", &table);
+    let (server, runner) = start_server(dir, 2, Duration::from_millis(1));
+    let mut client = Client::connect(server.local_addr());
+
+    let unknown_workload = client.request(&protocol::predict_request(
+        "cloudlab-v100",
+        "nosuch",
+        Mode::Pred,
+    ));
+    assert_eq!(unknown_workload.get("ok").unwrap(), &Json::Bool(false));
+    assert!(unknown_workload
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("unknown workload"));
+
+    let unknown_arch =
+        client.request(&protocol::predict_request("not-an-arch", "hotspot", Mode::Pred));
+    assert!(unknown_arch
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("unknown arch"));
+
+    // summit-v100 is a valid arch with no table in the registry dir.
+    let missing_table =
+        client.request(&protocol::predict_request("summit-v100", "hotspot", Mode::Pred));
+    assert!(missing_table
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("wattchmen train"));
+
+    let garbage = client.request(&Json::Str("predict hotspot please".into()));
+    assert_eq!(garbage.get("ok").unwrap(), &Json::Bool(false));
+
+    // The connection survived all four errors; status still answers.
+    let status = client.request(&Json::obj(vec![("cmd", Json::Str("status".into()))]));
+    assert_eq!(status.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(status.get("served").unwrap().as_f64(), Some(0.0));
+
+    client.shutdown();
+    runner.join().unwrap();
+}
