@@ -94,6 +94,19 @@ pub fn interned_count() -> usize {
     state().lock().unwrap().keys.len()
 }
 
+/// Resolve many ids in one lock acquisition (bulk serialization boundary).
+pub fn resolve_keys(ids: &[KeyId]) -> Vec<String> {
+    let st = state().lock().unwrap();
+    ids.iter()
+        .map(|id| {
+            st.keys
+                .get(id.index())
+                .cloned()
+                .unwrap_or_else(|| format!("<key#{}>", id.0))
+        })
+        .collect()
+}
+
 /// Canonicalize a raw profiler opcode into its grouped column id(s),
 /// memoized on the raw string.
 pub fn raw_group(raw: &str) -> RawGroup {
@@ -158,6 +171,13 @@ impl KeyCounts {
     }
 
     /// Iterate nonzero (id, count) pairs in id order.
+    ///
+    /// NOTE: id order is interner *first-touch* order, which depends on
+    /// what other threads interned first — it is NOT stable across runs
+    /// of a concurrent pipeline.  Floating-point reductions that must be
+    /// reproducible (the report path) iterate [`sorted_pairs`] instead.
+    ///
+    /// [`sorted_pairs`]: KeyCounts::sorted_pairs
     pub fn iter(&self) -> impl Iterator<Item = (KeyId, f64)> + '_ {
         self.vals
             .iter()
@@ -165,6 +185,25 @@ impl KeyCounts {
             .filter_map(|(i, &v)| if v != 0.0 { Some((KeyId(i as u32), v)) } else { None })
     }
 
+    /// Nonzero (key, id, count) triples in canonical key-string order.
+    /// The canonical order is independent of interning history, so sums
+    /// accumulated over it are bit-identical whether the pipeline ran
+    /// sequentially or interleaved with other threads.
+    pub fn sorted_pairs(&self) -> Vec<(String, KeyId, f64)> {
+        let pairs: Vec<(KeyId, f64)> = self.iter().collect();
+        let ids: Vec<KeyId> = pairs.iter().map(|&(id, _)| id).collect();
+        let keys = resolve_keys(&ids);
+        let mut out: Vec<(String, KeyId, f64)> = keys
+            .into_iter()
+            .zip(pairs)
+            .map(|(k, (id, v))| (k, id, v))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Sum of all counts in id order.  Order-sensitive in the last ulp —
+    /// reproducible paths sum over [`sorted_pairs`](Self::sorted_pairs).
     pub fn total(&self) -> f64 {
         self.vals.iter().sum()
     }
@@ -253,5 +292,27 @@ mod tests {
         c.scale(2.0);
         assert_eq!(c.get(a), 5.0);
         assert_eq!(c.iter().count(), 2);
+    }
+
+    #[test]
+    fn sorted_pairs_are_in_key_order_regardless_of_interning_order() {
+        // Intern deliberately out of lexical order.
+        let z = intern("TEST.SORTED.Z");
+        let a = intern("TEST.SORTED.A");
+        let m = intern("TEST.SORTED.M");
+        let mut c = KeyCounts::new();
+        c.add(z, 1.0);
+        c.add(a, 2.0);
+        c.add(m, 3.0);
+        let pairs = c.sorted_pairs();
+        let keys: Vec<&str> = pairs.iter().map(|(k, _, _)| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec!["TEST.SORTED.A", "TEST.SORTED.M", "TEST.SORTED.Z"]
+        );
+        let vals: Vec<f64> = pairs.iter().map(|(_, _, v)| *v).collect();
+        assert_eq!(vals, vec![2.0, 3.0, 1.0]);
+        assert_eq!(pairs[0].1, a);
+        assert_eq!(resolve_keys(&[z, a]), vec!["TEST.SORTED.Z", "TEST.SORTED.A"]);
     }
 }

@@ -9,16 +9,17 @@
 //!   version
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use wattchmen::cluster::ClusterCampaign;
 use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::gpusim::profiler::{profile_app, KernelProfile};
 use wattchmen::isa::Gen;
 use wattchmen::model::{self, EnergyTable};
-use wattchmen::report::{self, EvalCtx};
+use wattchmen::report::{self, EvalCache};
 use wattchmen::runtime::Artifacts;
 use wattchmen::service::{protocol, PredictServer, ServeConfig};
 use wattchmen::util::cli::Args;
@@ -48,28 +49,61 @@ fn cmd_report(args: &Args) -> Result<()> {
     let fast = args.flag("fast");
     let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
     let out_dir = PathBuf::from(args.get_or("out", "reports"));
-    let mut ctx = EvalCtx::new(fast, seed, arts.as_ref());
 
     let mut names: Vec<String> = args.positional.clone();
     if names.is_empty() || names.iter().any(|n| n == "all") {
         names = report::all_names().iter().map(|s| s.to_string()).collect();
     }
-    for name in &names {
-        let t0 = Instant::now();
-        let result = report::run(name, &mut ctx)
-            .with_context(|| format!("experiment {name}"))?;
-        println!("{}", result.text);
-        for (metric, got, paper) in &result.metrics {
-            if paper.is_nan() {
-                println!("  [{name}] {metric}: {got:.3}");
-            } else {
-                println!("  [{name}] {metric}: {got:.3} (paper: {paper})");
+    // --jobs N figure drivers in parallel; 0 (default) sizes to the host.
+    let jobs = match args.get_usize("jobs", 0).map_err(anyhow::Error::msg)? {
+        0 => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4),
+        j => j,
+    };
+
+    let cache = Arc::new(EvalCache::new());
+    let t_total = Instant::now();
+    let mut save_err: Option<anyhow::Error> = None;
+    let results = report::run_all(
+        &names,
+        fast,
+        seed,
+        jobs,
+        arts.as_ref(),
+        &cache,
+        |name, result, elapsed| {
+            let Ok(result) = result else { return }; // errors surface below
+            println!("{}", result.text);
+            for (metric, got, paper) in &result.metrics {
+                if paper.is_nan() {
+                    println!("  [{name}] {metric}: {got:.3}");
+                } else {
+                    println!("  [{name}] {metric}: {got:.3} (paper: {paper})");
+                }
             }
-        }
-        println!("  [{name}] completed in {:.1}s\n", t0.elapsed().as_secs_f64());
-        result.save(&out_dir)?;
+            println!("  [{name}] completed in {:.1}s\n", elapsed.as_secs_f64());
+            if let Err(e) = result.save(&out_dir) {
+                save_err.get_or_insert(e);
+            }
+        },
+    );
+    if let Some(e) = save_err {
+        return Err(e);
     }
-    println!("reports written to {}/", out_dir.display());
+    for (name, result) in &results {
+        if let Err(e) = result {
+            bail!("experiment {name}: {e:#}");
+        }
+    }
+    println!(
+        "reports written to {}/ ({} figures, {} ground-truth measurements, {} trained archs, {:.1}s total)",
+        out_dir.display(),
+        results.len(),
+        cache.measure_invocations(),
+        cache.trained_archs(),
+        t_total.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
@@ -78,8 +112,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = arch_from(args)?;
     let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
     let gpus = args.get_usize("gpus", 4).map_err(anyhow::Error::msg)?;
-    let ctx = EvalCtx::new(args.flag("fast"), seed, arts.as_ref());
-    let tc = ctx.train_cfg();
+    let tc = report::context::train_cfg(args.flag("fast"));
     let t0 = Instant::now();
     let result = ClusterCampaign::new(cfg.clone(), gpus, seed).train(&tc, arts.as_ref())?;
     println!(
@@ -214,7 +247,7 @@ fn main() {
             eprintln!(
                 "usage: wattchmen <report|train|predict|serve|list|version> [options]\n\
                  \n\
-                 report <fig1..fig14|all> [--fast] [--seed N] [--out DIR] [--no-artifacts]\n\
+                 report <fig1..fig14|all> [--fast] [--seed N] [--jobs N] [--out DIR] [--no-artifacts]\n\
                  train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
                  predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred] [--breakdown]\n\
                  serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N] [--linger-ms MS]\n\

@@ -174,7 +174,7 @@ impl ResolveCache {
         ResolveCache { slots: Vec::new() }
     }
 
-    fn get(&mut self, table: &EnergyTable, id: KeyId, mode: Mode) -> (Option<f64>, Source) {
+    fn get(&mut self, table: &EnergyTable, id: KeyId, key: &str, mode: Mode) -> (Option<f64>, Source) {
         let i = id.index();
         if i >= self.slots.len() {
             self.slots.resize(i + 1, None);
@@ -182,7 +182,7 @@ impl ResolveCache {
         if let Some(v) = self.slots[i] {
             return v;
         }
-        let v = resolve_energy(table, &intern::resolve_key(id), mode);
+        let v = resolve_energy(table, key, mode);
         self.slots[i] = Some(v);
         v
     }
@@ -195,6 +195,19 @@ fn merged_counts(profiles: &[KernelProfile]) -> KeyCounts {
         accumulate_grouped_ids(p, &mut out);
     }
     out
+}
+
+/// An app's merged counts as (key, id, count) triples in canonical key
+/// order — the iteration/summation order of the whole prediction phase.
+/// Canonical order (not interner id order) keeps every floating-point
+/// reduction bit-identical between sequential and concurrent pipelines:
+/// id assignment is first-touch and therefore depends on what other
+/// threads interned first.  Cost note: this path already materialized
+/// one string per key for `by_key` attribution; the bulk resolve inside
+/// `sorted_pairs` is one interner lock per app instead of one per key,
+/// plus an O(k log k) sort over the ~10²-key histogram.
+fn merged_pairs(profiles: &[KernelProfile]) -> Vec<(String, KeyId, f64)> {
+    merged_counts(profiles).sorted_pairs()
 }
 
 /// Predict one workload from its kernel profiles (paper base model).
@@ -215,19 +228,19 @@ pub fn predict_app_with(
     mode: Mode,
     static_model: StaticModel,
 ) -> Prediction {
-    let counts = merged_counts(profiles);
+    let pairs = merged_pairs(profiles);
     let mut cache = ResolveCache::new();
-    predict_from_counts(table, workload, profiles, &counts, mode, static_model, &mut cache)
+    predict_from_counts(table, workload, profiles, &pairs, mode, static_model, &mut cache)
 }
 
-/// Core prediction over precomputed merged counts (shared by the per-app
-/// entry points and the batched suite path, which reuses both the counts
-/// and the resolve cache across workloads).
+/// Core prediction over precomputed merged counts in canonical key order
+/// (shared by the per-app entry points and the batched suite path, which
+/// reuses both the counts and the resolve cache across workloads).
 fn predict_from_counts(
     table: &EnergyTable,
     workload: &str,
     profiles: &[KernelProfile],
-    counts: &KeyCounts,
+    pairs: &[(String, KeyId, f64)],
     mode: Mode,
     static_model: StaticModel,
     cache: &mut ResolveCache,
@@ -246,24 +259,24 @@ fn predict_from_counts(
     };
     let mut dynamic_j = 0.0;
     let mut attributed_instr = 0.0;
-    let total_instr = counts.total();
+    let mut total_instr = 0.0;
     let mut by_bucket: BTreeMap<String, f64> = BTreeMap::new();
     let mut by_key: Vec<(String, f64, Source)> = Vec::new();
 
-    for (id, count) in counts.iter() {
-        let (energy, source) = cache.get(table, id, mode);
+    for (key, id, count) in pairs {
+        total_instr += count;
+        let (energy, source) = cache.get(table, *id, key, mode);
         match energy {
             Some(e) => {
-                let key = intern::resolve_key(id);
                 let joules = count * e * 1e-9;
                 dynamic_j += joules;
                 attributed_instr += count;
                 *by_bucket
-                    .entry(bucket_of_key(&key).name().to_string())
+                    .entry(bucket_of_key(key).name().to_string())
                     .or_insert(0.0) += joules;
-                by_key.push((key, joules, source));
+                by_key.push((key.clone(), joules, source));
             }
-            None => by_key.push((intern::resolve_key(id), 0.0, Source::Unattributed)),
+            None => by_key.push((key.clone(), 0.0, Source::Unattributed)),
         }
     }
     by_key.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
@@ -317,20 +330,24 @@ pub fn predict_many(
 ) -> Result<Vec<Prediction>> {
     // Group each workload's profiles once; both the native predictions and
     // the artifact batch below reuse the merged counts and resolve cache.
+    // Canonical (string-sorted) per-app key order keeps every reduction —
+    // and the artifact's group layout — independent of interner history.
     let merged: Vec<KeyCounts> = apps
         .iter()
         .map(|(_, profiles)| merged_counts(profiles))
         .collect();
+    let pairs: Vec<Vec<(String, KeyId, f64)>> =
+        merged.iter().map(|c| c.sorted_pairs()).collect();
     let mut cache = ResolveCache::new();
     let mut preds: Vec<Prediction> = apps
         .iter()
-        .zip(&merged)
-        .map(|((name, profiles), counts)| {
+        .zip(&pairs)
+        .map(|((name, profiles), app_pairs)| {
             predict_from_counts(
                 table,
                 name,
                 profiles,
-                counts,
+                app_pairs,
                 mode,
                 StaticModel::FullGpu,
                 &mut cache,
@@ -339,18 +356,21 @@ pub fn predict_many(
         .collect();
 
     if let Some(arts) = arts {
-        // Union of attributed columns across workloads (first-seen order).
-        let mut keys: Vec<KeyId> = Vec::new();
+        // Union of attributed columns across workloads (first-seen order
+        // over the canonical per-app orders) with their resolved energies.
+        let mut keys: Vec<(KeyId, f64)> = Vec::new();
         let mut seen = vec![false; intern::interned_count()];
-        for counts in &merged {
-            for (id, _) in counts.iter() {
+        for app_pairs in &pairs {
+            for (key, id, _) in app_pairs {
                 if seen[id.index()] {
                     continue;
                 }
                 seen[id.index()] = true;
-                let (energy, source) = cache.get(table, id, mode);
-                if energy.is_some() && source != Source::Unattributed {
-                    keys.push(id);
+                let (energy, source) = cache.get(table, *id, key, mode);
+                if let Some(e) = energy {
+                    if source != Source::Unattributed {
+                        keys.push((*id, e));
+                    }
                 }
             }
         }
@@ -358,15 +378,12 @@ pub fn predict_many(
         // No upper bound: `Artifacts::predict` chunks over both the
         // workload and group dimensions.
         if groups > 0 {
-            let e: Vec<f64> = keys
-                .iter()
-                .map(|&id| cache.get(table, id, mode).0.unwrap_or(0.0))
-                .collect();
+            let e: Vec<f64> = keys.iter().map(|&(_, e)| e).collect();
             let mut c = vec![0.0f64; preds.len() * groups];
             let mut p0 = Vec::with_capacity(preds.len());
             let mut t = Vec::with_capacity(preds.len());
             for (w, counts) in merged.iter().enumerate() {
-                for (g, &id) in keys.iter().enumerate() {
+                for (g, &(id, _)) in keys.iter().enumerate() {
                     // giga-instructions × nJ = joules.
                     c[w * groups + g] = counts.get(id) * 1e-9;
                 }

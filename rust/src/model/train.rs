@@ -182,7 +182,10 @@ pub fn reduce_benches(
 /// Build the measurement row once the steady power is known.
 fn measurement_from(raw: &RawBenchData, steady: f64) -> BenchMeasurement {
     let mut fractions = grouped_level_ids(&raw.profile);
-    let total = fractions.total();
+    // Normalize by the canonical-order sum, not `total()` (id order):
+    // id order is interner first-touch order, so a concurrently-running
+    // pipeline would otherwise perturb the last ulp of every fraction.
+    let total: f64 = fractions.sorted_pairs().iter().map(|(_, _, v)| v).sum();
     fractions.scale(1.0 / total);
     BenchMeasurement {
         name: raw.name.clone(),

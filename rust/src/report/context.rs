@@ -1,21 +1,37 @@
 //! Shared evaluation pipeline for the experiment reproductions: train the
 //! models per environment, measure ground-truth workload energies, and
 //! build model-vs-measured comparisons.
+//!
+//! [`EvalCtx`] is a cheap, cloneable, `Send` handle over the shared
+//! [`EvalCache`]: every figure driver on the worker pool carries its own
+//! clone, and all expensive products (trained tables, baselines,
+//! profiles, ground-truth measurements) are computed once per key across
+//! the whole report.  Artifact-backed work (batched `predict_many`,
+//! training solves) is routed to the coordinator thread through the
+//! [`runtime::coalescer`](crate::runtime::coalescer) when a
+//! [`Predictor::Coordinated`] handle is installed — the PJRT artifacts
+//! are not Sync, so they never leave that thread.
 
 use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::baselines::{train_accelwattch, AccelWattchModel, GuserModel};
 use crate::cluster::ClusterCampaign;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::Device;
-use crate::gpusim::profiler::{profile_app, KernelProfile};
+use crate::gpusim::profiler::KernelProfile;
 use crate::gpusim::timing;
-use crate::model::{self, Mode, Prediction, TrainConfig, TrainResult};
+use crate::model::{self, EnergyTable, Mode, Prediction, TrainConfig, TrainResult};
+use crate::runtime::coalescer::{exec_on_coordinator, submit_suite_and_wait, Job};
 use crate::runtime::Artifacts;
 use crate::util::stats;
 use crate::workloads::Workload;
+
+use super::cache::EvalCache;
 
 /// How long each measured workload run should last (the paper alters the
 /// Rodinia benchmarks to repeat their target kernel so it dominates the
@@ -23,69 +39,191 @@ use crate::workloads::Workload;
 // (public so the CLI can reuse the measurement protocol)
 pub const WORKLOAD_SECS: f64 = 90.0;
 
-/// Evaluation context: lazily trains/caches per-environment state.
-pub struct EvalCtx<'a> {
-    pub fast: bool,
-    pub seed: u64,
-    pub arts: Option<&'a Artifacts>,
-    trained: BTreeMap<String, TrainResult>,
-    guser: BTreeMap<String, GuserModel>,
-    accelwattch: Option<AccelWattchModel>,
+/// Campaign configuration for a report run (`--fast` trims repetitions).
+pub fn train_cfg(fast: bool) -> TrainConfig {
+    if fast {
+        TrainConfig {
+            reps: 2,
+            bench_secs: 60.0,
+            cooldown_secs: 15.0,
+            idle_secs: 20.0,
+            cov_threshold: 0.02,
+        }
+    } else {
+        TrainConfig::default()
+    }
 }
 
-impl<'a> EvalCtx<'a> {
-    pub fn new(fast: bool, seed: u64, arts: Option<&'a Artifacts>) -> Self {
+/// How a figure driver reaches the (possibly artifact-backed) predictors.
+#[derive(Clone)]
+pub enum Predictor {
+    /// Everything runs natively on the calling thread; no artifacts.
+    Native,
+    /// Artifact-backed work is shipped to the coordinator thread driving
+    /// [`Coalescer::run`](crate::runtime::coalescer::Coalescer::run);
+    /// same-table predictions from concurrent figures coalesce there.
+    Coordinated(Sender<Job>),
+}
+
+/// Evaluation context: a per-worker handle over the shared cache.
+#[derive(Clone)]
+pub struct EvalCtx {
+    pub fast: bool,
+    pub seed: u64,
+    cache: Arc<EvalCache>,
+    predictor: Predictor,
+}
+
+impl EvalCtx {
+    /// Standalone context (fresh cache, native predictions) — the entry
+    /// point for tests, examples, and single-figure runs without
+    /// artifacts.
+    pub fn new(fast: bool, seed: u64) -> EvalCtx {
+        EvalCtx::with_parts(fast, seed, Arc::new(EvalCache::new()), Predictor::Native)
+    }
+
+    /// Context over an existing cache + predictor (the report pipeline's
+    /// per-worker constructor).
+    pub fn with_parts(
+        fast: bool,
+        seed: u64,
+        cache: Arc<EvalCache>,
+        predictor: Predictor,
+    ) -> EvalCtx {
         EvalCtx {
             fast,
             seed,
-            arts,
-            trained: BTreeMap::new(),
-            guser: BTreeMap::new(),
-            accelwattch: None,
+            cache,
+            predictor,
         }
+    }
+
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
     }
 
     pub fn train_cfg(&self) -> TrainConfig {
-        if self.fast {
-            TrainConfig {
-                reps: 2,
-                bench_secs: 60.0,
-                cooldown_secs: 15.0,
-                idle_secs: 20.0,
-                cov_threshold: 0.02,
+        train_cfg(self.fast)
+    }
+
+    /// Run `f` where the PJRT artifacts live: inline (with `None`) for a
+    /// native context, on the coordinator thread for a coordinated one.
+    /// The closure must own its captures — it may cross threads.
+    pub fn with_arts<R, F>(&self, f: F) -> Result<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(Option<&Artifacts>) -> R + Send + 'static,
+    {
+        match &self.predictor {
+            Predictor::Native => Ok(f(None)),
+            Predictor::Coordinated(jobs) => {
+                exec_on_coordinator(jobs, f).map_err(|e| anyhow!(e))
             }
-        } else {
-            TrainConfig::default()
         }
     }
 
-    /// Wattchmen training campaign for an environment (cached).
-    pub fn wattchmen(&mut self, cfg: &ArchConfig) -> Result<&TrainResult> {
-        if !self.trained.contains_key(&cfg.name) {
+    /// Wattchmen training campaign for an environment (cached; the solve
+    /// runs where the artifacts live).
+    pub fn wattchmen(&self, cfg: &ArchConfig) -> Result<Arc<TrainResult>> {
+        self.cache.trained(&cfg.name, self.seed, self.fast, || {
             let campaign = ClusterCampaign::new(cfg.clone(), 4, self.seed);
-            let result = campaign.train(&self.train_cfg(), self.arts)?;
-            self.trained.insert(cfg.name.clone(), result);
-        }
-        Ok(&self.trained[&cfg.name])
+            let tc = self.train_cfg();
+            self.with_arts(move |arts| campaign.train(&tc, arts))?
+        })
+    }
+
+    /// The environment's energy table behind a stable `Arc` (identity is
+    /// the coalescer's batching key, so two figures predicting over the
+    /// same arch share one batched call).
+    pub fn table(&self, cfg: &ArchConfig) -> Result<Arc<EnergyTable>> {
+        let tr = self.wattchmen(cfg)?;
+        Ok(self.cache.table(&cfg.name, self.seed, self.fast, &tr))
     }
 
     /// Guser model for an environment (cached).
-    pub fn guser(&mut self, cfg: &ArchConfig) -> &GuserModel {
-        if !self.guser.contains_key(&cfg.name) {
+    pub fn guser(&self, cfg: &ArchConfig) -> Arc<GuserModel> {
+        self.cache.guser(&cfg.name, self.seed, self.fast, || {
             let mut dev = Device::new(cfg.clone(), self.seed.wrapping_add(101));
             let secs = if self.fast { 40.0 } else { 120.0 };
-            let m = crate::baselines::train_guser(&mut dev, secs);
-            self.guser.insert(cfg.name.clone(), m);
-        }
-        &self.guser[&cfg.name]
+            crate::baselines::train_guser(&mut dev, secs)
+        })
     }
 
     /// AccelWattch reference-environment model (cached; V100 only).
-    pub fn accelwattch(&mut self) -> &AccelWattchModel {
-        if self.accelwattch.is_none() {
-            self.accelwattch = Some(train_accelwattch(self.seed.wrapping_add(202)));
+    pub fn accelwattch(&self) -> Arc<AccelWattchModel> {
+        self.cache.accelwattch(self.seed, self.fast, || {
+            train_accelwattch(self.seed.wrapping_add(202))
+        })
+    }
+
+    /// Kernel profiles of an already-scaled workload (cached).
+    pub fn profiles(&self, cfg: &ArchConfig, scaled: &Workload) -> Arc<Vec<KernelProfile>> {
+        self.cache.profiles(cfg, scaled)
+    }
+
+    /// Ground-truth measurement of an already-scaled workload (cached per
+    /// (arch, workload, secs, seed)).
+    pub fn measure(
+        &self,
+        cfg: &ArchConfig,
+        scaled: &Workload,
+        secs_tag: f64,
+        seed: u64,
+    ) -> Arc<MeasuredWorkload> {
+        self.cache.measure(cfg, scaled, secs_tag, seed)
+    }
+
+    /// Measure a batch of scaled workloads, fanning the simulator out
+    /// across a worker pool (devices are independent and `Send`; the
+    /// cache's semaphore caps total concurrent simulators at host
+    /// parallelism across all figure drivers).  Seeds are
+    /// `self.seed + seed_base + index` — exactly the sequential loop's,
+    /// so each measurement is bit-identical to a sequential run, and
+    /// results come back in input order.
+    pub fn measure_many(
+        &self,
+        cfg: &ArchConfig,
+        scaled: &[Workload],
+        secs_tag: f64,
+        seed_base: u64,
+    ) -> Vec<Arc<MeasuredWorkload>> {
+        let workers = thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        let cache = &self.cache;
+        let seed = self.seed;
+        crate::util::sync::parallel_map(scaled.len(), workers, |i| {
+            cache.measure(
+                cfg,
+                &scaled[i],
+                secs_tag,
+                seed.wrapping_add(seed_base + i as u64),
+            )
+        })
+    }
+
+    /// Batched suite prediction against one table: native in-thread, or
+    /// coalesced on the coordinator (where concurrent same-table suites
+    /// from other figures amortize one artifact call).
+    pub fn predict_suite(
+        &self,
+        table: &Arc<EnergyTable>,
+        apps: &[(String, Arc<Vec<KernelProfile>>)],
+        mode: Mode,
+    ) -> Result<Vec<Prediction>> {
+        match &self.predictor {
+            Predictor::Native => {
+                let view: Vec<(&str, &[KernelProfile])> = apps
+                    .iter()
+                    .map(|(name, profiles)| (name.as_str(), profiles.as_slice()))
+                    .collect();
+                model::predict_many(table, &view, mode, None)
+            }
+            Predictor::Coordinated(jobs) => {
+                submit_suite_and_wait(jobs, table.clone(), apps.to_vec(), mode)
+                    .map_err(|e| anyhow!(e))
+            }
         }
-        self.accelwattch.as_ref().unwrap()
     }
 }
 
@@ -171,25 +309,27 @@ impl Comparison {
 
 /// Full comparison on one environment.  `labels` picks the models:
 /// "A" AccelWattch, "G" Guser, "B" Wattchmen-Direct, "C" Wattchmen-Pred.
+///
+/// Scaling, profiling, and ground-truth measurement are all served from
+/// the shared [`EvalCache`]; the measurement fan-out itself runs on a
+/// worker pool with the sequential loop's per-index seeds, so the numbers
+/// are bit-identical to a fully sequential evaluation.
 pub fn compare_models(
-    ctx: &mut EvalCtx,
+    ctx: &EvalCtx,
     cfg: &ArchConfig,
     suite: &[Workload],
     labels: &[&str],
 ) -> Result<Comparison> {
-    // Scale + profile + measure every workload.
+    // Scale + profile + measure every workload (all cached).
     let scaled: Vec<Workload> = suite
         .iter()
         .map(|w| scaled_workload(cfg, w, WORKLOAD_SECS))
         .collect();
-    let profiles: Vec<(String, Vec<KernelProfile>)> = scaled
+    let profiles: Vec<(String, Arc<Vec<KernelProfile>>)> = scaled
         .iter()
-        .map(|w| (w.name.clone(), profile_app(cfg, &w.kernels)))
+        .map(|w| (w.name.clone(), ctx.profiles(cfg, w)))
         .collect();
-    let mut measured = Vec::new();
-    for (i, w) in scaled.iter().enumerate() {
-        measured.push(measure_workload(cfg, w, ctx.seed.wrapping_add(1000 + i as u64)));
-    }
+    let measured = ctx.measure_many(cfg, &scaled, WORKLOAD_SECS, 1000);
 
     let mut cmp = Comparison {
         workloads: scaled.iter().map(|w| w.name.clone()).collect(),
@@ -209,7 +349,7 @@ pub fn compare_models(
                 cmp.predictions.insert("A".into(), preds);
             }
             "G" => {
-                let m = ctx.guser(cfg).clone();
+                let m = ctx.guser(cfg);
                 let preds: Vec<f64> = profiles
                     .iter()
                     .map(|(_, p)| m.predict_energy_j(p))
@@ -218,9 +358,8 @@ pub fn compare_models(
             }
             "B" | "C" => {
                 let mode = if label == "B" { Mode::Direct } else { Mode::Pred };
-                let table = ctx.wattchmen(cfg)?.table.clone();
-                let preds: Vec<Prediction> =
-                    model::predict_suite(&table, &profiles, mode, ctx.arts)?;
+                let table = ctx.table(cfg)?;
+                let preds: Vec<Prediction> = ctx.predict_suite(&table, &profiles, mode)?;
                 cmp.predictions
                     .insert(label.into(), preds.iter().map(|p| p.energy_j).collect());
                 cmp.coverage
@@ -265,5 +404,55 @@ mod tests {
         let m = measure_workload(&cfg, &w, 7);
         // 20 s at somewhere between idle (38 W) and TDP (300 W).
         assert!(m.energy_j > 38.0 * 15.0 && m.energy_j < 300.0 * 25.0);
+    }
+
+    #[test]
+    fn measure_many_matches_sequential_measurement_bitwise() {
+        let ctx = EvalCtx::new(true, 42);
+        let cfg = ArchConfig::cloudlab_v100();
+        let suite: Vec<Workload> = [
+            workloads::rodinia::hotspot(Gen::Volta),
+            workloads::rodinia::backprop_k2(Gen::Volta, true),
+            workloads::rodinia::backprop_k2(Gen::Volta, false),
+        ]
+        .iter()
+        .map(|w| scaled_workload(&cfg, w, 15.0))
+        .collect();
+        let parallel = ctx.measure_many(&cfg, &suite, 15.0, 1000);
+        for (i, (m, w)) in parallel.iter().zip(&suite).enumerate() {
+            let seq = measure_workload(&cfg, w, 42u64.wrapping_add(1000 + i as u64));
+            assert_eq!(m.energy_j.to_bits(), seq.energy_j.to_bits(), "{}", w.name);
+            assert_eq!(m.name, seq.name);
+        }
+        // Same keys again: served from cache, no new simulator runs.
+        assert_eq!(ctx.cache().measure_invocations(), 3);
+        let again = ctx.measure_many(&cfg, &suite, 15.0, 1000);
+        assert_eq!(ctx.cache().measure_invocations(), 3);
+        for (a, b) in parallel.iter().zip(&again) {
+            assert!(Arc::ptr_eq(a, b));
+        }
+    }
+
+    #[test]
+    fn repeated_comparisons_reuse_ground_truth() {
+        let ctx = EvalCtx::new(true, 5);
+        let cfg = ArchConfig::cloudlab_v100();
+        let suite = vec![
+            workloads::rodinia::hotspot(Gen::Volta),
+            workloads::rodinia::backprop_k2(Gen::Volta, true),
+        ];
+        let c1 = compare_models(&ctx, &cfg, &suite, &["G"]).unwrap();
+        let after_first = ctx.cache().measure_invocations();
+        assert_eq!(after_first, suite.len());
+        // A second comparison over the same environment re-measures
+        // nothing — the Fig-1/Fig-6 sharing pattern.
+        let c2 = compare_models(&ctx, &cfg, &suite, &["G"]).unwrap();
+        assert_eq!(ctx.cache().measure_invocations(), after_first);
+        for (a, b) in c1.measured_j.iter().zip(&c2.measured_j) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in c1.predictions["G"].iter().zip(&c2.predictions["G"]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

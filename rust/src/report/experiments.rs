@@ -1,11 +1,13 @@
 //! Reproduction drivers for every table and figure in the paper's
 //! evaluation (DESIGN.md §4 experiment index E1–E15).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::Device;
-use crate::gpusim::profiler::profile_app;
+use crate::gpusim::profiler::KernelProfile;
 use crate::isa::Gen;
 use crate::microbench;
 use crate::model::{self, Mode};
@@ -14,9 +16,7 @@ use crate::util::stats;
 use crate::util::text::{f, render_bars, render_table};
 use crate::workloads;
 
-use super::context::{
-    compare_models, measure_workload, scaled_workload, EvalCtx, WORKLOAD_SECS,
-};
+use super::context::{compare_models, scaled_workload, EvalCtx, WORKLOAD_SECS};
 
 /// One reproduced experiment: human-readable text + headline metrics.
 pub struct ExperimentResult {
@@ -28,7 +28,7 @@ pub struct ExperimentResult {
 }
 
 /// Fig 1: AccelWattch predictions vs measurements on the air-cooled V100.
-pub fn fig1(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig1(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
     let suite = workloads::evaluation_suite(Gen::Volta);
     let cmp = compare_models(ctx, &cfg, &suite, &["A"])?;
@@ -56,7 +56,7 @@ pub fn fig1(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Table 1: qualitative feature comparison (static).
-pub fn table1(_ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn table1(_ctx: &EvalCtx) -> Result<ExperimentResult> {
     let rows = vec![
         vec!["Portable across vendor architecture", "Y", "Y", "Y", "Y", "N", "Y"],
         vec!["Adapts to different cooling policies", "N", "Y", "Y", "Y", "N", "Y"],
@@ -86,9 +86,9 @@ pub fn table1(_ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 3: instruction-share subset of the V100 system of equations.
-pub fn fig3(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig3(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
-    let tr = ctx.wattchmen(&cfg)?.clone();
+    let tr = ctx.wattchmen(&cfg)?;
     let show_benches = [
         "IMAD_IADD_bench",
         "IADD3_bench",
@@ -136,7 +136,7 @@ pub fn fig3(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 4: power + utilization trace of the DADD (double add) benchmark.
-pub fn fig4(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig4(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
     let mut dev = Device::new(cfg, ctx.seed);
     dev.cooldown(120.0);
@@ -146,7 +146,7 @@ pub fn fig4(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
     let w = trace::steady_window(&powers, 0.02);
     let (_, steady) = trace::integrate_native(&powers, w, 0.1);
     let mut series = Vec::new();
-    for i in (0..powers.len()).step_by(powers.len() / 18) {
+    for i in (0..powers.len()).step_by(trace::sample_stride(powers.len(), 18)) {
         series.push((
             format!("t={:>5.1}s  util={:>3.0}%", i as f64 * 0.1, rec.telemetry.samples[i].util_pct),
             powers[i],
@@ -168,7 +168,7 @@ pub fn fig4(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 5: dynamic energy scales linearly with instruction count.
-pub fn fig5(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig5(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
     let mut dev = Device::new(cfg.clone(), ctx.seed);
     // Base: 2 mul + 2 add; Additional Mul: 4 mul + 2 add; 2x Base: 4+4.
@@ -238,7 +238,7 @@ fn comparison_table(
 }
 
 /// Fig 6 + Table 4: air-cooled V100 — A/G/B/C vs D.
-pub fn fig6(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig6(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
     let suite = workloads::evaluation_suite(Gen::Volta);
     let cmp = compare_models(ctx, &cfg, &suite, &["A", "G", "B", "C"])?;
@@ -264,7 +264,7 @@ pub fn fig6(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 7 + Table 5: water-cooled V100 (Summit).
-pub fn fig7(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig7(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let water = ArchConfig::summit_v100();
     let suite = workloads::evaluation_suite(Gen::Volta);
     let cmp = compare_models(ctx, &water, &suite, &["A", "B", "C"])?;
@@ -279,8 +279,12 @@ pub fn fig7(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
     {
         let wa = scaled_workload(&air, w, WORKLOAD_SECS);
         let ww = scaled_workload(&water, w, WORKLOAD_SECS);
-        let ea = measure_workload(&air, &wa, ctx.seed.wrapping_add(51)).energy_j;
-        let ew = measure_workload(&water, &ww, ctx.seed.wrapping_add(52)).energy_j;
+        let ea = ctx
+            .measure(&air, &wa, WORKLOAD_SECS, ctx.seed.wrapping_add(51))
+            .energy_j;
+        let ew = ctx
+            .measure(&water, &ww, WORKLOAD_SECS, ctx.seed.wrapping_add(52))
+            .energy_j;
         gaps.push((ea - ew) / ea * 100.0);
     }
     let gap = stats::mean(&gaps);
@@ -306,7 +310,7 @@ pub fn fig7(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 fn arch_experiment(
-    ctx: &mut EvalCtx,
+    ctx: &EvalCtx,
     cfg: ArchConfig,
     gen: Gen,
     name: &str,
@@ -343,7 +347,7 @@ fn arch_experiment(
 }
 
 /// Fig 8 + Table 6: A100.
-pub fn fig8(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig8(ctx: &EvalCtx) -> Result<ExperimentResult> {
     arch_experiment(
         ctx,
         ArchConfig::lonestar_a100(),
@@ -355,7 +359,7 @@ pub fn fig8(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 9 + Table 7: H100.
-pub fn fig9(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig9(ctx: &EvalCtx) -> Result<ExperimentResult> {
     arch_experiment(
         ctx,
         ArchConfig::lonestar_h100(),
@@ -367,7 +371,7 @@ pub fn fig9(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 10: backprop_k2 opcode counts before/after the precision fix.
-pub fn fig10(_ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig10(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
     let buggy = scaled_workload(
         &cfg,
@@ -380,7 +384,7 @@ pub fn fig10(_ctx: &mut EvalCtx) -> Result<ExperimentResult> {
         WORKLOAD_SECS,
     );
     let count_of = |w: &workloads::Workload| {
-        crate::model::grouping::grouped_level_counts(&profile_app(&cfg, &w.kernels)[0])
+        crate::model::grouping::grouped_level_counts(&ctx.profiles(&cfg, w)[0])
     };
     let cb = count_of(&buggy);
     let cf = count_of(&fixed);
@@ -410,9 +414,9 @@ pub fn fig10(_ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 11: backprop_k2 energy before/after (−16%, perf ≈ 1%).
-pub fn fig11(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig11(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
-    let table = ctx.wattchmen(&cfg)?.table.clone();
+    let table = ctx.table(&cfg)?;
     let mut rows = Vec::new();
     let mut vals = std::collections::BTreeMap::new();
     for (fixed, label) in [(false, "before"), (true, "after")] {
@@ -421,9 +425,9 @@ pub fn fig11(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
             &workloads::rodinia::backprop_k2(Gen::Volta, fixed),
             WORKLOAD_SECS,
         );
-        let profiles = profile_app(&cfg, &w.kernels);
+        let profiles = ctx.profiles(&cfg, &w);
         let pred = model::predict_app(&table, &w.name, &profiles, Mode::Pred);
-        let meas = measure_workload(&cfg, &w, ctx.seed.wrapping_add(61));
+        let meas = ctx.measure(&cfg, &w, WORKLOAD_SECS, ctx.seed.wrapping_add(61));
         rows.push(vec![
             label.to_string(),
             f(pred.energy_j, 0),
@@ -457,7 +461,7 @@ pub fn fig11(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 12: QMCPACK power traces, mixed-precision bug vs fixed.
-pub fn fig12(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig12(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
     let mut text = String::from("Fig 12 — QMCPACK power traces (mixed precision)\n");
     let mut spike_counts = Vec::new();
@@ -467,7 +471,7 @@ pub fn fig12(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
             &workloads::qmcpack::qmcpack(Gen::Volta, fixed),
             WORKLOAD_SECS,
         );
-        let m = measure_workload(&cfg, &w, ctx.seed.wrapping_add(71));
+        let m = ctx.measure(&cfg, &w, WORKLOAD_SECS, ctx.seed.wrapping_add(71));
         // Concatenate kernel traces; count samples above the spike level.
         let mut powers = Vec::new();
         for rec in &m.records {
@@ -478,7 +482,7 @@ pub fn fig12(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
         let spikes = powers.iter().filter(|&&p| p > spike_level).count();
         spike_counts.push(spikes as f64 / powers.len() as f64);
         let mut series = Vec::new();
-        for i in (0..powers.len()).step_by((powers.len() / 14).max(1)) {
+        for i in (0..powers.len()).step_by(trace::sample_stride(powers.len(), 14)) {
             series.push((format!("t={:>5.1}s", i as f64 * 0.1), powers[i]));
         }
         text.push_str(&render_bars(
@@ -500,9 +504,9 @@ pub fn fig12(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 13: QMCPACK energy prediction before/after (−36% pred, −35% real).
-pub fn fig13(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig13(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let cfg = ArchConfig::cloudlab_v100();
-    let table = ctx.wattchmen(&cfg)?.table.clone();
+    let table = ctx.table(&cfg)?;
     let mut vals = std::collections::BTreeMap::new();
     let mut rows = Vec::new();
     // Scale the BUGGY variant to the measurement window, then apply the
@@ -516,9 +520,9 @@ pub fn fig13(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
         k.iters *= scale;
     }
     for (w, label) in [(&buggy, "before"), (&fixed, "after")] {
-        let profiles = profile_app(&cfg, &w.kernels);
+        let profiles = ctx.profiles(&cfg, w);
         let pred = model::predict_app(&table, &w.name, &profiles, Mode::Pred);
-        let meas = measure_workload(&cfg, w, ctx.seed.wrapping_add(81));
+        let meas = ctx.measure(&cfg, w, WORKLOAD_SECS, ctx.seed.wrapping_add(81));
         rows.push(vec![
             label.to_string(),
             f(pred.energy_j, 0),
@@ -549,53 +553,49 @@ pub fn fig13(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 14 + §6 R²: air→water affine table transfer from subsets.
-pub fn fig14(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn fig14(ctx: &EvalCtx) -> Result<ExperimentResult> {
     let air = ArchConfig::cloudlab_v100();
     let water = ArchConfig::summit_v100();
-    let air_table = ctx.wattchmen(&air)?.table.clone();
-    let water_tr = ctx.wattchmen(&water)?.clone();
-    let water_table = water_tr.table.clone();
+    let air_tr = ctx.wattchmen(&air)?;
+    let water_tr = ctx.wattchmen(&water)?;
 
-    let r2 = model::table_r_squared(&air_table, &water_table);
+    let r2 = model::table_r_squared(&air_tr.table, &water_tr.table);
 
     let suite = workloads::evaluation_suite(Gen::Volta);
     let scaled: Vec<workloads::Workload> = suite
         .iter()
         .map(|w| scaled_workload(&water, w, WORKLOAD_SECS))
         .collect();
-    let profiles: Vec<(String, Vec<_>)> = scaled
+    let profiles: Vec<(String, Arc<Vec<KernelProfile>>)> = scaled
         .iter()
-        .map(|w| (w.name.clone(), profile_app(&water, &w.kernels)))
+        .map(|w| (w.name.clone(), ctx.profiles(&water, w)))
         .collect();
-    let measured: Vec<f64> = scaled
+    let measured: Vec<f64> = ctx
+        .measure_many(&water, &scaled, WORKLOAD_SECS, 90)
         .iter()
-        .enumerate()
-        .map(|(i, w)| {
-            measure_workload(&water, w, ctx.seed.wrapping_add(90 + i as u64)).energy_j
-        })
+        .map(|m| m.energy_j)
         .collect();
 
     let mut rows = Vec::new();
     let mut metrics = vec![("air_water_table_r2".into(), r2, 0.988)];
     for (frac, paper_mape) in [(0.10, 13.0), (0.50, 10.0), (1.0, 14.0)] {
-        let table = if frac >= 1.0 {
-            water_table.clone()
+        let table: Arc<model::EnergyTable> = if frac >= 1.0 {
+            ctx.table(&water)?
         } else {
-            let keys = model::random_subset(&water_table, frac, ctx.seed ^ 0xF16)?;
+            let keys = model::random_subset(&water_tr.table, frac, ctx.seed ^ 0xF16)?;
             let subset: std::collections::BTreeMap<String, f64> = keys
                 .iter()
-                .map(|k| (k.clone(), water_table.entries[k]))
+                .map(|k| (k.clone(), water_tr.table.entries[k]))
                 .collect();
-            model::transfer_table(
-                &air_table,
-                &subset,
-                water_table.const_power_w,
-                water_table.static_power_w,
-                ctx.arts,
-            )?
-            .table
+            let src = air_tr.table.clone();
+            let (cpw, spw) =
+                (water_tr.table.const_power_w, water_tr.table.static_power_w);
+            // The affine fit runs where the artifacts live.
+            let transferred = ctx
+                .with_arts(move |arts| model::transfer_table(&src, &subset, cpw, spw, arts))??;
+            Arc::new(transferred.table)
         };
-        let preds = model::predict_suite(&table, &profiles, Mode::Pred, ctx.arts)?;
+        let preds = ctx.predict_suite(&table, &profiles, Mode::Pred)?;
         let pred_e: Vec<f64> = preds.iter().map(|p| p.energy_j).collect();
         let mape = stats::mape(&pred_e, &measured);
         rows.push(vec![
@@ -621,29 +621,27 @@ pub fn fig14(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
 /// Ablation study: remove one §3 ingredient at a time (DESIGN.md §4) and
 /// re-evaluate on the air-cooled V100 suite.  Also evaluates the §6
 /// occupancy-aware static-power extension.
-pub fn ablations(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn ablations(ctx: &EvalCtx) -> Result<ExperimentResult> {
     use crate::gpusim::device::Device;
     use crate::model::ablation;
     use crate::model::train::{assemble_and_solve, calibrate_static_floor};
     use crate::model::{predict_app_with, StaticModel};
 
     let cfg = ArchConfig::cloudlab_v100();
-    let tr = ctx.wattchmen(&cfg)?.clone();
+    let tr = ctx.wattchmen(&cfg)?;
     let suite = workloads::evaluation_suite(Gen::Volta);
     let scaled: Vec<workloads::Workload> = suite
         .iter()
         .map(|w| scaled_workload(&cfg, w, WORKLOAD_SECS))
         .collect();
-    let profiles: Vec<(String, Vec<_>)> = scaled
+    let profiles: Vec<(String, Arc<Vec<KernelProfile>>)> = scaled
         .iter()
-        .map(|w| (w.name.clone(), profile_app(&cfg, &w.kernels)))
+        .map(|w| (w.name.clone(), ctx.profiles(&cfg, w)))
         .collect();
-    let measured: Vec<f64> = scaled
+    let measured: Vec<f64> = ctx
+        .measure_many(&cfg, &scaled, WORKLOAD_SECS, 3000)
         .iter()
-        .enumerate()
-        .map(|(i, w)| {
-            measure_workload(&cfg, w, ctx.seed.wrapping_add(3000 + i as u64)).energy_j
-        })
+        .map(|m| m.energy_j)
         .collect();
     let eval = |table: &crate::model::EnergyTable, sm: StaticModel| -> f64 {
         let preds: Vec<f64> = profiles
@@ -673,13 +671,11 @@ pub fn ablations(ctx: &mut EvalCtx) -> Result<ExperimentResult> {
     // §3.3 ablation: whole-trace mean power instead of steady state.
     let mean_meas =
         ablation::mean_power_measurements(&tr.measurements, 0.25, 0.70);
-    let mean_tr = assemble_and_solve(
-        "ablation-mean",
-        tr.table.const_power_w,
-        tr.table.static_power_w,
-        mean_meas,
-        ctx.arts,
-    )?;
+    let (cpw, spw) = (tr.table.const_power_w, tr.table.static_power_w);
+    // The ablated re-solve runs where the artifacts live.
+    let mean_tr = ctx.with_arts(move |arts| {
+        assemble_and_solve("ablation-mean", cpw, spw, mean_meas, arts)
+    })??;
     let mean_mape = eval(&mean_tr.table, StaticModel::FullGpu);
     rows.push(ablation::AblationRow {
         name: "no steady-state window".into(),
@@ -728,7 +724,7 @@ pub fn all_names() -> Vec<&'static str> {
 }
 
 /// Run one experiment by name.
-pub fn run(name: &str, ctx: &mut EvalCtx) -> Result<ExperimentResult> {
+pub fn run(name: &str, ctx: &EvalCtx) -> Result<ExperimentResult> {
     match name {
         "fig1" => fig1(ctx),
         "table1" => table1(ctx),

@@ -1,17 +1,37 @@
 //! Experiment reproduction harness: one driver per paper table/figure
 //! (DESIGN.md §4), shared evaluation context, and JSON result emission for
 //! EXPERIMENTS.md.
+//!
+//! [`run_all`] is the report pipeline: independent figure drivers run
+//! concurrently on a worker pool over a shared [`EvalCache`], results
+//! stream back in input order, and — when PJRT artifacts are loaded —
+//! artifact-backed work funnels through a
+//! [`Coalescer`](crate::runtime::coalescer::Coalescer) driven on the
+//! calling thread (the artifacts are not Sync, so they stay with the
+//! coordinator).  Per-figure output is byte-identical to a `--jobs 1`
+//! sequential run: measurement seeds are per-key, every cache key is
+//! computed once, and all floating-point reductions on this path iterate
+//! in canonical key order rather than interner order.
 
+pub mod cache;
 pub mod context;
 pub mod experiments;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::runtime::coalescer::Coalescer;
+use crate::runtime::Artifacts;
 use crate::util::json::Json;
 
-pub use context::{compare_models, measure_workload, scaled_workload, EvalCtx};
+pub use cache::EvalCache;
+pub use context::{compare_models, measure_workload, scaled_workload, EvalCtx, Predictor};
 pub use experiments::{all_names, run, ExperimentResult};
 
 impl ExperimentResult {
@@ -49,6 +69,124 @@ impl ExperimentResult {
     }
 }
 
+/// Run many experiments on a figure-level worker pool.
+///
+/// * `jobs` — concurrent figure drivers (clamped to ≥1 and ≤ names).
+/// * `arts` — when present, the calling thread becomes the artifact
+///   coordinator: it drives the coalescer while workers enqueue
+///   predictions/solves; when absent, workers run fully native.
+/// * `cache` — shared [`EvalCache`]; pass a fresh one for a standalone
+///   report or a long-lived one to reuse training across invocations.
+/// * `on_done` — invoked in **input order** (deterministic output
+///   ordering) as results become available, with each figure's wall time.
+///
+/// Returns every result in input order.
+pub fn run_all<F>(
+    names: &[String],
+    fast: bool,
+    seed: u64,
+    jobs: usize,
+    arts: Option<&Artifacts>,
+    cache: &Arc<EvalCache>,
+    on_done: F,
+) -> Vec<(String, Result<ExperimentResult>)>
+where
+    F: FnMut(&str, &Result<ExperimentResult>, Duration) + Send,
+{
+    let n = names.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.max(1).min(n);
+    let slots: Vec<Mutex<Option<(Result<ExperimentResult>, Duration)>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let (done_tx, done_rx) = mpsc::channel::<usize>();
+
+    // Borrow-shadow so `move` closures copy references, not containers.
+    let slots_ref = &slots;
+    let next_ref = &next;
+
+    // With artifacts, this thread becomes the coordinator driving the
+    // coalescer; the original job sender must die before `run` so the
+    // loop can observe the last worker exiting.
+    let (coalescer, jobs_tx) = match arts {
+        Some(_) => {
+            let (c, tx) = Coalescer::new(Duration::from_millis(5));
+            (Some(c), Some(tx))
+        }
+        None => (None, None),
+    };
+    let predictor = match &jobs_tx {
+        Some(tx) => Predictor::Coordinated(tx.clone()),
+        None => Predictor::Native,
+    };
+
+    let printer = move |mut on_done: F| {
+        let mut finished = vec![false; n];
+        let mut next_print = 0usize;
+        while next_print < n {
+            let Ok(i) = done_rx.recv() else { break };
+            finished[i] = true;
+            while next_print < n && finished[next_print] {
+                let guard = slots_ref[next_print].lock().unwrap();
+                let (r, elapsed) = guard.as_ref().expect("completed slot is filled");
+                on_done(&names[next_print], r, *elapsed);
+                next_print += 1;
+            }
+        }
+    };
+
+    // Not `util::sync::parallel_map`: this pool additionally streams
+    // completions in input order (the done channel + printer below) and
+    // hands each worker its own predictor-carrying context.
+    thread::scope(|s| {
+        for _ in 0..jobs {
+            let ctx = EvalCtx::with_parts(fast, seed, cache.clone(), predictor.clone());
+            let done = done_tx.clone();
+            s.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let t0 = Instant::now();
+                let r = experiments::run(&names[i], &ctx);
+                *slots_ref[i].lock().unwrap() = Some((r, t0.elapsed()));
+                let _ = done.send(i);
+            });
+        }
+        drop(done_tx);
+        drop(predictor);
+        drop(jobs_tx);
+        match (&coalescer, arts) {
+            (Some(coal), Some(arts)) => {
+                // Stream results from a side thread; the calling thread
+                // owns the artifacts and drives the coalescer until every
+                // worker has dropped its job sender.
+                s.spawn(move || printer(on_done));
+                coal.run(Some(arts));
+            }
+            _ => {
+                // Native mode: stream results in input order right here.
+                printer(on_done);
+            }
+        }
+    });
+
+    slots
+        .into_iter()
+        .zip(names)
+        .map(|(slot, name)| {
+            let r = slot
+                .into_inner()
+                .unwrap()
+                .map(|(r, _)| r)
+                .unwrap_or_else(|| Err(anyhow::anyhow!("experiment did not run")));
+            (name.clone(), r)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,8 +202,8 @@ mod tests {
 
     #[test]
     fn fast_fig5_linearity_runs() {
-        let mut ctx = EvalCtx::new(true, 42, None);
-        let r = run("fig5", &mut ctx).unwrap();
+        let ctx = EvalCtx::new(true, 42);
+        let r = run("fig5", &ctx).unwrap();
         let (_, r2, _) = &r.metrics[0];
         assert!(*r2 > 0.95, "linearity R² {r2}");
         assert!(r.text.contains("Fig 5"));
@@ -73,16 +211,16 @@ mod tests {
 
     #[test]
     fn fig4_reaches_steady_state() {
-        let mut ctx = EvalCtx::new(true, 42, None);
-        let r = run("fig4", &mut ctx).unwrap();
+        let ctx = EvalCtx::new(true, 42);
+        let r = run("fig4", &ctx).unwrap();
         let steady = r.metrics[0].1;
         assert!((100.0..260.0).contains(&steady), "steady {steady}");
     }
 
     #[test]
     fn unknown_experiment_is_an_error() {
-        let mut ctx = EvalCtx::new(true, 42, None);
-        assert!(run("fig99", &mut ctx).is_err());
+        let ctx = EvalCtx::new(true, 42);
+        assert!(run("fig99", &ctx).is_err());
     }
 
     #[test]
@@ -95,5 +233,35 @@ mod tests {
         };
         let j = r.to_json();
         assert_eq!(j.get("name").unwrap().as_str(), Some("figX"));
+    }
+
+    #[test]
+    fn run_all_streams_results_in_input_order() {
+        let names: Vec<String> = vec!["fig4".into(), "table1".into()];
+        let cache = Arc::new(EvalCache::new());
+        let mut streamed: Vec<String> = Vec::new();
+        let results = run_all(&names, true, 42, 2, None, &cache, |name, r, _| {
+            assert!(r.is_ok(), "{name}");
+            streamed.push(name.to_string());
+        });
+        // table1 is instant and finishes before fig4's simulation, but
+        // the stream still arrives in input order.
+        assert_eq!(streamed, names);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].0, "fig4");
+        assert!(results[0].1.is_ok());
+        assert_eq!(results[1].0, "table1");
+        assert!(results[1].1.is_ok());
+    }
+
+    #[test]
+    fn run_all_reports_driver_errors_without_poisoning_others() {
+        let names: Vec<String> = vec!["fig99".into(), "table1".into()];
+        let cache = Arc::new(EvalCache::new());
+        let mut seen = 0;
+        let results = run_all(&names, true, 42, 2, None, &cache, |_, _, _| seen += 1);
+        assert_eq!(seen, 2);
+        assert!(results[0].1.is_err());
+        assert!(results[1].1.is_ok());
     }
 }

@@ -1,0 +1,373 @@
+//! Artifact-coordinator work queue: the shared primitive behind both
+//! `wattchmen serve` and the parallel report pipeline.
+//!
+//! The PJRT artifacts are not Sync (same constraint DESIGN.md applied to
+//! `cluster/`), so everything that wants them must run on the one thread
+//! that owns them — whichever thread calls [`Coalescer::run`].  Two job
+//! kinds flow through the queue:
+//!
+//! * [`PredictJob`] — one or many `(workload, profiles)` apps against one
+//!   table.  Concurrent jobs with the same `(table, mode)` coalesce into a
+//!   single `model::predict_many` call, which routes through the PJRT
+//!   `predict` artifact (32 workloads × 256 groups per executable call)
+//!   when it is loaded.  A 64-request serve burst becomes one batched
+//!   call instead of 64 single-row ones, and two report figures
+//!   predicting over the same trained table amortize one executable
+//!   launch between them.
+//! * [`ExecJob`] — an arbitrary closure run with the artifacts (training
+//!   campaigns, affine transfer fits): work that *consumes* the artifacts
+//!   but has no batching structure of its own.
+//!
+//! Worker threads only enqueue jobs and block on their reply channels;
+//! the run loop exits once every `Sender<Job>` clone has been dropped.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::gpusim::profiler::KernelProfile;
+use crate::model::{predict_many, EnergyTable, Mode, Prediction};
+use crate::runtime::Artifacts;
+
+/// One queued prediction request: a batch of apps against one table, with
+/// a reply channel for the whole batch (in submission order).
+pub struct PredictJob {
+    pub table: Arc<EnergyTable>,
+    pub mode: Mode,
+    pub apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
+    pub reply: Sender<Result<Vec<Prediction>, String>>,
+}
+
+/// A closure to run on the coordinator thread, with the artifacts.
+pub struct ExecJob(pub Box<dyn FnOnce(Option<&Artifacts>) + Send>);
+
+pub enum Job {
+    Predict(PredictJob),
+    Exec(ExecJob),
+}
+
+pub struct Coalescer {
+    rx: Mutex<Option<Receiver<Job>>>,
+    linger: Duration,
+    batch_calls: AtomicUsize,
+}
+
+impl Coalescer {
+    /// Returns the coalescer plus the job sender cloned into each worker;
+    /// the run loop exits once every sender clone has been dropped.
+    pub fn new(linger: Duration) -> (Coalescer, Sender<Job>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Coalescer {
+                rx: Mutex::new(Some(rx)),
+                linger,
+                batch_calls: AtomicUsize::new(0),
+            },
+            tx,
+        )
+    }
+
+    /// Batched predict calls issued so far — the injected counter the
+    /// coalescing tests assert on (≤ ⌈burst/32⌉ for a same-table burst).
+    pub fn batch_calls(&self) -> usize {
+        self.batch_calls.load(Ordering::SeqCst)
+    }
+
+    /// Drive jobs on the current thread until every job sender is gone.
+    /// The first predict job of a batch opens a `linger` window;
+    /// everything that arrives inside it joins the batch.  Exec jobs run
+    /// immediately (or, if they arrive during a linger window, right
+    /// after that batch executes).
+    pub fn run(&self, arts: Option<&Artifacts>) {
+        let rx = self
+            .rx
+            .lock()
+            .unwrap()
+            .take()
+            .expect("Coalescer::run called twice");
+        while let Ok(job) = rx.recv() {
+            let first = match job {
+                Job::Exec(e) => {
+                    (e.0)(arts);
+                    continue;
+                }
+                Job::Predict(p) => p,
+            };
+            let mut jobs = vec![first];
+            let mut execs: Vec<ExecJob> = Vec::new();
+            let deadline = Instant::now() + self.linger;
+            loop {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(Job::Predict(p)) => jobs.push(p),
+                    Ok(Job::Exec(e)) => execs.push(e),
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            self.execute(jobs, arts);
+            for e in execs {
+                (e.0)(arts);
+            }
+        }
+    }
+
+    fn execute(&self, jobs: Vec<PredictJob>, arts: Option<&Artifacts>) {
+        // Group by (table identity, mode): requests answered from the same
+        // cached table instance batch into one predict_many call.
+        let mut groups: Vec<(usize, Mode, Vec<PredictJob>)> = Vec::new();
+        for job in jobs {
+            let key = Arc::as_ptr(&job.table) as usize;
+            match groups.iter().position(|(k, m, _)| *k == key && *m == job.mode) {
+                Some(i) => groups[i].2.push(job),
+                None => groups.push((key, job.mode, vec![job])),
+            }
+        }
+        for (_, mode, group) in groups {
+            self.batch_calls.fetch_add(1, Ordering::SeqCst);
+            let table = group[0].table.clone();
+            let apps: Vec<(&str, &[KernelProfile])> = group
+                .iter()
+                .flat_map(|j| j.apps.iter().map(|(n, p)| (n.as_str(), p.as_slice())))
+                .collect();
+            match predict_many(&table, &apps, mode, arts) {
+                Ok(preds) => {
+                    // Split the flat result back per job, submission order.
+                    let mut it = preds.into_iter();
+                    for job in &group {
+                        let share: Vec<Prediction> = it.by_ref().take(job.apps.len()).collect();
+                        let _ = job.reply.send(Ok(share));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("batched predict failed: {e:#}");
+                    for job in &group {
+                        let _ = job.reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Submit one single-app request and block until its batch executes.
+pub fn submit_and_wait(
+    jobs: &Sender<Job>,
+    table: Arc<EnergyTable>,
+    workload: String,
+    profiles: Arc<Vec<KernelProfile>>,
+    mode: Mode,
+) -> Result<Prediction, String> {
+    let mut preds = submit_suite_and_wait(jobs, table, vec![(workload, profiles)], mode)?;
+    if preds.len() != 1 {
+        return Err(format!("coalescer returned {} predictions for 1 app", preds.len()));
+    }
+    Ok(preds.remove(0))
+}
+
+/// Submit a multi-app suite against one table and block for the batch.
+pub fn submit_suite_and_wait(
+    jobs: &Sender<Job>,
+    table: Arc<EnergyTable>,
+    apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
+    mode: Mode,
+) -> Result<Vec<Prediction>, String> {
+    let (reply, result) = mpsc::channel();
+    jobs.send(Job::Predict(PredictJob {
+        table,
+        mode,
+        apps,
+        reply,
+    }))
+    .map_err(|_| "prediction service is shutting down".to_string())?;
+    result
+        .recv()
+        .map_err(|_| "prediction service dropped the request".to_string())?
+}
+
+/// Run `f` on the coordinator thread (where the artifacts live) and block
+/// for its result.  The closure must own its captures — it crosses a
+/// thread boundary.
+pub fn exec_on_coordinator<R, F>(jobs: &Sender<Job>, f: F) -> Result<R, String>
+where
+    R: Send + 'static,
+    F: FnOnce(Option<&Artifacts>) -> R + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    jobs.send(Job::Exec(ExecJob(Box::new(move |arts| {
+        let _ = tx.send(f(arts));
+    }))))
+    .map_err(|_| "artifact coordinator is shutting down".to_string())?;
+    rx.recv()
+        .map_err(|_| "artifact coordinator dropped the job".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::config::ArchConfig;
+    use crate::gpusim::profiler::profile_app;
+    use crate::isa::Gen;
+    use crate::model::predict_app;
+    use crate::report::scaled_workload;
+    use crate::workloads;
+    use std::thread;
+
+    fn test_table() -> EnergyTable {
+        EnergyTable {
+            arch: "test".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: [
+                ("FADD", 1.0),
+                ("FFMA", 1.2),
+                ("MOV", 0.4),
+                ("LDG.E.32@L1", 2.5),
+                ("LDG.E.32@L2", 8.0),
+                ("LDG.E.64@L1", 4.5),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+        }
+    }
+
+    #[test]
+    fn coalesced_result_matches_direct_prediction() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
+        let profiles = Arc::new(profile_app(&cfg, &w.kernels));
+        let table = Arc::new(test_table());
+
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(1));
+        let coal = Arc::new(coal);
+        let runner = {
+            let coal = coal.clone();
+            thread::spawn(move || coal.run(None))
+        };
+        let got = submit_and_wait(
+            &jobs,
+            table.clone(),
+            "hotspot".into(),
+            profiles.clone(),
+            Mode::Pred,
+        )
+        .unwrap();
+        drop(jobs);
+        runner.join().unwrap();
+
+        let want = predict_app(&table, "hotspot", &profiles, Mode::Pred);
+        assert_eq!(got.energy_j.to_bits(), want.energy_j.to_bits());
+        assert_eq!(coal.batch_calls(), 1);
+    }
+
+    #[test]
+    fn mixed_tables_and_modes_split_into_separate_batches() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
+        let profiles = Arc::new(profile_app(&cfg, &w.kernels));
+        let t1 = Arc::new(test_table());
+        let t2 = Arc::new(test_table());
+
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(300));
+        let coal = Arc::new(coal);
+        let runner = {
+            let coal = coal.clone();
+            thread::spawn(move || coal.run(None))
+        };
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let mut clients = Vec::new();
+        for (table, mode) in [
+            (t1.clone(), Mode::Pred),
+            (t1.clone(), Mode::Pred),
+            (t1.clone(), Mode::Direct),
+            (t2.clone(), Mode::Pred),
+        ] {
+            let jobs = jobs.clone();
+            let profiles = profiles.clone();
+            let barrier = barrier.clone();
+            clients.push(thread::spawn(move || {
+                barrier.wait();
+                submit_and_wait(&jobs, table, "hotspot".into(), profiles, mode).unwrap()
+            }));
+        }
+        drop(jobs);
+        for c in clients {
+            assert!(c.join().unwrap().energy_j > 0.0);
+        }
+        runner.join().unwrap();
+        // (t1, Pred)×2 coalesce; (t1, Direct) and (t2, Pred) each stand alone.
+        assert_eq!(coal.batch_calls(), 3);
+    }
+
+    #[test]
+    fn suite_jobs_coalesce_and_split_back_per_job() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let wa = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
+        let wb = scaled_workload(&cfg, &workloads::rodinia::backprop_k2(Gen::Volta, true), 90.0);
+        let pa = Arc::new(profile_app(&cfg, &wa.kernels));
+        let pb = Arc::new(profile_app(&cfg, &wb.kernels));
+        let table = Arc::new(test_table());
+
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(300));
+        let coal = Arc::new(coal);
+        let runner = {
+            let coal = coal.clone();
+            thread::spawn(move || coal.run(None))
+        };
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let mut clients = Vec::new();
+        for apps in [
+            vec![
+                ("hotspot".to_string(), pa.clone()),
+                ("backprop_k2_fixed".to_string(), pb.clone()),
+            ],
+            vec![("hotspot".to_string(), pa.clone())],
+        ] {
+            let jobs = jobs.clone();
+            let table = table.clone();
+            let barrier = barrier.clone();
+            clients.push(thread::spawn(move || {
+                barrier.wait();
+                submit_suite_and_wait(&jobs, table, apps, Mode::Pred).unwrap()
+            }));
+        }
+        drop(jobs);
+        let results: Vec<Vec<Prediction>> =
+            clients.into_iter().map(|c| c.join().unwrap()).collect();
+        runner.join().unwrap();
+
+        // Both suite jobs folded into ONE batched predict call...
+        assert_eq!(coal.batch_calls(), 1);
+        // ...and each job got exactly its own apps back, in order.
+        assert_eq!(results[0].len(), 2);
+        assert_eq!(results[0][0].workload, "hotspot");
+        assert_eq!(results[0][1].workload, "backprop_k2_fixed");
+        assert_eq!(results[1].len(), 1);
+        assert_eq!(results[1][0].workload, "hotspot");
+        // Coalesced batches must not perturb the native math.
+        let want = predict_app(&table, "hotspot", &pa, Mode::Pred);
+        assert_eq!(results[0][0].energy_j.to_bits(), want.energy_j.to_bits());
+        assert_eq!(results[1][0].energy_j.to_bits(), want.energy_j.to_bits());
+    }
+
+    #[test]
+    fn exec_jobs_run_on_the_coordinator() {
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(1));
+        let runner = thread::spawn(move || coal.run(None));
+        let coordinator_tid = exec_on_coordinator(&jobs, |arts| {
+            assert!(arts.is_none());
+            thread::current().id()
+        })
+        .unwrap();
+        assert_ne!(coordinator_tid, thread::current().id());
+        // Results flow back typed.
+        let sum = exec_on_coordinator(&jobs, |_| 19 + 23).unwrap();
+        assert_eq!(sum, 42);
+        drop(jobs);
+        runner.join().unwrap();
+    }
+}

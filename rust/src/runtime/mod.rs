@@ -5,6 +5,8 @@
 //! this module gives the coordinator typed, padded entry points over the
 //! compiled executables (one per model entry point, compiled once).
 
+pub mod coalescer;
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};

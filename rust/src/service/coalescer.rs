@@ -1,238 +1,9 @@
-//! Request coalescer: batches concurrent predict requests into single
-//! `model::predict_many` calls, which route through the PJRT `predict`
-//! artifact (32 workloads × 256 groups per executable call) when it is
-//! loaded.  A 64-request burst against one table becomes one batched call
-//! instead of 64 single-row ones.
-//!
-//! The PJRT artifacts are not Sync (same constraint DESIGN.md applied to
-//! `cluster/`), so batches execute on whichever thread calls [`Coalescer::run`]
-//! — the serve coordinator's main thread — while worker threads only
-//! enqueue jobs and block on their reply channels.
+//! Re-export shim: the request coalescer grew into the shared artifact
+//! coordinator used by both `wattchmen serve` and the parallel report
+//! pipeline, and now lives in [`crate::runtime::coalescer`].  Existing
+//! `service::coalescer::...` paths keep working through this module.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
-
-use crate::gpusim::profiler::KernelProfile;
-use crate::model::{predict_many, EnergyTable, Mode, Prediction};
-use crate::runtime::Artifacts;
-
-/// One queued prediction request with its reply channel.
-pub struct PredictJob {
-    pub table: Arc<EnergyTable>,
-    pub workload: String,
-    pub profiles: Arc<Vec<KernelProfile>>,
-    pub mode: Mode,
-    pub reply: Sender<Result<Prediction, String>>,
-}
-
-pub struct Coalescer {
-    rx: Mutex<Option<Receiver<PredictJob>>>,
-    linger: Duration,
-    batch_calls: AtomicUsize,
-}
-
-impl Coalescer {
-    /// Returns the coalescer plus the job sender cloned into each worker;
-    /// the run loop exits once every sender clone has been dropped.
-    pub fn new(linger: Duration) -> (Coalescer, Sender<PredictJob>) {
-        let (tx, rx) = mpsc::channel();
-        (
-            Coalescer {
-                rx: Mutex::new(Some(rx)),
-                linger,
-                batch_calls: AtomicUsize::new(0),
-            },
-            tx,
-        )
-    }
-
-    /// Batched predict calls issued so far — the injected counter the
-    /// coalescing tests assert on (≤ ⌈burst/32⌉ for a same-table burst).
-    pub fn batch_calls(&self) -> usize {
-        self.batch_calls.load(Ordering::SeqCst)
-    }
-
-    /// Drive batches on the current thread until every job sender is gone.
-    /// The first job of a batch opens a `linger` window; everything that
-    /// arrives inside it joins the batch.
-    pub fn run(&self, arts: Option<&Artifacts>) {
-        let rx = self
-            .rx
-            .lock()
-            .unwrap()
-            .take()
-            .expect("Coalescer::run called twice");
-        while let Ok(first) = rx.recv() {
-            let mut jobs = vec![first];
-            let deadline = Instant::now() + self.linger;
-            loop {
-                let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    break;
-                }
-                match rx.recv_timeout(left) {
-                    Ok(job) => jobs.push(job),
-                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            self.execute(jobs, arts);
-        }
-    }
-
-    fn execute(&self, jobs: Vec<PredictJob>, arts: Option<&Artifacts>) {
-        // Group by (table identity, mode): requests answered from the same
-        // cached table instance batch into one predict_many call.
-        let mut groups: Vec<(usize, Mode, Vec<PredictJob>)> = Vec::new();
-        for job in jobs {
-            let key = Arc::as_ptr(&job.table) as usize;
-            match groups.iter().position(|(k, m, _)| *k == key && *m == job.mode) {
-                Some(i) => groups[i].2.push(job),
-                None => groups.push((key, job.mode, vec![job])),
-            }
-        }
-        for (_, mode, group) in groups {
-            self.batch_calls.fetch_add(1, Ordering::SeqCst);
-            let table = group[0].table.clone();
-            let apps: Vec<(&str, &[KernelProfile])> = group
-                .iter()
-                .map(|j| (j.workload.as_str(), j.profiles.as_slice()))
-                .collect();
-            match predict_many(&table, &apps, mode, arts) {
-                Ok(preds) => {
-                    for (job, pred) in group.iter().zip(preds) {
-                        let _ = job.reply.send(Ok(pred));
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("batched predict failed: {e:#}");
-                    for job in &group {
-                        let _ = job.reply.send(Err(msg.clone()));
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Submit one request and block until its batch executes.
-pub fn submit_and_wait(
-    jobs: &Sender<PredictJob>,
-    table: Arc<EnergyTable>,
-    workload: String,
-    profiles: Arc<Vec<KernelProfile>>,
-    mode: Mode,
-) -> Result<Prediction, String> {
-    let (reply, result) = mpsc::channel();
-    jobs.send(PredictJob {
-        table,
-        workload,
-        profiles,
-        mode,
-        reply,
-    })
-    .map_err(|_| "prediction service is shutting down".to_string())?;
-    result
-        .recv()
-        .map_err(|_| "prediction service dropped the request".to_string())?
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::gpusim::config::ArchConfig;
-    use crate::gpusim::profiler::profile_app;
-    use crate::isa::Gen;
-    use crate::model::predict_app;
-    use crate::report::scaled_workload;
-    use crate::workloads;
-    use std::thread;
-
-    fn test_table() -> EnergyTable {
-        EnergyTable {
-            arch: "test".into(),
-            const_power_w: 38.0,
-            static_power_w: 44.0,
-            entries: [
-                ("FADD", 1.0),
-                ("FFMA", 1.2),
-                ("MOV", 0.4),
-                ("LDG.E.32@L1", 2.5),
-                ("LDG.E.32@L2", 8.0),
-                ("LDG.E.64@L1", 4.5),
-            ]
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect(),
-        }
-    }
-
-    #[test]
-    fn coalesced_result_matches_direct_prediction() {
-        let cfg = ArchConfig::cloudlab_v100();
-        let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
-        let profiles = Arc::new(profile_app(&cfg, &w.kernels));
-        let table = Arc::new(test_table());
-
-        let (coal, jobs) = Coalescer::new(Duration::from_millis(1));
-        let coal = Arc::new(coal);
-        let runner = {
-            let coal = coal.clone();
-            thread::spawn(move || coal.run(None))
-        };
-        let got = submit_and_wait(
-            &jobs,
-            table.clone(),
-            "hotspot".into(),
-            profiles.clone(),
-            Mode::Pred,
-        )
-        .unwrap();
-        drop(jobs);
-        runner.join().unwrap();
-
-        let want = predict_app(&table, "hotspot", &profiles, Mode::Pred);
-        assert_eq!(got.energy_j.to_bits(), want.energy_j.to_bits());
-        assert_eq!(coal.batch_calls(), 1);
-    }
-
-    #[test]
-    fn mixed_tables_and_modes_split_into_separate_batches() {
-        let cfg = ArchConfig::cloudlab_v100();
-        let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
-        let profiles = Arc::new(profile_app(&cfg, &w.kernels));
-        let t1 = Arc::new(test_table());
-        let t2 = Arc::new(test_table());
-
-        let (coal, jobs) = Coalescer::new(Duration::from_millis(300));
-        let coal = Arc::new(coal);
-        let runner = {
-            let coal = coal.clone();
-            thread::spawn(move || coal.run(None))
-        };
-        let barrier = Arc::new(std::sync::Barrier::new(4));
-        let mut clients = Vec::new();
-        for (table, mode) in [
-            (t1.clone(), Mode::Pred),
-            (t1.clone(), Mode::Pred),
-            (t1.clone(), Mode::Direct),
-            (t2.clone(), Mode::Pred),
-        ] {
-            let jobs = jobs.clone();
-            let profiles = profiles.clone();
-            let barrier = barrier.clone();
-            clients.push(thread::spawn(move || {
-                barrier.wait();
-                submit_and_wait(&jobs, table, "hotspot".into(), profiles, mode).unwrap()
-            }));
-        }
-        drop(jobs);
-        for c in clients {
-            assert!(c.join().unwrap().energy_j > 0.0);
-        }
-        runner.join().unwrap();
-        // (t1, Pred)×2 coalesce; (t1, Direct) and (t2, Pred) each stand alone.
-        assert_eq!(coal.batch_calls(), 3);
-    }
-}
+pub use crate::runtime::coalescer::{
+    exec_on_coordinator, submit_and_wait, submit_suite_and_wait, Coalescer, ExecJob, Job,
+    PredictJob,
+};

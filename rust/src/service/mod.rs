@@ -24,7 +24,7 @@ pub mod protocol;
 pub mod registry;
 
 pub use cache::ProfileCache;
-pub use coalescer::{submit_and_wait, Coalescer, PredictJob};
+pub use coalescer::{submit_and_wait, Coalescer, Job, PredictJob};
 pub use registry::TableRegistry;
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -203,7 +203,7 @@ const MAX_REQUEST_BYTES: usize = 64 * 1024;
 fn handle_conn(
     stream: TcpStream,
     shared: &Shared,
-    jobs: &Sender<PredictJob>,
+    jobs: &Sender<Job>,
 ) -> std::io::Result<()> {
     // Periodic read timeouts let idle keep-alive connections notice
     // shutdown instead of pinning their worker forever.
@@ -261,10 +261,14 @@ fn handle_conn(
 
 /// Build the response for one request line; the bool asks the connection
 /// loop to close afterwards.
-fn respond(request: &str, shared: &Shared, jobs: &Sender<PredictJob>) -> (Json, bool) {
+fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
     match protocol::parse_request(request) {
         Err(e) => (protocol::error_json(&e), false),
         Ok(Request::Status) => (status_json(shared), false),
+        Ok(Request::Metrics) => (
+            protocol::metrics_json(&protocol::prometheus_text(&counters(shared))),
+            false,
+        ),
         Ok(Request::Shutdown) => {
             // The acceptor polls this flag (non-blocking accept loop) and
             // idle connections see it via their read timeouts.
@@ -291,7 +295,7 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<PredictJob>) -> (Json, 
 
 fn serve_predict(
     shared: &Shared,
-    jobs: &Sender<PredictJob>,
+    jobs: &Sender<Job>,
     arch: &str,
     workload: &str,
     mode: Mode,
@@ -307,28 +311,31 @@ fn serve_predict(
     submit_and_wait(jobs, table, workload.to_string(), profiles, mode)
 }
 
+/// Snapshot of the service counters (shared by `status` and `metrics`).
+fn counters(shared: &Shared) -> protocol::ServiceCounters {
+    protocol::ServiceCounters {
+        served: shared.served.load(Ordering::SeqCst),
+        batched_predict_calls: shared.coalescer.batch_calls(),
+        table_reloads: shared.registry.reloads(),
+        profile_cache_hits: shared.profiles.hits(),
+        profile_cache_misses: shared.profiles.misses(),
+    }
+}
+
 fn status_json(shared: &Shared) -> Json {
+    let c = counters(shared);
     Json::obj(vec![
         ("ok", Json::Bool(true)),
-        (
-            "served",
-            Json::Num(shared.served.load(Ordering::SeqCst) as f64),
-        ),
+        ("served", Json::Num(c.served as f64)),
         (
             "batched_predict_calls",
-            Json::Num(shared.coalescer.batch_calls() as f64),
+            Json::Num(c.batched_predict_calls as f64),
         ),
-        (
-            "table_reloads",
-            Json::Num(shared.registry.reloads() as f64),
-        ),
-        (
-            "profile_cache_hits",
-            Json::Num(shared.profiles.hits() as f64),
-        ),
+        ("table_reloads", Json::Num(c.table_reloads as f64)),
+        ("profile_cache_hits", Json::Num(c.profile_cache_hits as f64)),
         (
             "profile_cache_misses",
-            Json::Num(shared.profiles.misses() as f64),
+            Json::Num(c.profile_cache_misses as f64),
         ),
     ])
 }

@@ -6,6 +6,9 @@
 //!   {"cmd":"predict","arch":"cloudlab-v100","workload":"hotspot",
 //!    "mode":"pred","duration_s":90}       → prediction (or error)
 //!   {"cmd":"status"}                      → counters (served, batches, …)
+//!   {"cmd":"metrics"}                     → the same counters rendered in
+//!                                           Prometheus text exposition
+//!                                           format (in the "body" field)
 //!   {"cmd":"shutdown"}                    → ack, then the server drains
 //!
 //! The `text` field of a predict response is byte-identical to the line
@@ -30,7 +33,57 @@ pub enum Request {
         duration_s: Option<f64>,
     },
     Status,
+    Metrics,
     Shutdown,
+}
+
+/// Snapshot of the serve counters, for `status` / `metrics` rendering.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceCounters {
+    pub served: usize,
+    pub batched_predict_calls: usize,
+    pub table_reloads: usize,
+    pub profile_cache_hits: usize,
+    pub profile_cache_misses: usize,
+}
+
+/// Render the counters in Prometheus text exposition format (one
+/// HELP/TYPE header per family; all families are monotonic counters).
+pub fn prometheus_text(c: &ServiceCounters) -> String {
+    let mut out = String::new();
+    let families: [(&str, &str, usize); 5] = [
+        (
+            "wattchmen_predictions_served_total",
+            "Predict requests answered successfully.",
+            c.served,
+        ),
+        (
+            "wattchmen_batched_predict_calls_total",
+            "Coalesced predict_many calls issued.",
+            c.batched_predict_calls,
+        ),
+        (
+            "wattchmen_table_reloads_total",
+            "Energy-table hot reloads from disk.",
+            c.table_reloads,
+        ),
+        (
+            "wattchmen_profile_cache_hits_total",
+            "Memoized profile_app lookups served from cache.",
+            c.profile_cache_hits,
+        ),
+        (
+            "wattchmen_profile_cache_misses_total",
+            "profile_app computations on cache miss.",
+            c.profile_cache_misses,
+        ),
+    ];
+    for (name, help, value) in families {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"
+        ));
+    }
+    out
 }
 
 pub fn parse_mode(s: &str) -> Result<Mode, String> {
@@ -78,8 +131,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             })
         }
         "status" => Ok(Request::Status),
+        "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
-        other => Err(format!("unknown cmd '{other}' (predict|status|shutdown)")),
+        other => Err(format!(
+            "unknown cmd '{other}' (predict|status|metrics|shutdown)"
+        )),
     }
 }
 
@@ -127,6 +183,20 @@ pub fn prediction_json(p: &Prediction) -> Json {
             ),
         ),
         ("text", Json::Str(render_line(p))),
+    ])
+}
+
+/// Wrap a Prometheus exposition body for the JSON-per-line wire: scrapers
+/// behind the TCP protocol extract `body` and serve it under the declared
+/// content type.
+pub fn metrics_json(body: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "content_type",
+            Json::Str("text/plain; version=0.0.4".into()),
+        ),
+        ("body", Json::Str(body.into())),
     ])
 }
 
@@ -207,9 +277,50 @@ mod tests {
             Request::Status
         ));
         assert!(matches!(
+            parse_request(r#"{"cmd":"metrics"}"#).unwrap(),
+            Request::Metrics
+        ));
+        assert!(matches!(
             parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
             Request::Shutdown
         ));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_exposition_format() {
+        let c = ServiceCounters {
+            served: 12,
+            batched_predict_calls: 3,
+            table_reloads: 1,
+            profile_cache_hits: 10,
+            profile_cache_misses: 2,
+        };
+        let text = prometheus_text(&c);
+        // One HELP + TYPE + sample line per family, counters only.
+        assert_eq!(text.lines().count(), 15, "{text}");
+        assert!(text.contains(
+            "# HELP wattchmen_predictions_served_total Predict requests answered successfully.\n\
+             # TYPE wattchmen_predictions_served_total counter\n\
+             wattchmen_predictions_served_total 12\n"
+        ));
+        assert!(text.contains("wattchmen_batched_predict_calls_total 3\n"));
+        assert!(text.contains("wattchmen_table_reloads_total 1\n"));
+        assert!(text.contains("wattchmen_profile_cache_hits_total 10\n"));
+        assert!(text.contains("wattchmen_profile_cache_misses_total 2\n"));
+        assert!(text.ends_with('\n'));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with("wattchmen_"),
+                "stray line {line:?}"
+            );
+        }
+        // The JSON wrapper carries the body verbatim.
+        let j = metrics_json(&text);
+        assert_eq!(j.get("body").unwrap().as_str(), Some(text.as_str()));
+        assert_eq!(
+            j.get("content_type").unwrap().as_str(),
+            Some("text/plain; version=0.0.4")
+        );
     }
 
     #[test]

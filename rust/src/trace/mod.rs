@@ -60,6 +60,14 @@ pub fn steady_window(powers: &[f64], cov_threshold: f64) -> SteadyWindow {
     window
 }
 
+/// Downsampling stride that yields ≈`points` samples from a trace of
+/// `len` samples — never zero, so it is always a legal `step_by` argument
+/// (a trace shorter than `points` renders every sample).  The report's
+/// bar renderers (Fig 4, Fig 12) thin their traces through this.
+pub fn sample_stride(len: usize, points: usize) -> usize {
+    (len / points.max(1)).max(1)
+}
+
 /// Energy + mean power over a window by native trapezoidal integration.
 pub fn integrate_native(powers: &[f64], window: SteadyWindow, dt: f64) -> (f64, f64) {
     let slice = &powers[window.start..window.end];
@@ -143,6 +151,23 @@ mod tests {
         let p = vec![50.0; 5];
         let w = steady_window(&p, 0.02);
         assert_eq!((w.start, w.end), (0, 5));
+    }
+
+    #[test]
+    fn short_trace_stride_is_never_zero() {
+        // Regression: Fig 4 did `step_by(powers.len() / 18)`, which
+        // panics (`step_by(0)`) for any trace shorter than 18 samples.
+        assert_eq!(sample_stride(1800, 18), 100);
+        assert_eq!(sample_stride(18, 18), 1);
+        assert_eq!(sample_stride(5, 18), 1);
+        assert_eq!(sample_stride(0, 18), 1);
+        assert_eq!(sample_stride(100, 0), 100);
+        // A short trace renders every sample instead of panicking.
+        let short = vec![1.0; 5];
+        let picked: Vec<usize> = (0..short.len())
+            .step_by(sample_stride(short.len(), 18))
+            .collect();
+        assert_eq!(picked, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

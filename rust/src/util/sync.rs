@@ -1,0 +1,406 @@
+//! Thread-shareable memoization primitives (std-only; the offline build
+//! has neither `dashmap` nor `once_map` — DESIGN.md
+//! §Offline-crate-substitutions).
+//!
+//! [`ShardedCache`] is the report pipeline's cache substrate: a
+//! lock-sharded map with a **per-key in-flight guard**.  The first caller
+//! of a key becomes its builder and computes the value outside every map
+//! lock; concurrent callers of the *same* key block on that key's slot
+//! (a `Condvar`) until the builder publishes, while callers of *other*
+//! keys — even ones hashing into the same shard — proceed immediately.
+//! A figure that needs the V100 table while another figure is training it
+//! waits on that table, not on a global lock.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Number of independent map locks.  Contention on the *maps* is only the
+/// brief get-or-insert of a slot, so a small power of two suffices.
+const SHARDS: usize = 16;
+
+enum SlotState<V> {
+    /// A builder is computing the value; waiters sleep on the condvar.
+    Building,
+    /// The builder failed; waiters receive the error, and the slot has
+    /// been unlinked from the map so a later caller may retry.
+    Failed(String),
+    Ready(V),
+}
+
+struct Slot<V> {
+    state: Mutex<SlotState<V>>,
+    ready: Condvar,
+}
+
+/// Lock-sharded, in-flight-guarded memo cache.  `V` is cloned out on
+/// every hit, so store `Arc<T>` for anything non-trivial.
+pub struct ShardedCache<K, V> {
+    shards: Vec<Mutex<HashMap<K, std::sync::Arc<Slot<V>>>>>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
+    pub fn new() -> ShardedCache<K, V> {
+        ShardedCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<HashMap<K, std::sync::Arc<Slot<V>>>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Number of successfully cached keys (in-flight builds excluded).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .values()
+                    .filter(|slot| {
+                        matches!(*slot.state.lock().unwrap(), SlotState::Ready(_))
+                    })
+                    .count()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Get the cached value for `key`, or build it with `init`.
+    ///
+    /// Exactly one caller runs `init` per key (unless it errors, in which
+    /// case the key is vacated and a later caller retries); every
+    /// concurrent caller of the same key blocks until the builder
+    /// finishes and then shares its result.  `init` runs with no cache
+    /// lock held — re-entrant builds of *different* keys are fine, a
+    /// re-entrant build of the *same* key would deadlock (as any
+    /// self-referential memo must).
+    pub fn get_or_try_init<E: std::fmt::Display>(
+        &self,
+        key: &K,
+        init: impl FnOnce() -> Result<V, E>,
+    ) -> Result<V, String> {
+        // Fast path / builder election.
+        let (slot, builder) = {
+            let mut map = self.shard(key).lock().unwrap();
+            match map.get(key) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    let slot = std::sync::Arc::new(Slot {
+                        state: Mutex::new(SlotState::Building),
+                        ready: Condvar::new(),
+                    });
+                    map.insert(key.clone(), slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+
+        if builder {
+            // Unwind guard: if `init` panics, fail + vacate the slot so
+            // waiters surface an error instead of sleeping forever (the
+            // panic still propagates to the builder's thread).
+            struct Abort<'a, K: Eq + Hash + Clone, V: Clone> {
+                cache: &'a ShardedCache<K, V>,
+                key: &'a K,
+                slot: &'a std::sync::Arc<Slot<V>>,
+                armed: bool,
+            }
+            impl<K: Eq + Hash + Clone, V: Clone> Drop for Abort<'_, K, V> {
+                fn drop(&mut self) {
+                    if !self.armed {
+                        return;
+                    }
+                    let mut state = self.slot.state.lock().unwrap();
+                    *state = SlotState::Failed("cache builder panicked".into());
+                    self.slot.ready.notify_all();
+                    drop(state);
+                    self.cache.shard(self.key).lock().unwrap().remove(self.key);
+                }
+            }
+            let mut guard = Abort {
+                cache: self,
+                key,
+                slot: &slot,
+                armed: true,
+            };
+            let built = init();
+            guard.armed = false;
+            let mut state = slot.state.lock().unwrap();
+            match built {
+                Ok(v) => {
+                    *state = SlotState::Ready(v.clone());
+                    slot.ready.notify_all();
+                    Ok(v)
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    *state = SlotState::Failed(msg.clone());
+                    slot.ready.notify_all();
+                    drop(state);
+                    // Vacate the key so the next caller can retry; waiters
+                    // already holding this slot still see the failure.
+                    self.shard(key).lock().unwrap().remove(key);
+                    Err(msg)
+                }
+            }
+        } else {
+            let mut state = slot.state.lock().unwrap();
+            while matches!(*state, SlotState::Building) {
+                state = slot.ready.wait(state).unwrap();
+            }
+            match &*state {
+                SlotState::Ready(v) => Ok(v.clone()),
+                SlotState::Failed(e) => Err(e.clone()),
+                SlotState::Building => unreachable!(),
+            }
+        }
+    }
+
+    /// Peek without building.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let slot = self.shard(key).lock().unwrap().get(key).cloned()?;
+        let state = slot.state.lock().unwrap();
+        match &*state {
+            SlotState::Ready(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for ShardedCache<K, V> {
+    fn default() -> Self {
+        ShardedCache::new()
+    }
+}
+
+/// Counting semaphore (std-only): bounds how many threads run a section
+/// concurrently.  The report pipeline uses one to cap total simulator
+/// threads at host parallelism no matter how many figure drivers fan
+/// measurement out at once.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    available: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Semaphore {
+        Semaphore {
+            permits: Mutex::new(permits.max(1)),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Block until a permit is free; the permit is released on drop.
+    pub fn acquire(&self) -> SemaphorePermit<'_> {
+        let mut permits = self.permits.lock().unwrap();
+        while *permits == 0 {
+            permits = self.available.wait(permits).unwrap();
+        }
+        *permits -= 1;
+        SemaphorePermit(self)
+    }
+}
+
+pub struct SemaphorePermit<'a>(&'a Semaphore);
+
+impl Drop for SemaphorePermit<'_> {
+    fn drop(&mut self) {
+        *self.0.permits.lock().unwrap() += 1;
+        self.0.available.notify_one();
+    }
+}
+
+/// Order-preserving parallel map over `0..n` with a bounded worker pool:
+/// result `i` is `f(i)`, regardless of which worker ran it or when it
+/// finished.  Shared by the measurement fan-out (and any future
+/// embarrassingly-parallel report stage).
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.min(n).max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let (next_ref, slots_ref, f_ref) = (&next, &slots, &f);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let v = f_ref(i);
+                *slots_ref[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Barrier};
+    use std::thread;
+
+    #[test]
+    fn builds_once_under_contention() {
+        let cache = Arc::new(ShardedCache::<u64, u64>::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (cache, builds, barrier) = (cache.clone(), builds.clone(), barrier.clone());
+            handles.push(thread::spawn(move || {
+                barrier.wait();
+                cache
+                    .get_or_try_init(&7, || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        thread::sleep(std::time::Duration::from_millis(20));
+                        Ok::<_, String>(42)
+                    })
+                    .unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.get(&7), Some(42));
+        assert_eq!(cache.get(&8), None);
+    }
+
+    #[test]
+    fn distinct_keys_build_concurrently() {
+        // Two builders rendezvous *inside* their init closures: this can
+        // only complete if the cache does not serialize different keys.
+        let cache = Arc::new(ShardedCache::<u64, u64>::new());
+        let rendezvous = Arc::new(Barrier::new(2));
+        let mut handles = Vec::new();
+        for k in [1u64, 2u64] {
+            let (cache, rendezvous) = (cache.clone(), rendezvous.clone());
+            handles.push(thread::spawn(move || {
+                cache
+                    .get_or_try_init(&k, || {
+                        rendezvous.wait();
+                        Ok::<_, String>(k * 10)
+                    })
+                    .unwrap()
+            }));
+        }
+        let got: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got, vec![10, 20]);
+    }
+
+    #[test]
+    fn failed_build_vacates_the_key() {
+        let cache = ShardedCache::<u64, u64>::new();
+        let err = cache
+            .get_or_try_init(&3, || Err::<u64, _>("boom"))
+            .unwrap_err();
+        assert_eq!(err, "boom");
+        assert_eq!(cache.len(), 0);
+        // A later caller retries and succeeds.
+        assert_eq!(cache.get_or_try_init(&3, || Ok::<_, String>(9)), Ok(9));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn builder_panic_fails_waiters_instead_of_hanging_them() {
+        let cache = Arc::new(ShardedCache::<u64, u64>::new());
+        let entered = Arc::new(Barrier::new(2));
+        let builder = {
+            let (cache, entered) = (cache.clone(), entered.clone());
+            thread::spawn(move || {
+                cache.get_or_try_init(&11, || -> Result<u64, String> {
+                    entered.wait();
+                    thread::sleep(std::time::Duration::from_millis(30));
+                    panic!("builder exploded");
+                })
+            })
+        };
+        entered.wait();
+        // Queued behind the panicking builder: must NOT block forever.
+        let waited = cache.get_or_try_init(&11, || Ok::<_, String>(5));
+        assert!(builder.join().is_err(), "panic must propagate to builder");
+        match waited {
+            Err(e) => assert!(e.contains("panicked"), "{e}"),
+            Ok(v) => assert_eq!(v, 5), // raced past the vacated slot
+        }
+        // The key was vacated; a later caller rebuilds cleanly.
+        assert_eq!(cache.get_or_try_init(&11, || Ok::<_, String>(6)), Ok(6));
+    }
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let sem = Arc::new(Semaphore::new(2));
+        let inside = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let (sem, inside, peak) = (sem.clone(), inside.clone(), peak.clone());
+            handles.push(thread::spawn(move || {
+                let _permit = sem.acquire();
+                let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                thread::sleep(std::time::Duration::from_millis(10));
+                inside.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 2, "peak concurrency {peak} exceeded 2 permits");
+        assert!(peak >= 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(17, 4, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn waiters_see_builder_failure() {
+        let cache = Arc::new(ShardedCache::<u64, u64>::new());
+        let entered = Arc::new(Barrier::new(2));
+        let builder = {
+            let (cache, entered) = (cache.clone(), entered.clone());
+            thread::spawn(move || {
+                cache.get_or_try_init(&5, || {
+                    entered.wait(); // waiter is about to queue behind us
+                    thread::sleep(std::time::Duration::from_millis(30));
+                    Err::<u64, _>("late failure")
+                })
+            })
+        };
+        entered.wait();
+        let waited = cache.get_or_try_init(&5, || Ok::<_, String>(1));
+        let built = builder.join().unwrap();
+        assert!(built.is_err());
+        // The waiter either observed the failure or (having raced past the
+        // vacated slot) rebuilt successfully — both are correct.
+        match waited {
+            Err(e) => assert_eq!(e, "late failure"),
+            Ok(v) => assert_eq!(v, 1),
+        }
+    }
+}
