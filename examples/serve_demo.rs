@@ -1,7 +1,9 @@
 //! serve_demo: boot the batched prediction service, fire a 64-request
-//! concurrent client burst at it, verify CLI parity and coalescing, and
-//! shut it down cleanly.  Exit code 0 means the full loop — bind, burst,
-//! drain, join — completed; CI runs this as the serve smoke test.
+//! concurrent client burst at it, verify CLI parity and coalescing,
+//! answer the whole suite through one `predict_all` request, and shut it
+//! down cleanly.  Exit code 0 means the full loop — bind, burst,
+//! predict_all, drain, join — completed; CI runs this as the serve smoke
+//! test.
 //!
 //!     cargo run --release --example serve_demo
 //!
@@ -96,6 +98,61 @@ fn run_burst(
     }
 }
 
+/// One `predict_all` request must answer the whole evaluation suite in a
+/// single response, each element matching the precomputed CLI result for
+/// its workload (same parity rules as the burst).
+fn run_predict_all(
+    addr: std::net::SocketAddr,
+    names: &[String],
+    expected: &Arc<BTreeMap<String, (String, f64)>>,
+    exact: bool,
+) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let req = protocol::predict_all_request("cloudlab-v100", Mode::Pred);
+    writer.write_all(req.to_string_compact().as_bytes())?;
+    writer.write_all(b"\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let resp = parse(line.trim()).map_err(anyhow::Error::msg)?;
+    if resp.get("ok") != Some(&Json::Bool(true)) {
+        bail!("predict_all error response: {line}");
+    }
+    let preds = resp
+        .get("predictions")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    if preds.len() != names.len() {
+        bail!(
+            "predict_all answered {} of {} workloads",
+            preds.len(),
+            names.len()
+        );
+    }
+    for p in preds {
+        let workload = p.get("workload").and_then(Json::as_str).unwrap_or("");
+        let (cli_line, cli_energy) = expected
+            .get(workload)
+            .ok_or_else(|| anyhow::anyhow!("unexpected workload '{workload}' in predict_all"))?;
+        let text = p.get("text").and_then(Json::as_str).unwrap_or("");
+        if exact && text != *cli_line {
+            bail!(
+                "{workload}: predict_all line diverged from the CLI\n  served: {text}\n  cli:    {cli_line}"
+            );
+        }
+        let energy = p.get("energy_j").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        if !((energy - cli_energy).abs() <= 1e-4 * cli_energy.abs().max(1.0)) {
+            bail!("{workload}: predict_all energy {energy} J vs CLI {cli_energy} J");
+        }
+    }
+    println!(
+        "predict_all answered {} workloads in one response",
+        preds.len()
+    );
+    Ok(())
+}
+
 fn send_shutdown(addr: std::net::SocketAddr) -> Result<()> {
     let stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -164,12 +221,15 @@ fn main() -> Result<()> {
         linger: Duration::from_millis(500),
         tables_dir: dir,
         default_duration_s: WORKLOAD_SECS,
+        ..ServeConfig::default()
     })?;
     let addr = server.local_addr();
     println!("wattchmen serve listening on {addr}");
 
     let burst = thread::spawn(move || {
-        let result = run_burst(addr, &names, &expected, exact_parity);
+        let result = run_burst(addr, &names, &expected, exact_parity).and_then(|elapsed| {
+            run_predict_all(addr, &names, &expected, exact_parity).map(|()| elapsed)
+        });
         // Shut the server down whether or not the burst succeeded — the
         // main thread is blocked in run() until we do.
         let shutdown = send_shutdown(addr);
@@ -190,11 +250,14 @@ fn main() -> Result<()> {
         elapsed.as_secs_f64() * 1e3,
         batches
     );
-    if server.served() != BURST {
-        bail!("served {} of {BURST} burst requests", server.served());
+    // The burst plus the one predict_all suite request.
+    if server.served() != BURST + 1 {
+        bail!("served {} of {} requests", server.served(), BURST + 1);
     }
-    if batches > BURST.div_ceil(32) {
-        bail!("burst fanned out into {batches} batched calls (want ≤ {})", BURST.div_ceil(32));
+    // ≤ ⌈64/32⌉ for the burst, plus one batch for the predict_all suite.
+    let max_batches = BURST.div_ceil(32) + 1;
+    if batches > max_batches {
+        bail!("burst fanned out into {batches} batched calls (want ≤ {max_batches})");
     }
     println!("serve_demo: clean shutdown");
     Ok(())

@@ -14,6 +14,9 @@
 //!   affine_transfer      — Fig 14 transfer fit
 //!   case_study_backprop  — Fig 10/11 pipeline
 //!   serve_batch_64       — 64-request burst through `wattchmen serve`
+//!   serve_predict_all    — the whole 16-workload suite answered by ONE
+//!                          `predict_all` request (vs 64 single requests
+//!                          above; the control is predict_sweep_v100)
 //!   compare_models_v100  — memoized compare_models steady state (the
 //!                          warmup pays training+measurement once; timed
 //!                          samples are all EvalCache hits)
@@ -301,6 +304,7 @@ fn main() {
                 linger: Duration::from_millis(5),
                 tables_dir: dir,
                 default_duration_s: 90.0,
+                ..ServeConfig::default()
             })
             .unwrap(),
         );
@@ -312,6 +316,19 @@ fn main() {
             thread::spawn(move || server.run(None).unwrap())
         };
         let names: Vec<String> = suite.iter().map(|w| w.name.clone()).collect();
+        bench("serve_predict_all", 10, &mut results, || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let req = protocol::predict_all_request("cloudlab-v100", Mode::Pred);
+            writer.write_all(req.to_string_compact().as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"ok\":true"), "{line}");
+            assert!(line.contains("\"count\":16"), "{line}");
+            format!("16 workloads in 1 request, {} B response", line.len())
+        });
         bench("serve_batch_64", 5, &mut results, || {
             let mut clients = Vec::new();
             for i in 0..64 {

@@ -8,11 +8,13 @@
 //!   list                  list environments / workloads / experiments
 //!   version
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use wattchmen::cluster::ClusterCampaign;
 use wattchmen::gpusim::config::ArchConfig;
@@ -23,6 +25,7 @@ use wattchmen::report::{self, EvalCache};
 use wattchmen::runtime::Artifacts;
 use wattchmen::service::{protocol, PredictServer, ServeConfig};
 use wattchmen::util::cli::Args;
+use wattchmen::util::json::{parse as parse_json, Json};
 use wattchmen::workloads;
 
 fn load_artifacts(args: &Args) -> Option<Artifacts> {
@@ -138,7 +141,51 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `predict --remote HOST:PORT`: act as a client of a running
+/// `wattchmen serve` instead of computing locally — one `predict` request
+/// when `--workload` narrows the selection, one `predict_all` (the whole
+/// evaluation suite in a single response) otherwise.  Prints the served
+/// `text` field, which is byte-identical to the local CLI output.
+fn predict_remote(addr: &str, args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", protocol::DEFAULT_ARCH);
+    let mode = protocol::parse_mode(args.get_or("mode", "pred")).map_err(|e| anyhow!(e))?;
+    let mut req = match args.get("workload") {
+        Some(w) => protocol::predict_request(arch, w, mode),
+        None => protocol::predict_all_request(arch, mode),
+    };
+    let deadline_ms = args.get_f64("deadline-ms", 0.0).map_err(anyhow::Error::msg)?;
+    if deadline_ms > 0.0 {
+        if let Json::Obj(m) = &mut req {
+            m.insert("deadline_ms".into(), Json::Num(deadline_ms));
+        }
+    }
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writer.write_all(req.to_string_compact().as_bytes())?;
+    writer.write_all(b"\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let resp = parse_json(line.trim()).map_err(anyhow::Error::msg)?;
+    if resp.get("ok") != Some(&Json::Bool(true)) {
+        let err = resp
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("malformed server response");
+        bail!("server error: {err}");
+    }
+    let text = resp
+        .get("text")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("server response has no text field"))?;
+    println!("{text}");
+    Ok(())
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("remote") {
+        return predict_remote(addr, args);
+    }
     let arts = load_artifacts(args);
     let cfg = arch_from(args)?;
     let table_path = args
@@ -183,12 +230,22 @@ fn cmd_predict(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let arts = load_artifacts(args);
     let linger_ms = args.get_f64("linger-ms", 10.0).map_err(anyhow::Error::msg)?;
+    // --deadline-ms 0 (the default) disables the server-wide budget;
+    // per-request "deadline_ms" fields still apply.
+    let deadline_ms = args.get_f64("deadline-ms", 0.0).map_err(anyhow::Error::msg)?;
+    if !deadline_ms.is_finite() || deadline_ms < 0.0 {
+        bail!("--deadline-ms must be a non-negative finite number");
+    }
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7117").to_string(),
         workers: args.get_usize("workers", 64).map_err(anyhow::Error::msg)?,
         linger: Duration::from_micros((linger_ms * 1000.0) as u64),
         tables_dir: PathBuf::from(args.get_or("tables", ".")),
         default_duration_s: report::context::WORKLOAD_SECS,
+        queue_capacity: args.get_usize("queue", 256).map_err(anyhow::Error::msg)?,
+        deadline: (deadline_ms > 0.0).then(|| {
+            Duration::from_secs_f64(deadline_ms.min(protocol::MAX_DEADLINE_MS) / 1000.0)
+        }),
     };
     let server = PredictServer::bind(cfg)?;
     if let Some(path) = args.get("table") {
@@ -199,9 +256,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("wattchmen serve listening on {}", server.local_addr());
     server.run(arts.as_ref())?;
     println!(
-        "wattchmen serve: clean shutdown after {} predictions in {} batched predict calls",
+        "wattchmen serve: clean shutdown after {} predictions in {} batched predict calls \
+         ({} rejected, {} deadline-exceeded)",
         server.served(),
-        server.batch_calls()
+        server.batch_calls(),
+        server.rejected(),
+        server.deadline_exceeded()
     );
     Ok(())
 }
@@ -250,7 +310,10 @@ fn main() {
                  report <fig1..fig14|all> [--fast] [--seed N] [--jobs N] [--out DIR] [--no-artifacts]\n\
                  train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
                  predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred] [--breakdown]\n\
-                 serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N] [--linger-ms MS]\n\
+                 predict --remote H:P [--arch ENV] [--workload NAME] [--mode direct|pred] [--deadline-ms MS]\n\
+                         (no --workload: one predict_all request for the whole suite)\n\
+                 serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N]\n\
+                         [--linger-ms MS] [--queue N] [--deadline-ms MS]\n\
                  list"
             );
             std::process::exit(2);

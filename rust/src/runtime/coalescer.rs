@@ -20,6 +20,11 @@
 //!
 //! Worker threads only enqueue jobs and block on their reply channels;
 //! the run loop exits once every `Sender<Job>` clone has been dropped.
+//! A [`PredictJob`] may carry an absolute deadline: expired jobs are shed
+//! with [`JobError::DeadlineExceeded`] at execution time (their batchmates
+//! are unaffected), and [`submit_suite_and_wait_deadline`] bounds the
+//! waiter's blocking too, so a coordinator pinned by a slow exec job
+//! cannot hang a deadlined request past its budget.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -29,6 +34,27 @@ use std::time::{Duration, Instant};
 use crate::gpusim::profiler::KernelProfile;
 use crate::model::{predict_many, EnergyTable, Mode, Prediction};
 use crate::runtime::Artifacts;
+use crate::util::sync::{lock_unpoisoned, OwnedSemaphorePermit};
+
+/// Why a queued prediction job failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// The job outlived its deadline budget: shed by the coordinator
+    /// before execution, or its waiter gave up first.  Either way the
+    /// rest of the batch is unaffected.
+    DeadlineExceeded,
+    /// The batched predict (or the submission itself) failed.
+    Failed(String),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            JobError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
 
 /// One queued prediction request: a batch of apps against one table, with
 /// a reply channel for the whole batch (in submission order).
@@ -36,7 +62,17 @@ pub struct PredictJob {
     pub table: Arc<EnergyTable>,
     pub mode: Mode,
     pub apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
-    pub reply: Sender<Result<Vec<Prediction>, String>>,
+    /// Absolute deadline; `None` means no budget.  A job still queued
+    /// when its deadline passes is shed with [`JobError::DeadlineExceeded`]
+    /// instead of joining its batch — a stale reply is useless to the
+    /// waiter (who has already timed out) and would only slow the batch.
+    pub deadline: Option<Instant>,
+    /// Admission token released when the coordinator consumes this job
+    /// (executed or shed) — NOT when the waiter gives up.  This is what
+    /// makes the serve queue genuinely bounded: an abandoned job keeps
+    /// its capacity slot occupied until it actually leaves the queue.
+    pub permit: Option<OwnedSemaphorePermit>,
+    pub reply: Sender<Result<Vec<Prediction>, JobError>>,
 }
 
 /// A closure to run on the coordinator thread, with the artifacts.
@@ -80,10 +116,7 @@ impl Coalescer {
     /// immediately (or, if they arrive during a linger window, right
     /// after that batch executes).
     pub fn run(&self, arts: Option<&Artifacts>) {
-        let rx = self
-            .rx
-            .lock()
-            .unwrap()
+        let rx = lock_unpoisoned(&self.rx)
             .take()
             .expect("Coalescer::run called twice");
         while let Ok(job) = rx.recv() {
@@ -116,10 +149,23 @@ impl Coalescer {
     }
 
     fn execute(&self, jobs: Vec<PredictJob>, arts: Option<&Artifacts>) {
+        // Shed expired jobs first: a deadline that passed while the job
+        // lingered (or while an exec job held the coordinator) fails that
+        // job alone; the live remainder of the batch proceeds normally.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            match job.deadline {
+                Some(d) if d <= now => {
+                    let _ = job.reply.send(Err(JobError::DeadlineExceeded));
+                }
+                _ => live.push(job),
+            }
+        }
         // Group by (table identity, mode): requests answered from the same
         // cached table instance batch into one predict_many call.
         let mut groups: Vec<(usize, Mode, Vec<PredictJob>)> = Vec::new();
-        for job in jobs {
+        for job in live {
             let key = Arc::as_ptr(&job.table) as usize;
             match groups.iter().position(|(k, m, _)| *k == key && *m == job.mode) {
                 Some(i) => groups[i].2.push(job),
@@ -145,7 +191,7 @@ impl Coalescer {
                 Err(e) => {
                     let msg = format!("batched predict failed: {e:#}");
                     for job in &group {
-                        let _ = job.reply.send(Err(msg.clone()));
+                        let _ = job.reply.send(Err(JobError::Failed(msg.clone())));
                     }
                 }
             }
@@ -168,24 +214,61 @@ pub fn submit_and_wait(
     Ok(preds.remove(0))
 }
 
-/// Submit a multi-app suite against one table and block for the batch.
+/// Submit a multi-app suite against one table and block for the batch
+/// (no deadline; errors flattened to strings for the report pipeline).
 pub fn submit_suite_and_wait(
     jobs: &Sender<Job>,
     table: Arc<EnergyTable>,
     apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
     mode: Mode,
 ) -> Result<Vec<Prediction>, String> {
+    submit_suite_and_wait_deadline(jobs, table, apps, mode, None, None).map_err(|e| e.to_string())
+}
+
+/// Deadline-aware submission: block for the batch at most until
+/// `deadline`.  The wait side and the coordinator both enforce the
+/// budget — whichever notices first wins, and the (at most one) reply is
+/// consumed or dropped harmlessly.  A waiter that times out leaves its
+/// job behind; the coordinator sheds it at execution time instead of
+/// predicting into a dropped channel — and `permit` (the serve queue's
+/// admission token) rides with the job so the capacity slot stays
+/// occupied exactly as long as the queue entry exists.
+pub fn submit_suite_and_wait_deadline(
+    jobs: &Sender<Job>,
+    table: Arc<EnergyTable>,
+    apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
+    mode: Mode,
+    deadline: Option<Instant>,
+    permit: Option<OwnedSemaphorePermit>,
+) -> Result<Vec<Prediction>, JobError> {
     let (reply, result) = mpsc::channel();
     jobs.send(Job::Predict(PredictJob {
         table,
         mode,
         apps,
+        deadline,
+        permit,
         reply,
     }))
-    .map_err(|_| "prediction service is shutting down".to_string())?;
-    result
-        .recv()
-        .map_err(|_| "prediction service dropped the request".to_string())?
+    .map_err(|_| JobError::Failed("prediction service is shutting down".to_string()))?;
+    let received = match deadline {
+        None => result
+            .recv()
+            .map_err(|_| JobError::Failed("prediction service dropped the request".to_string())),
+        Some(d) => {
+            // recv_timeout(0) still drains an already-delivered reply, so
+            // an expired-on-arrival budget cannot drop a ready result.
+            let left = d.saturating_duration_since(Instant::now());
+            match result.recv_timeout(left) {
+                Ok(r) => Ok(r),
+                Err(RecvTimeoutError::Timeout) => Err(JobError::DeadlineExceeded),
+                Err(RecvTimeoutError::Disconnected) => Err(JobError::Failed(
+                    "prediction service dropped the request".to_string(),
+                )),
+            }
+        }
+    };
+    received?
 }
 
 /// Run `f` on the coordinator thread (where the artifacts live) and block
@@ -352,6 +435,106 @@ mod tests {
         let want = predict_app(&table, "hotspot", &pa, Mode::Pred);
         assert_eq!(results[0][0].energy_j.to_bits(), want.energy_j.to_bits());
         assert_eq!(results[1][0].energy_j.to_bits(), want.energy_j.to_bits());
+    }
+
+    #[test]
+    fn expired_job_is_shed_without_killing_its_batch() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
+        let profiles = Arc::new(profile_app(&cfg, &w.kernels));
+        let table = Arc::new(test_table());
+
+        // Long linger: both jobs land in ONE batch, and by execution time
+        // the expired one's deadline (set to "now" at submission) has
+        // certainly passed.
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(100));
+        let coal = Arc::new(coal);
+        let runner = {
+            let coal = coal.clone();
+            thread::spawn(move || coal.run(None))
+        };
+
+        let (expired_reply, expired_result) = mpsc::channel();
+        jobs.send(Job::Predict(PredictJob {
+            table: table.clone(),
+            mode: Mode::Pred,
+            apps: vec![("hotspot".into(), profiles.clone())],
+            deadline: Some(Instant::now()),
+            permit: None,
+            reply: expired_reply,
+        }))
+        .unwrap();
+        let healthy = {
+            let (jobs, table, profiles) = (jobs.clone(), table.clone(), profiles.clone());
+            thread::spawn(move || {
+                submit_and_wait(&jobs, table, "hotspot".into(), profiles, Mode::Pred)
+            })
+        };
+        drop(jobs);
+
+        // The expired job fails alone...
+        assert_eq!(
+            expired_result.recv().unwrap().unwrap_err(),
+            JobError::DeadlineExceeded
+        );
+        // ...while its batchmate comes back intact, bit-exact.
+        let got = healthy.join().unwrap().unwrap();
+        let want = predict_app(&table, "hotspot", &profiles, Mode::Pred);
+        assert_eq!(got.energy_j.to_bits(), want.energy_j.to_bits());
+        runner.join().unwrap();
+        // Only the healthy job reached predict_many.
+        assert_eq!(coal.batch_calls(), 1);
+    }
+
+    #[test]
+    fn queued_job_holds_its_admission_permit_until_the_coordinator_consumes_it() {
+        use crate::util::sync::Semaphore;
+        let sem = Arc::new(Semaphore::new(1));
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(1));
+        let permit = sem.try_acquire_owned().unwrap();
+        let (reply, _result) = mpsc::channel();
+        jobs.send(Job::Predict(PredictJob {
+            table: Arc::new(test_table()),
+            mode: Mode::Pred,
+            apps: Vec::new(),
+            deadline: Some(Instant::now()), // expired: will be shed
+            permit: Some(permit),
+            reply,
+        }))
+        .unwrap();
+        // The abandoned job still occupies its capacity slot while queued
+        // (this is what bounds the serve queue under waiter timeouts)...
+        assert!(sem.try_acquire_owned().is_none());
+        // ...and releases it only when the coordinator sheds the job.
+        let runner = thread::spawn(move || coal.run(None));
+        drop(jobs);
+        runner.join().unwrap();
+        assert!(sem.try_acquire_owned().is_some());
+    }
+
+    #[test]
+    fn waiter_times_out_when_the_coordinator_is_busy() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
+        let profiles = Arc::new(profile_app(&cfg, &w.kernels));
+        let table = Arc::new(test_table());
+
+        // Nobody ever runs this coalescer — the stand-in for a coordinator
+        // pinned by a slow exec job.  The waiter must give up at its
+        // deadline instead of hanging.
+        let (_coal, jobs) = Coalescer::new(Duration::from_millis(1));
+        let t0 = Instant::now();
+        let err = submit_suite_and_wait_deadline(
+            &jobs,
+            table,
+            vec![("hotspot".into(), profiles)],
+            Mode::Pred,
+            Some(Instant::now() + Duration::from_millis(30)),
+            None,
+        )
+        .unwrap_err();
+        assert_eq!(err, JobError::DeadlineExceeded);
+        assert!(t0.elapsed() >= Duration::from_millis(30));
     }
 
     #[test]

@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::profiler::{profile_app, KernelProfile};
 use crate::report::scaled_workload;
+use crate::util::sync::lock_unpoisoned;
 use crate::workloads;
 
 type Key = (String, String, u64);
@@ -65,7 +66,10 @@ impl ProfileCache {
             workload.to_string(),
             duration_s.to_bits(),
         );
-        if let Some(p) = self.cache.lock().unwrap().get(&key) {
+        // Poison-tolerant locks throughout: the cache is on the request
+        // path, and a panicking worker elsewhere must not turn every
+        // later request into a poison-panic.
+        if let Some(p) = lock_unpoisoned(&self.cache).get(&key) {
             self.hits.fetch_add(1, Ordering::SeqCst);
             return Ok(p.clone());
         }
@@ -83,7 +87,7 @@ impl ProfileCache {
         let profiles = Arc::new(profile_app(cfg, &scaled.kernels));
         // A concurrent miss may have raced us here; either instance is
         // identical, last insert wins.
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_unpoisoned(&self.cache);
         if cache.len() >= MAX_ENTRIES {
             cache.clear();
         }

@@ -4,6 +4,6 @@
 //! `service::coalescer::...` paths keep working through this module.
 
 pub use crate::runtime::coalescer::{
-    exec_on_coordinator, submit_and_wait, submit_suite_and_wait, Coalescer, ExecJob, Job,
-    PredictJob,
+    exec_on_coordinator, submit_and_wait, submit_suite_and_wait, submit_suite_and_wait_deadline,
+    Coalescer, ExecJob, Job, JobError, PredictJob,
 };

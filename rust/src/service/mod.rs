@@ -17,6 +17,18 @@
 //! Every layer shares the CLI's exact pipeline (suite lookup →
 //! `scaled_workload` → `profile_app` → `predict_many` → `render_line`),
 //! so a served prediction is byte-identical to `wattchmen predict`.
+//!
+//! Overload safety (see `protocol` for the wire shapes): admission to
+//! the coalescer queue is bounded by a [`Semaphore`] — a request that
+//! finds the queue full is shed immediately with an `overloaded`
+//! response instead of growing the queue without bound — and every
+//! predict-family request carries an optional deadline budget enforced
+//! on both sides of the queue (the waiting worker *and* the
+//! coordinator), so a slow batch or a pinned coordinator cannot hang a
+//! request past its budget.  Every predict-family request that parses
+//! lands in exactly one of `served` / `rejected` / `deadline_exceeded` /
+//! `request_errors` (malformed lines are answered with an error and
+//! counted by none — they never reach admission).
 
 pub mod cache;
 pub mod coalescer;
@@ -24,7 +36,7 @@ pub mod protocol;
 pub mod registry;
 
 pub use cache::ProfileCache;
-pub use coalescer::{submit_and_wait, Coalescer, Job, PredictJob};
+pub use coalescer::{submit_and_wait, Coalescer, ExecJob, Job, JobError, PredictJob};
 pub use registry::TableRegistry;
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -34,15 +46,18 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::gpusim::config::ArchConfig;
-use crate::model::{Mode, Prediction};
+use crate::model::{EnergyTable, Mode, Prediction};
 use crate::report::context::WORKLOAD_SECS;
+use crate::runtime::coalescer::submit_suite_and_wait_deadline;
 use crate::runtime::Artifacts;
 use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, OwnedSemaphorePermit, Semaphore};
+use crate::workloads;
 
 use protocol::Request;
 
@@ -62,6 +77,17 @@ pub struct ServeConfig {
     /// Workload scaling target used when a request omits `duration_s`
     /// (the CLI's measurement protocol, for byte-identical parity).
     pub default_duration_s: f64,
+    /// Bound on admitted predict-family requests whose jobs have not yet
+    /// been consumed by the coordinator (the permit rides inside the
+    /// queued job, so even a request whose waiter timed out keeps its
+    /// slot until the job leaves the queue); clamped to ≥ 1.  Excess
+    /// requests are shed with an `overloaded` response.
+    pub queue_capacity: usize,
+    /// Server-wide deadline budget per predict-family request; `None`
+    /// disables.  A request's `deadline_ms` field may only *tighten* it
+    /// (the effective budget is the minimum of the two) — a client must
+    /// not be able to hold a queue slot past the operator's ceiling.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +98,8 @@ impl Default for ServeConfig {
             linger: Duration::from_millis(10),
             tables_dir: PathBuf::from("."),
             default_duration_s: WORKLOAD_SECS,
+            queue_capacity: 256,
+            deadline: None,
         }
     }
 }
@@ -82,9 +110,24 @@ struct Shared {
     registry: TableRegistry,
     profiles: ProfileCache,
     coalescer: Coalescer,
+    /// Admission bound over the coalescer queue: a permit is taken at
+    /// admission, rides inside the [`PredictJob`], and is released when
+    /// the coordinator consumes the job (executed or shed).
+    queue: Arc<Semaphore>,
+    /// Embedder-facing clone of the coalescer's job sender (for
+    /// [`PredictServer::coordinator_handle`]); dropped at shutdown so
+    /// the coalescer can drain.
+    jobs_tx: Mutex<Option<Sender<Job>>>,
     shutdown: AtomicBool,
     served: AtomicUsize,
+    rejected: AtomicUsize,
+    deadline_exceeded: AtomicUsize,
+    request_errors: AtomicUsize,
     default_duration_s: f64,
+    default_deadline: Option<Duration>,
+    /// Retry hint shipped in `overloaded` responses: the linger window,
+    /// i.e. one batch's worth of drain time.
+    retry_after_ms: u64,
 }
 
 pub struct PredictServer {
@@ -105,9 +148,16 @@ impl PredictServer {
             registry: TableRegistry::new(cfg.tables_dir),
             profiles: ProfileCache::new(),
             coalescer,
+            queue: Arc::new(Semaphore::new(cfg.queue_capacity)),
+            jobs_tx: Mutex::new(Some(jobs_tx.clone())),
             shutdown: AtomicBool::new(false),
             served: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            deadline_exceeded: AtomicUsize::new(0),
+            request_errors: AtomicUsize::new(0),
             default_duration_s: cfg.default_duration_s,
+            default_deadline: cfg.deadline,
+            retry_after_ms: cfg.linger.as_millis().max(1) as u64,
         });
 
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
@@ -118,14 +168,16 @@ impl PredictServer {
             let conn_rx = conn_rx.clone();
             let jobs_tx = jobs_tx.clone();
             handles.push(thread::spawn(move || loop {
-                let conn = conn_rx.lock().unwrap().recv();
+                let conn = lock_unpoisoned(&conn_rx).recv();
                 let Ok(stream) = conn else { break };
                 let _ = handle_conn(stream, &shared, &jobs_tx);
             }));
         }
-        // jobs_tx's original drops here: once the acceptor exits and the
-        // workers drain, the coalescer's receiver disconnects and run()
-        // returns — that IS clean shutdown.
+        // jobs_tx's original drops here; the surviving clones are the
+        // workers' (dropped as they drain after the acceptor exits) and
+        // the Shared slot (taken by the shutdown request), after which
+        // the coalescer's receiver disconnects and run() returns — that
+        // IS clean shutdown.
         // Non-blocking accept loop so the acceptor can observe the
         // shutdown flag regardless of bind address or platform (a
         // wake-by-self-connect would not reach e.g. an 0.0.0.0 bind
@@ -183,13 +235,37 @@ impl PredictServer {
         self.shared.served.load(Ordering::SeqCst)
     }
 
+    /// Requests shed with an `overloaded` response (queue full).
+    pub fn rejected(&self) -> usize {
+        self.shared.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Requests that missed their deadline budget.
+    pub fn deadline_exceeded(&self) -> usize {
+        self.shared.deadline_exceeded.load(Ordering::SeqCst)
+    }
+
+    /// Requests answered with a non-deadline, non-overload error.
+    pub fn request_errors(&self) -> usize {
+        self.shared.request_errors.load(Ordering::SeqCst)
+    }
+
+    /// Clone of the coalescer's job sender: lets an embedder (or the
+    /// soak tests) run [`ExecJob`]s on the coordinator thread alongside
+    /// live traffic.  `None` once shutdown has begun.  The coalescer
+    /// drains only after every clone is dropped — holders must not
+    /// outlive the shutdown they expect to observe.
+    pub fn coordinator_handle(&self) -> Option<Sender<Job>> {
+        lock_unpoisoned(&self.shared.jobs_tx).clone()
+    }
+
     /// Answer requests until a `shutdown` request arrives, then join every
     /// thread.  Runs the coalescer on the calling thread — the PJRT
     /// artifacts are not Sync, so they stay with the coordinator (the same
     /// design as the cluster campaign).
     pub fn run(&self, arts: Option<&Artifacts>) -> Result<()> {
         self.shared.coalescer.run(arts);
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in lock_unpoisoned(&self.handles).drain(..) {
             let _ = h.join();
         }
         Ok(())
@@ -197,8 +273,9 @@ impl PredictServer {
 }
 
 /// Largest accepted request line; a predict request is <200 bytes, so
-/// 64 KiB is generous while bounding per-connection memory.
-const MAX_REQUEST_BYTES: usize = 64 * 1024;
+/// 64 KiB is generous while bounding per-connection memory.  (Public so
+/// the conformance tests probe the real boundary.)
+pub const MAX_REQUEST_BYTES: usize = 64 * 1024;
 
 fn handle_conn(
     stream: TcpStream,
@@ -262,6 +339,10 @@ fn handle_conn(
 /// Build the response for one request line; the bool asks the connection
 /// loop to close afterwards.
 fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
+    // Admission time: deadlines and elapsed_ms are measured from here, so
+    // the budget covers parsing, table/profile resolution, queueing, and
+    // the batch itself.
+    let t0 = Instant::now();
     match protocol::parse_request(request) {
         Err(e) => (protocol::error_json(&e), false),
         Ok(Request::Status) => (status_json(shared), false),
@@ -271,8 +352,11 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
         ),
         Ok(Request::Shutdown) => {
             // The acceptor polls this flag (non-blocking accept loop) and
-            // idle connections see it via their read timeouts.
+            // idle connections see it via their read timeouts.  Dropping
+            // the embedder-facing job sender lets the coalescer drain
+            // once the workers exit.
             shared.shutdown.store(true, Ordering::SeqCst);
+            lock_unpoisoned(&shared.jobs_tx).take();
             (protocol::ack_json("shutting down"), true)
         }
         Ok(Request::Predict {
@@ -280,19 +364,86 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
             workload,
             mode,
             duration_s,
+            deadline,
         }) => {
+            let Some(permit) = shared.queue.try_acquire_owned() else {
+                shared.rejected.fetch_add(1, Ordering::SeqCst);
+                return (protocol::overloaded_json(shared.retry_after_ms), false);
+            };
             let secs = duration_s.unwrap_or(shared.default_duration_s);
-            match serve_predict(shared, jobs, &arch, &workload, mode, secs) {
+            let deadline_at =
+                effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
+            match serve_predict(shared, jobs, &arch, &workload, mode, secs, deadline_at, permit) {
                 Ok(pred) => {
                     shared.served.fetch_add(1, Ordering::SeqCst);
                     (protocol::prediction_json(&pred), false)
                 }
-                Err(e) => (protocol::error_json(&e), false),
+                Err(e) => (job_error_json(shared, e, t0), false),
+            }
+        }
+        Ok(Request::PredictAll {
+            arch,
+            mode,
+            duration_s,
+            deadline,
+        }) => {
+            let Some(permit) = shared.queue.try_acquire_owned() else {
+                shared.rejected.fetch_add(1, Ordering::SeqCst);
+                return (protocol::overloaded_json(shared.retry_after_ms), false);
+            };
+            let secs = duration_s.unwrap_or(shared.default_duration_s);
+            let deadline_at =
+                effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
+            match serve_predict_all(shared, jobs, &arch, mode, secs, deadline_at, permit) {
+                Ok(preds) => {
+                    shared.served.fetch_add(1, Ordering::SeqCst);
+                    (protocol::predict_all_json(&arch, &preds), false)
+                }
+                Err(e) => (job_error_json(shared, e, t0), false),
             }
         }
     }
 }
 
+/// The budget actually enforced: a per-request `deadline_ms` may only
+/// tighten the server-wide one — never extend it, or a hostile client
+/// could pin queue slots past the operator's ceiling.
+fn effective_deadline(requested: Option<Duration>, server: Option<Duration>) -> Option<Duration> {
+    match (requested, server) {
+        (Some(r), Some(s)) => Some(r.min(s)),
+        (r, s) => r.or(s),
+    }
+}
+
+/// Classify a failed predict-family request into exactly one counter and
+/// its structured error response.
+fn job_error_json(shared: &Shared, e: JobError, t0: Instant) -> Json {
+    match e {
+        JobError::DeadlineExceeded => {
+            shared.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
+            protocol::deadline_error_json(t0.elapsed())
+        }
+        JobError::Failed(msg) => {
+            shared.request_errors.fetch_add(1, Ordering::SeqCst);
+            protocol::error_json(&msg)
+        }
+    }
+}
+
+/// Shared resolution preamble for both predict paths: arch name → config
+/// + registry table (each failure a structured [`JobError::Failed`]).
+fn resolve_table(shared: &Shared, arch: &str) -> Result<(ArchConfig, Arc<EnergyTable>), JobError> {
+    let cfg = ArchConfig::by_name(arch).ok_or_else(|| {
+        JobError::Failed(format!("unknown arch '{arch}' (see `wattchmen list`)"))
+    })?;
+    let table = shared
+        .registry
+        .get(arch)
+        .map_err(|e| JobError::Failed(format!("{e:#}")))?;
+    Ok((cfg, table))
+}
+
+#[allow(clippy::too_many_arguments)]
 fn serve_predict(
     shared: &Shared,
     jobs: &Sender<Job>,
@@ -300,25 +451,88 @@ fn serve_predict(
     workload: &str,
     mode: Mode,
     duration_s: f64,
-) -> Result<Prediction, String> {
-    let cfg = ArchConfig::by_name(arch)
-        .ok_or_else(|| format!("unknown arch '{arch}' (see `wattchmen list`)"))?;
-    let table = shared.registry.get(arch).map_err(|e| format!("{e:#}"))?;
+    deadline: Option<Instant>,
+    permit: OwnedSemaphorePermit,
+) -> Result<Prediction, JobError> {
+    let (cfg, table) = resolve_table(shared, arch)?;
     let profiles = shared
         .profiles
         .get(&cfg, workload, duration_s)
-        .map_err(|e| format!("{e:#}"))?;
-    submit_and_wait(jobs, table, workload.to_string(), profiles, mode)
+        .map_err(|e| JobError::Failed(format!("{e:#}")))?;
+    let mut preds = submit_suite_and_wait_deadline(
+        jobs,
+        table,
+        vec![(workload.to_string(), profiles)],
+        mode,
+        deadline,
+        Some(permit),
+    )?;
+    if preds.len() != 1 {
+        return Err(JobError::Failed(format!(
+            "coalescer returned {} predictions for 1 app",
+            preds.len()
+        )));
+    }
+    Ok(preds.remove(0))
+}
+
+/// The whole evaluation suite for `arch` as ONE coalescer job — the
+/// multi-app `PredictJob` the report pipeline already uses, so a
+/// predict_all both batches with concurrent traffic and answers in one
+/// `predict_many` call.  Suite order matches `wattchmen predict` with no
+/// `--workload` filter.
+fn serve_predict_all(
+    shared: &Shared,
+    jobs: &Sender<Job>,
+    arch: &str,
+    mode: Mode,
+    duration_s: f64,
+    deadline: Option<Instant>,
+    permit: OwnedSemaphorePermit,
+) -> Result<Vec<Prediction>, JobError> {
+    let (cfg, table) = resolve_table(shared, arch)?;
+    let apps = workloads::evaluation_suite(cfg.gen)
+        .iter()
+        .map(|w| {
+            let profiles = shared
+                .profiles
+                .get(&cfg, &w.name, duration_s)
+                .map_err(|e| JobError::Failed(format!("{e:#}")))?;
+            Ok((w.name.clone(), profiles))
+        })
+        .collect::<Result<Vec<_>, JobError>>()?;
+    submit_suite_and_wait_deadline(jobs, table, apps, mode, deadline, Some(permit))
 }
 
 /// Snapshot of the service counters (shared by `status` and `metrics`).
 fn counters(shared: &Shared) -> protocol::ServiceCounters {
     protocol::ServiceCounters {
         served: shared.served.load(Ordering::SeqCst),
+        rejected: shared.rejected.load(Ordering::SeqCst),
+        deadline_exceeded: shared.deadline_exceeded.load(Ordering::SeqCst),
+        request_errors: shared.request_errors.load(Ordering::SeqCst),
         batched_predict_calls: shared.coalescer.batch_calls(),
         table_reloads: shared.registry.reloads(),
         profile_cache_hits: shared.profiles.hits(),
         profile_cache_misses: shared.profiles.misses(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_deadline_only_tightens_the_server_budget() {
+        let ms = Duration::from_millis;
+        // Client alone / server alone / neither.
+        assert_eq!(effective_deadline(Some(ms(50)), None), Some(ms(50)));
+        assert_eq!(effective_deadline(None, Some(ms(100))), Some(ms(100)));
+        assert_eq!(effective_deadline(None, None), None);
+        // Both set: minimum wins in either direction — a hostile
+        // deadline_ms must not extend the operator's ceiling.
+        assert_eq!(effective_deadline(Some(ms(50)), Some(ms(100))), Some(ms(50)));
+        assert_eq!(effective_deadline(Some(ms(86_400_000)), Some(ms(100))), Some(ms(100)));
     }
 }
 
@@ -327,6 +541,9 @@ fn status_json(shared: &Shared) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("served", Json::Num(c.served as f64)),
+        ("rejected", Json::Num(c.rejected as f64)),
+        ("deadline_exceeded", Json::Num(c.deadline_exceeded as f64)),
+        ("request_errors", Json::Num(c.request_errors as f64)),
         (
             "batched_predict_calls",
             Json::Num(c.batched_predict_calls as f64),

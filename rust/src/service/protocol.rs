@@ -1,25 +1,54 @@
 //! Wire protocol for `wattchmen serve`: newline-delimited JSON over TCP.
 //!
 //! One request per line, one response per line; a connection may pipeline
-//! any number of requests before closing.  Three commands:
+//! any number of requests before closing.  Five commands:
 //!
 //!   {"cmd":"predict","arch":"cloudlab-v100","workload":"hotspot",
 //!    "mode":"pred","duration_s":90}       → prediction (or error)
+//!   {"cmd":"predict_all","arch":"cloudlab-v100","mode":"pred"}
+//!                                         → the arch's whole evaluation
+//!                                           suite in one response: a
+//!                                           "predictions" array whose
+//!                                           elements are byte-identical
+//!                                           to the individual predict
+//!                                           responses, plus a "text"
+//!                                           field with the CLI's lines
 //!   {"cmd":"status"}                      → counters (served, batches, …)
 //!   {"cmd":"metrics"}                     → the same counters rendered in
 //!                                           Prometheus text exposition
 //!                                           format (in the "body" field)
 //!   {"cmd":"shutdown"}                    → ack, then the server drains
 //!
+//! `predict` and `predict_all` accept an optional `"deadline_ms"` field
+//! (combined with the server-wide `--deadline-ms` budget by MINIMUM — a
+//! client may tighten the operator's ceiling, never extend it): a request
+//! that cannot be answered within its budget gets
+//! `{"ok":false,"error":"deadline exceeded","elapsed_ms":…}` while the
+//! server — and the rest of the request's coalesced batch — stays
+//! healthy.  When the bounded request queue is full the server sheds load
+//! with `{"ok":false,"error":"overloaded","retry_after_ms":…}` instead of
+//! queueing without bound.  Every predict-family request that parses
+//! lands in exactly one of the `served` / `rejected` /
+//! `deadline_exceeded` / `request_errors` counters (status JSON and
+//! Prometheus text); malformed lines get an error response and count
+//! toward none.
+//!
 //! The `text` field of a predict response is byte-identical to the line
 //! `wattchmen predict` prints for the same workload — both render through
 //! [`render_line`], and both compute through `model::predict_many`.
+
+use std::time::Duration;
 
 use crate::model::{Mode, Prediction};
 use crate::util::json::{parse, Json};
 
 /// Arch assumed when a predict request omits `arch`.
 pub const DEFAULT_ARCH: &str = "cloudlab-v100";
+
+/// Largest accepted `deadline_ms` (one day).  Client-controlled values
+/// above this are clamped — `Duration::from_secs_f64` would panic on an
+/// overflowing (but finite) float, and such a budget means "no budget".
+pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
 
 /// A parsed client request.
 #[derive(Clone, Debug)]
@@ -31,6 +60,16 @@ pub enum Request {
         /// Workload scaling target; `None` means the server default (the
         /// CLI's `WORKLOAD_SECS` measurement protocol).
         duration_s: Option<f64>,
+        /// Per-request deadline budget; combined with the server-wide
+        /// budget by minimum (`None` defers to the server's, if any).
+        deadline: Option<Duration>,
+    },
+    /// Answer the arch's whole evaluation suite in one response.
+    PredictAll {
+        arch: String,
+        mode: Mode,
+        duration_s: Option<f64>,
+        deadline: Option<Duration>,
     },
     Status,
     Metrics,
@@ -41,6 +80,9 @@ pub enum Request {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServiceCounters {
     pub served: usize,
+    pub rejected: usize,
+    pub deadline_exceeded: usize,
+    pub request_errors: usize,
     pub batched_predict_calls: usize,
     pub table_reloads: usize,
     pub profile_cache_hits: usize,
@@ -51,11 +93,26 @@ pub struct ServiceCounters {
 /// HELP/TYPE header per family; all families are monotonic counters).
 pub fn prometheus_text(c: &ServiceCounters) -> String {
     let mut out = String::new();
-    let families: [(&str, &str, usize); 5] = [
+    let families: [(&str, &str, usize); 8] = [
         (
             "wattchmen_predictions_served_total",
             "Predict requests answered successfully.",
             c.served,
+        ),
+        (
+            "wattchmen_requests_rejected_total",
+            "Predict requests shed with an overloaded response (queue full).",
+            c.rejected,
+        ),
+        (
+            "wattchmen_deadline_exceeded_total",
+            "Predict requests that missed their deadline budget.",
+            c.deadline_exceeded,
+        ),
+        (
+            "wattchmen_request_errors_total",
+            "Predict requests answered with a non-deadline, non-overload error.",
+            c.request_errors,
         ),
         (
             "wattchmen_batched_predict_calls_total",
@@ -101,40 +158,87 @@ pub fn mode_tag(mode: Mode) -> &'static str {
     }
 }
 
+/// Fields shared by `predict` and `predict_all`: arch, mode, and the two
+/// client-controlled numbers, both validated here — `duration_s` feeds
+/// workload scaling (a NaN would silently poison every downstream sum)
+/// and a negative/NaN `deadline_ms` would panic `Duration::from_secs_f64`
+/// on the request path.
+fn predict_fields(j: &Json) -> Result<(String, Mode, Option<f64>, Option<Duration>), String> {
+    let arch = j
+        .get("arch")
+        .and_then(Json::as_str)
+        .unwrap_or(DEFAULT_ARCH)
+        .to_string();
+    let mode = parse_mode(j.get("mode").and_then(Json::as_str).unwrap_or("pred"))?;
+    let duration_s = match j.get("duration_s") {
+        None => None,
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .ok_or_else(|| "duration_s must be a number".to_string())?;
+            if !d.is_finite() || d <= 0.0 {
+                return Err(format!("duration_s must be a positive finite number, got {d}"));
+            }
+            Some(d)
+        }
+    };
+    let deadline = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .ok_or_else(|| "deadline_ms must be a number".to_string())?;
+            if !ms.is_finite() || ms < 0.0 {
+                return Err(format!(
+                    "deadline_ms must be a non-negative finite number, got {ms}"
+                ));
+            }
+            // Cap at a day: Duration::from_secs_f64 panics on overflow,
+            // and any budget that long is "no budget" in practice.
+            Some(Duration::from_secs_f64(ms.min(MAX_DEADLINE_MS) / 1000.0))
+        }
+    };
+    Ok((arch, mode, duration_s, deadline))
+}
+
 /// Parse one request line.  Errors are plain strings so the server can
 /// ship them back verbatim in an error response.
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let j = parse(line).map_err(|e| format!("bad JSON request: {e}"))?;
-    let cmd = j
-        .get("cmd")
-        .and_then(Json::as_str)
-        .ok_or_else(|| "request needs a string 'cmd' field (predict|status|shutdown)".to_string())?;
+    let cmd = j.get("cmd").and_then(Json::as_str).ok_or_else(|| {
+        "request needs a string 'cmd' field (predict|predict_all|status|metrics|shutdown)"
+            .to_string()
+    })?;
     match cmd {
         "predict" => {
-            let arch = j
-                .get("arch")
-                .and_then(Json::as_str)
-                .unwrap_or(DEFAULT_ARCH)
-                .to_string();
+            let (arch, mode, duration_s, deadline) = predict_fields(&j)?;
             let workload = j
                 .get("workload")
                 .and_then(Json::as_str)
                 .ok_or_else(|| "predict needs a 'workload' field (see `wattchmen list`)".to_string())?
                 .to_string();
-            let mode = parse_mode(j.get("mode").and_then(Json::as_str).unwrap_or("pred"))?;
-            let duration_s = j.get("duration_s").and_then(Json::as_f64);
             Ok(Request::Predict {
                 arch,
                 workload,
                 mode,
                 duration_s,
+                deadline,
+            })
+        }
+        "predict_all" => {
+            let (arch, mode, duration_s, deadline) = predict_fields(&j)?;
+            Ok(Request::PredictAll {
+                arch,
+                mode,
+                duration_s,
+                deadline,
             })
         }
         "status" => Ok(Request::Status),
         "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!(
-            "unknown cmd '{other}' (predict|status|metrics|shutdown)"
+            "unknown cmd '{other}' (predict|predict_all|status|metrics|shutdown)"
         )),
     }
 }
@@ -145,6 +249,16 @@ pub fn predict_request(arch: &str, workload: &str, mode: Mode) -> Json {
         ("cmd", Json::Str("predict".into())),
         ("arch", Json::Str(arch.into())),
         ("workload", Json::Str(workload.into())),
+        ("mode", Json::Str(mode_tag(mode).into())),
+    ])
+}
+
+/// Client-side helper: build a predict_all (whole evaluation suite)
+/// request line's JSON.
+pub fn predict_all_request(arch: &str, mode: Mode) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("predict_all".into())),
+        ("arch", Json::Str(arch.into())),
         ("mode", Json::Str(mode_tag(mode).into())),
     ])
 }
@@ -183,6 +297,45 @@ pub fn prediction_json(p: &Prediction) -> Json {
             ),
         ),
         ("text", Json::Str(render_line(p))),
+    ])
+}
+
+/// The whole-suite response: `predictions` holds one element per
+/// workload in evaluation-suite order, each rendered by the *same*
+/// [`prediction_json`] as an individual predict response (so the two are
+/// byte-identical), and `text` is the suite rendering `wattchmen predict`
+/// prints — one [`render_line`] per workload, newline-joined.
+pub fn predict_all_json(arch: &str, preds: &[Prediction]) -> Json {
+    let lines: Vec<String> = preds.iter().map(render_line).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("arch", Json::Str(arch.into())),
+        ("count", Json::Num(preds.len() as f64)),
+        ("predictions", Json::Arr(preds.iter().map(prediction_json).collect())),
+        ("text", Json::Str(lines.join("\n"))),
+    ])
+}
+
+/// Load-shed response: the bounded request queue is full.  The hint is
+/// the server's linger window — one batch's worth of drain time.
+pub fn overloaded_json(retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("overloaded".into())),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+}
+
+/// Deadline-miss response: how long the request had been in flight when
+/// the server gave up on it (always ≥ the requested budget).
+pub fn deadline_error_json(elapsed: Duration) -> Json {
+    // One decimal of milliseconds: stable to render, precise enough to
+    // compare against the budget.
+    let elapsed_ms = (elapsed.as_secs_f64() * 1e4).round() / 10.0;
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("deadline exceeded".into())),
+        ("elapsed_ms", Json::Num(elapsed_ms)),
     ])
 }
 
@@ -228,13 +381,86 @@ mod tests {
                 workload,
                 mode,
                 duration_s,
+                deadline,
             } => {
                 assert_eq!(arch, "summit-v100");
                 assert_eq!(workload, "hotspot");
                 assert_eq!(mode, Mode::Direct);
                 assert_eq!(duration_s, None);
+                assert_eq!(deadline, None);
             }
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn predict_all_request_roundtrips() {
+        let line = predict_all_request("lonestar-a100", Mode::Pred).to_string_compact();
+        match parse_request(&line).unwrap() {
+            Request::PredictAll {
+                arch,
+                mode,
+                duration_s,
+                deadline,
+            } => {
+                assert_eq!(arch, "lonestar-a100");
+                assert_eq!(mode, Mode::Pred);
+                assert_eq!(duration_s, None);
+                assert_eq!(deadline, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Defaults mirror predict's.
+        match parse_request(r#"{"cmd":"predict_all"}"#).unwrap() {
+            Request::PredictAll { arch, mode, .. } => {
+                assert_eq!(arch, DEFAULT_ARCH);
+                assert_eq!(mode, Mode::Pred);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_is_validated() {
+        match parse_request(r#"{"cmd":"predict","workload":"x","deadline_ms":250}"#).unwrap() {
+            Request::Predict { deadline, .. } => {
+                assert_eq!(deadline, Some(Duration::from_millis(250)));
+            }
+            other => panic!("{other:?}"),
+        }
+        // A zero budget is legal (expire immediately); negative, NaN (JSON
+        // null), and non-numeric budgets are parse errors, NOT panics —
+        // Duration::from_secs_f64 would abort the worker on them.
+        match parse_request(r#"{"cmd":"predict_all","deadline_ms":0}"#).unwrap() {
+            Request::PredictAll { deadline, .. } => assert_eq!(deadline, Some(Duration::ZERO)),
+            other => panic!("{other:?}"),
+        }
+        for bad in [
+            r#"{"cmd":"predict","workload":"x","deadline_ms":-1}"#,
+            r#"{"cmd":"predict","workload":"x","deadline_ms":null}"#,
+            r#"{"cmd":"predict","workload":"x","deadline_ms":"soon"}"#,
+        ] {
+            assert!(parse_request(bad).unwrap_err().contains("deadline_ms"), "{bad}");
+        }
+        // A finite-but-absurd budget is clamped, not a
+        // Duration::from_secs_f64 panic.
+        match parse_request(r#"{"cmd":"predict","workload":"x","deadline_ms":1e300}"#).unwrap() {
+            Request::Predict { deadline, .. } => {
+                assert_eq!(deadline, Some(Duration::from_secs_f64(MAX_DEADLINE_MS / 1000.0)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn duration_s_is_validated() {
+        for bad in [
+            r#"{"cmd":"predict","workload":"x","duration_s":-90}"#,
+            r#"{"cmd":"predict","workload":"x","duration_s":0}"#,
+            r#"{"cmd":"predict","workload":"x","duration_s":null}"#,
+            r#"{"cmd":"predict_all","duration_s":"long"}"#,
+        ] {
+            assert!(parse_request(bad).unwrap_err().contains("duration_s"), "{bad}");
         }
     }
 
@@ -290,6 +516,9 @@ mod tests {
     fn prometheus_rendering_is_exposition_format() {
         let c = ServiceCounters {
             served: 12,
+            rejected: 4,
+            deadline_exceeded: 5,
+            request_errors: 6,
             batched_predict_calls: 3,
             table_reloads: 1,
             profile_cache_hits: 10,
@@ -297,12 +526,15 @@ mod tests {
         };
         let text = prometheus_text(&c);
         // One HELP + TYPE + sample line per family, counters only.
-        assert_eq!(text.lines().count(), 15, "{text}");
+        assert_eq!(text.lines().count(), 24, "{text}");
         assert!(text.contains(
             "# HELP wattchmen_predictions_served_total Predict requests answered successfully.\n\
              # TYPE wattchmen_predictions_served_total counter\n\
              wattchmen_predictions_served_total 12\n"
         ));
+        assert!(text.contains("wattchmen_requests_rejected_total 4\n"));
+        assert!(text.contains("wattchmen_deadline_exceeded_total 5\n"));
+        assert!(text.contains("wattchmen_request_errors_total 6\n"));
         assert!(text.contains("wattchmen_batched_predict_calls_total 3\n"));
         assert!(text.contains("wattchmen_table_reloads_total 1\n"));
         assert!(text.contains("wattchmen_profile_cache_hits_total 10\n"));
@@ -320,6 +552,49 @@ mod tests {
         assert_eq!(
             j.get("content_type").unwrap().as_str(),
             Some("text/plain; version=0.0.4")
+        );
+    }
+
+    #[test]
+    fn overload_and_deadline_responses_are_structured() {
+        let o = overloaded_json(10);
+        assert_eq!(o.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(o.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(o.get("retry_after_ms").unwrap().as_f64(), Some(10.0));
+
+        let d = deadline_error_json(Duration::from_micros(37_540));
+        assert_eq!(d.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(d.get("error").unwrap().as_str(), Some("deadline exceeded"));
+        assert_eq!(d.get("elapsed_ms").unwrap().as_f64(), Some(37.5));
+    }
+
+    #[test]
+    fn predict_all_elements_are_byte_identical_to_single_responses() {
+        let mk = |name: &str, e: f64| Prediction {
+            workload: name.into(),
+            energy_j: e,
+            base_j: e * 0.6,
+            dynamic_j: e * 0.4,
+            coverage: 0.9,
+            duration_s: 90.0,
+            by_bucket: BTreeMap::new(),
+            by_key: Vec::new(),
+        };
+        let preds = vec![mk("hotspot", 1000.0), mk("backprop_k2_fixed", 2000.0)];
+        let all = predict_all_json("cloudlab-v100", &preds);
+        assert_eq!(all.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(all.get("count").unwrap().as_f64(), Some(2.0));
+        let arr = all.get("predictions").unwrap().as_arr().unwrap();
+        for (element, p) in arr.iter().zip(&preds) {
+            assert_eq!(
+                element.to_string_compact(),
+                prediction_json(p).to_string_compact()
+            );
+        }
+        let text = all.get("text").unwrap().as_str().unwrap();
+        assert_eq!(
+            text,
+            format!("{}\n{}", render_line(&preds[0]), render_line(&preds[1]))
         );
     }
 

@@ -16,6 +16,7 @@ use std::time::SystemTime;
 use anyhow::{Context, Result};
 
 use crate::model::EnergyTable;
+use crate::util::sync::lock_unpoisoned;
 
 struct CacheEntry {
     table: Arc<EnergyTable>,
@@ -45,11 +46,13 @@ impl TableRegistry {
     /// Map an arch to an explicit table file instead of
     /// `<dir>/<arch>.table.json`.
     pub fn register(&self, arch: &str, path: PathBuf) {
-        self.overrides.lock().unwrap().insert(arch.to_string(), path);
+        lock_unpoisoned(&self.overrides).insert(arch.to_string(), path);
     }
 
     pub fn path_for(&self, arch: &str) -> PathBuf {
-        if let Some(p) = self.overrides.lock().unwrap().get(arch) {
+        // Poison-tolerant: the registry sits on the request path, and a
+        // panic elsewhere must not cascade into every later lookup.
+        if let Some(p) = lock_unpoisoned(&self.overrides).get(arch) {
             return p.clone();
         }
         self.dir.join(format!("{arch}.table.json"))
@@ -74,7 +77,7 @@ impl TableRegistry {
         let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
         let len = meta.len();
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = lock_unpoisoned(&self.cache);
             if let Some(e) = cache.get(arch) {
                 if e.mtime == mtime && e.len == len {
                     return Ok(e.table.clone());
@@ -86,7 +89,7 @@ impl TableRegistry {
                 .with_context(|| format!("loading energy table for '{arch}'"))?,
         );
         self.reloads.fetch_add(1, Ordering::SeqCst);
-        self.cache.lock().unwrap().insert(
+        lock_unpoisoned(&self.cache).insert(
             arch.to_string(),
             CacheEntry {
                 table: table.clone(),

@@ -153,10 +153,18 @@ impl Json {
     }
 }
 
+/// Parser recursion bound.  The parser recurses once per nesting level,
+/// so without a cap a hostile document (e.g. 64 KiB of `[`, well inside
+/// the serve wire protocol's line budget) overflows the thread stack and
+/// aborts the whole process.  Real documents here (manifests, tables,
+/// serve requests) nest a handful of levels.
+const MAX_DEPTH: usize = 128;
+
 pub fn parse(text: &str) -> Result<Json, String> {
     let mut p = Parser {
         bytes: text.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -170,6 +178,7 @@ pub fn parse(text: &str) -> Result<Json, String> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -196,7 +205,14 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, String> {
         self.skip_ws();
-        match self.peek() {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!(
+                "nested deeper than {MAX_DEPTH} levels at byte {}",
+                self.pos
+            ));
+        }
+        let v = match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
             Some(b'"') => Ok(Json::Str(self.string()?)),
@@ -205,7 +221,9 @@ impl<'a> Parser<'a> {
             Some(b'n') => self.literal("null", Json::Null),
             Some(_) => self.number(),
             None => Err("unexpected end of input".into()),
-        }
+        };
+        self.depth -= 1;
+        v
     }
 
     fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
@@ -397,5 +415,22 @@ mod tests {
     fn numbers() {
         assert_eq!(parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(parse("42").unwrap().as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn hostile_nesting_is_an_error_not_a_stack_overflow() {
+        // Regression: 64 KiB of '[' previously recursed once per byte and
+        // aborted the process on worker-sized stacks.
+        let bomb = "[".repeat(64 * 1024);
+        let err = parse(&bomb).unwrap_err();
+        assert!(err.contains("nested deeper"), "{err}");
+        let obj_bomb = "{\"a\":".repeat(64 * 1024);
+        assert!(parse(&obj_bomb).unwrap_err().contains("nested deeper"));
+        // Reasonable nesting still parses, and depth is counted per
+        // nesting level, not per sibling.
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&deep).is_ok());
+        let wide = format!("[{}1]", "1,".repeat(500));
+        assert!(parse(&wide).is_ok());
     }
 }

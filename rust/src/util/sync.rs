@@ -15,7 +15,18 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: recover the guard even if another thread
+/// panicked while holding this mutex.  Correct wherever every critical
+/// section leaves the protected data structurally valid (counters,
+/// memo-map get/insert) — which is true for all the serve-path state.
+/// The prediction service uses this on its request path so one
+/// panicking worker cannot cascade poison-panics through the acceptor
+/// and every other connection.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Number of independent map locks.  Contention on the *maps* is only the
 /// brief get-or-insert of a slot, so a small power of two suffices.
@@ -208,6 +219,32 @@ impl Semaphore {
         *permits -= 1;
         SemaphorePermit(self)
     }
+
+    /// Take a permit only if one is free — never blocks.  `None` means
+    /// the section is at capacity; the prediction service uses this to
+    /// shed load (an `overloaded` response) instead of queueing without
+    /// bound.
+    pub fn try_acquire(&self) -> Option<SemaphorePermit<'_>> {
+        let mut permits = lock_unpoisoned(&self.permits);
+        if *permits == 0 {
+            return None;
+        }
+        *permits -= 1;
+        Some(SemaphorePermit(self))
+    }
+
+    /// Owned variant of [`try_acquire`](Self::try_acquire): the permit
+    /// holds an `Arc` to the semaphore, so it can ride inside queued
+    /// work across threads and be released wherever that work is finally
+    /// consumed — not merely where it was submitted.
+    pub fn try_acquire_owned(self: &Arc<Semaphore>) -> Option<OwnedSemaphorePermit> {
+        let mut permits = lock_unpoisoned(&self.permits);
+        if *permits == 0 {
+            return None;
+        }
+        *permits -= 1;
+        Some(OwnedSemaphorePermit(self.clone()))
+    }
 }
 
 pub struct SemaphorePermit<'a>(&'a Semaphore);
@@ -215,6 +252,16 @@ pub struct SemaphorePermit<'a>(&'a Semaphore);
 impl Drop for SemaphorePermit<'_> {
     fn drop(&mut self) {
         *self.0.permits.lock().unwrap() += 1;
+        self.0.available.notify_one();
+    }
+}
+
+/// See [`Semaphore::try_acquire_owned`]; released on drop.
+pub struct OwnedSemaphorePermit(Arc<Semaphore>);
+
+impl Drop for OwnedSemaphorePermit {
+    fn drop(&mut self) {
+        *lock_unpoisoned(&self.0.permits) += 1;
         self.0.available.notify_one();
     }
 }
@@ -368,6 +415,56 @@ mod tests {
         let peak = peak.load(Ordering::SeqCst);
         assert!(peak <= 2, "peak concurrency {peak} exceeded 2 permits");
         assert!(peak >= 1);
+    }
+
+    #[test]
+    fn try_acquire_sheds_at_capacity_and_recovers() {
+        let sem = Semaphore::new(2);
+        let a = sem.try_acquire();
+        let b = sem.try_acquire();
+        assert!(a.is_some() && b.is_some());
+        // At capacity: the third taker is refused, not blocked.
+        assert!(sem.try_acquire().is_none());
+        drop(a);
+        // A released permit is immediately takeable again.
+        let c = sem.try_acquire();
+        assert!(c.is_some());
+        assert!(sem.try_acquire().is_none());
+        drop(b);
+        drop(c);
+        assert!(sem.try_acquire().is_some());
+    }
+
+    #[test]
+    fn owned_permit_releases_where_it_is_dropped_not_where_acquired() {
+        let sem = Arc::new(Semaphore::new(1));
+        let permit = sem.try_acquire_owned().unwrap();
+        assert!(sem.try_acquire_owned().is_none());
+        // The permit crosses a thread boundary and frees capacity there.
+        let t = thread::spawn(move || drop(permit));
+        t.join().unwrap();
+        assert!(sem.try_acquire_owned().is_some());
+    }
+
+    #[test]
+    fn lock_unpoisoned_survives_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(7usize));
+        let holder = {
+            let m = m.clone();
+            thread::spawn(move || {
+                let _guard = m.lock().unwrap();
+                panic!("poison the mutex");
+            })
+        };
+        assert!(holder.join().is_err());
+        // A plain .lock().unwrap() would now panic on PoisonError; the
+        // request path must keep serving instead.
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        let mut guard = lock_unpoisoned(&m);
+        assert_eq!(*guard, 7);
+        *guard += 1;
+        drop(guard);
+        assert_eq!(*lock_unpoisoned(&m), 8);
     }
 
     #[test]

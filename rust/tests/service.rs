@@ -69,6 +69,7 @@ fn start_server(
             linger,
             tables_dir,
             default_duration_s: WORKLOAD_SECS,
+            ..ServeConfig::default()
         })
         .unwrap(),
     );
@@ -94,13 +95,19 @@ impl Client {
     }
 
     fn request(&mut self, req: &Json) -> Json {
+        parse(self.request_raw(req).trim()).unwrap()
+    }
+
+    /// The response exactly as it came off the wire (for byte-level
+    /// parity assertions), trailing newline included.
+    fn request_raw(&mut self, req: &Json) -> String {
         self.writer
             .write_all(req.to_string_compact().as_bytes())
             .unwrap();
         self.writer.write_all(b"\n").unwrap();
         let mut line = String::new();
         self.reader.read_line(&mut line).unwrap();
-        parse(line.trim()).unwrap()
+        line
     }
 
     fn shutdown(mut self) {
@@ -212,6 +219,59 @@ fn burst_of_64_requests_coalesces_into_at_most_two_batched_calls() {
     assert_eq!(server.served(), 65);
 
     Client::connect(addr).shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn predict_all_is_byte_identical_to_individual_predicts() {
+    let table = test_table(1.0);
+    let cfg = ArchConfig::cloudlab_v100();
+    let dir = temp_tables_dir("predict_all", &table);
+    let (server, runner) = start_server(dir, 4, Duration::from_millis(1));
+    let mut client = Client::connect(server.local_addr());
+
+    // 16 individual predict responses, raw off the wire, suite order.
+    let suite = workloads::evaluation_suite(Gen::Volta);
+    let individual: Vec<String> = suite
+        .iter()
+        .map(|w| {
+            client
+                .request_raw(&protocol::predict_request("cloudlab-v100", &w.name, Mode::Pred))
+                .trim()
+                .to_string()
+        })
+        .collect();
+
+    // One predict_all answers the same suite; every element must be
+    // byte-identical to its individual response.
+    let all = client.request(&protocol::predict_all_request("cloudlab-v100", Mode::Pred));
+    assert_eq!(all.get("ok").unwrap(), &Json::Bool(true), "{all:?}");
+    assert_eq!(all.get("count").unwrap().as_f64(), Some(16.0));
+    assert_eq!(all.get("arch").unwrap().as_str(), Some("cloudlab-v100"));
+    let preds = all.get("predictions").unwrap().as_arr().unwrap();
+    assert_eq!(preds.len(), 16);
+    for ((element, raw), w) in preds.iter().zip(&individual).zip(&suite) {
+        assert_eq!(
+            &element.to_string_compact(),
+            raw,
+            "predict_all element for {} diverged from the individual predict response",
+            w.name
+        );
+    }
+    // The text field is the CLI's suite rendering: render_line per
+    // workload, newline-joined, suite order (cli_lines keys by name, so
+    // rebuild in suite order).
+    let by_name = cli_lines(&table, &cfg);
+    let want_text: String = suite
+        .iter()
+        .map(|w| by_name[&w.name].clone())
+        .collect::<Vec<_>>()
+        .join("\n");
+    assert_eq!(all.get("text").unwrap().as_str(), Some(want_text.as_str()));
+
+    // 16 individual predicts + 1 suite request, each answered.
+    assert_eq!(server.served(), 17);
+    client.shutdown();
     runner.join().unwrap();
 }
 

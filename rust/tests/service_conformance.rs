@@ -1,0 +1,310 @@
+//! Protocol conformance / fuzz suite for `wattchmen serve`, over real TCP
+//! against in-process servers: malformed JSON, hostile nesting, unknown
+//! commands, oversized and split frames, abrupt disconnects, concurrent
+//! shutdowns.  The server must never panic or hang, must answer every
+//! well-framed bad request with a descriptive `error` JSON, and its
+//! counters must stay consistent throughout.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use wattchmen::model::{EnergyTable, Mode};
+use wattchmen::report::context::WORKLOAD_SECS;
+use wattchmen::service::{protocol, PredictServer, ServeConfig, MAX_REQUEST_BYTES};
+use wattchmen::util::json::{parse, Json};
+
+fn test_table() -> EnergyTable {
+    EnergyTable {
+        arch: "cloudlab-v100".into(),
+        const_power_w: 38.0,
+        static_power_w: 44.0,
+        entries: [
+            ("FADD", 1.0),
+            ("FFMA", 1.2),
+            ("MOV", 0.4),
+            ("IADD3", 0.6),
+            ("LDG.E.32@L1", 2.5),
+            ("LDG.E.32@L2", 8.0),
+            ("LDG.E.64@L1", 4.0),
+            ("BAR.SYNC", 1.5),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect(),
+    }
+}
+
+fn temp_tables_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wattchmen_conformance_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    test_table()
+        .save(&dir.join("cloudlab-v100.table.json"))
+        .unwrap();
+    dir
+}
+
+fn start_server(tag: &str, workers: usize) -> (Arc<PredictServer>, thread::JoinHandle<()>) {
+    let server = Arc::new(
+        PredictServer::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            linger: Duration::from_millis(1),
+            tables_dir: temp_tables_dir(tag),
+            default_duration_s: WORKLOAD_SECS,
+            ..ServeConfig::default()
+        })
+        .unwrap(),
+    );
+    let runner = {
+        let server = server.clone();
+        thread::spawn(move || server.run(None).unwrap())
+    };
+    (server, runner)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    /// Send one raw line (newline appended) and read one response line.
+    fn send_line(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        parse(resp.trim()).unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"))
+    }
+
+    fn shutdown(mut self) {
+        let ack = self.send_line(r#"{"cmd":"shutdown"}"#);
+        assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true));
+    }
+}
+
+fn error_of(resp: &Json) -> String {
+    assert_eq!(
+        resp.get("ok").unwrap(),
+        &Json::Bool(false),
+        "expected an error response, got {resp:?}"
+    );
+    resp.get("error")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("error response without error field: {resp:?}"))
+        .to_string()
+}
+
+#[test]
+fn malformed_requests_get_descriptive_errors_and_counters_stay_consistent() {
+    let (server, runner) = start_server("malformed", 2);
+    let mut client = Client::connect(server.local_addr());
+
+    // Every malformed frame must come back as a descriptive error on the
+    // SAME connection — no hangup, no panic.
+    let evil: &[(&str, &str)] = &[
+        ("not json", "bad JSON"),
+        ("{", "bad JSON"),
+        ("[1,2", "bad JSON"),
+        ("\"just a string\"", "cmd"),
+        ("42", "cmd"),
+        (r#"{"cmd":42}"#, "cmd"),
+        (r#"{"cmd":null}"#, "cmd"),
+        (r#"{"cmd":"frobnicate"}"#, "unknown cmd"),
+        (r#"{"cmd":"predict"}"#, "workload"),
+        (r#"{"cmd":"predict","workload":42}"#, "workload"),
+        (r#"{"cmd":"predict","workload":"hotspot","mode":"best"}"#, "unknown mode"),
+        (r#"{"cmd":"predict","workload":"hotspot","duration_s":-90}"#, "duration_s"),
+        (r#"{"cmd":"predict","workload":"hotspot","duration_s":"long"}"#, "duration_s"),
+        (r#"{"cmd":"predict","workload":"hotspot","deadline_ms":-1}"#, "deadline_ms"),
+        (r#"{"cmd":"predict_all","deadline_ms":"soon"}"#, "deadline_ms"),
+    ];
+    for (line, needle) in evil {
+        let err = error_of(&client.send_line(line));
+        assert!(err.contains(needle), "{line}: error {err:?} lacks {needle:?}");
+    }
+
+    // Parse-level failures consume no queue slot and bump no predict
+    // counter; resolution failures land in request_errors — and nothing
+    // was served.
+    for _ in 0..3 {
+        let err = error_of(&client.send_line(
+            r#"{"cmd":"predict","workload":"nosuch"}"#,
+        ));
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+    let status = client.send_line(r#"{"cmd":"status"}"#);
+    assert_eq!(status.get("served").unwrap().as_f64(), Some(0.0));
+    assert_eq!(status.get("rejected").unwrap().as_f64(), Some(0.0));
+    assert_eq!(status.get("deadline_exceeded").unwrap().as_f64(), Some(0.0));
+    assert_eq!(status.get("request_errors").unwrap().as_f64(), Some(3.0));
+
+    // The connection that absorbed all of the above still serves a real
+    // prediction...
+    let pred = client.send_line(
+        &protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact(),
+    );
+    assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true), "{pred:?}");
+
+    // ...and the metrics render every family consistently with status.
+    let metrics = client.send_line(r#"{"cmd":"metrics"}"#);
+    let body = metrics.get("body").unwrap().as_str().unwrap();
+    assert!(body.contains("wattchmen_predictions_served_total 1\n"), "{body}");
+    assert!(body.contains("wattchmen_request_errors_total 3\n"), "{body}");
+    assert!(body.contains("wattchmen_requests_rejected_total 0\n"), "{body}");
+    assert!(body.contains("wattchmen_deadline_exceeded_total 0\n"), "{body}");
+
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 1);
+    assert_eq!(server.request_errors(), 3);
+}
+
+#[test]
+fn hostile_nesting_gets_an_error_not_a_crash() {
+    // Regression: a line of nested '[' used to recurse once per byte in
+    // the JSON parser and overflow the worker stack, aborting the whole
+    // server process.  Now it must be a plain parse-error response.
+    let (server, runner) = start_server("nesting", 2);
+    let mut client = Client::connect(server.local_addr());
+    let bomb = "[".repeat(32 * 1024);
+    let err = error_of(&client.send_line(&bomb));
+    assert!(err.contains("nested deeper"), "{err}");
+    // The server survived to serve a real request.
+    let pred = client.send_line(
+        &protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact(),
+    );
+    assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true));
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 1);
+}
+
+#[test]
+fn oversized_line_is_rejected_with_a_bounded_buffer() {
+    let (server, runner) = start_server("oversized", 2);
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // One byte over the per-line budget, never a newline: the server
+    // must cap its buffer, answer, and close — not accumulate forever.
+    // (Exactly budget-many bytes, so the server consumes everything we
+    // sent and its close is a clean FIN, not an unread-data RST.)
+    let blob = vec![b'x'; MAX_REQUEST_BYTES + 1];
+    writer.write_all(&blob).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let err = error_of(&parse(resp.trim()).unwrap());
+    assert!(err.contains("too long"), "{err}");
+    // The connection was closed after the error...
+    resp.clear();
+    assert_eq!(reader.read_line(&mut resp).unwrap(), 0, "{resp:?}");
+    // ...but the server keeps serving fresh connections.
+    let mut client = Client::connect(server.local_addr());
+    let status = client.send_line(r#"{"cmd":"status"}"#);
+    assert_eq!(status.get("ok").unwrap(), &Json::Bool(true));
+    client.shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn split_frames_across_read_timeouts_still_parse() {
+    let (server, runner) = start_server("split", 2);
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // Dribble one request in three chunks with pauses longer than the
+    // server's 250 ms read timeout, so the partial line crosses at least
+    // one WouldBlock/TimedOut wakeup and must be preserved across it.
+    let request =
+        protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact();
+    let (a, rest) = request.split_at(10);
+    let (b, c) = rest.split_at(rest.len() / 2);
+    for chunk in [a, b, c] {
+        writer.write_all(chunk.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        thread::sleep(Duration::from_millis(300));
+    }
+    writer.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let pred = parse(resp.trim()).unwrap();
+    assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+    assert_eq!(pred.get("workload").unwrap().as_str(), Some("hotspot"));
+
+    let mut client = Client::connect(server.local_addr());
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 1);
+}
+
+#[test]
+fn abrupt_disconnects_leave_the_server_healthy() {
+    let (server, runner) = start_server("disconnect", 4);
+    let addr = server.local_addr();
+
+    // Half a request, then vanish.
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(br#"{"cmd":"pred"#).unwrap();
+    }
+    // A full request whose response is never read, plus half of a second
+    // one, then vanish — the server's write may fail; that failure must
+    // stay contained to this connection.
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"{\"cmd\":\"status\"}\n{\"cmd\":\"sta")
+            .unwrap();
+    }
+    // Zero bytes, then vanish.
+    drop(TcpStream::connect(addr).unwrap());
+
+    // Fresh connections still get correct answers.
+    let mut client = Client::connect(addr);
+    let pred = client.send_line(
+        &protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact(),
+    );
+    assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true));
+    client.shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn concurrent_shutdowns_all_ack_and_the_server_drains_once() {
+    let (server, runner) = start_server("shutdown", 8);
+    let addr = server.local_addr();
+    // Connect everyone BEFORE the first shutdown lands, so every client
+    // deterministically has a live worker on the other end.
+    let clients: Vec<Client> = (0..4).map(|_| Client::connect(addr)).collect();
+    let barrier = Arc::new(Barrier::new(4));
+    let mut handles = Vec::new();
+    for mut client in clients {
+        let barrier = barrier.clone();
+        handles.push(thread::spawn(move || {
+            barrier.wait();
+            let ack = client.send_line(r#"{"cmd":"shutdown"}"#);
+            assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true), "{ack:?}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // All four shutdowns raced; the server still drains exactly once,
+    // with every thread joined.
+    runner.join().unwrap();
+    assert_eq!(server.served(), 0);
+}
