@@ -1,35 +1,38 @@
 //! Cooling study (paper §5.2.1 + §6/Fig 14): train on the air-cooled and
-//! water-cooled V100s, quantify the measured energy gap, check the
-//! air↔water table linearity, and build a water table from a 10 % measured
-//! subset via the PJRT affine-fit artifact.
+//! water-cooled V100s through the typed `wattchmen::engine` facade,
+//! quantify the measured energy gap, check the air↔water table
+//! linearity, and build a water table from a 10 % measured subset via
+//! `Engine::transfer` (the PJRT affine-fit artifact when available).
 //!
 //!     cargo run --release --example cooling_study
 
-use wattchmen::cluster::ClusterCampaign;
-use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::isa::Gen;
-use wattchmen::model::{random_subset, table_r_squared, transfer_table, TrainConfig};
+use wattchmen::model::{random_subset, table_r_squared};
 use wattchmen::report::{measure_workload, scaled_workload};
 use wattchmen::runtime::Artifacts;
 use wattchmen::util::stats;
 use wattchmen::workloads;
+use wattchmen::Engine;
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::load_default().ok();
-    let tc = TrainConfig {
-        reps: 2,
-        bench_secs: 60.0,
-        cooldown_secs: 15.0,
-        idle_secs: 20.0,
-        cov_threshold: 0.02,
+    // Each engine owns its (optionally loaded) artifacts; the `fast`
+    // flag selects the shortened 2 × 60 s campaign protocol.
+    let engine_for = |arch: &str| {
+        Engine::builder()
+            .arch(arch)
+            .seed(42)
+            .fast(true)
+            .artifacts(Artifacts::load_default().ok())
+            .build()
     };
-    let air_cfg = ArchConfig::cloudlab_v100();
-    let water_cfg = ArchConfig::summit_v100();
+    let air_engine = engine_for("cloudlab-v100")?;
+    let water_engine = engine_for("summit-v100")?;
+    let (air_cfg, water_cfg) = (air_engine.arch().clone(), water_engine.arch().clone());
 
     println!("training on air-cooled V100...");
-    let air = ClusterCampaign::new(air_cfg.clone(), 4, 42).train(&tc, arts.as_ref())?;
+    let air = air_engine.train()?;
     println!("training on water-cooled V100...");
-    let water = ClusterCampaign::new(water_cfg.clone(), 4, 42).train(&tc, arts.as_ref())?;
+    let water = water_engine.train()?;
 
     // Ground-truth energy gap across the Rodinia set.
     let mut gaps = Vec::new();
@@ -54,12 +57,10 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|k| (k.clone(), water.table.entries[k]))
         .collect();
-    let transfer = transfer_table(
-        &air.table,
+    let transfer = air_engine.transfer(
         &subset,
         water.table.const_power_w,
         water.table.static_power_w,
-        arts.as_ref(),
     )?;
     println!(
         "affine transfer from {} measured instructions: slope {:.3}, intercept {:.3}",

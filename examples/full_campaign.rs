@@ -1,5 +1,6 @@
-//! END-TO-END DRIVER (DESIGN.md §6): the complete Wattchmen pipeline on the
-//! air-cooled V100 with the paper's full measurement protocol —
+//! END-TO-END DRIVER: the complete Wattchmen pipeline on the air-cooled
+//! V100 with the paper's full measurement protocol, driven through the
+//! typed `wattchmen::engine` facade —
 //!
 //!   1. idle + NANOSLEEP calibration,
 //!   2. the 90-microbenchmark campaign, 5 reps × 180 s with 60 s cooldowns,
@@ -16,37 +17,39 @@
 
 use std::time::Instant;
 
-use wattchmen::cluster::ClusterCampaign;
-use wattchmen::gpusim::config::ArchConfig;
-use wattchmen::gpusim::profiler::profile_app;
 use wattchmen::isa::Gen;
-use wattchmen::model::{predict_suite, Mode, TrainConfig};
+use wattchmen::model::Mode;
 use wattchmen::report::{measure_workload, scaled_workload};
 use wattchmen::runtime::Artifacts;
 use wattchmen::util::stats;
 use wattchmen::util::text::{f, render_table};
 use wattchmen::workloads;
+use wattchmen::{Engine, PredictRequest};
 
 fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let arts = Artifacts::load_default()?; // end-to-end REQUIRES the artifacts
     println!("PJRT artifacts loaded (nnls, integrate, affine_fit, predict)");
 
-    // --- Training campaign: full paper protocol ---
-    let cfg = ArchConfig::cloudlab_v100();
-    let tc = TrainConfig::default(); // 5 reps × 180 s, 60 s cooldowns
+    // --- Training campaign: full paper protocol (5 reps × 180 s with
+    // 60 s cooldowns — the engine's non-`fast` default) ---
+    let engine = Engine::builder()
+        .arch("cloudlab-v100")
+        .seed(42)
+        .artifacts(Some(arts))
+        .build()?;
+    let cfg = engine.arch().clone();
     println!(
-        "running the full campaign on {}: 90 benchmarks × {} reps × {:.0}s across 4 GPUs...",
-        cfg.name, tc.reps, tc.bench_secs
+        "running the full campaign on {}: 90 benchmarks × 5 reps × 180s across 4 GPUs...",
+        cfg.name
     );
-    let t_train = Instant::now();
-    let result = ClusterCampaign::new(cfg.clone(), 4, 42).train(&tc, Some(&arts))?;
+    let trained = engine.train()?;
     println!(
         "trained in {:.1}s wall ({} columns, residual {:.2e}, solver {:?})",
-        t_train.elapsed().as_secs_f64(),
-        result.columns.len(),
-        result.residual,
-        result.solver
+        trained.elapsed.as_secs_f64(),
+        trained.result.columns.len(),
+        trained.result.residual,
+        trained.result.solver
     );
 
     // --- Workload measurement + prediction ---
@@ -55,10 +58,6 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|w| scaled_workload(&cfg, w, 90.0))
         .collect();
-    let profiles: Vec<(String, Vec<_>)> = scaled
-        .iter()
-        .map(|w| (w.name.clone(), profile_app(&cfg, &w.kernels)))
-        .collect();
     println!("measuring {} workloads (~90 s each, simulated)...", scaled.len());
     let measured: Vec<f64> = scaled
         .iter()
@@ -66,8 +65,16 @@ fn main() -> anyhow::Result<()> {
         .map(|(i, w)| measure_workload(&cfg, w, 1000 + i as u64).energy_j)
         .collect();
 
-    let direct = predict_suite(&result.table, &profiles, Mode::Direct, Some(&arts))?;
-    let pred = predict_suite(&result.table, &profiles, Mode::Pred, Some(&arts))?;
+    // Both modes answer the whole suite through the engine — one batched
+    // predict_many (and one PJRT executable call) per mode.
+    let predict = |mode: Mode| {
+        engine.predict_suite(PredictRequest {
+            mode,
+            ..PredictRequest::default()
+        })
+    };
+    let direct: Vec<_> = predict(Mode::Direct)?.into_iter().map(|o| o.prediction).collect();
+    let pred: Vec<_> = predict(Mode::Pred)?.into_iter().map(|o| o.prediction).collect();
 
     let mut rows = Vec::new();
     for (i, w) in scaled.iter().enumerate() {

@@ -1,54 +1,55 @@
 //! Quickstart: train a Wattchmen energy table on the simulated air-cooled
-//! V100 and predict one workload's energy with a fine-grained breakdown.
+//! V100 and predict one workload's energy with a fine-grained breakdown —
+//! all through the typed `wattchmen::engine` facade, the same path the
+//! CLI and the prediction service use.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Uses the PJRT artifacts when `artifacts/` has been built
 //! (`make artifacts`), otherwise falls back to the native solver.
 
-use wattchmen::cluster::ClusterCampaign;
-use wattchmen::gpusim::config::ArchConfig;
-use wattchmen::gpusim::profiler::profile_app;
-use wattchmen::isa::Gen;
-use wattchmen::model::{predict_app, Mode, TrainConfig};
-use wattchmen::report::scaled_workload;
 use wattchmen::runtime::Artifacts;
-use wattchmen::workloads;
+use wattchmen::{Engine, PredictRequest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), wattchmen::Error> {
     let arts = Artifacts::load_default()
         .map_err(|e| eprintln!("(artifacts unavailable: {e:#}; using native paths)"))
         .ok();
 
-    // 1. Train on a simulated 4-GPU CloudLab slice with a shortened
-    //    protocol (the paper's full protocol is 5 × 180 s per benchmark).
-    let cfg = ArchConfig::cloudlab_v100();
-    let tc = TrainConfig {
-        reps: 2,
-        bench_secs: 60.0,
-        cooldown_secs: 15.0,
-        idle_secs: 20.0,
-        cov_threshold: 0.02,
-    };
-    println!("training Wattchmen on {} (90 microbenchmarks)...", cfg.name);
-    let result = ClusterCampaign::new(cfg.clone(), 4, 42).train(&tc, arts.as_ref())?;
+    // 1. Train on a simulated 4-GPU CloudLab slice with the shortened
+    //    `fast` protocol (the paper's full protocol is 5 × 180 s per
+    //    benchmark).
+    let engine = Engine::builder()
+        .arch("cloudlab-v100")
+        .seed(42)
+        .fast(true)
+        .artifacts(arts)
+        .build()?;
+    println!(
+        "training Wattchmen on {} (90 microbenchmarks)...",
+        engine.arch().name
+    );
+    let trained = engine.train()?;
     println!(
         "  constant {:.1} W, static {:.1} W, {} instruction groups, residual {:.2e} ({:?})",
-        result.table.const_power_w,
-        result.table.static_power_w,
-        result.columns.len(),
-        result.residual,
-        result.solver,
+        trained.table.const_power_w,
+        trained.table.static_power_w,
+        trained.result.columns.len(),
+        trained.result.residual,
+        trained.result.solver,
     );
     println!("  sample energies [nJ/instr]:");
     for key in ["FFMA", "DFMA", "HMMA.884.F32", "LDG.E.64@L1", "LDG.E.64@DRAM"] {
-        println!("    {key:<16} {:>6.2}", result.table.entries[key]);
+        println!("    {key:<16} {:>6.2}", trained.table.entries[key]);
     }
 
-    // 2. Predict hotspot's energy and attribute it.
-    let w = scaled_workload(&cfg, &workloads::rodinia::hotspot(Gen::Volta), 90.0);
-    let profiles = profile_app(&cfg, &w.kernels);
-    let pred = predict_app(&result.table, &w.name, &profiles, Mode::Pred);
+    // 2. Predict hotspot's energy and attribute it (top 6 groups).
+    let outcome = engine.predict(PredictRequest {
+        workload: Some("hotspot".into()),
+        top: 6,
+        ..PredictRequest::default()
+    })?;
+    let pred = &outcome.prediction;
     println!(
         "\n{}: predicted {:.0} J over {:.1} s (coverage {:.0}%)",
         pred.workload,
@@ -62,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         println!("    {bucket:<12} {joules:>8.0} J");
     }
     println!("  top instruction groups:");
-    for (key, joules, src) in pred.by_key.iter().take(6) {
+    for (key, joules, src) in outcome.top_keys() {
         println!("    {key:<20} {joules:>8.0} J  [{src:?}]");
     }
     Ok(())

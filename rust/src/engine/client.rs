@@ -1,0 +1,367 @@
+//! `engine::client` — a typed client for a running `wattchmen serve`.
+//!
+//! [`RemoteClient`] speaks protocol v2 (requests carry `"v":2`, errors
+//! come back as `{"error":{"code":…,"message":…}}` and map onto
+//! [`crate::Error`] by code) with transparent v1 fallback: a pre-v2
+//! server ignores the `v` field and answers with flat string errors,
+//! which the client classifies by their stable legacy shapes
+//! ([`Error::from_legacy`]).  Success responses are identical in both
+//! dialects, so one parse path serves both.
+//!
+//! This is the extracted, tested form of the TCP loop that used to live
+//! inline in the CLI's `predict --remote`; `wattchmen predict --remote`
+//! is now a thin wrapper over it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::error::Error;
+use crate::model::Mode;
+use crate::service::protocol;
+use crate::util::json::{parse, Json};
+
+/// One served prediction, decoded from the wire.
+#[derive(Clone, Debug)]
+pub struct RemotePrediction {
+    pub workload: String,
+    pub energy_j: f64,
+    pub base_j: f64,
+    pub dynamic_j: f64,
+    pub coverage: f64,
+    pub duration_s: f64,
+    /// The server-rendered CLI line (byte-identical to local
+    /// `wattchmen predict` output).
+    pub text: String,
+}
+
+impl RemotePrediction {
+    fn from_json(j: &Json) -> Result<RemotePrediction, Error> {
+        let num = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::internal(format!("server response has no {k} field")))
+        };
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::internal(format!("server response has no {k} field")))
+        };
+        Ok(RemotePrediction {
+            workload: s("workload")?,
+            energy_j: num("energy_j")?,
+            base_j: num("base_j")?,
+            dynamic_j: num("dynamic_j")?,
+            coverage: num("coverage")?,
+            duration_s: num("duration_s")?,
+            text: s("text")?,
+        })
+    }
+}
+
+/// A whole-suite (`predict_all`) response.
+#[derive(Clone, Debug)]
+pub struct RemoteSuite {
+    pub arch: String,
+    pub predictions: Vec<RemotePrediction>,
+    /// Newline-joined per-workload CLI lines.
+    pub text: String,
+}
+
+/// Typed JSON-over-TCP client for `wattchmen serve`.
+pub struct RemoteClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RemoteClient {
+    /// Connect to `HOST:PORT`.  No handshake round trip — the dialect is
+    /// detected per response (use [`capabilities`](Self::capabilities)
+    /// for an explicit probe).
+    pub fn connect(addr: &str) -> Result<RemoteClient, Error> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::io(format!("connecting {addr}: {e}")))?;
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| Error::io(format!("cloning socket for {addr}: {e}")))?,
+        );
+        Ok(RemoteClient {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Predict one workload.
+    pub fn predict(
+        &mut self,
+        arch: &str,
+        workload: &str,
+        mode: Mode,
+        deadline_ms: Option<f64>,
+    ) -> Result<RemotePrediction, Error> {
+        let req = v2(protocol::predict_request(arch, workload, mode), deadline_ms);
+        let resp = self.roundtrip(&req)?;
+        RemotePrediction::from_json(&resp)
+    }
+
+    /// Predict the arch's whole evaluation suite in one request.
+    pub fn predict_all(
+        &mut self,
+        arch: &str,
+        mode: Mode,
+        deadline_ms: Option<f64>,
+    ) -> Result<RemoteSuite, Error> {
+        let req = v2(protocol::predict_all_request(arch, mode), deadline_ms);
+        let resp = self.roundtrip(&req)?;
+        let arch = resp
+            .get("arch")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let text = resp
+            .get("text")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::internal("server response has no text field"))?
+            .to_string();
+        let predictions = resp
+            .get("predictions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::internal("server response has no predictions field"))?
+            .iter()
+            .map(RemotePrediction::from_json)
+            .collect::<Result<Vec<_>, Error>>()?;
+        Ok(RemoteSuite {
+            arch,
+            predictions,
+            text,
+        })
+    }
+
+    /// The raw `status` response.
+    pub fn status(&mut self) -> Result<Json, Error> {
+        self.roundtrip(&v2(
+            Json::obj(vec![("cmd", Json::Str("status".into()))]),
+            None,
+        ))
+    }
+
+    /// The server's protocol v2 `capabilities` handshake, or `None` from
+    /// a v1-only server (whose status has no capabilities field).
+    pub fn capabilities(&mut self) -> Result<Option<Json>, Error> {
+        Ok(self.status()?.get("capabilities").cloned())
+    }
+
+    /// Ask the server to drain and shut down; returns its ack message.
+    pub fn shutdown(&mut self) -> Result<String, Error> {
+        let resp = self.roundtrip(&v2(
+            Json::obj(vec![("cmd", Json::Str("shutdown".into()))]),
+            None,
+        ))?;
+        Ok(resp
+            .get("ack")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string())
+    }
+
+    /// One request line out, one response line in, success checked and
+    /// wire errors of either dialect mapped onto typed [`Error`]s.
+    fn roundtrip(&mut self, req: &Json) -> Result<Json, Error> {
+        self.writer
+            .write_all(req.to_string_compact().as_bytes())
+            .map_err(|e| Error::io(format!("sending request: {e}")))?;
+        self.writer
+            .write_all(b"\n")
+            .map_err(|e| Error::io(format!("sending request: {e}")))?;
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .map_err(|e| Error::io(format!("reading response: {e}")))?;
+        if n == 0 {
+            return Err(Error::io("server closed the connection"));
+        }
+        let resp = parse(line.trim())
+            .map_err(|e| Error::internal(format!("malformed server response: {e}")))?;
+        if resp.get("ok") == Some(&Json::Bool(true)) {
+            return Ok(resp);
+        }
+        Err(wire_error(&resp))
+    }
+}
+
+/// Stamp a request as protocol v2 and attach an optional deadline.
+fn v2(mut req: Json, deadline_ms: Option<f64>) -> Json {
+    if let Json::Obj(m) = &mut req {
+        m.insert("v".into(), Json::Num(2.0));
+        if let Some(ms) = deadline_ms {
+            m.insert("deadline_ms".into(), Json::Num(ms));
+        }
+    }
+    req
+}
+
+/// Map a wire error of either dialect onto a typed [`Error`].
+fn wire_error(resp: &Json) -> Error {
+    match resp.get("error") {
+        // Protocol v2: structured {code, message}.
+        Some(Json::Obj(o)) => {
+            let code = o.get("code").and_then(Json::as_str).unwrap_or("internal");
+            let message = o
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            Error::from_code(code, message)
+        }
+        // Protocol v1: a flat legacy string.
+        Some(Json::Str(s)) => Error::from_legacy(s),
+        _ => Error::internal("malformed server response (no error field)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{SocketAddr, TcpListener};
+    use std::sync::mpsc;
+    use std::thread;
+
+    /// A one-connection stub server: answers each received line with the
+    /// next canned response and reports the request lines it saw.
+    fn stub(responses: Vec<String>) -> (SocketAddr, mpsc::Receiver<String>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel();
+        thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            for resp in responses {
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                    break;
+                }
+                tx.send(line.trim().to_string()).unwrap();
+                writer.write_all(resp.as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+            }
+        });
+        (addr, rx)
+    }
+
+    fn sample_prediction_json() -> Json {
+        use std::collections::BTreeMap;
+        protocol::prediction_json(&crate::model::Prediction {
+            workload: "hotspot".into(),
+            energy_j: 12345.67,
+            base_j: 7380.0,
+            dynamic_j: 4965.67,
+            coverage: 0.987,
+            duration_s: 90.0,
+            by_bucket: BTreeMap::new(),
+            by_key: Vec::new(),
+        })
+    }
+
+    #[test]
+    fn requests_are_stamped_v2_and_success_decodes_typed() {
+        let (addr, seen) = stub(vec![sample_prediction_json().to_string_compact()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let pred = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, Some(250.0))
+            .unwrap();
+        assert_eq!(pred.workload, "hotspot");
+        assert_eq!(pred.energy_j, 12345.67);
+        assert!(pred.text.starts_with("hotspot "));
+        // The request carried the v2 stamp and the deadline.
+        let req = parse(&seen.recv().unwrap()).unwrap();
+        assert_eq!(req.get("v").unwrap().as_f64(), Some(2.0));
+        assert_eq!(req.get("deadline_ms").unwrap().as_f64(), Some(250.0));
+        assert_eq!(req.get("cmd").unwrap().as_str(), Some("predict"));
+    }
+
+    #[test]
+    fn v2_structured_errors_map_by_code() {
+        let canned = concat!(
+            r#"{"error":{"code":"unknown_workload","message":"#,
+            r#""unknown workload 'nosuch' for cloudlab-v100 (see `wattchmen list`)"},"ok":false}"#
+        );
+        let (addr, _seen) = stub(vec![canned.to_string()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let err = client
+            .predict("cloudlab-v100", "nosuch", Mode::Pred, None)
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_workload");
+        assert_eq!(
+            err.to_string(),
+            "unknown workload 'nosuch' for cloudlab-v100 (see `wattchmen list`)"
+        );
+    }
+
+    #[test]
+    fn v1_flat_errors_fall_back_by_legacy_shape() {
+        let (addr, _seen) = stub(vec![
+            r#"{"error":"overloaded","ok":false,"retry_after_ms":10}"#.to_string(),
+            r#"{"error":"deadline exceeded","elapsed_ms":37.5,"ok":false}"#.to_string(),
+            r#"{"error":"unknown arch 'nope' (see `wattchmen list`)","ok":false}"#.to_string(),
+        ]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let mut codes = Vec::new();
+        for _ in 0..3 {
+            codes.push(
+                client
+                    .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+                    .unwrap_err()
+                    .code(),
+            );
+        }
+        assert_eq!(codes, ["overloaded", "deadline_exceeded", "unknown_arch"]);
+    }
+
+    #[test]
+    fn predict_all_decodes_the_suite_and_text() {
+        let preds = Json::Arr(vec![sample_prediction_json(), sample_prediction_json()]);
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert("arch".to_string(), Json::Str("cloudlab-v100".into()));
+        obj.insert("count".to_string(), Json::Num(2.0));
+        obj.insert("predictions".to_string(), preds);
+        obj.insert("text".to_string(), Json::Str("line1\nline2".into()));
+        let (addr, _seen) = stub(vec![Json::Obj(obj).to_string_compact()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let suite = client
+            .predict_all("cloudlab-v100", Mode::Pred, None)
+            .unwrap();
+        assert_eq!(suite.arch, "cloudlab-v100");
+        assert_eq!(suite.predictions.len(), 2);
+        assert_eq!(suite.text, "line1\nline2");
+    }
+
+    #[test]
+    fn capabilities_distinguish_v2_from_v1_servers() {
+        // v1-style status: no capabilities.
+        let (addr, _seen) = stub(vec![r#"{"ok":true,"served":0}"#.to_string()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        assert!(client.capabilities().unwrap().is_none());
+
+        // v2-style status: capabilities present.
+        let (addr, _seen) = stub(vec![
+            r#"{"capabilities":{"protocol_versions":[1,2]},"ok":true,"served":0}"#.to_string(),
+        ]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let caps = client.capabilities().unwrap().expect("v2 server");
+        assert!(caps.get("protocol_versions").is_some());
+    }
+
+    #[test]
+    fn closed_connection_is_an_io_error() {
+        let (addr, _seen) = stub(vec![]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let err = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+            .unwrap_err();
+        assert_eq!(err.code(), "io_failed");
+    }
+}

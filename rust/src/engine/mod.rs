@@ -1,0 +1,768 @@
+//! `wattchmen::engine` — the one typed facade over the model layer.
+//!
+//! Every consumer of the per-instruction energy model — the CLI's
+//! `train`/`predict` commands, the `wattchmen serve` request path, the
+//! report pipeline's model-vs-measured comparisons, and the examples —
+//! reaches training, prediction, transfer, and ground-truth measurement
+//! through an [`Engine`], so all surfaces compute the same answer the
+//! same way (suite lookup → `scaled_workload` → profile → batched
+//! `predict_many`), and every failure is a typed [`crate::Error`] with a
+//! stable wire code.
+//!
+//! # Building an engine
+//!
+//! ```no_run
+//! use wattchmen::{Engine, PredictRequest};
+//!
+//! fn main() -> Result<(), wattchmen::Error> {
+//!     let engine = Engine::builder()
+//!         .arch("cloudlab-v100")
+//!         .seed(42)
+//!         .fast(true) // shortened campaign protocol
+//!         .build()?;
+//!     let trained = engine.train()?;
+//!     println!(
+//!         "constant {:.1} W, static {:.1} W, residual {:.2e}",
+//!         trained.table.const_power_w, trained.table.static_power_w, trained.result.residual,
+//!     );
+//!     let outcome = engine.predict(PredictRequest {
+//!         workload: Some("hotspot".into()),
+//!         top: 6,
+//!         ..PredictRequest::default()
+//!     })?;
+//!     println!("{:.0} J", outcome.prediction.energy_j);
+//!     for (key, joules, src) in outcome.top_keys() {
+//!         println!("  {key}: {joules:.1} J [{src:?}]");
+//!     }
+//!     Ok(())
+//! }
+//! ```
+//!
+//! A prediction engine over an already-trained table loads it instead:
+//! `Engine::builder().table_path("v100.table.json".into())` (the CLI's
+//! `predict --table`), or shares one in memory with
+//! [`EngineBuilder::table`].
+//!
+//! # Error codes
+//!
+//! All entry points fail with [`crate::Error`]; see its docs for the
+//! full code table.  The ones an engine itself produces:
+//!
+//! | code | raised by |
+//! |------|-----------|
+//! | `unknown_arch` | [`EngineBuilder::build`] on an arch not in the catalog |
+//! | `table_missing` | [`Engine::predict`]/[`Engine::transfer`] without a table |
+//! | `unknown_workload` | a selection not in the arch's evaluation suite |
+//! | `deadline_exceeded` | a coordinated prediction outliving its budget |
+//! | `shutting_down` | submitting to a draining coordinator |
+//! | `artifact_failed` | a failing PJRT batch execution |
+//! | `internal` | wrapped lower-layer errors (training campaign, solver) |
+//!
+//! # Backends
+//!
+//! An engine predicts either *natively* on the calling thread (optionally
+//! holding the PJRT [`Artifacts`] — they are not `Sync`, so such an
+//! engine must stay on one thread) or *coordinated*, shipping batches to
+//! the thread driving a
+//! [`runtime::coalescer`](crate::runtime::coalescer::Coalescer), where
+//! concurrent same-table requests coalesce into single `predict_many`
+//! calls.  `wattchmen serve` and the parallel report pipeline build
+//! coordinated engines; the CLI and examples build native ones.
+
+pub mod client;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::cluster::ClusterCampaign;
+use crate::error::Error;
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::profiler::KernelProfile;
+use crate::model::{self, EnergyTable, Mode, Prediction, Source, TrainResult, TransferResult};
+use crate::report::cache::EvalCache;
+use crate::report::context::{scaled_workload, train_cfg, MeasuredWorkload, WORKLOAD_SECS};
+use crate::runtime::coalescer::{exec_on_coordinator, submit_suite_and_wait_deadline, Job};
+use crate::runtime::Artifacts;
+use crate::service::cache::ProfileCache;
+use crate::util::sync::{lock_unpoisoned, parallel_map, OwnedSemaphorePermit};
+use crate::workloads::{self, Workload};
+
+/// `by_key` rows a [`PredictOutcome`] retains by default (the CLI's
+/// historical `--breakdown` depth; override with `--top N`).
+pub const DEFAULT_TOP: usize = 8;
+
+/// Where an engine's predictions execute.
+enum Backend {
+    /// On the calling thread, optionally through owned PJRT artifacts.
+    /// Such an engine is not `Sync` and must stay on one thread.
+    Native(Option<Artifacts>),
+    /// Shipped to the coordinator thread driving the runtime coalescer;
+    /// same-table batches from concurrent callers amortize one call.
+    Coordinated(Sender<Job>),
+}
+
+/// Where an engine memoizes kernel profiles.
+enum ProfileSource {
+    /// The shared [`EvalCache`] (content-fingerprint keys) — CLI,
+    /// report, examples.
+    Eval,
+    /// The serve layer's [`ProfileCache`] ((arch, workload, duration)
+    /// keys with hit/miss counters feeding the service metrics).
+    Service(Arc<ProfileCache>),
+}
+
+/// One typed prediction request, shared by every surface.
+///
+/// `permit` and `deadline` exist for the serve path: the admission
+/// token rides inside the queued coalescer job (releasing only when the
+/// coordinator consumes it) and the deadline bounds both the waiter and
+/// the batch.  Local callers leave them `None`.
+pub struct PredictRequest {
+    /// Workload selection; `None` = the arch's whole evaluation suite.
+    pub workload: Option<String>,
+    pub mode: Mode,
+    /// Scaling target in seconds; `None` = the engine's default (the
+    /// paper's `WORKLOAD_SECS` measurement protocol).
+    pub duration_s: Option<f64>,
+    /// `by_key` rows retained in each outcome (`usize::MAX` = all).
+    pub top: usize,
+    /// Absolute deadline for coordinated predictions.
+    pub deadline: Option<Instant>,
+    /// Admission token from the serve queue, riding into the coalescer.
+    pub permit: Option<OwnedSemaphorePermit>,
+}
+
+impl Default for PredictRequest {
+    fn default() -> PredictRequest {
+        PredictRequest {
+            workload: None,
+            mode: Mode::Pred,
+            duration_s: None,
+            top: DEFAULT_TOP,
+            deadline: None,
+            permit: None,
+        }
+    }
+}
+
+/// One workload's prediction plus the request's attribution depth.
+#[derive(Clone, Debug)]
+pub struct PredictOutcome {
+    pub prediction: Prediction,
+    /// `by_key` rows [`top_keys`](Self::top_keys) exposes.
+    pub top: usize,
+}
+
+impl PredictOutcome {
+    /// The top-N per-instruction-group attribution rows (already sorted
+    /// descending by energy).
+    pub fn top_keys(&self) -> &[(String, f64, Source)] {
+        let n = self.top.min(self.prediction.by_key.len());
+        &self.prediction.by_key[..n]
+    }
+
+    /// The CLI's `--breakdown` lines: per-bucket energies, then the
+    /// top-N instruction groups.
+    pub fn breakdown_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (bucket, joules) in &self.prediction.by_bucket {
+            out.push(format!("    {bucket:<12} {joules:>9.1} J"));
+        }
+        for (key, joules, src) in self.top_keys() {
+            out.push(format!("    top: {key:<20} {joules:>9.1} J  [{src:?}]"));
+        }
+        out
+    }
+}
+
+/// A finished training campaign: the full [`TrainResult`] plus the table
+/// it produced (also installed as the engine's prediction table).
+#[derive(Clone)]
+pub struct TrainOutcome {
+    pub result: Arc<TrainResult>,
+    pub table: Arc<EnergyTable>,
+    pub elapsed: Duration,
+}
+
+/// Builder for a [`Engine`]; see the module docs for an example.
+pub struct EngineBuilder {
+    arch: String,
+    seed: u64,
+    fast: bool,
+    gpus: usize,
+    duration_s: f64,
+    table_path: Option<PathBuf>,
+    table: Option<Arc<EnergyTable>>,
+    artifacts: Option<Artifacts>,
+    cache: Option<Arc<EvalCache>>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            arch: crate::service::protocol::DEFAULT_ARCH.to_string(),
+            seed: 42,
+            fast: false,
+            gpus: 4,
+            duration_s: WORKLOAD_SECS,
+            table_path: None,
+            table: None,
+            artifacts: None,
+            cache: None,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Environment name (`wattchmen list`); resolved at [`build`](Self::build).
+    pub fn arch(mut self, name: &str) -> Self {
+        self.arch = name.to_string();
+        self
+    }
+
+    /// Campaign / measurement seed (default 42).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `true` = the shortened campaign protocol (`--fast`).
+    pub fn fast(mut self, fast: bool) -> Self {
+        self.fast = fast;
+        self
+    }
+
+    /// Simulated GPUs the training campaign shards over (default 4).
+    pub fn gpus(mut self, gpus: usize) -> Self {
+        self.gpus = gpus.max(1);
+        self
+    }
+
+    /// Default workload-scaling target for predictions (default: the
+    /// paper's 90 s measurement protocol).
+    pub fn duration_s(mut self, secs: f64) -> Self {
+        self.duration_s = secs;
+        self
+    }
+
+    /// Load the prediction table from a saved `*.table.json`.
+    pub fn table_path(mut self, path: PathBuf) -> Self {
+        self.table_path = Some(path);
+        self
+    }
+
+    /// Use an in-memory table (the `Arc` identity is the coalescer's
+    /// batching key).
+    pub fn table(mut self, table: Arc<EnergyTable>) -> Self {
+        self.table = Some(table);
+        self
+    }
+
+    /// Own the PJRT artifacts (`None` = native solver/integrator).  An
+    /// engine holding artifacts is not `Sync`.
+    pub fn artifacts(mut self, arts: Option<Artifacts>) -> Self {
+        self.artifacts = arts;
+        self
+    }
+
+    /// Share an existing [`EvalCache`] (profiles / measurements /
+    /// trained models) instead of a fresh one.
+    pub fn cache(mut self, cache: Arc<EvalCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Resolve the arch and table into a ready engine.
+    pub fn build(self) -> Result<Engine, Error> {
+        let cfg = ArchConfig::by_name(&self.arch).ok_or_else(|| Error::unknown_arch(&self.arch))?;
+        let table = match (self.table, &self.table_path) {
+            (Some(t), _) => Some(t),
+            (None, Some(path)) => Some(Arc::new(
+                EnergyTable::load(path).map_err(|e| Error::TableMissing(format!("{e:#}")))?,
+            )),
+            (None, None) => None,
+        };
+        Ok(Engine {
+            cfg,
+            seed: self.seed,
+            fast: self.fast,
+            gpus: self.gpus,
+            default_duration_s: self.duration_s,
+            backend: Backend::Native(self.artifacts),
+            profile_source: ProfileSource::Eval,
+            cache: self.cache.unwrap_or_else(|| Arc::new(EvalCache::new())),
+            table: Mutex::new(table),
+        })
+    }
+}
+
+/// The typed facade over training, prediction, transfer, and
+/// ground-truth measurement for one environment.  See the module docs.
+pub struct Engine {
+    cfg: ArchConfig,
+    seed: u64,
+    fast: bool,
+    gpus: usize,
+    default_duration_s: f64,
+    backend: Backend,
+    profile_source: ProfileSource,
+    cache: Arc<EvalCache>,
+    table: Mutex<Option<Arc<EnergyTable>>>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Report-pipeline handle: shares the pipeline's [`EvalCache`] and,
+    /// when present, its coordinator (so figure predictions coalesce).
+    pub(crate) fn for_report(
+        cfg: ArchConfig,
+        seed: u64,
+        fast: bool,
+        cache: Arc<EvalCache>,
+        coordinator: Option<Sender<Job>>,
+    ) -> Engine {
+        Engine {
+            cfg,
+            seed,
+            fast,
+            gpus: 4,
+            default_duration_s: WORKLOAD_SECS,
+            backend: match coordinator {
+                Some(tx) => Backend::Coordinated(tx),
+                None => Backend::Native(None),
+            },
+            profile_source: ProfileSource::Eval,
+            cache,
+            table: Mutex::new(None),
+        }
+    }
+
+    /// Per-request serve handle: registry-resolved table, the service's
+    /// counter-instrumented profile cache, the serve coalescer, and the
+    /// server's shared [`EvalCache`] (constructed once at bind — an
+    /// engine handle itself allocates nothing but a config clone).
+    pub(crate) fn for_service(
+        cfg: ArchConfig,
+        table: Arc<EnergyTable>,
+        coordinator: Sender<Job>,
+        profiles: Arc<ProfileCache>,
+        cache: Arc<EvalCache>,
+        default_duration_s: f64,
+    ) -> Engine {
+        Engine {
+            cfg,
+            seed: 0,
+            fast: false,
+            gpus: 4,
+            default_duration_s,
+            backend: Backend::Coordinated(coordinator),
+            profile_source: ProfileSource::Service(profiles),
+            cache,
+            table: Mutex::new(Some(table)),
+        }
+    }
+
+    /// Install (or replace) the prediction table.
+    pub fn with_table(self, table: Arc<EnergyTable>) -> Engine {
+        *lock_unpoisoned(&self.table) = Some(table);
+        self
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// The engine's prediction table: built in, loaded, or trained.
+    pub fn table(&self) -> Result<Arc<EnergyTable>, Error> {
+        lock_unpoisoned(&self.table).clone().ok_or_else(|| {
+            Error::table_missing(
+                "no energy table configured (build the engine with a table, or call train())",
+            )
+        })
+    }
+
+    /// Run `f` where the PJRT artifacts live: inline for a native
+    /// engine, on the coordinator thread for a coordinated one.
+    pub fn with_arts<R, F>(&self, f: F) -> Result<R, Error>
+    where
+        R: Send + 'static,
+        F: FnOnce(Option<&Artifacts>) -> R + Send + 'static,
+    {
+        match &self.backend {
+            Backend::Native(arts) => Ok(f(arts.as_ref())),
+            Backend::Coordinated(jobs) => exec_on_coordinator(jobs, f),
+        }
+    }
+
+    /// Run a training campaign for this environment and install the
+    /// resulting table as the engine's prediction table.
+    pub fn train(&self) -> Result<TrainOutcome, Error> {
+        let t0 = Instant::now();
+        let cfg = self.cfg.clone();
+        let (gpus, seed, tc) = (self.gpus, self.seed, train_cfg(self.fast));
+        let result = self
+            .with_arts(move |arts| ClusterCampaign::new(cfg, gpus, seed).train(&tc, arts))?
+            .map_err(Error::from)?;
+        let result = Arc::new(result);
+        let table = Arc::new(result.table.clone());
+        *lock_unpoisoned(&self.table) = Some(table.clone());
+        Ok(TrainOutcome {
+            result,
+            table,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Predict one named workload (requires `req.workload`).
+    pub fn predict(&self, req: PredictRequest) -> Result<PredictOutcome, Error> {
+        if req.workload.is_none() {
+            return Err(Error::bad_request(
+                "predict needs a workload (predict_suite answers the whole evaluation suite)",
+            ));
+        }
+        let mut outs = self.predict_suite(req)?;
+        if outs.len() != 1 {
+            return Err(Error::internal(format!(
+                "coalescer returned {} predictions for 1 app",
+                outs.len()
+            )));
+        }
+        Ok(outs.remove(0))
+    }
+
+    /// Predict the request's selection of the arch's evaluation suite
+    /// (`req.workload = None` answers the whole suite, in suite order)
+    /// as ONE batched `predict_many` call.
+    pub fn predict_suite(&self, req: PredictRequest) -> Result<Vec<PredictOutcome>, Error> {
+        let PredictRequest {
+            workload,
+            mode,
+            duration_s,
+            top,
+            deadline,
+            permit,
+        } = req;
+        let table = self.table()?;
+        let secs = duration_s.unwrap_or(self.default_duration_s);
+        let apps: Vec<(String, Arc<Vec<KernelProfile>>)> = match &self.profile_source {
+            // The serve path: resolution + scaling live behind
+            // [`ProfileCache::get`]'s (arch, workload, duration) memo
+            // with the hit check FIRST — a warm request is one map
+            // lookup, with no suite rebuild and no re-scaling (the
+            // legacy service pipeline, kept byte-identical).
+            ProfileSource::Service(pc) => match workload.as_deref() {
+                Some(name) => vec![(name.to_string(), pc.get(&self.cfg, name, secs)?)],
+                None => workloads::evaluation_suite(self.cfg.gen)
+                    .iter()
+                    .map(|w| Ok((w.name.clone(), pc.get(&self.cfg, &w.name, secs)?)))
+                    .collect::<Result<Vec<_>, Error>>()?,
+            },
+            // The CLI / report path: the content-keyed EvalCache wants
+            // the scaled workload itself.
+            ProfileSource::Eval => self
+                .selection(workload.as_deref())?
+                .iter()
+                .map(|w| {
+                    let scaled = scaled_workload(&self.cfg, w, secs);
+                    (w.name.clone(), self.cache.profiles(&self.cfg, &scaled))
+                })
+                .collect(),
+        };
+        let preds = self.predict_batch(&table, &apps, mode, deadline, permit)?;
+        Ok(preds
+            .into_iter()
+            .map(|prediction| PredictOutcome { prediction, top })
+            .collect())
+    }
+
+    /// Batched prediction over pre-profiled apps — the report pipeline's
+    /// entry point (`compare_models` scales/profiles through the shared
+    /// cache and predicts here).
+    pub fn predict_profiled(
+        &self,
+        table: &Arc<EnergyTable>,
+        apps: &[(String, Arc<Vec<KernelProfile>>)],
+        mode: Mode,
+    ) -> Result<Vec<Prediction>, Error> {
+        self.predict_batch(table, apps, mode, None, None)
+    }
+
+    /// The one shared prediction core: native engines call
+    /// `model::predict_many` in place (with their artifacts), coordinated
+    /// engines enqueue one multi-app coalescer job.
+    fn predict_batch(
+        &self,
+        table: &Arc<EnergyTable>,
+        apps: &[(String, Arc<Vec<KernelProfile>>)],
+        mode: Mode,
+        deadline: Option<Instant>,
+        permit: Option<OwnedSemaphorePermit>,
+    ) -> Result<Vec<Prediction>, Error> {
+        match &self.backend {
+            Backend::Native(arts) => {
+                let view: Vec<(&str, &[KernelProfile])> = apps
+                    .iter()
+                    .map(|(name, profiles)| (name.as_str(), profiles.as_slice()))
+                    .collect();
+                model::predict_many(table, &view, mode, arts.as_ref()).map_err(Error::from)
+            }
+            Backend::Coordinated(jobs) => submit_suite_and_wait_deadline(
+                jobs,
+                table.clone(),
+                apps.to_vec(),
+                mode,
+                deadline,
+                permit,
+            ),
+        }
+    }
+
+    /// Kernel profiles of an already-scaled workload, memoized in the
+    /// engine's profile source.
+    pub fn profiles(&self, scaled: &Workload) -> Arc<Vec<KernelProfile>> {
+        self.app_profiles(scaled, self.default_duration_s)
+    }
+
+    fn app_profiles(&self, scaled: &Workload, secs: f64) -> Arc<Vec<KernelProfile>> {
+        match &self.profile_source {
+            ProfileSource::Eval => self.cache.profiles(&self.cfg, scaled),
+            ProfileSource::Service(pc) => pc.get_for(&self.cfg, scaled, secs),
+        }
+    }
+
+    /// Ground-truth measurement of an already-scaled workload (cached
+    /// per (arch, workload, secs, seed)).
+    pub fn measure(&self, scaled: &Workload, secs_tag: f64, seed: u64) -> Arc<MeasuredWorkload> {
+        self.cache.measure(&self.cfg, scaled, secs_tag, seed)
+    }
+
+    /// Measure a batch of scaled workloads on a worker pool.  Seeds are
+    /// `engine seed + seed_base + index` — exactly the sequential loop's,
+    /// so every measurement is bit-identical to a sequential run and
+    /// results come back in input order.
+    pub fn measure_suite(
+        &self,
+        scaled: &[Workload],
+        secs_tag: f64,
+        seed_base: u64,
+    ) -> Vec<Arc<MeasuredWorkload>> {
+        let workers = thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        let (cache, cfg, seed) = (&self.cache, &self.cfg, self.seed);
+        parallel_map(scaled.len(), workers, |i| {
+            cache.measure(cfg, &scaled[i], secs_tag, seed.wrapping_add(seed_base + i as u64))
+        })
+    }
+
+    /// Affine table transfer (paper §6 / Fig 14): build a destination
+    /// table from this engine's table plus a measured destination
+    /// subset.  The fit runs where the artifacts live.
+    pub fn transfer(
+        &self,
+        dst_subset: &BTreeMap<String, f64>,
+        dst_const_power_w: f64,
+        dst_static_power_w: f64,
+    ) -> Result<TransferResult, Error> {
+        let src = self.table()?;
+        let subset = dst_subset.clone();
+        self.with_arts(move |arts| {
+            model::transfer_table(&src, &subset, dst_const_power_w, dst_static_power_w, arts)
+        })?
+        .map_err(Error::from)
+    }
+
+    /// The request's slice of the arch's evaluation suite, in suite
+    /// order.
+    fn selection(&self, wanted: Option<&str>) -> Result<Vec<Workload>, Error> {
+        let suite = workloads::evaluation_suite(self.cfg.gen);
+        match wanted {
+            None => Ok(suite),
+            Some(name) => {
+                let sel: Vec<Workload> =
+                    suite.into_iter().filter(|w| w.name == name).collect();
+                if sel.is_empty() {
+                    Err(Error::unknown_workload(name, &self.cfg.name))
+                } else {
+                    Ok(sel)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::profiler::profile_app;
+    use crate::isa::Gen;
+    use crate::runtime::coalescer::Coalescer;
+    use crate::service::protocol;
+
+    fn test_table() -> Arc<EnergyTable> {
+        Arc::new(EnergyTable {
+            arch: "cloudlab-v100".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: [
+                ("FADD", 1.0),
+                ("FFMA", 1.2),
+                ("MOV", 0.4),
+                ("IADD3", 0.6),
+                ("LDG.E.32@L1", 2.5),
+                ("LDG.E.32@L2", 8.0),
+                ("LDG.E.64@L1", 4.0),
+                ("BAR.SYNC", 1.5),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+        })
+    }
+
+    #[test]
+    fn builder_rejects_unknown_arch_with_the_legacy_message() {
+        let err = Engine::builder().arch("not-an-arch").build().unwrap_err();
+        assert_eq!(err.code(), "unknown_arch");
+        assert_eq!(
+            err.to_string(),
+            "unknown arch 'not-an-arch' (see `wattchmen list`)"
+        );
+    }
+
+    #[test]
+    fn predict_without_a_table_is_table_missing() {
+        let engine = Engine::builder().build().unwrap();
+        let err = engine
+            .predict_suite(PredictRequest::default())
+            .unwrap_err();
+        assert_eq!(err.code(), "table_missing");
+    }
+
+    #[test]
+    fn unknown_workload_is_typed_with_the_legacy_message() {
+        let engine = Engine::builder().table(test_table()).build().unwrap();
+        let err = engine
+            .predict(PredictRequest {
+                workload: Some("nosuch".into()),
+                ..PredictRequest::default()
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_workload");
+        assert_eq!(
+            err.to_string(),
+            "unknown workload 'nosuch' for cloudlab-v100 (see `wattchmen list`)"
+        );
+    }
+
+    #[test]
+    fn engine_predictions_match_the_model_layer_bitwise() {
+        let table = test_table();
+        let engine = Engine::builder().table(table.clone()).build().unwrap();
+        let out = engine
+            .predict(PredictRequest {
+                workload: Some("hotspot".into()),
+                ..PredictRequest::default()
+            })
+            .unwrap();
+
+        // The CLI's historical inline pipeline, verbatim.
+        let cfg = ArchConfig::cloudlab_v100();
+        let w = workloads::evaluation_suite(Gen::Volta)
+            .into_iter()
+            .find(|w| w.name == "hotspot")
+            .unwrap();
+        let scaled = scaled_workload(&cfg, &w, WORKLOAD_SECS);
+        let apps = vec![(w.name.clone(), profile_app(&cfg, &scaled.kernels))];
+        let want = model::predict_suite(&table, &apps, Mode::Pred, None)
+            .unwrap()
+            .remove(0);
+        assert_eq!(out.prediction.energy_j.to_bits(), want.energy_j.to_bits());
+        assert_eq!(
+            protocol::render_line(&out.prediction),
+            protocol::render_line(&want)
+        );
+    }
+
+    #[test]
+    fn suite_prediction_covers_the_whole_suite_in_order() {
+        let engine = Engine::builder().table(test_table()).build().unwrap();
+        let outs = engine.predict_suite(PredictRequest::default()).unwrap();
+        let suite = workloads::evaluation_suite(Gen::Volta);
+        assert_eq!(outs.len(), suite.len());
+        for (o, w) in outs.iter().zip(&suite) {
+            assert_eq!(o.prediction.workload, w.name);
+        }
+    }
+
+    #[test]
+    fn top_keys_respects_the_requested_depth() {
+        let engine = Engine::builder().table(test_table()).build().unwrap();
+        let full = engine
+            .predict(PredictRequest {
+                workload: Some("hotspot".into()),
+                top: usize::MAX,
+                ..PredictRequest::default()
+            })
+            .unwrap();
+        let rows = full.prediction.by_key.len();
+        assert!(rows > 3, "hotspot should attribute more than 3 keys");
+        assert_eq!(full.top_keys().len(), rows);
+
+        let trimmed = PredictOutcome {
+            prediction: full.prediction.clone(),
+            top: 3,
+        };
+        assert_eq!(trimmed.top_keys().len(), 3);
+        assert_eq!(trimmed.top_keys(), &full.prediction.by_key[..3]);
+        // Default depth is the historical hardcoded 8.
+        assert_eq!(PredictRequest::default().top, DEFAULT_TOP);
+        assert_eq!(DEFAULT_TOP, 8);
+        // Breakdown lines: buckets first, then exactly top-N key rows.
+        let lines = trimmed.breakdown_lines();
+        let key_rows = lines.iter().filter(|l| l.contains("top: ")).count();
+        assert_eq!(key_rows, 3);
+        assert!(lines[0].ends_with(" J"));
+    }
+
+    #[test]
+    fn coordinated_engine_routes_through_the_coalescer() {
+        let table = test_table();
+        let cfg = ArchConfig::cloudlab_v100();
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(1));
+        let coal = Arc::new(coal);
+        let runner = {
+            let coal = coal.clone();
+            thread::spawn(move || coal.run(None))
+        };
+        let engine = Engine::for_report(cfg, 42, true, Arc::new(EvalCache::new()), Some(jobs))
+            .with_table(table.clone());
+        let out = engine
+            .predict(PredictRequest {
+                workload: Some("hotspot".into()),
+                ..PredictRequest::default()
+            })
+            .unwrap();
+        let native = Engine::builder().table(table).build().unwrap();
+        let want = native
+            .predict(PredictRequest {
+                workload: Some("hotspot".into()),
+                ..PredictRequest::default()
+            })
+            .unwrap();
+        drop(engine);
+        runner.join().unwrap();
+        assert_eq!(coal.batch_calls(), 1);
+        assert_eq!(
+            out.prediction.energy_j.to_bits(),
+            want.prediction.energy_j.to_bits()
+        );
+    }
+}

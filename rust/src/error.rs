@@ -1,0 +1,295 @@
+//! `wattchmen::Error` — the one structured error type every public
+//! surface (CLI, serve wire, report pipeline, [`engine`](crate::engine))
+//! speaks.
+//!
+//! Each variant carries a stable machine-readable wire code
+//! ([`Error::code`]) and a human-readable message ([`std::fmt::Display`]).
+//! The Display strings are the crate's *legacy* error strings: protocol
+//! v1 clients receive them verbatim in the flat `{"error":"…"}` wire
+//! shape, byte-identical to what pre-v2 servers sent, while protocol v2
+//! clients receive `{"error":{"code":…,"message":…}}` (see
+//! [`service::protocol`](crate::service::protocol)).
+//!
+//! | code | variant | meaning |
+//! |------|---------|---------|
+//! | `bad_request` | [`Error::BadRequest`] | malformed request line, field, or CLI argument |
+//! | `unknown_arch` | [`Error::UnknownArch`] | arch name not in the environment catalog |
+//! | `unknown_workload` | [`Error::UnknownWorkload`] | workload not in the arch's evaluation suite |
+//! | `table_missing` | [`Error::TableMissing`] | no (loadable) energy table for the request |
+//! | `overloaded` | [`Error::Overloaded`] | bounded request queue is full; retry later |
+//! | `deadline_exceeded` | [`Error::DeadlineExceeded`] | request outlived its deadline budget |
+//! | `shutting_down` | [`Error::Shutdown`] | service is draining; no new work accepted |
+//! | `artifact_failed` | [`Error::ArtifactFailed`] | PJRT artifact execution failed |
+//! | `io_failed` | [`Error::Io`] | socket / filesystem failure |
+//! | `internal` | [`Error::Internal`] | anything else (bug or wrapped lower-layer error) |
+
+use std::fmt;
+
+/// Structured wattchmen error: a stable wire code plus a message.
+///
+/// Message-carrying variants hold the *complete* rendered message (built
+/// by the [`Error::unknown_arch`]-style constructors), so a client that
+/// reconstructs an `Error` from the wire round-trips both the code and
+/// the exact text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum Error {
+    /// Malformed input: unparseable request line, bad field value, bad
+    /// CLI argument.
+    BadRequest(String),
+    /// Arch name not in the environment catalog (`wattchmen list`).
+    UnknownArch(String),
+    /// Workload not in the arch's evaluation suite (`wattchmen list`).
+    UnknownWorkload(String),
+    /// No energy table configured / on disk / loadable for the request.
+    TableMissing(String),
+    /// The bounded request queue is full; the request was shed.
+    Overloaded,
+    /// The request outlived its deadline budget.
+    DeadlineExceeded,
+    /// The service is draining; no new work is accepted.
+    Shutdown,
+    /// A PJRT artifact execution failed (native results unavailable).
+    ArtifactFailed(String),
+    /// Socket or filesystem failure.
+    Io(String),
+    /// Anything else: a bug, or a wrapped lower-layer error chain.
+    Internal(String),
+}
+
+impl Error {
+    /// Every wire code, in [`Error::examples`] order (the protocol v2
+    /// `capabilities` handshake ships this list).
+    pub const CODES: [&'static str; 10] = [
+        "bad_request",
+        "unknown_arch",
+        "unknown_workload",
+        "table_missing",
+        "overloaded",
+        "deadline_exceeded",
+        "shutting_down",
+        "artifact_failed",
+        "io_failed",
+        "internal",
+    ];
+
+    /// The stable machine-readable wire code for this error.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::BadRequest(_) => "bad_request",
+            Error::UnknownArch(_) => "unknown_arch",
+            Error::UnknownWorkload(_) => "unknown_workload",
+            Error::TableMissing(_) => "table_missing",
+            Error::Overloaded => "overloaded",
+            Error::DeadlineExceeded => "deadline_exceeded",
+            Error::Shutdown => "shutting_down",
+            Error::ArtifactFailed(_) => "artifact_failed",
+            Error::Io(_) => "io_failed",
+            Error::Internal(_) => "internal",
+        }
+    }
+
+    /// `unknown arch '<arch>' (see `wattchmen list`)` — the exact legacy
+    /// string v1 clients have always received.
+    pub fn unknown_arch(arch: &str) -> Error {
+        Error::UnknownArch(format!("unknown arch '{arch}' (see `wattchmen list`)"))
+    }
+
+    /// `unknown workload '<w>' for <arch> (see `wattchmen list`)`.
+    pub fn unknown_workload(workload: &str, arch: &str) -> Error {
+        Error::UnknownWorkload(format!(
+            "unknown workload '{workload}' for {arch} (see `wattchmen list`)"
+        ))
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> Error {
+        Error::BadRequest(msg.into())
+    }
+
+    pub fn table_missing(msg: impl Into<String>) -> Error {
+        Error::TableMissing(msg.into())
+    }
+
+    pub fn artifact_failed(msg: impl Into<String>) -> Error {
+        Error::ArtifactFailed(msg.into())
+    }
+
+    pub fn io(msg: impl Into<String>) -> Error {
+        Error::Io(msg.into())
+    }
+
+    pub fn internal(msg: impl Into<String>) -> Error {
+        Error::Internal(msg.into())
+    }
+
+    /// Rebuild an `Error` from a protocol v2 wire `(code, message)` pair.
+    /// Unknown codes (a newer server) degrade to [`Error::Internal`] with
+    /// the code preserved in the message.
+    pub fn from_code(code: &str, message: String) -> Error {
+        match code {
+            "bad_request" => Error::BadRequest(message),
+            "unknown_arch" => Error::UnknownArch(message),
+            "unknown_workload" => Error::UnknownWorkload(message),
+            "table_missing" => Error::TableMissing(message),
+            "overloaded" => Error::Overloaded,
+            "deadline_exceeded" => Error::DeadlineExceeded,
+            "shutting_down" => Error::Shutdown,
+            "artifact_failed" => Error::ArtifactFailed(message),
+            "io_failed" => Error::Io(message),
+            "internal" => Error::Internal(message),
+            other => Error::Internal(format!("{other}: {message}")),
+        }
+    }
+
+    /// Classify a protocol v1 flat error string (best effort: v1 carries
+    /// no code, so this keys off the stable legacy message shapes).
+    pub fn from_legacy(message: &str) -> Error {
+        match message {
+            "overloaded" => Error::Overloaded,
+            "deadline exceeded" => Error::DeadlineExceeded,
+            "prediction service is shutting down" => Error::Shutdown,
+            m if m.starts_with("unknown arch") => Error::UnknownArch(m.to_string()),
+            m if m.starts_with("unknown workload") => Error::UnknownWorkload(m.to_string()),
+            m if m.contains("energy table") => Error::TableMissing(m.to_string()),
+            m if m.starts_with("bad JSON request")
+                || m.contains("deadline_ms")
+                || m.contains("duration_s")
+                || m.starts_with("unknown cmd")
+                || m.starts_with("unknown mode")
+                || m.contains("'cmd' field")
+                || m.contains("'workload' field")
+                || m.contains("too long") =>
+            {
+                Error::BadRequest(m.to_string())
+            }
+            m => Error::Internal(m.to_string()),
+        }
+    }
+
+    /// One instance of every variant, for the table-driven code
+    /// conformance tests and the capabilities handshake.  The match in
+    /// [`Error::code`] is exhaustive, so adding a variant without
+    /// extending this list fails the `every_variant_is_listed` test.
+    #[doc(hidden)]
+    pub fn examples() -> Vec<Error> {
+        vec![
+            Error::BadRequest("bad JSON request: trailing garbage at byte 2".into()),
+            Error::unknown_arch("not-an-arch"),
+            Error::unknown_workload("nosuch", "cloudlab-v100"),
+            Error::TableMissing(
+                "no energy table for 'x' (train one with `wattchmen train`)".into(),
+            ),
+            Error::Overloaded,
+            Error::DeadlineExceeded,
+            Error::Shutdown,
+            Error::ArtifactFailed("batched predict failed: artifact rejected operand".into()),
+            Error::Io("connecting 127.0.0.1:7117: connection refused".into()),
+            Error::Internal("experiment fig99: unknown experiment".into()),
+        ]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BadRequest(m)
+            | Error::UnknownArch(m)
+            | Error::UnknownWorkload(m)
+            | Error::TableMissing(m)
+            | Error::ArtifactFailed(m)
+            | Error::Io(m)
+            | Error::Internal(m) => f.write_str(m),
+            Error::Overloaded => f.write_str("overloaded"),
+            Error::DeadlineExceeded => f.write_str("deadline exceeded"),
+            Error::Shutdown => f.write_str("prediction service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Error {
+        Error::Internal(format!("{e:#}"))
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn every_variant_is_listed_with_a_unique_code() {
+        let examples = Error::examples();
+        assert_eq!(examples.len(), Error::CODES.len());
+        let codes: BTreeSet<&str> = examples.iter().map(|e| e.code()).collect();
+        assert_eq!(codes.len(), examples.len(), "duplicate wire code");
+        let declared: BTreeSet<&str> = Error::CODES.iter().copied().collect();
+        assert_eq!(codes, declared, "CODES out of sync with examples()");
+    }
+
+    #[test]
+    fn display_matches_legacy_wire_strings() {
+        assert_eq!(
+            Error::unknown_arch("x").to_string(),
+            "unknown arch 'x' (see `wattchmen list`)"
+        );
+        assert_eq!(
+            Error::unknown_workload("w", "a").to_string(),
+            "unknown workload 'w' for a (see `wattchmen list`)"
+        );
+        assert_eq!(Error::Overloaded.to_string(), "overloaded");
+        assert_eq!(Error::DeadlineExceeded.to_string(), "deadline exceeded");
+        assert_eq!(
+            Error::Shutdown.to_string(),
+            "prediction service is shutting down"
+        );
+        assert_eq!(Error::bad_request("boom").to_string(), "boom");
+    }
+
+    #[test]
+    fn code_roundtrips_through_from_code() {
+        for e in Error::examples() {
+            let back = Error::from_code(e.code(), e.to_string());
+            assert_eq!(back.code(), e.code(), "{e:?}");
+            assert_eq!(back.to_string(), e.to_string(), "{e:?}");
+        }
+        // Unknown codes degrade gracefully, keeping the code visible.
+        let e = Error::from_code("rate_limited", "slow down".into());
+        assert_eq!(e.code(), "internal");
+        assert_eq!(e.to_string(), "rate_limited: slow down");
+    }
+
+    #[test]
+    fn legacy_strings_classify_back_to_their_codes() {
+        for e in Error::examples() {
+            // Io/ArtifactFailed/Internal legacy strings are not uniquely
+            // shaped; everything else must classify exactly.
+            let back = Error::from_legacy(&e.to_string());
+            match e {
+                Error::Io(_) | Error::ArtifactFailed(_) | Error::Internal(_) => {}
+                _ => assert_eq!(back.code(), e.code(), "{e:?}"),
+            }
+            assert_eq!(back.to_string(), e.to_string());
+        }
+    }
+
+    #[test]
+    fn converts_from_anyhow_and_io() {
+        let a = anyhow::anyhow!("inner").context("outer");
+        let e: Error = a.into();
+        assert_eq!(e.code(), "internal");
+        assert_eq!(e.to_string(), "outer: inner");
+        let io = std::io::Error::other("disk on fire");
+        let e: Error = io.into();
+        assert_eq!(e.code(), "io_failed");
+        assert!(e.to_string().contains("disk on fire"));
+    }
+}

@@ -1,9 +1,62 @@
 //! # Wattchmen — high-fidelity, flexible GPU energy modeling
 //!
-//! Reproduction of Tran et al., ICS'26 (see DESIGN.md).  The crate is a
-//! three-layer system: this rust coordinator (simulation substrate,
-//! training/prediction pipelines, experiment harness) drives AOT-compiled
-//! JAX/Pallas compute artifacts through PJRT (`runtime/`).
+//! Reproduction of *Wattchmen: Watching the Wattchers* (ICS'26): a
+//! microbenchmark campaign solves a per-instruction-group energy table
+//! for a GPU, and that one table answers per-workload energy predictions
+//! with fine-grained attribution.  The crate is a three-layer system:
+//! this Rust coordinator (simulation substrate, training/prediction
+//! pipelines, experiment harness) drives AOT-compiled JAX/Pallas compute
+//! artifacts through PJRT ([`runtime`]).
+//!
+//! ## Public API
+//!
+//! Every consumer reaches the model through the typed [`engine`] facade
+//! — one [`Engine`] per environment, built with [`Engine::builder`] —
+//! and every failure is a [`Error`] with a stable machine-readable code
+//! (see its docs for the full code table).  The CLI (`wattchmen`), the
+//! JSON-over-TCP prediction service ([`service`], protocol v1 + v2), the
+//! paper-figure report pipeline ([`report`]), and the examples are all
+//! thin layers over it.
+//!
+//! ```no_run
+//! use wattchmen::{Engine, PredictRequest};
+//!
+//! fn main() -> Result<(), wattchmen::Error> {
+//!     let engine = Engine::builder()
+//!         .arch("cloudlab-v100")
+//!         .fast(true)
+//!         .build()?;
+//!     let trained = engine.train()?;
+//!     println!("constant power {:.1} W", trained.table.const_power_w);
+//!     let outcome = engine.predict(PredictRequest {
+//!         workload: Some("hotspot".into()),
+//!         ..PredictRequest::default()
+//!     })?;
+//!     println!("{:.0} J", outcome.prediction.energy_j);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Remote consumers use [`engine::client::RemoteClient`], the typed
+//! protocol-v2 client (with transparent v1 fallback) for a running
+//! `wattchmen serve`.
+
+// CI gates the crate with `cargo clippy -- -D warnings`.  Correctness
+// lints stay hard errors; the style lints below fight this codebase's
+// deliberate explicitness (solver/ISA math, wire-format builders) and
+// are allowed crate-wide instead of being silenced piecemeal.
+#![allow(
+    clippy::collapsible_else_if,
+    clippy::collapsible_if,
+    clippy::comparison_chain,
+    clippy::len_zero,
+    clippy::manual_range_contains,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::single_char_pattern,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
 
 pub mod gpusim;
 pub mod report;
@@ -11,6 +64,8 @@ pub mod runtime;
 pub mod service;
 pub mod solver;
 pub mod trace;
+pub mod engine;
+pub mod error;
 pub mod isa;
 pub mod microbench;
 pub mod baselines;
@@ -18,6 +73,9 @@ pub mod cluster;
 pub mod model;
 pub mod util;
 pub mod workloads;
+
+pub use engine::{Engine, EngineBuilder, PredictOutcome, PredictRequest, TrainOutcome};
+pub use error::Error;
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

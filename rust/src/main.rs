@@ -1,32 +1,31 @@
-//! Wattchmen CLI — the Layer-3 coordinator entrypoint.
+//! Wattchmen CLI — the Layer-3 coordinator entrypoint, a thin shell over
+//! the typed [`wattchmen::engine`] facade.
 //!
 //! Commands:
-//!   report <fig...|all>   reproduce paper tables/figures (DESIGN.md §4)
+//!   report <fig...|all>   reproduce paper tables/figures
 //!   train                 run a training campaign, save the energy table
 //!   predict               predict a workload's energy from a saved table
 //!   serve                 JSON-over-TCP batched prediction service
 //!   list                  list environments / workloads / experiments
 //!   version
+//!
+//! Every command returns `wattchmen::Error`; the exit path prints its
+//! message (the same string a protocol-v1 service client would see).
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use wattchmen::cluster::ClusterCampaign;
+use wattchmen::engine::client::RemoteClient;
+use wattchmen::engine::DEFAULT_TOP;
 use wattchmen::gpusim::config::ArchConfig;
-use wattchmen::gpusim::profiler::{profile_app, KernelProfile};
 use wattchmen::isa::Gen;
-use wattchmen::model::{self, EnergyTable};
 use wattchmen::report::{self, EvalCache};
 use wattchmen::runtime::Artifacts;
 use wattchmen::service::{protocol, PredictServer, ServeConfig};
 use wattchmen::util::cli::Args;
-use wattchmen::util::json::{parse as parse_json, Json};
 use wattchmen::workloads;
+use wattchmen::{Engine, Error, PredictRequest};
 
 fn load_artifacts(args: &Args) -> Option<Artifacts> {
     if args.flag("no-artifacts") {
@@ -42,15 +41,10 @@ fn load_artifacts(args: &Args) -> Option<Artifacts> {
     }
 }
 
-fn arch_from(args: &Args) -> Result<ArchConfig> {
-    let name = args.get_or("arch", "cloudlab-v100");
-    ArchConfig::by_name(name).ok_or_else(|| anyhow!("unknown arch '{name}' (see `wattchmen list`)"))
-}
-
-fn cmd_report(args: &Args) -> Result<()> {
+fn cmd_report(args: &Args) -> Result<(), Error> {
     let arts = load_artifacts(args);
     let fast = args.flag("fast");
-    let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    let seed = args.get_usize("seed", 42)? as u64;
     let out_dir = PathBuf::from(args.get_or("out", "reports"));
 
     let mut names: Vec<String> = args.positional.clone();
@@ -58,7 +52,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         names = report::all_names().iter().map(|s| s.to_string()).collect();
     }
     // --jobs N figure drivers in parallel; 0 (default) sizes to the host.
-    let jobs = match args.get_usize("jobs", 0).map_err(anyhow::Error::msg)? {
+    let jobs = match args.get_usize("jobs", 0)? {
         0 => std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(4),
@@ -67,7 +61,7 @@ fn cmd_report(args: &Args) -> Result<()> {
 
     let cache = Arc::new(EvalCache::new());
     let t_total = Instant::now();
-    let mut save_err: Option<anyhow::Error> = None;
+    let mut save_err: Option<Error> = None;
     let results = report::run_all(
         &names,
         fast,
@@ -87,7 +81,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             }
             println!("  [{name}] completed in {:.1}s\n", elapsed.as_secs_f64());
             if let Err(e) = result.save(&out_dir) {
-                save_err.get_or_insert(e);
+                save_err.get_or_insert(e.into());
             }
         },
     );
@@ -96,7 +90,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     }
     for (name, result) in &results {
         if let Err(e) = result {
-            bail!("experiment {name}: {e:#}");
+            return Err(Error::internal(format!("experiment {name}: {e:#}")));
         }
     }
     println!(
@@ -110,139 +104,108 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn cmd_train(args: &Args) -> Result<(), Error> {
     let arts = load_artifacts(args);
-    let cfg = arch_from(args)?;
-    let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
-    let gpus = args.get_usize("gpus", 4).map_err(anyhow::Error::msg)?;
-    let tc = report::context::train_cfg(args.flag("fast"));
-    let t0 = Instant::now();
-    let result = ClusterCampaign::new(cfg.clone(), gpus, seed).train(&tc, arts.as_ref())?;
+    let gpus = args.get_usize("gpus", 4)?;
+    let engine = Engine::builder()
+        .arch(args.get_or("arch", protocol::DEFAULT_ARCH))
+        .seed(args.get_usize("seed", 42)? as u64)
+        .gpus(gpus)
+        .fast(args.flag("fast"))
+        .artifacts(arts)
+        .build()?;
+    let trained = engine.train()?;
     println!(
         "trained {} on {} simulated GPUs in {:.1}s: {} instruction groups, residual {:.3e}, solver {:?}",
-        cfg.name,
+        engine.arch().name,
         gpus,
-        t0.elapsed().as_secs_f64(),
-        result.columns.len(),
-        result.residual,
-        result.solver
+        trained.elapsed.as_secs_f64(),
+        trained.result.columns.len(),
+        trained.result.residual,
+        trained.result.solver
     );
     println!(
         "constant power {:.1} W, static power {:.1} W",
-        result.table.const_power_w, result.table.static_power_w
+        trained.table.const_power_w, trained.table.static_power_w
     );
     let out = PathBuf::from(
         args.get("out")
             .map(String::from)
-            .unwrap_or_else(|| format!("{}.table.json", cfg.name)),
+            .unwrap_or_else(|| format!("{}.table.json", engine.arch().name)),
     );
-    result.table.save(&out)?;
+    trained.table.save(&out)?;
     println!("energy table saved to {}", out.display());
     Ok(())
 }
 
-/// `predict --remote HOST:PORT`: act as a client of a running
-/// `wattchmen serve` instead of computing locally — one `predict` request
-/// when `--workload` narrows the selection, one `predict_all` (the whole
-/// evaluation suite in a single response) otherwise.  Prints the served
-/// `text` field, which is byte-identical to the local CLI output.
-fn predict_remote(addr: &str, args: &Args) -> Result<()> {
+/// `predict --remote HOST:PORT`: act as a typed protocol-v2 client of a
+/// running `wattchmen serve` (v1 servers answer transparently) — one
+/// `predict` request when `--workload` narrows the selection, one
+/// `predict_all` (the whole evaluation suite in a single response)
+/// otherwise.  Prints the served `text` field, which is byte-identical
+/// to the local CLI output.
+fn predict_remote(addr: &str, args: &Args) -> Result<(), Error> {
     let arch = args.get_or("arch", protocol::DEFAULT_ARCH);
-    let mode = protocol::parse_mode(args.get_or("mode", "pred")).map_err(|e| anyhow!(e))?;
-    let mut req = match args.get("workload") {
-        Some(w) => protocol::predict_request(arch, w, mode),
-        None => protocol::predict_all_request(arch, mode),
+    let mode = protocol::parse_mode(args.get_or("mode", "pred"))?;
+    let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
+    let deadline_ms = (deadline_ms > 0.0).then_some(deadline_ms);
+    let mut client = RemoteClient::connect(addr)?;
+    let text = match args.get("workload") {
+        Some(w) => client.predict(arch, w, mode, deadline_ms)?.text,
+        None => client.predict_all(arch, mode, deadline_ms)?.text,
     };
-    let deadline_ms = args.get_f64("deadline-ms", 0.0).map_err(anyhow::Error::msg)?;
-    if deadline_ms > 0.0 {
-        if let Json::Obj(m) = &mut req {
-            m.insert("deadline_ms".into(), Json::Num(deadline_ms));
-        }
-    }
-    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    writer.write_all(req.to_string_compact().as_bytes())?;
-    writer.write_all(b"\n")?;
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let resp = parse_json(line.trim()).map_err(anyhow::Error::msg)?;
-    if resp.get("ok") != Some(&Json::Bool(true)) {
-        let err = resp
-            .get("error")
-            .and_then(Json::as_str)
-            .unwrap_or("malformed server response");
-        bail!("server error: {err}");
-    }
-    let text = resp
-        .get("text")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("server response has no text field"))?;
     println!("{text}");
     Ok(())
 }
 
-fn cmd_predict(args: &Args) -> Result<()> {
+fn cmd_predict(args: &Args) -> Result<(), Error> {
     if let Some(addr) = args.get("remote") {
         return predict_remote(addr, args);
     }
     let arts = load_artifacts(args);
-    let cfg = arch_from(args)?;
-    let table_path = args
-        .get("table")
-        .ok_or_else(|| anyhow!("--table <file> required (run `wattchmen train` first)"))?;
-    let table = EnergyTable::load(Path::new(table_path))?;
-    let mode = protocol::parse_mode(args.get_or("mode", "pred")).map_err(|e| anyhow!(e))?;
-    let suite = workloads::evaluation_suite(cfg.gen);
-    let wanted = args.get("workload");
-    let apps: Vec<_> = suite
-        .iter()
-        .filter(|w| wanted.map(|n| w.name == n).unwrap_or(true))
-        .collect();
-    if apps.is_empty() {
-        bail!("no workload matches {:?}", wanted);
-    }
-    // One batched predict_many call for the whole selection: with
-    // artifacts loaded, the energy accumulation runs through the PJRT
-    // predict executable (32 workloads × 256 groups per call).
-    let profiled: Vec<(String, Vec<KernelProfile>)> = apps
-        .iter()
-        .map(|w| {
-            let scaled = report::scaled_workload(&cfg, w, report::context::WORKLOAD_SECS);
-            (w.name.clone(), profile_app(&cfg, &scaled.kernels))
-        })
-        .collect();
-    let preds = model::predict_suite(&table, &profiled, mode, arts.as_ref())?;
-    for pred in &preds {
-        println!("{}", protocol::render_line(pred));
+    let table_path = args.get("table").ok_or_else(|| {
+        Error::bad_request("--table <file> required (run `wattchmen train` first)")
+    })?;
+    let engine = Engine::builder()
+        .arch(args.get_or("arch", protocol::DEFAULT_ARCH))
+        .table_path(PathBuf::from(table_path))
+        .artifacts(arts)
+        .build()?;
+    let outcomes = engine.predict_suite(PredictRequest {
+        workload: args.get("workload").map(String::from),
+        mode: protocol::parse_mode(args.get_or("mode", "pred"))?,
+        top: args.get_usize("top", DEFAULT_TOP)?,
+        ..PredictRequest::default()
+    })?;
+    for outcome in &outcomes {
+        println!("{}", protocol::render_line(&outcome.prediction));
         if args.flag("breakdown") {
-            for (bucket, joules) in &pred.by_bucket {
-                println!("    {bucket:<12} {joules:>9.1} J");
-            }
-            for (key, joules, src) in pred.by_key.iter().take(8) {
-                println!("    top: {key:<20} {joules:>9.1} J  [{src:?}]");
+            for line in outcome.breakdown_lines() {
+                println!("{line}");
             }
         }
     }
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+fn cmd_serve(args: &Args) -> Result<(), Error> {
     let arts = load_artifacts(args);
-    let linger_ms = args.get_f64("linger-ms", 10.0).map_err(anyhow::Error::msg)?;
+    let linger_ms = args.get_f64("linger-ms", 10.0)?;
     // --deadline-ms 0 (the default) disables the server-wide budget;
     // per-request "deadline_ms" fields still apply.
-    let deadline_ms = args.get_f64("deadline-ms", 0.0).map_err(anyhow::Error::msg)?;
+    let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
     if !deadline_ms.is_finite() || deadline_ms < 0.0 {
-        bail!("--deadline-ms must be a non-negative finite number");
+        return Err(Error::bad_request(
+            "--deadline-ms must be a non-negative finite number",
+        ));
     }
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7117").to_string(),
-        workers: args.get_usize("workers", 64).map_err(anyhow::Error::msg)?,
+        workers: args.get_usize("workers", 64)?,
         linger: Duration::from_micros((linger_ms * 1000.0) as u64),
         tables_dir: PathBuf::from(args.get_or("tables", ".")),
         default_duration_s: report::context::WORKLOAD_SECS,
-        queue_capacity: args.get_usize("queue", 256).map_err(anyhow::Error::msg)?,
+        queue_capacity: args.get_usize("queue", 256)?,
         deadline: (deadline_ms > 0.0).then(|| {
             Duration::from_secs_f64(deadline_ms.min(protocol::MAX_DEADLINE_MS) / 1000.0)
         }),
@@ -309,7 +272,8 @@ fn main() {
                  \n\
                  report <fig1..fig14|all> [--fast] [--seed N] [--jobs N] [--out DIR] [--no-artifacts]\n\
                  train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
-                 predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred] [--breakdown]\n\
+                 predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred]\n\
+                         [--breakdown [--top N]]\n\
                  predict --remote H:P [--arch ENV] [--workload NAME] [--mode direct|pred] [--deadline-ms MS]\n\
                          (no --workload: one predict_all request for the whole suite)\n\
                  serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N]\n\
@@ -320,7 +284,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }

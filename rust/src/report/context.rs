@@ -6,7 +6,11 @@
 //! [`EvalCache`]: every figure driver on the worker pool carries its own
 //! clone, and all expensive products (trained tables, baselines,
 //! profiles, ground-truth measurements) are computed once per key across
-//! the whole report.  Artifact-backed work (batched `predict_many`,
+//! the whole report.  Model-layer work (suite predictions, transfer
+//! fits, measurement fan-outs) routes through per-arch
+//! [`Engine`](crate::engine::Engine) handles ([`EvalCtx::engine`]) —
+//! the same facade the CLI and `wattchmen serve` use.
+//! Artifact-backed work (batched `predict_many`,
 //! training solves) is routed to the coordinator thread through the
 //! [`runtime::coalescer`](crate::runtime::coalescer) when a
 //! [`Predictor::Coordinated`] handle is installed — the PJRT artifacts
@@ -15,18 +19,18 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::thread;
 
 use anyhow::{anyhow, Result};
 
 use crate::baselines::{train_accelwattch, AccelWattchModel, GuserModel};
 use crate::cluster::ClusterCampaign;
+use crate::engine::Engine;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::Device;
 use crate::gpusim::profiler::KernelProfile;
 use crate::gpusim::timing;
-use crate::model::{self, EnergyTable, Mode, Prediction, TrainConfig, TrainResult};
-use crate::runtime::coalescer::{exec_on_coordinator, submit_suite_and_wait, Job};
+use crate::model::{EnergyTable, Mode, TrainConfig, TrainResult};
+use crate::runtime::coalescer::{exec_on_coordinator, Job};
 use crate::runtime::Artifacts;
 use crate::util::stats;
 use crate::workloads::Workload;
@@ -122,6 +126,17 @@ impl EvalCtx {
         }
     }
 
+    /// A typed [`Engine`] handle for `cfg` sharing this context's cache
+    /// and (when coordinated) coalescer — how every figure driver
+    /// reaches the model layer.
+    pub fn engine(&self, cfg: &ArchConfig) -> Engine {
+        let coordinator = match &self.predictor {
+            Predictor::Native => None,
+            Predictor::Coordinated(jobs) => Some(jobs.clone()),
+        };
+        Engine::for_report(cfg.clone(), self.seed, self.fast, self.cache.clone(), coordinator)
+    }
+
     /// Wattchmen training campaign for an environment (cached; the solve
     /// runs where the artifacts live).
     pub fn wattchmen(&self, cfg: &ArchConfig) -> Result<Arc<TrainResult>> {
@@ -187,43 +202,7 @@ impl EvalCtx {
         secs_tag: f64,
         seed_base: u64,
     ) -> Vec<Arc<MeasuredWorkload>> {
-        let workers = thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(4);
-        let cache = &self.cache;
-        let seed = self.seed;
-        crate::util::sync::parallel_map(scaled.len(), workers, |i| {
-            cache.measure(
-                cfg,
-                &scaled[i],
-                secs_tag,
-                seed.wrapping_add(seed_base + i as u64),
-            )
-        })
-    }
-
-    /// Batched suite prediction against one table: native in-thread, or
-    /// coalesced on the coordinator (where concurrent same-table suites
-    /// from other figures amortize one artifact call).
-    pub fn predict_suite(
-        &self,
-        table: &Arc<EnergyTable>,
-        apps: &[(String, Arc<Vec<KernelProfile>>)],
-        mode: Mode,
-    ) -> Result<Vec<Prediction>> {
-        match &self.predictor {
-            Predictor::Native => {
-                let view: Vec<(&str, &[KernelProfile])> = apps
-                    .iter()
-                    .map(|(name, profiles)| (name.as_str(), profiles.as_slice()))
-                    .collect();
-                model::predict_many(table, &view, mode, None)
-            }
-            Predictor::Coordinated(jobs) => {
-                submit_suite_and_wait(jobs, table.clone(), apps.to_vec(), mode)
-                    .map_err(|e| anyhow!(e))
-            }
-        }
+        self.engine(cfg).measure_suite(scaled, secs_tag, seed_base)
     }
 }
 
@@ -320,16 +299,19 @@ pub fn compare_models(
     suite: &[Workload],
     labels: &[&str],
 ) -> Result<Comparison> {
-    // Scale + profile + measure every workload (all cached).
+    // One engine handle per comparison: scaling, profiling, ground-truth
+    // measurement, and the batched predictions all route through it (and
+    // therefore through the shared cache / coalescer).
+    let engine = ctx.engine(cfg);
     let scaled: Vec<Workload> = suite
         .iter()
         .map(|w| scaled_workload(cfg, w, WORKLOAD_SECS))
         .collect();
     let profiles: Vec<(String, Arc<Vec<KernelProfile>>)> = scaled
         .iter()
-        .map(|w| (w.name.clone(), ctx.profiles(cfg, w)))
+        .map(|w| (w.name.clone(), engine.profiles(w)))
         .collect();
-    let measured = ctx.measure_many(cfg, &scaled, WORKLOAD_SECS, 1000);
+    let measured = engine.measure_suite(&scaled, WORKLOAD_SECS, 1000);
 
     let mut cmp = Comparison {
         workloads: scaled.iter().map(|w| w.name.clone()).collect(),
@@ -359,7 +341,7 @@ pub fn compare_models(
             "B" | "C" => {
                 let mode = if label == "B" { Mode::Direct } else { Mode::Pred };
                 let table = ctx.table(cfg)?;
-                let preds: Vec<Prediction> = ctx.predict_suite(&table, &profiles, mode)?;
+                let preds = engine.predict_profiled(&table, &profiles, mode)?;
                 cmp.predictions
                     .insert(label.into(), preds.iter().map(|p| p.energy_j).collect());
                 cmp.coverage

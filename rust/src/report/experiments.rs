@@ -578,6 +578,11 @@ pub fn fig14(ctx: &EvalCtx) -> Result<ExperimentResult> {
 
     let mut rows = Vec::new();
     let mut metrics = vec![("air_water_table_r2".into(), r2, 0.988)];
+    // One engine per side: air is the transfer source, water answers the
+    // suite predictions (coalesced with concurrent figures when
+    // coordinated).
+    let air_engine = ctx.engine(&air).with_table(Arc::new(air_tr.table.clone()));
+    let water_engine = ctx.engine(&water);
     for (frac, paper_mape) in [(0.10, 13.0), (0.50, 10.0), (1.0, 14.0)] {
         let table: Arc<model::EnergyTable> = if frac >= 1.0 {
             ctx.table(&water)?
@@ -587,15 +592,15 @@ pub fn fig14(ctx: &EvalCtx) -> Result<ExperimentResult> {
                 .iter()
                 .map(|k| (k.clone(), water_tr.table.entries[k]))
                 .collect();
-            let src = air_tr.table.clone();
-            let (cpw, spw) =
-                (water_tr.table.const_power_w, water_tr.table.static_power_w);
             // The affine fit runs where the artifacts live.
-            let transferred = ctx
-                .with_arts(move |arts| model::transfer_table(&src, &subset, cpw, spw, arts))??;
+            let transferred = air_engine.transfer(
+                &subset,
+                water_tr.table.const_power_w,
+                water_tr.table.static_power_w,
+            )?;
             Arc::new(transferred.table)
         };
-        let preds = ctx.predict_suite(&table, &profiles, Mode::Pred)?;
+        let preds = water_engine.predict_profiled(&table, &profiles, Mode::Pred)?;
         let pred_e: Vec<f64> = preds.iter().map(|p| p.energy_j).collect();
         let mape = stats::mape(&pred_e, &measured);
         rows.push(vec![

@@ -1,8 +1,9 @@
 //! Artifact-coordinator work queue: the shared primitive behind both
 //! `wattchmen serve` and the parallel report pipeline.
 //!
-//! The PJRT artifacts are not Sync (same constraint DESIGN.md applied to
-//! `cluster/`), so everything that wants them must run on the one thread
+//! The PJRT artifacts are not Sync (the same constraint that keeps
+//! `cluster/` on plain threads), so everything that wants them must run
+//! on the one thread
 //! that owns them — whichever thread calls [`Coalescer::run`].  Two job
 //! kinds flow through the queue:
 //!
@@ -21,40 +22,23 @@
 //! Worker threads only enqueue jobs and block on their reply channels;
 //! the run loop exits once every `Sender<Job>` clone has been dropped.
 //! A [`PredictJob`] may carry an absolute deadline: expired jobs are shed
-//! with [`JobError::DeadlineExceeded`] at execution time (their batchmates
+//! with [`Error::DeadlineExceeded`] at execution time (their batchmates
 //! are unaffected), and [`submit_suite_and_wait_deadline`] bounds the
 //! waiter's blocking too, so a coordinator pinned by a slow exec job
-//! cannot hang a deadlined request past its budget.
+//! cannot hang a deadlined request past its budget.  All failures are
+//! typed [`crate::Error`]s, so the serve layer maps them straight onto
+//! wire codes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::error::Error;
 use crate::gpusim::profiler::KernelProfile;
 use crate::model::{predict_many, EnergyTable, Mode, Prediction};
 use crate::runtime::Artifacts;
 use crate::util::sync::{lock_unpoisoned, OwnedSemaphorePermit};
-
-/// Why a queued prediction job failed.
-#[derive(Clone, Debug, PartialEq)]
-pub enum JobError {
-    /// The job outlived its deadline budget: shed by the coordinator
-    /// before execution, or its waiter gave up first.  Either way the
-    /// rest of the batch is unaffected.
-    DeadlineExceeded,
-    /// The batched predict (or the submission itself) failed.
-    Failed(String),
-}
-
-impl std::fmt::Display for JobError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            JobError::DeadlineExceeded => write!(f, "deadline exceeded"),
-            JobError::Failed(msg) => write!(f, "{msg}"),
-        }
-    }
-}
 
 /// One queued prediction request: a batch of apps against one table, with
 /// a reply channel for the whole batch (in submission order).
@@ -63,7 +47,7 @@ pub struct PredictJob {
     pub mode: Mode,
     pub apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
     /// Absolute deadline; `None` means no budget.  A job still queued
-    /// when its deadline passes is shed with [`JobError::DeadlineExceeded`]
+    /// when its deadline passes is shed with [`Error::DeadlineExceeded`]
     /// instead of joining its batch — a stale reply is useless to the
     /// waiter (who has already timed out) and would only slow the batch.
     pub deadline: Option<Instant>,
@@ -72,7 +56,7 @@ pub struct PredictJob {
     /// makes the serve queue genuinely bounded: an abandoned job keeps
     /// its capacity slot occupied until it actually leaves the queue.
     pub permit: Option<OwnedSemaphorePermit>,
-    pub reply: Sender<Result<Vec<Prediction>, JobError>>,
+    pub reply: Sender<Result<Vec<Prediction>, Error>>,
 }
 
 /// A closure to run on the coordinator thread, with the artifacts.
@@ -157,7 +141,7 @@ impl Coalescer {
         for job in jobs {
             match job.deadline {
                 Some(d) if d <= now => {
-                    let _ = job.reply.send(Err(JobError::DeadlineExceeded));
+                    let _ = job.reply.send(Err(Error::DeadlineExceeded));
                 }
                 _ => live.push(job),
             }
@@ -189,9 +173,9 @@ impl Coalescer {
                     }
                 }
                 Err(e) => {
-                    let msg = format!("batched predict failed: {e:#}");
+                    let err = Error::ArtifactFailed(format!("batched predict failed: {e:#}"));
                     for job in &group {
-                        let _ = job.reply.send(Err(JobError::Failed(msg.clone())));
+                        let _ = job.reply.send(Err(err.clone()));
                     }
                 }
             }
@@ -206,23 +190,26 @@ pub fn submit_and_wait(
     workload: String,
     profiles: Arc<Vec<KernelProfile>>,
     mode: Mode,
-) -> Result<Prediction, String> {
+) -> Result<Prediction, Error> {
     let mut preds = submit_suite_and_wait(jobs, table, vec![(workload, profiles)], mode)?;
     if preds.len() != 1 {
-        return Err(format!("coalescer returned {} predictions for 1 app", preds.len()));
+        return Err(Error::internal(format!(
+            "coalescer returned {} predictions for 1 app",
+            preds.len()
+        )));
     }
     Ok(preds.remove(0))
 }
 
 /// Submit a multi-app suite against one table and block for the batch
-/// (no deadline; errors flattened to strings for the report pipeline).
+/// (no deadline — the report pipeline's entry point).
 pub fn submit_suite_and_wait(
     jobs: &Sender<Job>,
     table: Arc<EnergyTable>,
     apps: Vec<(String, Arc<Vec<KernelProfile>>)>,
     mode: Mode,
-) -> Result<Vec<Prediction>, String> {
-    submit_suite_and_wait_deadline(jobs, table, apps, mode, None, None).map_err(|e| e.to_string())
+) -> Result<Vec<Prediction>, Error> {
+    submit_suite_and_wait_deadline(jobs, table, apps, mode, None, None)
 }
 
 /// Deadline-aware submission: block for the batch at most until
@@ -240,7 +227,7 @@ pub fn submit_suite_and_wait_deadline(
     mode: Mode,
     deadline: Option<Instant>,
     permit: Option<OwnedSemaphorePermit>,
-) -> Result<Vec<Prediction>, JobError> {
+) -> Result<Vec<Prediction>, Error> {
     let (reply, result) = mpsc::channel();
     jobs.send(Job::Predict(PredictJob {
         table,
@@ -250,21 +237,21 @@ pub fn submit_suite_and_wait_deadline(
         permit,
         reply,
     }))
-    .map_err(|_| JobError::Failed("prediction service is shutting down".to_string()))?;
+    .map_err(|_| Error::Shutdown)?;
     let received = match deadline {
         None => result
             .recv()
-            .map_err(|_| JobError::Failed("prediction service dropped the request".to_string())),
+            .map_err(|_| Error::internal("prediction service dropped the request")),
         Some(d) => {
             // recv_timeout(0) still drains an already-delivered reply, so
             // an expired-on-arrival budget cannot drop a ready result.
             let left = d.saturating_duration_since(Instant::now());
             match result.recv_timeout(left) {
                 Ok(r) => Ok(r),
-                Err(RecvTimeoutError::Timeout) => Err(JobError::DeadlineExceeded),
-                Err(RecvTimeoutError::Disconnected) => Err(JobError::Failed(
-                    "prediction service dropped the request".to_string(),
-                )),
+                Err(RecvTimeoutError::Timeout) => Err(Error::DeadlineExceeded),
+                Err(RecvTimeoutError::Disconnected) => {
+                    Err(Error::internal("prediction service dropped the request"))
+                }
             }
         }
     };
@@ -274,7 +261,7 @@ pub fn submit_suite_and_wait_deadline(
 /// Run `f` on the coordinator thread (where the artifacts live) and block
 /// for its result.  The closure must own its captures — it crosses a
 /// thread boundary.
-pub fn exec_on_coordinator<R, F>(jobs: &Sender<Job>, f: F) -> Result<R, String>
+pub fn exec_on_coordinator<R, F>(jobs: &Sender<Job>, f: F) -> Result<R, Error>
 where
     R: Send + 'static,
     F: FnOnce(Option<&Artifacts>) -> R + Send + 'static,
@@ -283,9 +270,9 @@ where
     jobs.send(Job::Exec(ExecJob(Box::new(move |arts| {
         let _ = tx.send(f(arts));
     }))))
-    .map_err(|_| "artifact coordinator is shutting down".to_string())?;
+    .map_err(|_| Error::Shutdown)?;
     rx.recv()
-        .map_err(|_| "artifact coordinator dropped the job".to_string())
+        .map_err(|_| Error::internal("artifact coordinator dropped the job"))
 }
 
 #[cfg(test)]
@@ -475,7 +462,7 @@ mod tests {
         // The expired job fails alone...
         assert_eq!(
             expired_result.recv().unwrap().unwrap_err(),
-            JobError::DeadlineExceeded
+            Error::DeadlineExceeded
         );
         // ...while its batchmate comes back intact, bit-exact.
         let got = healthy.join().unwrap().unwrap();
@@ -533,7 +520,7 @@ mod tests {
             None,
         )
         .unwrap_err();
-        assert_eq!(err, JobError::DeadlineExceeded);
+        assert_eq!(err, Error::DeadlineExceeded);
         assert!(t0.elapsed() >= Duration::from_millis(30));
     }
 

@@ -11,13 +11,12 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
-
+use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::profiler::{profile_app, KernelProfile};
 use crate::report::scaled_workload;
 use crate::util::sync::lock_unpoisoned;
-use crate::workloads;
+use crate::workloads::{self, Workload};
 
 type Key = (String, String, u64);
 
@@ -60,7 +59,7 @@ impl ProfileCache {
         cfg: &ArchConfig,
         workload: &str,
         duration_s: f64,
-    ) -> Result<Arc<Vec<KernelProfile>>> {
+    ) -> Result<Arc<Vec<KernelProfile>>, Error> {
         let key = (
             cfg.name.clone(),
             workload.to_string(),
@@ -73,17 +72,37 @@ impl ProfileCache {
             self.hits.fetch_add(1, Ordering::SeqCst);
             return Ok(p.clone());
         }
-        self.misses.fetch_add(1, Ordering::SeqCst);
         let w = workloads::evaluation_suite(cfg.gen)
             .into_iter()
             .find(|w| w.name == workload)
-            .ok_or_else(|| {
-                anyhow!(
-                    "unknown workload '{workload}' for {} (see `wattchmen list`)",
-                    cfg.name
-                )
-            })?;
+            .ok_or_else(|| Error::unknown_workload(workload, &cfg.name))?;
         let scaled = scaled_workload(cfg, &w, duration_s);
+        Ok(self.get_for(cfg, &scaled, duration_s))
+    }
+
+    /// Profiles of an already-scaled workload, memoized under the same
+    /// (arch, workload, duration) key — [`get`](Self::get)'s slow path,
+    /// and the entry point for callers that already hold a scaled
+    /// workload ([`Engine::profiles`](crate::engine::Engine::profiles)).
+    /// A miss is counted only here, i.e. only for requests whose
+    /// profiling actually ran (the soak tests use the miss counter as a
+    /// deterministic admission barrier).
+    pub fn get_for(
+        &self,
+        cfg: &ArchConfig,
+        scaled: &Workload,
+        duration_s: f64,
+    ) -> Arc<Vec<KernelProfile>> {
+        let key = (
+            cfg.name.clone(),
+            scaled.name.clone(),
+            duration_s.to_bits(),
+        );
+        if let Some(p) = lock_unpoisoned(&self.cache).get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return p.clone();
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
         let profiles = Arc::new(profile_app(cfg, &scaled.kernels));
         // A concurrent miss may have raced us here; either instance is
         // identical, last insert wins.
@@ -92,7 +111,7 @@ impl ProfileCache {
             cache.clear();
         }
         cache.insert(key, profiles.clone());
-        Ok(profiles)
+        profiles
     }
 }
 

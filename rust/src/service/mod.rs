@@ -1,22 +1,25 @@
 //! `wattchmen serve` — the batched multi-table prediction service.
 //!
-//! A std-only JSON-over-TCP server (tokio is unavailable offline — same
-//! constraint DESIGN.md applied to `cluster/`) that turns the per-table
-//! prediction pipeline into an online service:
+//! A std-only JSON-over-TCP server (tokio is unavailable offline — the
+//! same constraint that keeps `cluster/` on `std::thread`) that turns
+//! the per-table prediction pipeline into an online service:
 //!
 //! * acceptor thread — hands sockets to the worker pool;
-//! * worker pool — parses newline-delimited JSON requests, resolves
-//!   tables through [`TableRegistry`] (mtime-based hot reload) and
-//!   profiles through [`ProfileCache`] (memoized `profile_app`), then
-//!   enqueues [`PredictJob`]s and blocks on their replies;
+//! * worker pool — parses newline-delimited JSON requests (protocol v1
+//!   or v2, see [`protocol`]), resolves tables through [`TableRegistry`]
+//!   (mtime-based hot reload), and answers each predict-family request
+//!   through a per-request [`Engine`](crate::engine::Engine) handle —
+//!   the same typed facade the CLI and the report pipeline use — which
+//!   memoizes profiles in the counter-instrumented [`ProfileCache`],
+//!   enqueues [`PredictJob`](crate::runtime::coalescer::PredictJob)s,
+//!   and blocks on their replies;
 //! * coordinator — [`PredictServer::run`] drives the request
 //!   [`Coalescer`] on the *calling* thread, where the non-Sync PJRT
 //!   artifacts may live; concurrent requests against the same table
 //!   batch into single `model::predict_many` calls.
 //!
-//! Every layer shares the CLI's exact pipeline (suite lookup →
-//! `scaled_workload` → `profile_app` → `predict_many` → `render_line`),
-//! so a served prediction is byte-identical to `wattchmen predict`.
+//! Because every surface routes through the engine, a served prediction
+//! is byte-identical to `wattchmen predict` by construction.
 //!
 //! Overload safety (see `protocol` for the wire shapes): admission to
 //! the coalescer queue is bounded by a [`Semaphore`] — a request that
@@ -28,15 +31,16 @@
 //! request past its budget.  Every predict-family request that parses
 //! lands in exactly one of `served` / `rejected` / `deadline_exceeded` /
 //! `request_errors` (malformed lines are answered with an error and
-//! counted by none — they never reach admission).
+//! counted by none — they never reach admission).  Failures are typed
+//! [`crate::Error`]s end to end: the counter classification and the wire
+//! rendering (v1 legacy strings, v2 structured codes) both key off the
+//! same value.
 
 pub mod cache;
-pub mod coalescer;
 pub mod protocol;
 pub mod registry;
 
 pub use cache::ProfileCache;
-pub use coalescer::{submit_and_wait, Coalescer, ExecJob, Job, JobError, PredictJob};
 pub use registry::TableRegistry;
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -50,16 +54,18 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::engine::{Engine, PredictRequest};
+use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
-use crate::model::{EnergyTable, Mode, Prediction};
+use crate::model::Prediction;
+use crate::report::cache::EvalCache;
 use crate::report::context::WORKLOAD_SECS;
-use crate::runtime::coalescer::submit_suite_and_wait_deadline;
+use crate::runtime::coalescer::{Coalescer, Job};
 use crate::runtime::Artifacts;
 use crate::util::json::Json;
-use crate::util::sync::{lock_unpoisoned, OwnedSemaphorePermit, Semaphore};
-use crate::workloads;
+use crate::util::sync::{lock_unpoisoned, Semaphore};
 
-use protocol::Request;
+use protocol::{Proto, Request};
 
 /// Server configuration (all CLI-settable; see `wattchmen serve`).
 #[derive(Clone, Debug)]
@@ -108,7 +114,11 @@ impl Default for ServeConfig {
 struct Shared {
     addr: SocketAddr,
     registry: TableRegistry,
-    profiles: ProfileCache,
+    profiles: Arc<ProfileCache>,
+    /// Shared by every per-request [`Engine`] handle (the serve predict
+    /// path never touches it; constructing one per request is what the
+    /// shared instance avoids).
+    eval_cache: Arc<EvalCache>,
     coalescer: Coalescer,
     /// Admission bound over the coalescer queue: a permit is taken at
     /// admission, rides inside the [`PredictJob`], and is released when
@@ -146,7 +156,8 @@ impl PredictServer {
         let shared = Arc::new(Shared {
             addr,
             registry: TableRegistry::new(cfg.tables_dir),
-            profiles: ProfileCache::new(),
+            profiles: Arc::new(ProfileCache::new()),
+            eval_cache: Arc::new(EvalCache::new()),
             coalescer,
             queue: Arc::new(Semaphore::new(cfg.queue_capacity)),
             jobs_tx: Mutex::new(Some(jobs_tx.clone())),
@@ -343,14 +354,18 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
     // the budget covers parsing, table/profile resolution, queueing, and
     // the batch itself.
     let t0 = Instant::now();
-    match protocol::parse_request(request) {
-        Err(e) => (protocol::error_json(&e), false),
-        Ok(Request::Status) => (status_json(shared), false),
-        Ok(Request::Metrics) => (
+    let (v, parsed) = protocol::parse_request(request);
+    let req = match parsed {
+        Err(e) => return (protocol::error_response(v, &e), false),
+        Ok(r) => r,
+    };
+    match req {
+        Request::Status => (status_json(shared, v), false),
+        Request::Metrics => (
             protocol::metrics_json(&protocol::prometheus_text(&counters(shared))),
             false,
         ),
-        Ok(Request::Shutdown) => {
+        Request::Shutdown => {
             // The acceptor polls this flag (non-blocking accept loop) and
             // idle connections see it via their read timeouts.  Dropping
             // the embedder-facing job sender lets the coalescer drain
@@ -359,50 +374,87 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
             lock_unpoisoned(&shared.jobs_tx).take();
             (protocol::ack_json("shutting down"), true)
         }
-        Ok(Request::Predict {
+        Request::Predict {
             arch,
             workload,
             mode,
             duration_s,
             deadline,
-        }) => {
+        } => {
             let Some(permit) = shared.queue.try_acquire_owned() else {
                 shared.rejected.fetch_add(1, Ordering::SeqCst);
-                return (protocol::overloaded_json(shared.retry_after_ms), false);
+                return (protocol::overloaded_json(v, shared.retry_after_ms), false);
             };
-            let secs = duration_s.unwrap_or(shared.default_duration_s);
             let deadline_at =
                 effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
-            match serve_predict(shared, jobs, &arch, &workload, mode, secs, deadline_at, permit) {
-                Ok(pred) => {
+            let outcome = engine_for(shared, jobs, &arch).and_then(|engine| {
+                engine.predict(PredictRequest {
+                    workload: Some(workload),
+                    mode,
+                    duration_s,
+                    deadline: deadline_at,
+                    permit: Some(permit),
+                    ..PredictRequest::default()
+                })
+            });
+            match outcome {
+                Ok(out) => {
                     shared.served.fetch_add(1, Ordering::SeqCst);
-                    (protocol::prediction_json(&pred), false)
+                    (protocol::prediction_json(&out.prediction), false)
                 }
-                Err(e) => (job_error_json(shared, e, t0), false),
+                Err(e) => (failure_json(shared, e, t0, v), false),
             }
         }
-        Ok(Request::PredictAll {
+        Request::PredictAll {
             arch,
             mode,
             duration_s,
             deadline,
-        }) => {
+        } => {
             let Some(permit) = shared.queue.try_acquire_owned() else {
                 shared.rejected.fetch_add(1, Ordering::SeqCst);
-                return (protocol::overloaded_json(shared.retry_after_ms), false);
+                return (protocol::overloaded_json(v, shared.retry_after_ms), false);
             };
-            let secs = duration_s.unwrap_or(shared.default_duration_s);
             let deadline_at =
                 effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
-            match serve_predict_all(shared, jobs, &arch, mode, secs, deadline_at, permit) {
-                Ok(preds) => {
+            let outcome = engine_for(shared, jobs, &arch).and_then(|engine| {
+                engine.predict_suite(PredictRequest {
+                    workload: None,
+                    mode,
+                    duration_s,
+                    deadline: deadline_at,
+                    permit: Some(permit),
+                    ..PredictRequest::default()
+                })
+            });
+            match outcome {
+                Ok(outs) => {
                     shared.served.fetch_add(1, Ordering::SeqCst);
+                    let preds: Vec<Prediction> =
+                        outs.into_iter().map(|o| o.prediction).collect();
                     (protocol::predict_all_json(&arch, &preds), false)
                 }
-                Err(e) => (job_error_json(shared, e, t0), false),
+                Err(e) => (failure_json(shared, e, t0, v), false),
             }
         }
     }
+}
+
+/// The per-request engine handle: arch catalog lookup, registry table
+/// (hot reload), the serve coalescer, and the counter-instrumented
+/// profile cache.  Each failure is the typed error whose v1 rendering is
+/// byte-identical to the legacy flat strings.
+fn engine_for(shared: &Shared, jobs: &Sender<Job>, arch: &str) -> Result<Engine, Error> {
+    let cfg = ArchConfig::by_name(arch).ok_or_else(|| Error::unknown_arch(arch))?;
+    let table = shared.registry.get(arch)?;
+    Ok(Engine::for_service(
+        cfg,
+        table,
+        jobs.clone(),
+        shared.profiles.clone(),
+        shared.eval_cache.clone(),
+        shared.default_duration_s,
+    ))
 }
 
 /// The budget actually enforced: a per-request `deadline_ms` may only
@@ -416,92 +468,18 @@ fn effective_deadline(requested: Option<Duration>, server: Option<Duration>) -> 
 }
 
 /// Classify a failed predict-family request into exactly one counter and
-/// its structured error response.
-fn job_error_json(shared: &Shared, e: JobError, t0: Instant) -> Json {
+/// its dialect-appropriate error response.
+fn failure_json(shared: &Shared, e: Error, t0: Instant, v: Proto) -> Json {
     match e {
-        JobError::DeadlineExceeded => {
+        Error::DeadlineExceeded => {
             shared.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
-            protocol::deadline_error_json(t0.elapsed())
+            protocol::deadline_error_json(v, t0.elapsed())
         }
-        JobError::Failed(msg) => {
+        e => {
             shared.request_errors.fetch_add(1, Ordering::SeqCst);
-            protocol::error_json(&msg)
+            protocol::error_response(v, &e)
         }
     }
-}
-
-/// Shared resolution preamble for both predict paths: arch name → config
-/// + registry table (each failure a structured [`JobError::Failed`]).
-fn resolve_table(shared: &Shared, arch: &str) -> Result<(ArchConfig, Arc<EnergyTable>), JobError> {
-    let cfg = ArchConfig::by_name(arch).ok_or_else(|| {
-        JobError::Failed(format!("unknown arch '{arch}' (see `wattchmen list`)"))
-    })?;
-    let table = shared
-        .registry
-        .get(arch)
-        .map_err(|e| JobError::Failed(format!("{e:#}")))?;
-    Ok((cfg, table))
-}
-
-#[allow(clippy::too_many_arguments)]
-fn serve_predict(
-    shared: &Shared,
-    jobs: &Sender<Job>,
-    arch: &str,
-    workload: &str,
-    mode: Mode,
-    duration_s: f64,
-    deadline: Option<Instant>,
-    permit: OwnedSemaphorePermit,
-) -> Result<Prediction, JobError> {
-    let (cfg, table) = resolve_table(shared, arch)?;
-    let profiles = shared
-        .profiles
-        .get(&cfg, workload, duration_s)
-        .map_err(|e| JobError::Failed(format!("{e:#}")))?;
-    let mut preds = submit_suite_and_wait_deadline(
-        jobs,
-        table,
-        vec![(workload.to_string(), profiles)],
-        mode,
-        deadline,
-        Some(permit),
-    )?;
-    if preds.len() != 1 {
-        return Err(JobError::Failed(format!(
-            "coalescer returned {} predictions for 1 app",
-            preds.len()
-        )));
-    }
-    Ok(preds.remove(0))
-}
-
-/// The whole evaluation suite for `arch` as ONE coalescer job — the
-/// multi-app `PredictJob` the report pipeline already uses, so a
-/// predict_all both batches with concurrent traffic and answers in one
-/// `predict_many` call.  Suite order matches `wattchmen predict` with no
-/// `--workload` filter.
-fn serve_predict_all(
-    shared: &Shared,
-    jobs: &Sender<Job>,
-    arch: &str,
-    mode: Mode,
-    duration_s: f64,
-    deadline: Option<Instant>,
-    permit: OwnedSemaphorePermit,
-) -> Result<Vec<Prediction>, JobError> {
-    let (cfg, table) = resolve_table(shared, arch)?;
-    let apps = workloads::evaluation_suite(cfg.gen)
-        .iter()
-        .map(|w| {
-            let profiles = shared
-                .profiles
-                .get(&cfg, &w.name, duration_s)
-                .map_err(|e| JobError::Failed(format!("{e:#}")))?;
-            Ok((w.name.clone(), profiles))
-        })
-        .collect::<Result<Vec<_>, JobError>>()?;
-    submit_suite_and_wait_deadline(jobs, table, apps, mode, deadline, Some(permit))
 }
 
 /// Snapshot of the service counters (shared by `status` and `metrics`).
@@ -536,9 +514,11 @@ mod tests {
     }
 }
 
-fn status_json(shared: &Shared) -> Json {
+/// The `status` response.  v1 keeps the legacy bare-counter shape
+/// byte-identical; v2 adds the `capabilities` handshake object.
+fn status_json(shared: &Shared, v: Proto) -> Json {
     let c = counters(shared);
-    Json::obj(vec![
+    let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("served", Json::Num(c.served as f64)),
         ("rejected", Json::Num(c.rejected as f64)),
@@ -554,5 +534,9 @@ fn status_json(shared: &Shared) -> Json {
             "profile_cache_misses",
             Json::Num(c.profile_cache_misses as f64),
         ),
-    ])
+    ];
+    if v == Proto::V2 {
+        pairs.push(("capabilities", protocol::capabilities_json()));
+    }
+    Json::obj(pairs)
 }

@@ -36,9 +36,28 @@
 //! The `text` field of a predict response is byte-identical to the line
 //! `wattchmen predict` prints for the same workload — both render through
 //! [`render_line`], and both compute through `model::predict_many`.
+//!
+//! # Protocol versions
+//!
+//! A request may carry `"v":1` (or omit it — the default) or `"v":2`:
+//!
+//! * **v1** — the legacy dialect, answered byte-identically to pre-v2
+//!   servers: flat string errors (`{"ok":false,"error":"…"}`, plus
+//!   `retry_after_ms` / `elapsed_ms` where applicable) and a `status`
+//!   body of bare counters.  Pinned by the conformance suite.
+//! * **v2** — structured errors
+//!   `{"ok":false,"error":{"code":…,"message":…}}` whose codes are
+//!   [`crate::Error`]'s stable wire codes (the message is the same
+//!   legacy string v1 ships), and a `capabilities` handshake object in
+//!   the `status` response ([`capabilities_json`]).  Success responses
+//!   are identical to v1's.
+//!
+//! Unknown versions are rejected with a v1-shaped `bad_request` error
+//! (the server cannot know the client's dialect).
 
 use std::time::Duration;
 
+use crate::error::Error;
 use crate::model::{Mode, Prediction};
 use crate::util::json::{parse, Json};
 
@@ -49,6 +68,16 @@ pub const DEFAULT_ARCH: &str = "cloudlab-v100";
 /// above this are clamped — `Duration::from_secs_f64` would panic on an
 /// overflowing (but finite) float, and such a budget means "no budget".
 pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+
+/// Wire dialect of one request (see the module docs).  Every response
+/// builder takes the request's `Proto` so v1 clients keep receiving the
+/// legacy bytes while v2 clients get structured errors.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Proto {
+    #[default]
+    V1,
+    V2,
+}
 
 /// A parsed client request.
 #[derive(Clone, Debug)]
@@ -143,11 +172,11 @@ pub fn prometheus_text(c: &ServiceCounters) -> String {
     out
 }
 
-pub fn parse_mode(s: &str) -> Result<Mode, String> {
+pub fn parse_mode(s: &str) -> Result<Mode, Error> {
     match s {
         "direct" => Ok(Mode::Direct),
         "pred" => Ok(Mode::Pred),
-        m => Err(format!("unknown mode '{m}' (direct|pred)")),
+        m => Err(Error::BadRequest(format!("unknown mode '{m}' (direct|pred)"))),
     }
 }
 
@@ -163,7 +192,7 @@ pub fn mode_tag(mode: Mode) -> &'static str {
 /// workload scaling (a NaN would silently poison every downstream sum)
 /// and a negative/NaN `deadline_ms` would panic `Duration::from_secs_f64`
 /// on the request path.
-fn predict_fields(j: &Json) -> Result<(String, Mode, Option<f64>, Option<Duration>), String> {
+fn predict_fields(j: &Json) -> Result<(String, Mode, Option<f64>, Option<Duration>), Error> {
     let arch = j
         .get("arch")
         .and_then(Json::as_str)
@@ -175,9 +204,11 @@ fn predict_fields(j: &Json) -> Result<(String, Mode, Option<f64>, Option<Duratio
         Some(v) => {
             let d = v
                 .as_f64()
-                .ok_or_else(|| "duration_s must be a number".to_string())?;
+                .ok_or_else(|| Error::bad_request("duration_s must be a number"))?;
             if !d.is_finite() || d <= 0.0 {
-                return Err(format!("duration_s must be a positive finite number, got {d}"));
+                return Err(Error::BadRequest(format!(
+                    "duration_s must be a positive finite number, got {d}"
+                )));
             }
             Some(d)
         }
@@ -187,11 +218,11 @@ fn predict_fields(j: &Json) -> Result<(String, Mode, Option<f64>, Option<Duratio
         Some(v) => {
             let ms = v
                 .as_f64()
-                .ok_or_else(|| "deadline_ms must be a number".to_string())?;
+                .ok_or_else(|| Error::bad_request("deadline_ms must be a number"))?;
             if !ms.is_finite() || ms < 0.0 {
-                return Err(format!(
+                return Err(Error::BadRequest(format!(
                     "deadline_ms must be a non-negative finite number, got {ms}"
-                ));
+                )));
             }
             // Cap at a day: Duration::from_secs_f64 panics on overflow,
             // and any budget that long is "no budget" in practice.
@@ -201,21 +232,52 @@ fn predict_fields(j: &Json) -> Result<(String, Mode, Option<f64>, Option<Duratio
     Ok((arch, mode, duration_s, deadline))
 }
 
-/// Parse one request line.  Errors are plain strings so the server can
-/// ship them back verbatim in an error response.
-pub fn parse_request(line: &str) -> Result<Request, String> {
-    let j = parse(line).map_err(|e| format!("bad JSON request: {e}"))?;
+/// Parse one request line into its wire dialect and request (or typed
+/// error).  The `Proto` comes back even for malformed bodies so the
+/// error response can be rendered in the client's dialect; a line whose
+/// JSON (or `v` field) is itself unreadable defaults to v1.
+pub fn parse_request(line: &str) -> (Proto, Result<Request, Error>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return (
+                Proto::V1,
+                Err(Error::BadRequest(format!("bad JSON request: {e}"))),
+            )
+        }
+    };
+    let v = match j.get("v") {
+        None => Proto::V1,
+        Some(Json::Num(x)) if *x == 1.0 => Proto::V1,
+        Some(Json::Num(x)) if *x == 2.0 => Proto::V2,
+        Some(other) => {
+            let shown = other.to_string_compact();
+            return (
+                Proto::V1,
+                Err(Error::BadRequest(format!(
+                    "unsupported protocol version {shown} (supported: 1, 2)"
+                ))),
+            );
+        }
+    };
+    (v, parse_request_body(&j))
+}
+
+fn parse_request_body(j: &Json) -> Result<Request, Error> {
     let cmd = j.get("cmd").and_then(Json::as_str).ok_or_else(|| {
-        "request needs a string 'cmd' field (predict|predict_all|status|metrics|shutdown)"
-            .to_string()
+        Error::bad_request(
+            "request needs a string 'cmd' field (predict|predict_all|status|metrics|shutdown)",
+        )
     })?;
     match cmd {
         "predict" => {
-            let (arch, mode, duration_s, deadline) = predict_fields(&j)?;
+            let (arch, mode, duration_s, deadline) = predict_fields(j)?;
             let workload = j
                 .get("workload")
                 .and_then(Json::as_str)
-                .ok_or_else(|| "predict needs a 'workload' field (see `wattchmen list`)".to_string())?
+                .ok_or_else(|| {
+                    Error::bad_request("predict needs a 'workload' field (see `wattchmen list`)")
+                })?
                 .to_string();
             Ok(Request::Predict {
                 arch,
@@ -226,7 +288,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             })
         }
         "predict_all" => {
-            let (arch, mode, duration_s, deadline) = predict_fields(&j)?;
+            let (arch, mode, duration_s, deadline) = predict_fields(j)?;
             Ok(Request::PredictAll {
                 arch,
                 mode,
@@ -237,9 +299,9 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "status" => Ok(Request::Status),
         "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
-        other => Err(format!(
+        other => Err(Error::BadRequest(format!(
             "unknown cmd '{other}' (predict|predict_all|status|metrics|shutdown)"
-        )),
+        ))),
     }
 }
 
@@ -316,26 +378,64 @@ pub fn predict_all_json(arch: &str, preds: &[Prediction]) -> Json {
     ])
 }
 
+/// The `error` field for one dialect: v1 ships the flat legacy string,
+/// v2 the structured `{code, message}` object.
+fn error_field(v: Proto, e: &Error) -> Json {
+    match v {
+        Proto::V1 => Json::Str(e.to_string()),
+        Proto::V2 => Json::obj(vec![
+            ("code", Json::Str(e.code().into())),
+            ("message", Json::Str(e.to_string())),
+        ]),
+    }
+}
+
+/// Generic failure response in the request's dialect.
+pub fn error_response(v: Proto, e: &Error) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", error_field(v, e))])
+}
+
 /// Load-shed response: the bounded request queue is full.  The hint is
 /// the server's linger window — one batch's worth of drain time.
-pub fn overloaded_json(retry_after_ms: u64) -> Json {
+pub fn overloaded_json(v: Proto, retry_after_ms: u64) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
-        ("error", Json::Str("overloaded".into())),
+        ("error", error_field(v, &Error::Overloaded)),
         ("retry_after_ms", Json::Num(retry_after_ms as f64)),
     ])
 }
 
 /// Deadline-miss response: how long the request had been in flight when
 /// the server gave up on it (always ≥ the requested budget).
-pub fn deadline_error_json(elapsed: Duration) -> Json {
+pub fn deadline_error_json(v: Proto, elapsed: Duration) -> Json {
     // One decimal of milliseconds: stable to render, precise enough to
     // compare against the budget.
     let elapsed_ms = (elapsed.as_secs_f64() * 1e4).round() / 10.0;
     Json::obj(vec![
         ("ok", Json::Bool(false)),
-        ("error", Json::Str("deadline exceeded".into())),
+        ("error", error_field(v, &Error::DeadlineExceeded)),
         ("elapsed_ms", Json::Num(elapsed_ms)),
+    ])
+}
+
+/// The protocol v2 `capabilities` handshake, shipped inside v2 `status`
+/// responses: what this server speaks, so remote clients can negotiate
+/// without guessing.
+pub fn capabilities_json() -> Json {
+    let strs = |items: &[&str]| Json::Arr(items.iter().map(|s| Json::Str((*s).into())).collect());
+    Json::obj(vec![
+        ("protocol_versions", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+        (
+            "commands",
+            strs(&["predict", "predict_all", "status", "metrics", "shutdown"]),
+        ),
+        ("modes", strs(&["direct", "pred"])),
+        ("error_codes", strs(&Error::CODES)),
+        ("max_deadline_ms", Json::Num(MAX_DEADLINE_MS)),
+        (
+            "max_request_bytes",
+            Json::Num(crate::service::MAX_REQUEST_BYTES as f64),
+        ),
     ])
 }
 
@@ -372,10 +472,20 @@ mod tests {
     use super::*;
     use std::collections::BTreeMap;
 
+    /// Parse helper: body of a well-formed line (any dialect).
+    fn req(line: &str) -> Request {
+        parse_request(line).1.unwrap()
+    }
+
+    /// Parse helper: error message of a malformed line.
+    fn req_err(line: &str) -> String {
+        parse_request(line).1.unwrap_err().to_string()
+    }
+
     #[test]
     fn predict_request_roundtrips() {
         let line = predict_request("summit-v100", "hotspot", Mode::Direct).to_string_compact();
-        match parse_request(&line).unwrap() {
+        match req(&line) {
             Request::Predict {
                 arch,
                 workload,
@@ -396,7 +506,7 @@ mod tests {
     #[test]
     fn predict_all_request_roundtrips() {
         let line = predict_all_request("lonestar-a100", Mode::Pred).to_string_compact();
-        match parse_request(&line).unwrap() {
+        match req(&line) {
             Request::PredictAll {
                 arch,
                 mode,
@@ -411,7 +521,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // Defaults mirror predict's.
-        match parse_request(r#"{"cmd":"predict_all"}"#).unwrap() {
+        match req(r#"{"cmd":"predict_all"}"#) {
             Request::PredictAll { arch, mode, .. } => {
                 assert_eq!(arch, DEFAULT_ARCH);
                 assert_eq!(mode, Mode::Pred);
@@ -422,7 +532,7 @@ mod tests {
 
     #[test]
     fn deadline_ms_parses_and_is_validated() {
-        match parse_request(r#"{"cmd":"predict","workload":"x","deadline_ms":250}"#).unwrap() {
+        match req(r#"{"cmd":"predict","workload":"x","deadline_ms":250}"#) {
             Request::Predict { deadline, .. } => {
                 assert_eq!(deadline, Some(Duration::from_millis(250)));
             }
@@ -431,7 +541,7 @@ mod tests {
         // A zero budget is legal (expire immediately); negative, NaN (JSON
         // null), and non-numeric budgets are parse errors, NOT panics —
         // Duration::from_secs_f64 would abort the worker on them.
-        match parse_request(r#"{"cmd":"predict_all","deadline_ms":0}"#).unwrap() {
+        match req(r#"{"cmd":"predict_all","deadline_ms":0}"#) {
             Request::PredictAll { deadline, .. } => assert_eq!(deadline, Some(Duration::ZERO)),
             other => panic!("{other:?}"),
         }
@@ -440,11 +550,11 @@ mod tests {
             r#"{"cmd":"predict","workload":"x","deadline_ms":null}"#,
             r#"{"cmd":"predict","workload":"x","deadline_ms":"soon"}"#,
         ] {
-            assert!(parse_request(bad).unwrap_err().contains("deadline_ms"), "{bad}");
+            assert!(req_err(bad).contains("deadline_ms"), "{bad}");
         }
         // A finite-but-absurd budget is clamped, not a
         // Duration::from_secs_f64 panic.
-        match parse_request(r#"{"cmd":"predict","workload":"x","deadline_ms":1e300}"#).unwrap() {
+        match req(r#"{"cmd":"predict","workload":"x","deadline_ms":1e300}"#) {
             Request::Predict { deadline, .. } => {
                 assert_eq!(deadline, Some(Duration::from_secs_f64(MAX_DEADLINE_MS / 1000.0)));
             }
@@ -460,13 +570,13 @@ mod tests {
             r#"{"cmd":"predict","workload":"x","duration_s":null}"#,
             r#"{"cmd":"predict_all","duration_s":"long"}"#,
         ] {
-            assert!(parse_request(bad).unwrap_err().contains("duration_s"), "{bad}");
+            assert!(req_err(bad).contains("duration_s"), "{bad}");
         }
     }
 
     #[test]
     fn defaults_and_explicit_duration() {
-        let r = parse_request(r#"{"cmd":"predict","workload":"hotspot","duration_s":45}"#).unwrap();
+        let r = req(r#"{"cmd":"predict","workload":"hotspot","duration_s":45}"#);
         match r {
             Request::Predict {
                 arch,
@@ -483,33 +593,91 @@ mod tests {
     }
 
     #[test]
-    fn bad_requests_are_descriptive_errors() {
-        assert!(parse_request("not json").unwrap_err().contains("bad JSON"));
-        assert!(parse_request(r#"{"cmd":"predict"}"#)
-            .unwrap_err()
-            .contains("workload"));
-        assert!(parse_request(r#"{"cmd":"frobnicate"}"#)
-            .unwrap_err()
-            .contains("unknown cmd"));
-        assert!(parse_request(r#"{"cmd":"predict","workload":"x","mode":"best"}"#)
-            .unwrap_err()
+    fn bad_requests_are_descriptive_bad_request_errors() {
+        assert!(req_err("not json").contains("bad JSON"));
+        assert!(req_err(r#"{"cmd":"predict"}"#).contains("workload"));
+        assert!(req_err(r#"{"cmd":"frobnicate"}"#).contains("unknown cmd"));
+        assert!(req_err(r#"{"cmd":"predict","workload":"x","mode":"best"}"#)
             .contains("unknown mode"));
+        // Every parse failure carries the bad_request wire code.
+        for bad in ["not json", r#"{"cmd":"predict"}"#, r#"{"cmd":"frobnicate"}"#] {
+            assert_eq!(parse_request(bad).1.unwrap_err().code(), "bad_request");
+        }
+    }
+
+    #[test]
+    fn protocol_version_field_selects_the_dialect() {
+        assert_eq!(parse_request(r#"{"cmd":"status"}"#).0, Proto::V1);
+        assert_eq!(parse_request(r#"{"cmd":"status","v":1}"#).0, Proto::V1);
+        assert_eq!(parse_request(r#"{"cmd":"status","v":2}"#).0, Proto::V2);
+        // The dialect comes back even when the body is malformed, so the
+        // error can be rendered in the client's dialect.
+        let (v, body) = parse_request(r#"{"cmd":"frobnicate","v":2}"#);
+        assert_eq!(v, Proto::V2);
+        assert!(body.unwrap_err().to_string().contains("unknown cmd"));
+        // Unknown versions are a v1-shaped bad_request.
+        for bad in [r#"{"cmd":"status","v":3}"#, r#"{"cmd":"status","v":"two"}"#] {
+            let (v, body) = parse_request(bad);
+            assert_eq!(v, Proto::V1, "{bad}");
+            let e = body.unwrap_err();
+            assert_eq!(e.code(), "bad_request");
+            assert!(e.to_string().contains("unsupported protocol version"), "{e}");
+        }
+    }
+
+    #[test]
+    fn error_responses_render_per_dialect() {
+        let e = Error::unknown_workload("nosuch", "cloudlab-v100");
+        let v1 = error_response(Proto::V1, &e);
+        assert_eq!(
+            v1.to_string_compact(),
+            r#"{"error":"unknown workload 'nosuch' for cloudlab-v100 (see `wattchmen list`)","ok":false}"#
+        );
+        let v2 = error_response(Proto::V2, &e);
+        let obj = v2.get("error").unwrap();
+        assert_eq!(obj.get("code").unwrap().as_str(), Some("unknown_workload"));
+        assert_eq!(obj.get("message").unwrap().as_str(), Some(e.to_string().as_str()));
+
+        // Overload / deadline keep their extra fields in both dialects.
+        let o1 = overloaded_json(Proto::V1, 10);
+        assert_eq!(
+            o1.to_string_compact(),
+            r#"{"error":"overloaded","ok":false,"retry_after_ms":10}"#
+        );
+        let o2 = overloaded_json(Proto::V2, 10);
+        assert_eq!(o2.get("retry_after_ms").unwrap().as_f64(), Some(10.0));
+        assert_eq!(
+            o2.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("overloaded")
+        );
+        let d2 = deadline_error_json(Proto::V2, Duration::from_micros(37_540));
+        assert_eq!(d2.get("elapsed_ms").unwrap().as_f64(), Some(37.5));
+        assert_eq!(
+            d2.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("deadline_exceeded")
+        );
+    }
+
+    #[test]
+    fn capabilities_cover_the_surface() {
+        let caps = capabilities_json();
+        let versions = caps.get("protocol_versions").unwrap().as_arr().unwrap();
+        assert_eq!(versions.len(), 2);
+        let commands = caps.get("commands").unwrap().as_arr().unwrap();
+        assert_eq!(commands.len(), 5);
+        let codes = caps.get("error_codes").unwrap().as_arr().unwrap();
+        assert_eq!(codes.len(), Error::CODES.len());
+        assert_eq!(
+            caps.get("max_deadline_ms").unwrap().as_f64(),
+            Some(MAX_DEADLINE_MS)
+        );
     }
 
     #[test]
     fn status_and_shutdown_parse() {
-        assert!(matches!(
-            parse_request(r#"{"cmd":"status"}"#).unwrap(),
-            Request::Status
-        ));
-        assert!(matches!(
-            parse_request(r#"{"cmd":"metrics"}"#).unwrap(),
-            Request::Metrics
-        ));
-        assert!(matches!(
-            parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
-            Request::Shutdown
-        ));
+        assert!(matches!(req(r#"{"cmd":"status"}"#), Request::Status));
+        assert!(matches!(req(r#"{"cmd":"metrics"}"#), Request::Metrics));
+        assert!(matches!(req(r#"{"cmd":"shutdown"}"#), Request::Shutdown));
     }
 
     #[test]
@@ -556,13 +724,13 @@ mod tests {
     }
 
     #[test]
-    fn overload_and_deadline_responses_are_structured() {
-        let o = overloaded_json(10);
+    fn v1_overload_and_deadline_responses_keep_the_legacy_shape() {
+        let o = overloaded_json(Proto::V1, 10);
         assert_eq!(o.get("ok").unwrap(), &Json::Bool(false));
         assert_eq!(o.get("error").unwrap().as_str(), Some("overloaded"));
         assert_eq!(o.get("retry_after_ms").unwrap().as_f64(), Some(10.0));
 
-        let d = deadline_error_json(Duration::from_micros(37_540));
+        let d = deadline_error_json(Proto::V1, Duration::from_micros(37_540));
         assert_eq!(d.get("ok").unwrap(), &Json::Bool(false));
         assert_eq!(d.get("error").unwrap().as_str(), Some("deadline exceeded"));
         assert_eq!(d.get("elapsed_ms").unwrap().as_f64(), Some(37.5));

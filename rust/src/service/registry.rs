@@ -13,8 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
-use anyhow::{Context, Result};
-
+use crate::error::Error;
 use crate::model::EnergyTable;
 use crate::util::sync::lock_unpoisoned;
 
@@ -66,13 +65,15 @@ impl TableRegistry {
     /// Fetch the table for an arch, reloading if the file changed since it
     /// was cached.  `(mtime, len)` is the change fingerprint: length
     /// catches rewrites on filesystems with coarse timestamps.
-    pub fn get(&self, arch: &str) -> Result<Arc<EnergyTable>> {
+    pub fn get(&self, arch: &str) -> Result<Arc<EnergyTable>, Error> {
         let path = self.path_for(arch);
-        let meta = std::fs::metadata(&path).with_context(|| {
-            format!(
-                "no energy table for '{arch}' at {} (train one with `wattchmen train`)",
+        // Message shapes preserve the legacy anyhow context chains
+        // byte-for-byte — v1 clients have always seen these strings.
+        let meta = std::fs::metadata(&path).map_err(|e| {
+            Error::TableMissing(format!(
+                "no energy table for '{arch}' at {} (train one with `wattchmen train`): {e}",
                 path.display()
-            )
+            ))
         })?;
         let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
         let len = meta.len();
@@ -84,10 +85,9 @@ impl TableRegistry {
                 }
             }
         }
-        let table = Arc::new(
-            EnergyTable::load(&path)
-                .with_context(|| format!("loading energy table for '{arch}'"))?,
-        );
+        let table = Arc::new(EnergyTable::load(&path).map_err(|e| {
+            Error::TableMissing(format!("loading energy table for '{arch}': {e:#}"))
+        })?);
         self.reloads.fetch_add(1, Ordering::SeqCst);
         lock_unpoisoned(&self.cache).insert(
             arch.to_string(),

@@ -4,6 +4,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::error::Error;
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub command: Option<String>,
@@ -14,13 +16,13 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of argument strings (no program name).
-    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, Error> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
                 if name.is_empty() {
-                    return Err("bare '--' is not supported".into());
+                    return Err(Error::bad_request("bare '--' is not supported"));
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
@@ -43,7 +45,7 @@ impl Args {
         Ok(out)
     }
 
-    pub fn from_env() -> Result<Args, String> {
+    pub fn from_env() -> Result<Args, Error> {
         Args::parse(std::env::args().skip(1))
     }
 
@@ -59,21 +61,21 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, Error> {
         match self.get(name) {
             None => Ok(default),
             Some(s) => s
                 .parse()
-                .map_err(|e| format!("--{name}: bad number '{s}': {e}")),
+                .map_err(|e| Error::BadRequest(format!("--{name}: bad number '{s}': {e}"))),
         }
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, Error> {
         match self.get(name) {
             None => Ok(default),
             Some(s) => s
                 .parse()
-                .map_err(|e| format!("--{name}: bad integer '{s}': {e}")),
+                .map_err(|e| Error::BadRequest(format!("--{name}: bad integer '{s}': {e}"))),
         }
     }
 }

@@ -6,6 +6,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use crate::error::Error;
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
@@ -160,7 +162,14 @@ impl Json {
 /// serve requests) nest a handful of levels.
 const MAX_DEPTH: usize = 128;
 
-pub fn parse(text: &str) -> Result<Json, String> {
+/// Parse one JSON document.  Failures are [`Error::BadRequest`] — the
+/// message is the parser's diagnostic, and callers holding more context
+/// (a table path, a request line) wrap it into their own variant.
+pub fn parse(text: &str) -> Result<Json, Error> {
+    parse_str(text).map_err(Error::BadRequest)
+}
+
+fn parse_str(text: &str) -> Result<Json, String> {
     let mut p = Parser {
         bytes: text.as_bytes(),
         pos: 0,
@@ -423,9 +432,11 @@ mod tests {
         // aborted the process on worker-sized stacks.
         let bomb = "[".repeat(64 * 1024);
         let err = parse(&bomb).unwrap_err();
-        assert!(err.contains("nested deeper"), "{err}");
+        assert_eq!(err.code(), "bad_request");
+        assert!(err.to_string().contains("nested deeper"), "{err}");
         let obj_bomb = "{\"a\":".repeat(64 * 1024);
-        assert!(parse(&obj_bomb).unwrap_err().contains("nested deeper"));
+        let err = parse(&obj_bomb).unwrap_err().to_string();
+        assert!(err.contains("nested deeper"), "{err}");
         // Reasonable nesting still parses, and depth is counted per
         // nesting level, not per sibling.
         let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));

@@ -1,0 +1,322 @@
+//! Protocol v1/v2 conformance, over real TCP against an in-process
+//! server:
+//!
+//! * v1 requests (no `"v"` field) get byte-identical legacy responses —
+//!   pinned here against hardcoded literals captured from the pre-v2
+//!   wire format, so a refactor cannot silently move a byte;
+//! * the same requests stamped `"v":2` get structured
+//!   `{"error":{"code":…,"message":…}}` errors whose codes are
+//!   `wattchmen::Error`'s stable wire codes and whose messages are the
+//!   legacy strings;
+//! * v2 success responses are byte-identical to v1's, and v2 `status`
+//!   additionally carries the `capabilities` handshake;
+//! * table-driven: every `Error` variant maps to exactly one wire code,
+//!   and renders per dialect through `protocol::error_response`.
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use wattchmen::engine::client::RemoteClient;
+use wattchmen::model::{EnergyTable, Mode};
+use wattchmen::report::context::WORKLOAD_SECS;
+use wattchmen::service::protocol::{self, Proto};
+use wattchmen::service::{PredictServer, ServeConfig};
+use wattchmen::util::json::{parse, Json};
+use wattchmen::Error;
+
+fn test_table() -> EnergyTable {
+    EnergyTable {
+        arch: "cloudlab-v100".into(),
+        const_power_w: 38.0,
+        static_power_w: 44.0,
+        entries: [
+            ("FADD", 1.0),
+            ("FFMA", 1.2),
+            ("MOV", 0.4),
+            ("IADD3", 0.6),
+            ("LDG.E.32@L1", 2.5),
+            ("LDG.E.32@L2", 8.0),
+            ("LDG.E.64@L1", 4.0),
+            ("BAR.SYNC", 1.5),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect(),
+    }
+}
+
+fn start_server(tag: &str) -> (Arc<PredictServer>, thread::JoinHandle<()>) {
+    let dir = std::env::temp_dir().join(format!("wattchmen_protocol_v2_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    test_table()
+        .save(&dir.join("cloudlab-v100.table.json"))
+        .unwrap();
+    let server = Arc::new(
+        PredictServer::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            linger: Duration::from_millis(1),
+            tables_dir: PathBuf::from(dir),
+            default_duration_s: WORKLOAD_SECS,
+            ..ServeConfig::default()
+        })
+        .unwrap(),
+    );
+    let runner = {
+        let server = server.clone();
+        thread::spawn(move || server.run(None).unwrap())
+    };
+    (server, runner)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    /// Send one raw line; return the raw response (newline trimmed).
+    fn send_raw(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        resp.trim_end_matches('\n').to_string()
+    }
+
+    fn send(&mut self, line: &str) -> Json {
+        parse(&self.send_raw(line)).unwrap()
+    }
+
+    fn shutdown(mut self) {
+        let ack = self.send(r#"{"cmd":"shutdown"}"#);
+        assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true));
+    }
+}
+
+/// Stamp a raw v1 request line as v2 (prepend the field inside the
+/// object — key order on the wire does not matter for parsing).
+fn as_v2(line: &str) -> String {
+    assert!(line.starts_with('{'), "{line}");
+    format!("{}\"v\":2,{}", "{", &line[1..])
+}
+
+/// The legacy (and v2) error cases this suite pins: request line, the
+/// EXACT pre-v2 response bytes, and the v2 structured code.
+fn pinned_errors() -> Vec<(&'static str, String, &'static str)> {
+    vec![
+        (
+            r#"{"cmd":"frobnicate"}"#,
+            r#"{"error":"unknown cmd 'frobnicate' (predict|predict_all|status|metrics|shutdown)","ok":false}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"cmd":"predict"}"#,
+            r#"{"error":"predict needs a 'workload' field (see `wattchmen list`)","ok":false}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"cmd":"predict","workload":"hotspot","mode":"best"}"#,
+            r#"{"error":"unknown mode 'best' (direct|pred)","ok":false}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"cmd":"predict","workload":"hotspot","deadline_ms":-1}"#,
+            r#"{"error":"deadline_ms must be a non-negative finite number, got -1","ok":false}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"cmd":"predict","workload":"hotspot","arch":"not-an-arch"}"#,
+            r#"{"error":"unknown arch 'not-an-arch' (see `wattchmen list`)","ok":false}"#.into(),
+            "unknown_arch",
+        ),
+        (
+            r#"{"cmd":"predict","workload":"nosuch"}"#,
+            r#"{"error":"unknown workload 'nosuch' for cloudlab-v100 (see `wattchmen list`)","ok":false}"#.into(),
+            "unknown_workload",
+        ),
+    ]
+}
+
+#[test]
+fn v1_errors_are_byte_identical_to_the_legacy_wire() {
+    let (server, runner) = start_server("v1_bytes");
+    let mut client = Client::connect(server.local_addr());
+    for (line, expected, _) in pinned_errors() {
+        assert_eq!(client.send_raw(line), expected, "for request {line}");
+    }
+    client.shutdown();
+    runner.join().unwrap();
+    // Parse failures count nothing; resolution failures are request
+    // errors (unknown arch + unknown workload).
+    assert_eq!(server.served(), 0);
+    assert_eq!(server.request_errors(), 2);
+}
+
+#[test]
+fn v2_errors_carry_structured_codes_with_the_legacy_messages() {
+    let (server, runner) = start_server("v2_codes");
+    let mut client = Client::connect(server.local_addr());
+    for (line, legacy, code) in pinned_errors() {
+        let resp = client.send(&as_v2(line));
+        assert_eq!(resp.get("ok").unwrap(), &Json::Bool(false), "{line}");
+        let err = resp.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some(code), "{line}");
+        // The v2 message is the exact string v1 ships flat.
+        let legacy_msg = parse(&legacy)
+            .unwrap()
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert_eq!(
+            err.get("message").unwrap().as_str(),
+            Some(legacy_msg.as_str()),
+            "{line}"
+        );
+    }
+    // Unsupported versions are rejected v1-flat (the dialect is unknown).
+    let resp = client.send(r#"{"cmd":"status","v":3}"#);
+    assert!(resp
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("unsupported protocol version"));
+    client.shutdown();
+    runner.join().unwrap();
+}
+
+#[test]
+fn v2_success_bytes_match_v1_and_status_gains_capabilities() {
+    let (server, runner) = start_server("v2_success");
+    let mut client = Client::connect(server.local_addr());
+
+    // status: v1 first (so counters are untouched), byte-pinned.
+    let v1_status = client.send_raw(r#"{"cmd":"status"}"#);
+    assert_eq!(
+        v1_status,
+        concat!(
+            r#"{"batched_predict_calls":0,"deadline_exceeded":0,"ok":true,"#,
+            r#""profile_cache_hits":0,"profile_cache_misses":0,"rejected":0,"#,
+            r#""request_errors":0,"served":0,"table_reloads":0}"#
+        )
+    );
+    // v2 status = v1 status + capabilities, nothing else.
+    let v2_status = client.send(r#"{"cmd":"status","v":2}"#);
+    let caps = v2_status.get("capabilities").expect("v2 capabilities");
+    let versions: Vec<f64> = caps
+        .get("protocol_versions")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(versions, [1.0, 2.0]);
+    assert_eq!(
+        caps.get("error_codes").unwrap().as_arr().unwrap().len(),
+        Error::CODES.len()
+    );
+    let mut stripped = v2_status.as_obj().unwrap().clone();
+    stripped.remove("capabilities");
+    assert_eq!(Json::Obj(stripped).to_string_compact(), v1_status);
+
+    // predict: v2 success response is byte-identical to v1's.
+    let line =
+        protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact();
+    let v1_pred = client.send_raw(&line);
+    let v2_pred = client.send_raw(&as_v2(&line));
+    assert_eq!(v1_pred, v2_pred);
+    assert!(v1_pred.contains(r#""ok":true"#));
+
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 2);
+}
+
+#[test]
+fn remote_client_speaks_v2_against_a_live_server() {
+    let (server, runner) = start_server("remote_client");
+    let mut client = RemoteClient::connect(&server.local_addr().to_string()).unwrap();
+    // Handshake: a v2 server advertises its capabilities.
+    let caps = client.capabilities().unwrap().expect("v2 server");
+    assert!(caps.get("protocol_versions").is_some());
+    // Typed success.
+    let pred = client
+        .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+        .unwrap();
+    assert_eq!(pred.workload, "hotspot");
+    assert!(pred.energy_j > 0.0);
+    // Typed errors with wire codes.
+    let err = client
+        .predict("cloudlab-v100", "nosuch", Mode::Pred, None)
+        .unwrap_err();
+    assert_eq!(err.code(), "unknown_workload");
+    let err = client
+        .predict("not-an-arch", "hotspot", Mode::Pred, None)
+        .unwrap_err();
+    assert_eq!(err.code(), "unknown_arch");
+    // Whole suite in one round trip.
+    let suite = client.predict_all("cloudlab-v100", Mode::Pred, None).unwrap();
+    assert_eq!(suite.predictions.len(), 16);
+    assert_eq!(
+        suite.text.lines().count(),
+        16,
+        "text is one render_line per workload"
+    );
+    client.shutdown().unwrap();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 2);
+    assert_eq!(server.request_errors(), 2);
+}
+
+#[test]
+fn every_error_variant_maps_to_exactly_one_wire_code() {
+    let examples = Error::examples();
+    // One example per variant, one unique code per example, and the
+    // declared CODES list in sync.
+    assert_eq!(examples.len(), Error::CODES.len());
+    let codes: BTreeSet<&str> = examples.iter().map(|e| e.code()).collect();
+    assert_eq!(codes.len(), examples.len(), "duplicate wire code");
+    assert_eq!(codes, Error::CODES.iter().copied().collect::<BTreeSet<_>>());
+
+    for e in &examples {
+        // v1: the flat legacy string is exactly Display.
+        let v1 = protocol::error_response(Proto::V1, e);
+        assert_eq!(v1.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(
+            v1.get("error").unwrap().as_str(),
+            Some(e.to_string().as_str()),
+            "{e:?}"
+        );
+        // v2: {code, message} with the same message.
+        let v2 = protocol::error_response(Proto::V2, e);
+        let obj = v2.get("error").unwrap();
+        assert_eq!(obj.get("code").unwrap().as_str(), Some(e.code()), "{e:?}");
+        assert_eq!(
+            obj.get("message").unwrap().as_str(),
+            Some(e.to_string().as_str()),
+            "{e:?}"
+        );
+        // And the v2 pair reconstructs the variant client-side.
+        let back = Error::from_code(e.code(), e.to_string());
+        assert_eq!(back.code(), e.code());
+        assert_eq!(back.to_string(), e.to_string());
+    }
+}

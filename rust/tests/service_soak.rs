@@ -24,7 +24,8 @@ use std::time::Duration;
 
 use wattchmen::model::EnergyTable;
 use wattchmen::report::context::WORKLOAD_SECS;
-use wattchmen::service::{ExecJob, Job, PredictServer, ServeConfig};
+use wattchmen::runtime::coalescer::{ExecJob, Job};
+use wattchmen::service::{PredictServer, ServeConfig};
 use wattchmen::util::json::{parse, Json};
 
 fn test_table() -> EnergyTable {
