@@ -22,18 +22,26 @@
 //!                          samples are all EvalCache hits)
 //!   report_all_fast      — full `report all --fast` pipeline, parallel
 //!                          figure drivers over a fresh cache
+//!   fleet_10k_day        — 10 000-device × 24 h fleet campaign on the
+//!                          host's worker pool (plans resolved in setup;
+//!                          the timed region is pure simulation + merge)
+//!   fleet_10k_day_jobs1  — the same campaign on ONE worker: the ratio
+//!                          to fleet_10k_day is the parallel speedup
 //!
 //! Each benchmark also prints the headline numbers it reproduces so
-//! `cargo bench` doubles as a quick regeneration harness.
+//! `cargo bench` doubles as a quick regeneration harness.  Pass
+//! `--filter <substring>` to run only matching benchmarks (expensive
+//! setup for non-matching groups is skipped too).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use wattchmen::cluster::ClusterCampaign;
+use wattchmen::fleet;
 use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::gpusim::device::Device;
 use wattchmen::gpusim::kernel::KernelSpec;
@@ -50,12 +58,26 @@ use wattchmen::util::prng::Rng;
 use wattchmen::util::stats;
 use wattchmen::workloads;
 
+/// `--filter <substring>` from argv; benchmarks whose name doesn't
+/// contain it are skipped (and guarded setup blocks with them).
+static FILTER: OnceLock<Option<String>> = OnceLock::new();
+
+fn selected(name: &str) -> bool {
+    match FILTER.get().and_then(|f| f.as_deref()) {
+        Some(f) => name.contains(f),
+        None => true,
+    }
+}
+
 fn bench<F: FnMut() -> String>(
     name: &str,
     iters: usize,
     results: &mut Vec<(String, f64)>,
     mut f: F,
 ) {
+    if !selected(name) {
+        return;
+    }
     let mut note = f(); // warmup
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -81,6 +103,27 @@ fn json_path_from_args() -> Option<PathBuf> {
                 Some(p) => return Some(PathBuf::from(p)),
                 None => {
                     eprintln!("--json requires a path argument");
+                    std::process::exit(2);
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// `--filter <substring>`: run only benchmarks whose name contains the
+/// substring (same manual argv scan as `--json` — cargo's own flags
+/// pass through untouched).
+fn filter_from_args() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut i = 1;
+    while i < argv.len() {
+        if argv[i] == "--filter" {
+            match argv.get(i + 1) {
+                Some(f) => return Some(f.clone()),
+                None => {
+                    eprintln!("--filter requires a substring argument");
                     std::process::exit(2);
                 }
             }
@@ -142,6 +185,7 @@ fn system_90(rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
 
 fn main() {
     println!("wattchmen bench harness (criterion unavailable offline — custom timer)\n");
+    FILTER.set(filter_from_args()).unwrap();
     let json_path = json_path_from_args();
     let mut results: Vec<(String, f64)> = Vec::new();
     let arts = Artifacts::load_default().ok();
@@ -205,25 +249,34 @@ fn main() {
     });
 
     // --- prediction sweep (Fig 6 prediction phase) ---
-    let table = ClusterCampaign::new(cfg.clone(), 4, 42)
-        .train(&fast_tc(), arts.as_ref())
-        .unwrap()
-        .table;
     let suite = workloads::evaluation_suite(Gen::Volta);
-    let profiles: Vec<(String, Vec<_>)> = suite
+    // The trained table feeds predict_sweep and the serve benches; the
+    // campaign is skipped when --filter excludes them all.
+    let need_table = ["predict_sweep_v100", "serve_predict_all", "serve_batch_64"]
         .iter()
-        .map(|w| {
-            let sw = scaled_workload(&cfg, w, 90.0);
-            (w.name.clone(), profile_app(&cfg, &sw.kernels))
-        })
-        .collect();
-    bench("predict_sweep_v100", 10, &mut results, || {
-        let preds = model::predict_suite(&table, &profiles, Mode::Pred, arts.as_ref()).unwrap();
-        format!(
-            "16 workloads, sum={:.0} J",
-            preds.iter().map(|p| p.energy_j).sum::<f64>()
-        )
+        .any(|n| selected(n));
+    let table = need_table.then(|| {
+        ClusterCampaign::new(cfg.clone(), 4, 42)
+            .train(&fast_tc(), arts.as_ref())
+            .unwrap()
+            .table
     });
+    if let Some(table) = table.as_ref() {
+        let profiles: Vec<(String, Vec<_>)> = suite
+            .iter()
+            .map(|w| {
+                let sw = scaled_workload(&cfg, w, 90.0);
+                (w.name.clone(), profile_app(&cfg, &sw.kernels))
+            })
+            .collect();
+        bench("predict_sweep_v100", 10, &mut results, || {
+            let preds = model::predict_suite(table, &profiles, Mode::Pred, arts.as_ref()).unwrap();
+            format!(
+                "16 workloads, sum={:.0} J",
+                preds.iter().map(|p| p.energy_j).sum::<f64>()
+            )
+        });
+    }
 
     // --- ground-truth measurement loop ("Real GPU (D)") ---
     bench("measure_suite_v100", 3, &mut results, || {
@@ -292,8 +345,45 @@ fn main() {
         )
     });
 
+    // --- fleet campaign: 10k devices × 24 h, closed-form segments ---
+    if selected("fleet_10k_day") || selected("fleet_10k_day_jobs1") {
+        let fc = fleet::FleetConfig {
+            devices: 10_000,
+            hours: 24.0,
+            seed: 42,
+            jobs: thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            fast: true,
+            ..fleet::FleetConfig::default()
+        };
+        // Setup, untimed: one training campaign + one suite prediction
+        // per architecture in the mix.  The timed region is pure
+        // trace generation + closed-form simulation + in-order merge.
+        let cache = Arc::new(EvalCache::new());
+        let plans = fleet::resolve_plans(&fc, &cache).unwrap();
+        let headline = |rep: &fleet::FleetReport, workers: usize| {
+            format!(
+                "{:.1} MWh, {} jobs, peak {:.0} kW, {} workers",
+                rep.total_energy_j / 3.6e9,
+                rep.jobs,
+                rep.peak_bin_power_w / 1e3,
+                workers
+            )
+        };
+        bench("fleet_10k_day", 3, &mut results, || {
+            let rep = fleet::run(&fc, &plans).unwrap();
+            headline(&rep, fc.jobs)
+        });
+        // One worker, same bytes: the ratio to fleet_10k_day is the
+        // worker-pool speedup PERF.md tracks.
+        bench("fleet_10k_day_jobs1", 1, &mut results, || {
+            let rep = fleet::run(&fleet::FleetConfig { jobs: 1, ..fc.clone() }, &plans).unwrap();
+            headline(&rep, 1)
+        });
+    }
+
     // --- serve: 64-request concurrent burst through the TCP service ---
-    {
+    if selected("serve_predict_all") || selected("serve_batch_64") {
+        let table = table.as_ref().expect("need_table covers the serve benches");
         let dir = std::env::temp_dir().join("wattchmen_bench_serve");
         std::fs::create_dir_all(&dir).unwrap();
         table.save(&dir.join("cloudlab-v100.table.json")).unwrap();

@@ -11,8 +11,7 @@
 use std::sync::mpsc;
 use std::thread;
 
-use anyhow::Result;
-
+use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::Device;
 use crate::microbench::{suite, BenchSpec};
@@ -21,6 +20,7 @@ use crate::model::train::{
     TrainConfig, TrainResult,
 };
 use crate::runtime::Artifacts;
+use crate::util::sync::round_robin_shard;
 
 /// Campaign over `n_gpus` simulated devices.
 pub struct ClusterCampaign {
@@ -35,18 +35,15 @@ impl ClusterCampaign {
         ClusterCampaign { cfg, n_gpus, seed }
     }
 
-    /// Round-robin shard of the benchmark suite for one worker.
+    /// Round-robin shard of the benchmark suite for one worker (the
+    /// shared [`round_robin_shard`] discipline, also used by the fleet
+    /// campaign's device→block assignment).
     fn shard(&self, worker: usize) -> Vec<BenchSpec> {
-        suite(self.cfg.gen)
-            .into_iter()
-            .enumerate()
-            .filter(|(i, _)| i % self.n_gpus == worker)
-            .map(|(_, b)| b)
-            .collect()
+        round_robin_shard(suite(self.cfg.gen), self.n_gpus, worker)
     }
 
     /// Run the full distributed campaign and train the table.
-    pub fn train(&self, tc: &TrainConfig, arts: Option<&Artifacts>) -> Result<TrainResult> {
+    pub fn train(&self, tc: &TrainConfig, arts: Option<&Artifacts>) -> Result<TrainResult, Error> {
         // Base-power calibration on GPU 0 (all devices are the same SKU).
         let mut dev0 = Device::new(self.cfg.clone(), self.seed);
         let (const_power, static_power) = calibrate_base_power(&mut dev0, tc);
@@ -78,8 +75,9 @@ impl ClusterCampaign {
             by_worker.into_iter().flat_map(|(_, r)| r).collect();
         raws.sort_by(|a, b| a.name.cmp(&b.name));
 
-        let measurements = reduce_benches(&raws, arts)?;
+        let measurements = reduce_benches(&raws, arts).map_err(Error::from)?;
         assemble_and_solve(&self.cfg.name, const_power, static_power, measurements, arts)
+            .map_err(Error::from)
     }
 }
 

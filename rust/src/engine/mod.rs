@@ -408,10 +408,37 @@ impl Engine {
         let cfg = self.cfg.clone();
         let (gpus, seed, tc) = (self.gpus, self.seed, train_cfg(self.fast));
         let result = self
-            .with_arts(move |arts| ClusterCampaign::new(cfg, gpus, seed).train(&tc, arts))?
-            .map_err(Error::from)?;
+            .with_arts(move |arts| ClusterCampaign::new(cfg, gpus, seed).train(&tc, arts))??;
         let result = Arc::new(result);
         let table = Arc::new(result.table.clone());
+        *lock_unpoisoned(&self.table) = Some(table.clone());
+        Ok(TrainOutcome {
+            result,
+            table,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Like [`train`](Self::train), but memoized in the engine's shared
+    /// [`EvalCache`] per (arch, seed, fast): concurrent or repeat callers
+    /// share one campaign, and the installed table `Arc` is the cache's
+    /// stable one (the coalescer's batching key).  The fleet campaign
+    /// resolves every architecture's table through this path, so 10k
+    /// devices — and a parity test's two runs over one cache — pay for
+    /// training exactly once per architecture.
+    pub fn train_cached(&self) -> Result<TrainOutcome, Error> {
+        let t0 = Instant::now();
+        let cfg = self.cfg.clone();
+        let (gpus, seed, tc) = (self.gpus, self.seed, train_cfg(self.fast));
+        let result = self
+            .cache
+            .trained(&self.cfg.name, self.seed, self.fast, || {
+                Ok(self.with_arts(move |arts| {
+                    ClusterCampaign::new(cfg, gpus, seed).train(&tc, arts)
+                })??)
+            })
+            .map_err(Error::from)?;
+        let table = self.cache.table(&self.cfg.name, self.seed, self.fast, &result);
         *lock_unpoisoned(&self.table) = Some(table.clone());
         Ok(TrainOutcome {
             result,

@@ -1,0 +1,535 @@
+//! `wattchmen::fleet` — a fleet campaign: thousands of heterogeneous
+//! simulated devices replaying a day of seeded job traffic, rolled up
+//! into fleet-level energy, power, and power-cap accounting.
+//!
+//! # Shape
+//!
+//! 1. **Plans** ([`resolve_plans`]): one [`ArchPlan`] per architecture in
+//!    the mix.  Each arch trains (or reuses) its energy table through the
+//!    shared [`Engine`]/[`EvalCache`] path — `train_cached` +
+//!    one batched `predict_suite` per arch, never per device — and
+//!    derives, per evaluation workload, the steady dynamic power
+//!    (`dynamic_j / duration_s`), the duration-weighted occupancy, and
+//!    the DVFS throttle slowdown (the device model's 4-iteration cap
+//!    fixed point, evaluated from the idle steady-state temperature).
+//! 2. **Traces** ([`trace::device_trace`]): each device replays a seeded
+//!    Poisson arrival stream of suite workloads, a pure function of
+//!    (fleet seed, device id) — independent of worker count.
+//! 3. **Simulation** ([`sim::simulate_device`]): a device's day is O(job
+//!    and idle segments), each advanced closed-form via
+//!    [`PowerDynamics::advance_energy`] and split only at power-bin
+//!    boundaries — no 0.1 s stepping on the fleet path.
+//! 4. **Merge** ([`run`]): devices shard round-robin into a *fixed*
+//!    number of blocks (independent of `--jobs`), blocks run on the
+//!    [`parallel_map`] worker pool, and block partial sums merge in
+//!    block-index order — so every f64 is summed in one canonical
+//!    association and `--jobs 1` and `--jobs 8` produce byte-identical
+//!    reports (pinned by `tests/fleet_parity.rs`).
+//!
+//! # Cost
+//!
+//! Per device: O(segments + bins touched), where a 24 h day at ~80 jobs
+//! is ~160 segments against 864 000 telemetry steps — about 1000× fewer
+//! floating-point operations than the stepped reference.  Across the
+//! fleet: O(devices × segments / workers), with per-arch model work
+//! amortized to one training campaign and one suite prediction each.
+
+pub mod report;
+pub mod sim;
+pub mod trace;
+
+use std::sync::Arc;
+
+use crate::engine::{Engine, PredictRequest};
+use crate::error::Error;
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::device::PowerDynamics;
+use crate::gpusim::thermal::ThermalState;
+use crate::gpusim::timing;
+use crate::model::Mode;
+use crate::report::cache::EvalCache;
+use crate::util::sync::{parallel_map, round_robin_shard};
+use crate::workloads;
+
+pub use report::{CapReport, FleetReport};
+pub use trace::TraceConfig;
+
+/// Fixed shard count devices are dealt into.  Worker threads pull whole
+/// blocks; the count is deliberately *independent* of `--jobs` so the
+/// merge order (block index) — and therefore every floating-point sum —
+/// is identical for any worker count.
+pub const BLOCKS: usize = 64;
+
+/// One evaluation workload as the fleet scheduler sees it: the model's
+/// steady dynamic power plus the device-level DVFS outcome.
+#[derive(Clone, Debug)]
+pub struct WorkloadPlan {
+    pub name: String,
+    /// Steady dynamic power while running [W] (post-throttle).
+    pub p_dyn_w: f64,
+    /// Duration-weighted achieved occupancy (scales static power).
+    pub occupancy: f64,
+    /// Duration stretch from DVFS capping (1.0 = full clocks).
+    pub slowdown: f64,
+    pub throttled: bool,
+}
+
+/// Everything the simulator needs for one architecture, resolved once
+/// per fleet run and shared read-only by every device of that arch.
+#[derive(Clone, Debug)]
+pub struct ArchPlan {
+    pub cfg: ArchConfig,
+    /// Idle-gap dynamics (constant lowest-power-state draw).
+    pub idle: PowerDynamics,
+    /// Indexed like the arch's evaluation suite.
+    pub workloads: Vec<WorkloadPlan>,
+}
+
+impl ArchPlan {
+    /// Resolve the plan through an engine: train (memoized in the shared
+    /// [`EvalCache`]) and predict the whole suite in one batch, then
+    /// derive per-workload steady power, occupancy, and the DVFS
+    /// throttle factor.
+    ///
+    /// The throttle fixed point mirrors `Device::run`: find `s` with
+    /// `const + static(T_steady) + p_dyn·s³ ≤ TDP`, then `duration /= s`
+    /// and `p_dyn *= s²`.  The device model seeds the static-power guess
+    /// with the *current* die temperature; a fleet device picks jobs up
+    /// at varying temperatures, so the plan uses the idle steady state —
+    /// the temperature a device relaxes to between jobs.
+    pub fn resolve(engine: &Engine) -> Result<ArchPlan, Error> {
+        let cfg = engine.arch().clone();
+        let dt = cfg.nvml_period_s;
+        engine.train_cached()?;
+        let outs = engine.predict_suite(PredictRequest {
+            workload: None,
+            mode: Mode::Pred,
+            top: 0,
+            ..PredictRequest::default()
+        })?;
+        let suite = workloads::evaluation_suite(cfg.gen);
+        if outs.len() != suite.len() {
+            return Err(Error::internal(format!(
+                "suite prediction returned {} of {} workloads for {}",
+                outs.len(),
+                suite.len(),
+                cfg.name
+            )));
+        }
+        let t_idle = ThermalState::steady(&cfg.cooling, cfg.const_power_w);
+        let plans = outs
+            .iter()
+            .zip(&suite)
+            .map(|(out, w)| {
+                let p = &out.prediction;
+                let p_dyn = if p.duration_s > 0.0 {
+                    p.dynamic_j / p.duration_s
+                } else {
+                    0.0
+                };
+                // Duration-weighted mean occupancy over the app's kernels.
+                let (mut secs, mut occ_secs) = (0.0f64, 0.0f64);
+                for k in &w.kernels {
+                    let d = timing::duration_s(&cfg, k);
+                    secs += d;
+                    occ_secs += d * k.occupancy;
+                }
+                let occ = if secs > 0.0 { occ_secs / secs } else { 0.5 };
+
+                let mut s = 1.0f64;
+                let mut throttled = false;
+                for _ in 0..4 {
+                    let t_guess = ThermalState::steady(
+                        &cfg.cooling,
+                        cfg.const_power_w
+                            + cfg.static_power_at(t_idle, occ)
+                            + p_dyn * s.powi(3),
+                    );
+                    let p_stat = cfg.static_power_at(t_guess, occ);
+                    let headroom = cfg.tdp_w - cfg.const_power_w - p_stat;
+                    if p_dyn > 0.0 && p_dyn * s.powi(2) > headroom && headroom > 0.0 {
+                        s = (headroom / p_dyn).sqrt().min(1.0);
+                        throttled = true;
+                    }
+                }
+                WorkloadPlan {
+                    name: w.name.clone(),
+                    p_dyn_w: if throttled { p_dyn * s.powi(2) } else { p_dyn },
+                    occupancy: occ,
+                    slowdown: if throttled { 1.0 / s } else { 1.0 },
+                    throttled,
+                }
+            })
+            .collect();
+        Ok(ArchPlan {
+            idle: PowerDynamics::idle(&cfg, dt),
+            cfg,
+            workloads: plans,
+        })
+    }
+}
+
+/// Parameters of one fleet campaign.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub devices: usize,
+    /// Simulated horizon [h].
+    pub hours: f64,
+    pub seed: u64,
+    /// Worker threads blocks are pulled by (never affects the bytes of
+    /// the report).
+    pub jobs: usize,
+    /// Shortened per-arch training campaigns (`--fast`; the fleet
+    /// default — the fleet consumes steady powers, not residuals).
+    pub fast: bool,
+    /// Fleet-level power cap for violation accounting [W].
+    pub power_cap_w: Option<f64>,
+    /// Width of the fleet-power time bins [s]; must be a whole number of
+    /// telemetry steps.
+    pub bin_secs: f64,
+    /// Mean exponential inter-arrival gap per device [s].
+    pub mean_gap_secs: f64,
+    /// Uniform job-duration band [s].
+    pub job_secs: (f64, f64),
+    /// `(arch name, weight)` mix; devices are assigned contiguously by
+    /// cumulative weight.
+    pub arch_weights: Vec<(String, f64)>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            devices: 1000,
+            hours: 24.0,
+            seed: 42,
+            jobs: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4),
+            fast: true,
+            power_cap_w: None,
+            bin_secs: 60.0,
+            mean_gap_secs: 600.0,
+            job_secs: (60.0, 900.0),
+            arch_weights: default_mix(),
+        }
+    }
+}
+
+/// The default heterogeneous mix: the paper's four evaluation
+/// environments, weighted toward the Volta installations.
+pub fn default_mix() -> Vec<(String, f64)> {
+    vec![
+        ("cloudlab-v100".to_string(), 0.35),
+        ("summit-v100".to_string(), 0.25),
+        ("lonestar-a100".to_string(), 0.25),
+        ("lonestar-h100".to_string(), 0.15),
+    ]
+}
+
+/// Parse a `--archs` mix: comma-separated `name` or `name=weight`
+/// entries (`"v100,a100=2"`).  Names resolve through the catalog (so
+/// aliases canonicalize); omitted weights default to 1.
+pub fn parse_archs(spec: &str) -> Result<Vec<(String, f64)>, Error> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, weight) = match entry.split_once('=') {
+            Some((n, w)) => (
+                n.trim(),
+                w.trim().parse::<f64>().map_err(|_| {
+                    Error::bad_request(format!("bad arch weight in '{entry}'"))
+                })?,
+            ),
+            None => (entry, 1.0),
+        };
+        if !(weight > 0.0 && weight.is_finite()) {
+            return Err(Error::bad_request(format!(
+                "arch weight must be positive in '{entry}'"
+            )));
+        }
+        let cfg = ArchConfig::by_name(name).ok_or_else(|| Error::unknown_arch(name))?;
+        out.push((cfg.name, weight));
+    }
+    if out.is_empty() {
+        return Err(Error::bad_request("empty --archs mix"));
+    }
+    Ok(out)
+}
+
+/// Device counts per arch: contiguous by cumulative weight, rounded so
+/// they always sum to exactly `devices` (the last arch absorbs the
+/// remainder).
+pub fn arch_counts(devices: usize, weights: &[f64]) -> Vec<usize> {
+    let total: f64 = weights.iter().sum();
+    let mut counts = vec![0usize; weights.len()];
+    let mut cum = 0.0;
+    let mut assigned = 0usize;
+    for (i, w) in weights.iter().enumerate() {
+        cum += w;
+        let upto = if i + 1 == weights.len() {
+            devices
+        } else {
+            ((cum / total) * devices as f64).round() as usize
+        };
+        counts[i] = upto.saturating_sub(assigned);
+        assigned += counts[i];
+    }
+    counts
+}
+
+/// Resolve every plan of the mix through per-arch engines sharing one
+/// [`EvalCache`] — each architecture trains exactly once no matter how
+/// many devices (or repeat runs over the same cache) use it.
+pub fn resolve_plans(fc: &FleetConfig, cache: &Arc<EvalCache>) -> Result<Vec<ArchPlan>, Error> {
+    fc.arch_weights
+        .iter()
+        .map(|(name, _)| {
+            let engine = Engine::builder()
+                .arch(name)
+                .seed(fc.seed)
+                .fast(fc.fast)
+                .cache(cache.clone())
+                .build()?;
+            ArchPlan::resolve(&engine)
+        })
+        .collect()
+}
+
+/// Run the fleet campaign over already-resolved plans.
+///
+/// Deterministic for a given `(config, plans)`: device traces are pure
+/// functions of (seed, device id), devices deal into [`BLOCKS`] fixed
+/// round-robin blocks, and block partials merge in block-index order —
+/// `jobs` only changes wall-clock time, never a byte of the report.
+pub fn run(fc: &FleetConfig, plans: &[ArchPlan]) -> Result<FleetReport, Error> {
+    if fc.devices == 0 {
+        return Err(Error::bad_request("fleet needs at least one device"));
+    }
+    if !(fc.hours > 0.0 && fc.hours.is_finite()) {
+        return Err(Error::bad_request("fleet horizon must be positive"));
+    }
+    if plans.is_empty() || plans.len() != fc.arch_weights.len() {
+        return Err(Error::bad_request("fleet plans do not match the arch mix"));
+    }
+    let dt = plans[0].cfg.nvml_period_s;
+    if plans.iter().any(|p| p.cfg.nvml_period_s != dt) {
+        return Err(Error::bad_request(
+            "mixed telemetry periods in one fleet are unsupported",
+        ));
+    }
+    let horizon_steps = (fc.hours * 3600.0 / dt).round() as u64;
+    let bin_steps = (fc.bin_secs / dt).round();
+    if bin_steps < 1.0 || (bin_steps * dt - fc.bin_secs).abs() > 1e-9 {
+        return Err(Error::bad_request(format!(
+            "--bin-secs {} is not a whole number of {dt} s telemetry steps",
+            fc.bin_secs
+        )));
+    }
+    let bin_steps = bin_steps as u64;
+    let bins = horizon_steps.div_ceil(bin_steps) as usize;
+    let suite_len = plans.iter().map(|p| p.workloads.len()).max().unwrap_or(0);
+
+    // Contiguous device→arch assignment by cumulative mix weight.
+    let weights: Vec<f64> = fc.arch_weights.iter().map(|(_, w)| *w).collect();
+    let counts = arch_counts(fc.devices, &weights);
+    let mut bounds = Vec::with_capacity(counts.len());
+    let mut cum = 0u64;
+    for c in &counts {
+        cum += *c as u64;
+        bounds.push(cum);
+    }
+    let arch_of = |d: u64| bounds.iter().position(|&b| d < b).unwrap_or(plans.len() - 1);
+
+    // Per-arch trace parameters and slowdown vectors, resolved once.
+    let traces: Vec<TraceConfig> = plans
+        .iter()
+        .map(|_| TraceConfig {
+            seed: fc.seed,
+            horizon_steps,
+            dt,
+            mean_gap_secs: fc.mean_gap_secs,
+            job_secs: fc.job_secs,
+        })
+        .collect();
+    let slowdowns: Vec<Vec<f64>> = plans
+        .iter()
+        .map(|p| p.workloads.iter().map(|w| w.slowdown).collect())
+        .collect();
+
+    let blocks = BLOCKS.min(fc.devices);
+    let partials = parallel_map(blocks, fc.jobs.max(1), |block| {
+        let mut acc = sim::FleetAccum::new(plans.len(), suite_len, bins);
+        for d in round_robin_shard(0..fc.devices as u64, blocks, block) {
+            let a = arch_of(d);
+            let jobs = trace::device_trace(&traces[a], d, &slowdowns[a]);
+            sim::simulate_device(&plans[a], a, &jobs, horizon_steps, bin_steps, &mut acc);
+        }
+        acc
+    });
+    // Canonical merge: block-index order, regardless of which worker
+    // produced which block.
+    let mut acc = sim::FleetAccum::new(plans.len(), suite_len, bins);
+    for partial in &partials {
+        acc.merge(partial);
+    }
+    Ok(FleetReport::build(
+        fc.devices,
+        fc.hours,
+        fc.seed,
+        fc.bin_secs,
+        horizon_steps,
+        plans,
+        fc.power_cap_w,
+        &acc,
+    ))
+}
+
+/// One-call convenience: fresh cache, resolve the mix, run the campaign.
+pub fn campaign(fc: &FleetConfig) -> Result<FleetReport, Error> {
+    let cache = Arc::new(EvalCache::new());
+    let plans = resolve_plans(fc, &cache)?;
+    run(fc, &plans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_plan(cfg: ArchConfig) -> ArchPlan {
+        let dt = cfg.nvml_period_s;
+        let idle = PowerDynamics::idle(&cfg, dt);
+        let workloads = (0..4)
+            .map(|i| WorkloadPlan {
+                name: format!("w{i}"),
+                p_dyn_w: 50.0 + 30.0 * i as f64,
+                occupancy: 0.3 + 0.15 * i as f64,
+                slowdown: 1.0,
+                throttled: false,
+            })
+            .collect();
+        ArchPlan {
+            cfg,
+            idle,
+            workloads,
+        }
+    }
+
+    fn tiny_config() -> FleetConfig {
+        FleetConfig {
+            devices: 37,
+            hours: 0.05, // 180 s
+            seed: 7,
+            jobs: 1,
+            bin_secs: 30.0,
+            mean_gap_secs: 45.0,
+            job_secs: (5.0, 30.0),
+            arch_weights: vec![
+                ("cloudlab-v100".to_string(), 2.0),
+                ("summit-v100".to_string(), 1.0),
+            ],
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_mix_resolves_and_covers_all_generations() {
+        let mix = default_mix();
+        assert!((mix.iter().map(|(_, w)| w).sum::<f64>() - 1.0).abs() < 1e-12);
+        for (name, _) in &mix {
+            assert!(ArchConfig::by_name(name).is_some(), "{name} not in catalog");
+        }
+    }
+
+    #[test]
+    fn arch_counts_partition_the_fleet_exactly() {
+        for devices in [1usize, 2, 3, 64, 1000, 9999] {
+            let counts = arch_counts(devices, &[0.35, 0.25, 0.25, 0.15]);
+            assert_eq!(counts.iter().sum::<usize>(), devices, "{devices} devices");
+        }
+        assert_eq!(arch_counts(10, &[1.0]), vec![10]);
+        assert_eq!(arch_counts(4, &[1.0, 1.0]), vec![2, 2]);
+    }
+
+    #[test]
+    fn parse_archs_canonicalizes_and_rejects_garbage() {
+        let mix = parse_archs("v100, lonestar-a100=2").unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix[0].1, 1.0);
+        assert_eq!(mix[1], ("lonestar-a100".to_string(), 2.0));
+        // The alias resolved to its catalog name.
+        assert!(ArchConfig::by_name(&mix[0].0).unwrap().name == mix[0].0);
+        assert_eq!(parse_archs("").unwrap_err().code(), "bad_request");
+        assert_eq!(parse_archs("nosuch").unwrap_err().code(), "unknown_arch");
+        assert_eq!(parse_archs("v100=-1").unwrap_err().code(), "bad_request");
+        assert_eq!(parse_archs("v100=zero").unwrap_err().code(), "bad_request");
+    }
+
+    #[test]
+    fn run_is_worker_count_invariant_with_synthetic_plans() {
+        let plans = vec![
+            synthetic_plan(ArchConfig::cloudlab_v100()),
+            synthetic_plan(ArchConfig::summit_v100()),
+        ];
+        let fc = tiny_config();
+        let seq = run(&fc, &plans).unwrap();
+        let par = run(&FleetConfig { jobs: 8, ..fc.clone() }, &plans).unwrap();
+        assert_eq!(seq.total_energy_j.to_bits(), par.total_energy_j.to_bits());
+        assert_eq!(seq.text(), par.text());
+        assert_eq!(
+            seq.to_json().to_string_pretty(),
+            par.to_json().to_string_pretty()
+        );
+        assert_eq!(seq.per_arch.len(), 2);
+        assert_eq!(
+            seq.per_arch.iter().map(|r| r.devices).sum::<u64>(),
+            fc.devices as u64
+        );
+    }
+
+    #[test]
+    fn run_validates_its_inputs() {
+        let plans = vec![synthetic_plan(ArchConfig::cloudlab_v100())];
+        let base = FleetConfig {
+            arch_weights: vec![("cloudlab-v100".to_string(), 1.0)],
+            ..tiny_config()
+        };
+        let dead = FleetConfig { devices: 0, ..base.clone() };
+        assert_eq!(run(&dead, &plans).unwrap_err().code(), "bad_request");
+        let odd = FleetConfig { bin_secs: 0.25, ..base.clone() };
+        assert_eq!(run(&odd, &plans).unwrap_err().code(), "bad_request");
+        let mismatched = FleetConfig {
+            arch_weights: default_mix(),
+            ..base.clone()
+        };
+        assert_eq!(run(&mismatched, &plans).unwrap_err().code(), "bad_request");
+        assert!(run(&base, &plans).is_ok());
+    }
+
+    #[test]
+    fn power_cap_accounting_hits_both_edges() {
+        let plans = vec![synthetic_plan(ArchConfig::cloudlab_v100())];
+        let base = FleetConfig {
+            arch_weights: vec![("cloudlab-v100".to_string(), 1.0)],
+            ..tiny_config()
+        };
+        // A cap of 0 W is violated by every (occupied) bin.
+        let all = run(
+            &FleetConfig { power_cap_w: Some(0.0), ..base.clone() },
+            &plans,
+        )
+        .unwrap();
+        let cap = all.power_cap.as_ref().unwrap();
+        assert_eq!(cap.violated_bins, all.bins_w.len());
+        assert!((cap.violation_frac - 1.0).abs() < 1e-12);
+        assert!(cap.worst_excess_w > 0.0);
+        // An absurdly high cap is never violated.
+        let none = run(
+            &FleetConfig { power_cap_w: Some(1e15), ..base },
+            &plans,
+        )
+        .unwrap();
+        let cap = none.power_cap.as_ref().unwrap();
+        assert_eq!(cap.violated_bins, 0);
+        assert_eq!(cap.worst_excess_w, 0.0);
+        assert_eq!(cap.violation_secs, 0.0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Fleet-level report: the campaign's merged partial sums rendered as
+//! deterministic text and JSON.
+//!
+//! Every field is a pure function of (fleet config, resolved plans,
+//! merged accumulator) — the worker count never appears, so `--jobs 1`
+//! and parallel runs render byte-identical reports (pinned by
+//! `tests/fleet_parity.rs`).  JSON objects are `BTreeMap`-backed, so key
+//! order is canonical too.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::sim::FleetAccum;
+use super::ArchPlan;
+
+/// Per-architecture rollup row.
+#[derive(Clone, Debug)]
+pub struct ArchRow {
+    pub name: String,
+    pub devices: u64,
+    pub jobs: u64,
+    pub energy_j: f64,
+}
+
+/// Per-workload rollup row (summed across architectures by name).
+#[derive(Clone, Debug)]
+pub struct WorkloadRow {
+    pub name: String,
+    pub jobs: u64,
+    pub energy_j: f64,
+}
+
+/// Power-cap violation accounting against the binned fleet power.
+#[derive(Clone, Debug)]
+pub struct CapReport {
+    pub cap_w: f64,
+    pub violated_bins: usize,
+    pub violation_secs: f64,
+    /// Violated fraction of the horizon.
+    pub violation_frac: f64,
+    /// Largest mean-bin-power excess over the cap [W] (0 if never hit).
+    pub worst_excess_w: f64,
+}
+
+/// The rendered outcome of one fleet campaign.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub devices: usize,
+    pub hours: f64,
+    pub seed: u64,
+    pub bin_secs: f64,
+    pub total_energy_j: f64,
+    pub idle_energy_j: f64,
+    pub jobs: u64,
+    pub throttled_jobs: u64,
+    /// Busy fraction of all device-steps.
+    pub utilization: f64,
+    pub mean_power_w: f64,
+    /// Highest time-binned mean fleet power [W] and where it happened.
+    pub peak_bin_power_w: f64,
+    pub peak_bin_index: usize,
+    pub peak_device_power_w: f64,
+    pub per_arch: Vec<ArchRow>,
+    /// Sorted by energy descending (ties by name).
+    pub per_workload: Vec<WorkloadRow>,
+    /// Mean fleet power per wall-clock bin [W].
+    pub bins_w: Vec<f64>,
+    pub power_cap: Option<CapReport>,
+}
+
+impl FleetReport {
+    /// Assemble the report from merged block partials.  Deterministic:
+    /// depends only on the inputs, never on worker scheduling.
+    pub fn build(
+        devices: usize,
+        hours: f64,
+        seed: u64,
+        bin_secs: f64,
+        horizon_steps: u64,
+        plans: &[ArchPlan],
+        cap_w: Option<f64>,
+        acc: &FleetAccum,
+    ) -> FleetReport {
+        let horizon_secs = hours * 3600.0;
+        // Bin widths: full bins are `bin_secs`; the last may be partial.
+        let widths: Vec<f64> = (0..acc.bin_energy_j.len())
+            .map(|b| {
+                let start = b as f64 * bin_secs;
+                (horizon_secs - start).min(bin_secs).max(0.0)
+            })
+            .collect();
+        let bins_w: Vec<f64> = acc
+            .bin_energy_j
+            .iter()
+            .zip(&widths)
+            .map(|(e, w)| if *w > 0.0 { e / w } else { 0.0 })
+            .collect();
+        let (peak_bin_index, peak_bin_power_w) = bins_w
+            .iter()
+            .enumerate()
+            .fold((0usize, 0.0f64), |(bi, bp), (i, &p)| {
+                if p > bp {
+                    (i, p)
+                } else {
+                    (bi, bp)
+                }
+            });
+
+        let power_cap = cap_w.map(|cap| {
+            let mut violated_bins = 0;
+            let mut violation_secs = 0.0;
+            let mut worst_excess_w = 0.0f64;
+            for (p, w) in bins_w.iter().zip(&widths) {
+                if *w > 0.0 && *p > cap {
+                    violated_bins += 1;
+                    violation_secs += w;
+                    worst_excess_w = worst_excess_w.max(p - cap);
+                }
+            }
+            CapReport {
+                cap_w: cap,
+                violated_bins,
+                violation_secs,
+                violation_frac: if horizon_secs > 0.0 {
+                    violation_secs / horizon_secs
+                } else {
+                    0.0
+                },
+                worst_excess_w,
+            }
+        });
+
+        let per_arch: Vec<ArchRow> = plans
+            .iter()
+            .enumerate()
+            .map(|(i, plan)| ArchRow {
+                name: plan.cfg.name.clone(),
+                devices: acc.devices_by_arch[i],
+                jobs: acc.jobs_by_workload[i].iter().sum(),
+                energy_j: acc.energy_by_arch[i],
+            })
+            .collect();
+
+        // Aggregate workloads by name across architectures (kmeans is
+        // Volta-only, pagerank Ampere/Hopper-only; shared names merge).
+        let mut by_name: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+        for (i, plan) in plans.iter().enumerate() {
+            for (w, wp) in plan.workloads.iter().enumerate() {
+                let entry = by_name.entry(wp.name.clone()).or_insert((0, 0.0));
+                entry.0 += acc.jobs_by_workload[i][w];
+                entry.1 += acc.energy_by_workload[i][w];
+            }
+        }
+        let mut per_workload: Vec<WorkloadRow> = by_name
+            .into_iter()
+            .map(|(name, (jobs, energy_j))| WorkloadRow {
+                name,
+                jobs,
+                energy_j,
+            })
+            .collect();
+        per_workload.sort_by(|a, b| {
+            b.energy_j
+                .total_cmp(&a.energy_j)
+                .then_with(|| a.name.cmp(&b.name))
+        });
+
+        let device_steps = (devices as u64).max(1) * horizon_steps.max(1);
+        FleetReport {
+            devices,
+            hours,
+            seed,
+            bin_secs,
+            total_energy_j: acc.energy_j,
+            idle_energy_j: acc.idle_energy_j,
+            jobs: acc.jobs,
+            throttled_jobs: acc.throttled_jobs,
+            utilization: acc.busy_steps as f64 / device_steps as f64,
+            mean_power_w: if horizon_secs > 0.0 {
+                acc.energy_j / horizon_secs
+            } else {
+                0.0
+            },
+            peak_bin_power_w,
+            peak_bin_index,
+            peak_device_power_w: acc.peak_device_power_w,
+            per_arch,
+            per_workload,
+            bins_w,
+            power_cap,
+        }
+    }
+
+    /// Human-readable report (the CLI's stdout).  Byte-deterministic.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        let mwh = self.total_energy_j / 3.6e9;
+        let idle_pct = if self.total_energy_j > 0.0 {
+            100.0 * self.idle_energy_j / self.total_energy_j
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "fleet report · {} devices · {:.1} h · seed {}\n",
+            self.devices, self.hours, self.seed
+        ));
+        out.push_str(&format!(
+            "  total energy      {mwh:.3} MWh  ({idle_pct:.1}% idle)\n"
+        ));
+        out.push_str(&format!(
+            "  jobs              {} ({} throttled, utilization {:.1}%)\n",
+            self.jobs,
+            self.throttled_jobs,
+            100.0 * self.utilization
+        ));
+        out.push_str(&format!(
+            "  fleet power       mean {:.1} kW, peak {:.1} kW in bin {} ({:.0} s bins), peak device {:.1} W\n",
+            self.mean_power_w / 1e3,
+            self.peak_bin_power_w / 1e3,
+            self.peak_bin_index,
+            self.bin_secs,
+            self.peak_device_power_w
+        ));
+        match &self.power_cap {
+            Some(cap) => out.push_str(&format!(
+                "  power cap         {:.1} kW: {} of {} bins over ({:.0} s, {:.2}% of horizon), worst excess {:.1} kW\n",
+                cap.cap_w / 1e3,
+                cap.violated_bins,
+                self.bins_w.len(),
+                cap.violation_secs,
+                100.0 * cap.violation_frac,
+                cap.worst_excess_w / 1e3
+            )),
+            None => out.push_str("  power cap         none\n"),
+        }
+        out.push_str("  per architecture:\n");
+        for row in &self.per_arch {
+            out.push_str(&format!(
+                "    {:<15} {:>6} devices {:>9} jobs {:>10.3} MWh\n",
+                row.name,
+                row.devices,
+                row.jobs,
+                row.energy_j / 3.6e9
+            ));
+        }
+        out.push_str("  per workload (by energy):\n");
+        for row in &self.per_workload {
+            out.push_str(&format!(
+                "    {:<15} {:>9} jobs {:>10.3} MWh\n",
+                row.name,
+                row.jobs,
+                row.energy_j / 3.6e9
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable report (canonical key order via `BTreeMap`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("wattchmen-fleet-v1".into())),
+            ("devices", Json::Num(self.devices as f64)),
+            ("hours", Json::Num(self.hours)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("bin_secs", Json::Num(self.bin_secs)),
+            ("total_energy_j", Json::Num(self.total_energy_j)),
+            ("idle_energy_j", Json::Num(self.idle_energy_j)),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("throttled_jobs", Json::Num(self.throttled_jobs as f64)),
+            ("utilization", Json::Num(self.utilization)),
+            ("mean_power_w", Json::Num(self.mean_power_w)),
+            ("peak_bin_power_w", Json::Num(self.peak_bin_power_w)),
+            ("peak_bin_index", Json::Num(self.peak_bin_index as f64)),
+            ("peak_device_power_w", Json::Num(self.peak_device_power_w)),
+            (
+                "per_arch",
+                Json::Arr(
+                    self.per_arch
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("devices", Json::Num(r.devices as f64)),
+                                ("jobs", Json::Num(r.jobs as f64)),
+                                ("energy_j", Json::Num(r.energy_j)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "per_workload",
+                Json::Arr(
+                    self.per_workload
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("jobs", Json::Num(r.jobs as f64)),
+                                ("energy_j", Json::Num(r.energy_j)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "bins_w",
+                Json::Arr(self.bins_w.iter().map(|p| Json::Num(*p)).collect()),
+            ),
+            (
+                "power_cap",
+                match &self.power_cap {
+                    None => Json::Null,
+                    Some(c) => Json::obj(vec![
+                        ("cap_w", Json::Num(c.cap_w)),
+                        ("violated_bins", Json::Num(c.violated_bins as f64)),
+                        ("violation_secs", Json::Num(c.violation_secs)),
+                        ("violation_frac", Json::Num(c.violation_frac)),
+                        ("worst_excess_w", Json::Num(c.worst_excess_w)),
+                    ]),
+                },
+            ),
+        ])
+    }
+}

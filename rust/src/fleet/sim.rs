@@ -1,0 +1,348 @@
+//! Per-device fleet simulation: a device's day is a handful of
+//! closed-form segments, not 864 000 Euler steps.
+//!
+//! A device's timeline alternates idle gaps and job runs.  Both are
+//! affine power/temperature segments ([`PowerDynamics`]), so each
+//! advances in O(1) per *bin slice* via
+//! [`PowerDynamics::advance_energy`] — the only loop is over the
+//! power-bin boundaries a segment crosses, giving O(segments + bins
+//! touched) per device.  The reference Euler stepper survives solely as
+//! the fallback for the (practically unreachable) leakage-clamp region
+//! and as the oracle the closed form is property-tested against.
+
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::device::PowerDynamics;
+use crate::gpusim::thermal::ThermalState;
+
+use super::trace::Job;
+use super::ArchPlan;
+
+/// Additive per-block partial sums.  Workers each fold their blocks'
+/// devices into one accumulator; the campaign then merges block partials
+/// in block-index order, so every f64 is summed in one canonical
+/// association regardless of worker count (the byte-parity invariant).
+#[derive(Clone, Debug)]
+pub struct FleetAccum {
+    /// Total fleet energy [J] (idle + jobs).
+    pub energy_j: f64,
+    /// Idle-gap share of `energy_j`.
+    pub idle_energy_j: f64,
+    /// Per-architecture totals, indexed by the fleet's arch list.
+    pub energy_by_arch: Vec<f64>,
+    pub devices_by_arch: Vec<u64>,
+    /// Job-segment energy per (arch, suite index).
+    pub energy_by_workload: Vec<Vec<f64>>,
+    pub jobs_by_workload: Vec<Vec<u64>>,
+    /// Fleet energy per wall-clock power bin [J].
+    pub bin_energy_j: Vec<f64>,
+    pub jobs: u64,
+    pub throttled_jobs: u64,
+    pub busy_steps: u64,
+    /// Highest instantaneous single-device true power seen [W].
+    pub peak_device_power_w: f64,
+}
+
+impl FleetAccum {
+    pub fn new(n_arch: usize, suite_len: usize, bins: usize) -> FleetAccum {
+        FleetAccum {
+            energy_j: 0.0,
+            idle_energy_j: 0.0,
+            energy_by_arch: vec![0.0; n_arch],
+            devices_by_arch: vec![0; n_arch],
+            energy_by_workload: vec![vec![0.0; suite_len]; n_arch],
+            jobs_by_workload: vec![vec![0; suite_len]; n_arch],
+            bin_energy_j: vec![0.0; bins],
+            jobs: 0,
+            throttled_jobs: 0,
+            busy_steps: 0,
+            peak_device_power_w: 0.0,
+        }
+    }
+
+    /// Fold `other` into `self` elementwise.  Called in block-index
+    /// order only — see the struct docs.
+    pub fn merge(&mut self, other: &FleetAccum) {
+        self.energy_j += other.energy_j;
+        self.idle_energy_j += other.idle_energy_j;
+        for (a, b) in self.energy_by_arch.iter_mut().zip(&other.energy_by_arch) {
+            *a += b;
+        }
+        for (a, b) in self.devices_by_arch.iter_mut().zip(&other.devices_by_arch) {
+            *a += b;
+        }
+        for (row, orow) in self.energy_by_workload.iter_mut().zip(&other.energy_by_workload) {
+            for (a, b) in row.iter_mut().zip(orow) {
+                *a += b;
+            }
+        }
+        for (row, orow) in self.jobs_by_workload.iter_mut().zip(&other.jobs_by_workload) {
+            for (a, b) in row.iter_mut().zip(orow) {
+                *a += b;
+            }
+        }
+        for (a, b) in self.bin_energy_j.iter_mut().zip(&other.bin_energy_j) {
+            *a += b;
+        }
+        self.jobs += other.jobs;
+        self.throttled_jobs += other.throttled_jobs;
+        self.busy_steps += other.busy_steps;
+        self.peak_device_power_w = self.peak_device_power_w.max(other.peak_device_power_w);
+    }
+}
+
+/// Advance one closed-form segment of `n` steps starting at absolute
+/// step `from_step`, splitting energy at power-bin boundaries.  Returns
+/// (segment energy [J], peak instantaneous power [W]).  The trajectory
+/// is monotone toward the fixed point, so the peak sits at an endpoint.
+fn advance_binned(
+    dynp: &PowerDynamics,
+    t_c: &mut f64,
+    from_step: u64,
+    n: u64,
+    dt: f64,
+    bin_steps: u64,
+    bins: &mut [f64],
+) -> (f64, f64) {
+    let p_entry = dynp.power_at(*t_c);
+    let mut step = from_step;
+    let mut remaining = n;
+    let mut total = 0.0;
+    while remaining > 0 {
+        let bin = (step / bin_steps) as usize;
+        let in_bin = remaining.min((bin as u64 + 1) * bin_steps - step);
+        let (e, t_end) = dynp.advance_energy(*t_c, dt, in_bin as u32);
+        bins[bin] += e;
+        total += e;
+        *t_c = t_end;
+        step += in_bin;
+        remaining -= in_bin;
+    }
+    (total, p_entry.max(dynp.power_at(*t_c)))
+}
+
+/// Reference Euler fallback for a job segment whose affine closed form
+/// is invalid (leakage clamp reachable) — `step_run_telemetry` physics:
+/// power from the pre-step temperature, then the thermal step.
+fn stepped_binned(
+    cfg: &ArchConfig,
+    occ: f64,
+    p_dyn: f64,
+    t_c: &mut f64,
+    from_step: u64,
+    n: u64,
+    dt: f64,
+    bin_steps: u64,
+    bins: &mut [f64],
+) -> (f64, f64) {
+    let mut st = ThermalState { t_c: *t_c };
+    let mut total = 0.0;
+    let mut peak = 0.0f64;
+    for k in 0..n {
+        let p = cfg.const_power_w + cfg.static_power_at(st.t_c, occ) + p_dyn;
+        st.step(&cfg.cooling, p, dt);
+        let e = p * dt;
+        bins[((from_step + k) / bin_steps) as usize] += e;
+        total += e;
+        peak = peak.max(p);
+    }
+    *t_c = st.t_c;
+    (total, peak)
+}
+
+/// Simulate one device's whole horizon into `acc`: idle gap → job →
+/// idle gap → … → tail idle, every segment closed-form.  `arch_idx`
+/// indexes the fleet's arch list (for the per-arch rows).
+pub fn simulate_device(
+    plan: &ArchPlan,
+    arch_idx: usize,
+    jobs: &[Job],
+    horizon_steps: u64,
+    bin_steps: u64,
+    acc: &mut FleetAccum,
+) {
+    let cfg = &plan.cfg;
+    let dt = cfg.nvml_period_s;
+    let mut t_c = cfg.cooling.t_ambient;
+    let mut cursor = 0u64;
+    let mut device_energy = 0.0;
+    for job in jobs {
+        if job.start_step > cursor {
+            let (e, p_peak) = advance_binned(
+                &plan.idle,
+                &mut t_c,
+                cursor,
+                job.start_step - cursor,
+                dt,
+                bin_steps,
+                &mut acc.bin_energy_j,
+            );
+            device_energy += e;
+            acc.idle_energy_j += e;
+            acc.peak_device_power_w = acc.peak_device_power_w.max(p_peak);
+        }
+        let wp = &plan.workloads[job.workload];
+        let dynp = PowerDynamics::new(cfg, t_c, wp.occupancy, wp.p_dyn_w, dt);
+        let (e, p_peak) = if dynp.closed_ok {
+            advance_binned(
+                &dynp,
+                &mut t_c,
+                job.start_step,
+                job.dur_steps,
+                dt,
+                bin_steps,
+                &mut acc.bin_energy_j,
+            )
+        } else {
+            stepped_binned(
+                cfg,
+                wp.occupancy,
+                wp.p_dyn_w,
+                &mut t_c,
+                job.start_step,
+                job.dur_steps,
+                dt,
+                bin_steps,
+                &mut acc.bin_energy_j,
+            )
+        };
+        device_energy += e;
+        acc.energy_by_workload[arch_idx][job.workload] += e;
+        acc.jobs_by_workload[arch_idx][job.workload] += 1;
+        acc.jobs += 1;
+        acc.busy_steps += job.dur_steps;
+        if wp.throttled {
+            acc.throttled_jobs += 1;
+        }
+        acc.peak_device_power_w = acc.peak_device_power_w.max(p_peak);
+        cursor = job.start_step + job.dur_steps;
+    }
+    if horizon_steps > cursor {
+        let (e, p_peak) = advance_binned(
+            &plan.idle,
+            &mut t_c,
+            cursor,
+            horizon_steps - cursor,
+            dt,
+            bin_steps,
+            &mut acc.bin_energy_j,
+        );
+        device_energy += e;
+        acc.idle_energy_j += e;
+        acc.peak_device_power_w = acc.peak_device_power_w.max(p_peak);
+    }
+    acc.energy_j += device_energy;
+    acc.energy_by_arch[arch_idx] += device_energy;
+    acc.devices_by_arch[arch_idx] += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::WorkloadPlan;
+
+    fn plan(cfg: ArchConfig) -> ArchPlan {
+        let dt = cfg.nvml_period_s;
+        let idle = PowerDynamics::idle(&cfg, dt);
+        let workloads = (0..4)
+            .map(|i| WorkloadPlan {
+                name: format!("w{i}"),
+                p_dyn_w: 40.0 + 35.0 * i as f64,
+                occupancy: 0.25 + 0.2 * i as f64,
+                slowdown: 1.0,
+                throttled: false,
+            })
+            .collect();
+        ArchPlan {
+            cfg,
+            idle,
+            workloads,
+        }
+    }
+
+    fn jobs() -> Vec<Job> {
+        vec![
+            Job { workload: 0, start_step: 1_200, dur_steps: 4_000 },
+            Job { workload: 2, start_step: 5_200, dur_steps: 9_000 }, // back-to-back
+            Job { workload: 3, start_step: 20_000, dur_steps: 5_500 },
+        ]
+    }
+
+    #[test]
+    fn closed_form_device_matches_full_euler_stepping() {
+        let p = plan(ArchConfig::cloudlab_v100());
+        let horizon = 36_000u64; // 1 h
+        let dt = p.cfg.nvml_period_s;
+        let mut acc = FleetAccum::new(1, 4, 60);
+        simulate_device(&p, 0, &jobs(), horizon, 600, &mut acc);
+
+        // Oracle: step every 0.1 s of the whole hour.
+        let mut st = ThermalState { t_c: p.cfg.cooling.t_ambient };
+        let mut energy = 0.0;
+        let js = jobs();
+        for step in 0..horizon {
+            let active = js
+                .iter()
+                .find(|j| step >= j.start_step && step < j.start_step + j.dur_steps);
+            let pw = match active {
+                Some(j) => {
+                    let wp = &p.workloads[j.workload];
+                    p.cfg.const_power_w
+                        + p.cfg.static_power_at(st.t_c, wp.occupancy)
+                        + wp.p_dyn_w
+                }
+                None => p.cfg.const_power_w,
+            };
+            st.step(&p.cfg.cooling, pw, dt);
+            energy += pw * dt;
+        }
+        let rel = (acc.energy_j - energy).abs() / energy;
+        assert!(rel < 1e-9, "closed {} vs stepped {energy} (rel {rel:.2e})", acc.energy_j);
+        // Idle gaps decay toward idle steady state in the oracle too; the
+        // final temperatures agree.
+        let binned: f64 = acc.bin_energy_j.iter().sum();
+        assert!((binned - energy).abs() / energy < 1e-9);
+    }
+
+    #[test]
+    fn bins_partition_the_total_energy() {
+        let p = plan(ArchConfig::summit_v100());
+        let mut acc = FleetAccum::new(1, 4, 60);
+        simulate_device(&p, 0, &jobs(), 36_000, 600, &mut acc);
+        let binned: f64 = acc.bin_energy_j.iter().sum();
+        assert!((binned - acc.energy_j).abs() < 1e-6);
+        assert_eq!(acc.jobs, 3);
+        assert_eq!(acc.busy_steps, 18_500);
+        assert!(acc.idle_energy_j > 0.0 && acc.idle_energy_j < acc.energy_j);
+        assert!(acc.peak_device_power_w > p.cfg.const_power_w);
+    }
+
+    #[test]
+    fn zero_jobs_is_exactly_constant_power() {
+        let p = plan(ArchConfig::cloudlab_v100());
+        let mut acc = FleetAccum::new(1, 4, 60);
+        simulate_device(&p, 0, &[], 36_000, 600, &mut acc);
+        let expect = p.cfg.const_power_w * 36_000.0 * p.cfg.nvml_period_s;
+        assert!((acc.energy_j - expect).abs() < 1e-9);
+        assert_eq!(acc.jobs, 0);
+        assert_eq!(acc.energy_j, acc.idle_energy_j);
+    }
+
+    #[test]
+    fn merge_is_order_independent_for_disjoint_blocks_and_sums_counters() {
+        let p = plan(ArchConfig::cloudlab_v100());
+        let mut a = FleetAccum::new(1, 4, 60);
+        let mut b = FleetAccum::new(1, 4, 60);
+        simulate_device(&p, 0, &jobs(), 36_000, 600, &mut a);
+        simulate_device(&p, 0, &[], 36_000, 600, &mut b);
+        let mut ab = FleetAccum::new(1, 4, 60);
+        ab.merge(&a);
+        ab.merge(&b);
+        assert_eq!(ab.jobs, 3);
+        assert_eq!(ab.devices_by_arch[0], 2);
+        assert!((ab.energy_j - (a.energy_j + b.energy_j)).abs() < 1e-12);
+        assert_eq!(
+            ab.peak_device_power_w.to_bits(),
+            a.peak_device_power_w.max(b.peak_device_power_w).to_bits()
+        );
+    }
+}

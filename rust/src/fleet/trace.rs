@@ -1,0 +1,159 @@
+//! Deterministic job-trace generation: each device replays a seeded
+//! arrival stream of the architecture's 16 evaluation workloads.
+//!
+//! Inter-arrival gaps are exponential (Poisson arrivals via inverse-CDF
+//! over the project PRNG), durations uniform over a configured band and
+//! stretched by the workload's resolved DVFS slowdown, and the workload
+//! itself a uniform pick from the suite.  Every quantity derives from
+//! `Rng::new(seed + device_id · φ)` — the golden-ratio stride SplitMix64
+//! seeding already guarantees well-separated streams — so a device's
+//! trace is a pure function of (trace config, device id), independent of
+//! worker count, block assignment, and every other device.
+//!
+//! Times are quantized to whole telemetry steps (`dt`, 0.1 s) up front:
+//! the fleet simulator then composes closed-form segments on an integer
+//! timeline and never re-derives boundaries from floats.
+
+use crate::util::prng::Rng;
+
+/// Golden-ratio stride separating per-device seed streams (the same
+/// constant SplitMix64 itself increments by).
+const SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+/// Arrival-stream parameters shared by every device in a fleet run.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Fleet seed; device `d` draws from `seed + d·φ`.
+    pub seed: u64,
+    /// Simulated horizon in telemetry steps.
+    pub horizon_steps: u64,
+    /// Telemetry step [s] (`ArchConfig::nvml_period_s`).
+    pub dt: f64,
+    /// Mean exponential inter-arrival gap [s].
+    pub mean_gap_secs: f64,
+    /// Uniform job-duration band [s] (pre-slowdown).
+    pub job_secs: (f64, f64),
+}
+
+/// One queued job on one device's integer timeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Job {
+    /// Index into the architecture's evaluation suite.
+    pub workload: usize,
+    /// First telemetry step of the run.
+    pub start_step: u64,
+    /// Run length in telemetry steps (≥ 1, clipped at the horizon).
+    pub dur_steps: u64,
+}
+
+/// The full job trace of device `device_id`: Poisson arrivals queued
+/// FIFO on a single-tenant device (a job starts at the later of its
+/// arrival and the previous job's completion), truncated at the horizon.
+/// `slowdowns[w]` stretches workload `w`'s nominal duration (the DVFS
+/// throttle factor the arch plan resolved; 1.0 = never throttled).
+pub fn device_trace(tc: &TraceConfig, device_id: u64, slowdowns: &[f64]) -> Vec<Job> {
+    debug_assert!(!slowdowns.is_empty());
+    let mut rng = Rng::new(tc.seed.wrapping_add(device_id.wrapping_mul(SEED_STRIDE)));
+    let mut jobs = Vec::new();
+    let mut arrival_s = 0.0f64;
+    let mut free_step = 0u64;
+    loop {
+        // Inverse-CDF exponential; 1 − u ∈ (0, 1] keeps ln finite.
+        arrival_s += -tc.mean_gap_secs * (1.0 - rng.f64()).ln();
+        if !arrival_s.is_finite() {
+            break;
+        }
+        let arrive_step = (arrival_s / tc.dt) as u64;
+        let workload = rng.below(slowdowns.len());
+        let dur_s = rng.uniform(tc.job_secs.0, tc.job_secs.1) * slowdowns[workload];
+        if arrive_step >= tc.horizon_steps {
+            break;
+        }
+        let start_step = arrive_step.max(free_step);
+        if start_step >= tc.horizon_steps {
+            break;
+        }
+        let dur_steps = ((dur_s / tc.dt).ceil() as u64)
+            .max(1)
+            .min(tc.horizon_steps - start_step);
+        jobs.push(Job {
+            workload,
+            start_step,
+            dur_steps,
+        });
+        free_step = start_step + dur_steps;
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tc() -> TraceConfig {
+        TraceConfig {
+            seed: 42,
+            horizon_steps: 24 * 36_000, // 24 h at 0.1 s
+            dt: 0.1,
+            mean_gap_secs: 600.0,
+            job_secs: (60.0, 900.0),
+        }
+    }
+
+    #[test]
+    fn traces_are_reproducible_per_device() {
+        let ones = [1.0f64; 16];
+        for d in [0u64, 1, 9999] {
+            assert_eq!(device_trace(&tc(), d, &ones), device_trace(&tc(), d, &ones));
+        }
+    }
+
+    #[test]
+    fn different_devices_and_seeds_diverge() {
+        let ones = [1.0f64; 16];
+        let a = device_trace(&tc(), 0, &ones);
+        let b = device_trace(&tc(), 1, &ones);
+        assert_ne!(a, b);
+        let reseeded = device_trace(&TraceConfig { seed: 43, ..tc() }, 0, &ones);
+        assert_ne!(a, reseeded);
+    }
+
+    #[test]
+    fn jobs_are_sequential_and_inside_the_horizon() {
+        let ones = [1.0f64; 16];
+        let cfg = tc();
+        let jobs = device_trace(&cfg, 7, &ones);
+        assert!(!jobs.is_empty(), "24 h at ~18 min cycles must queue jobs");
+        let mut prev_end = 0u64;
+        for j in &jobs {
+            assert!(j.start_step >= prev_end, "jobs must not overlap");
+            assert!(j.dur_steps >= 1);
+            assert!(j.start_step + j.dur_steps <= cfg.horizon_steps);
+            assert!(j.workload < 16);
+            prev_end = j.start_step + j.dur_steps;
+        }
+        // Mean cycle ≈ 600 s gap + 480 s run ⇒ roughly 80 jobs/day.
+        assert!((40..=160).contains(&jobs.len()), "{} jobs", jobs.len());
+    }
+
+    #[test]
+    fn huge_gap_yields_zero_jobs() {
+        let ones = [1.0f64; 16];
+        let cfg = TraceConfig {
+            mean_gap_secs: 1e12,
+            ..tc()
+        };
+        assert!(device_trace(&cfg, 0, &ones).is_empty());
+    }
+
+    #[test]
+    fn slowdown_stretches_durations() {
+        let cfg = tc();
+        let base = device_trace(&cfg, 3, &[1.0f64; 16]);
+        let slowed = device_trace(&cfg, 3, &[2.0f64; 16]);
+        // Same arrival stream, doubled service time ⇒ strictly more busy
+        // steps (until queueing saturates the horizon).
+        let busy = |js: &[Job]| js.iter().map(|j| j.dur_steps).sum::<u64>();
+        assert!(busy(&slowed) > busy(&base));
+    }
+}

@@ -20,15 +20,93 @@ use super::timing;
 /// and the explicit-Euler thermal recurrence is linear with constant
 /// coefficients: `T' = γT + δ`, fixed point `F = δ/(1−γ)`.  That makes
 /// the whole telemetry loop a geometric sequence the device can
-/// synthesize without per-step physics (see `Device::synth_run_telemetry`).
-struct PowerDynamics {
-    a_pow: f64,
-    b_lin: f64,
-    gamma: f64,
-    fixed: f64,
+/// synthesize without per-step physics (see `Device::synth_run_telemetry`)
+/// — and lets the fleet layer account a whole segment's energy in O(1)
+/// via [`PowerDynamics::advance_energy`], with no per-0.1 s stepping.
+#[derive(Clone, Debug)]
+pub struct PowerDynamics {
+    pub a_pow: f64,
+    pub b_lin: f64,
+    pub gamma: f64,
+    pub fixed: f64,
     /// False when the clamp region is reachable (or γ degenerate) — the
     /// caller must fall back to reference Euler stepping.
-    closed_ok: bool,
+    pub closed_ok: bool,
+}
+
+impl PowerDynamics {
+    /// Dynamics of a run segment on `cfg` at constant dynamic power
+    /// `p_dyn` and occupancy `occ`, entered at die temperature
+    /// `t_start_c` (the start temperature only feeds the `closed_ok`
+    /// clamp-reachability check; the coefficients are temperature-free).
+    pub fn new(cfg: &ArchConfig, t_start_c: f64, occ: f64, p_dyn: f64, dt: f64) -> PowerDynamics {
+        let cool = &cfg.cooling;
+        let (s0, b_lin) = cfg.static_power_affine(occ);
+        let a_pow = cfg.const_power_w + s0 + p_dyn;
+        let gamma = 1.0 - dt / (cool.r_th * cool.c_th) + dt * b_lin / cool.c_th;
+        let one_minus = 1.0 - gamma;
+        let fixed = if one_minus > 0.0 {
+            (dt / cool.c_th) * (a_pow + cool.t_ambient / cool.r_th) / one_minus
+        } else {
+            f64::INFINITY
+        };
+        // The affine static model is exact only above the leakage clamp
+        // temperature; the trajectory is monotone between the start
+        // temperature and the fixed point, so checking both endpoints
+        // (with margin) suffices.
+        let t_clamp = cfg.static_clamp_temp_c();
+        let closed_ok = one_minus > 0.0
+            && gamma > 0.0
+            && fixed.is_finite()
+            && t_start_c.min(fixed) > t_clamp + 1.0;
+        PowerDynamics {
+            a_pow,
+            b_lin,
+            gamma,
+            fixed,
+            closed_ok,
+        }
+    }
+
+    /// Dynamics of an idle window: constant power only (clock-gated, no
+    /// static/dynamic draw — the semantics of [`Device::idle`] and
+    /// [`Device::cooldown`]), plain cooling decay toward the idle steady
+    /// state.
+    pub fn idle(cfg: &ArchConfig, dt: f64) -> PowerDynamics {
+        let gamma = ThermalState::euler_gamma(&cfg.cooling, dt);
+        PowerDynamics {
+            a_pow: cfg.const_power_w,
+            b_lin: 0.0,
+            gamma,
+            fixed: ThermalState::steady(&cfg.cooling, cfg.const_power_w),
+            closed_ok: gamma > 0.0 && gamma < 1.0,
+        }
+    }
+
+    /// Instantaneous true power at die temperature `t_c` [W].
+    pub fn power_at(&self, t_c: f64) -> f64 {
+        self.a_pow + self.b_lin * t_c
+    }
+
+    /// Advance `n` telemetry steps of `dt` from temperature `t0_c` in
+    /// O(1): returns `(energy_j, t_end_c)`.  Energy uses the *pre-step*
+    /// temperature of each step — exactly the accumulation of
+    /// `synth_run_telemetry`/`step_run_telemetry` — so with
+    /// `T_k = F + (T_0 − F)·γᵏ` the per-step powers form a geometric
+    /// sequence and `Σ_{k<n} T_k = n·F + (T_0 − F)·(1 − γⁿ)/(1 − γ)`.
+    /// Callers must check `closed_ok` first and fall back to reference
+    /// Euler stepping when it is false.
+    pub fn advance_energy(&self, t0_c: f64, dt: f64, n: u32) -> (f64, f64) {
+        debug_assert!(self.closed_ok, "advance_energy needs closed_ok dynamics");
+        if n == 0 {
+            return (0.0, t0_c);
+        }
+        let g_n = self.gamma.powi(n as i32);
+        let delta0 = t0_c - self.fixed;
+        let sum_t = n as f64 * self.fixed + delta0 * (1.0 - g_n) / (1.0 - self.gamma);
+        let energy = dt * (self.a_pow * n as f64 + self.b_lin * sum_t);
+        (energy, self.fixed + delta0 * g_n)
+    }
 }
 
 /// Result of executing one kernel (or an idle window) on the device.
@@ -127,34 +205,10 @@ impl Device {
     }
 
     /// Affine power/thermal coefficients for a run segment at constant
-    /// dynamic power `p_dyn` and occupancy `occ`.
+    /// dynamic power `p_dyn` and occupancy `occ`, entered at the device's
+    /// current die temperature.
     fn linear_power(&self, occ: f64, p_dyn: f64, dt: f64) -> PowerDynamics {
-        let cool = &self.cfg.cooling;
-        let (s0, b_lin) = self.cfg.static_power_affine(occ);
-        let a_pow = self.cfg.const_power_w + s0 + p_dyn;
-        let gamma = 1.0 - dt / (cool.r_th * cool.c_th) + dt * b_lin / cool.c_th;
-        let one_minus = 1.0 - gamma;
-        let fixed = if one_minus > 0.0 {
-            (dt / cool.c_th) * (a_pow + cool.t_ambient / cool.r_th) / one_minus
-        } else {
-            f64::INFINITY
-        };
-        // The affine static model is exact only above the leakage clamp
-        // temperature; the trajectory is monotone between the start
-        // temperature and the fixed point, so checking both endpoints
-        // (with margin) suffices.
-        let t_clamp = self.cfg.static_clamp_temp_c();
-        let closed_ok = one_minus > 0.0
-            && gamma > 0.0
-            && fixed.is_finite()
-            && self.thermal.t_c.min(fixed) > t_clamp + 1.0;
-        PowerDynamics {
-            a_pow,
-            b_lin,
-            gamma,
-            fixed,
-            closed_ok,
-        }
+        PowerDynamics::new(&self.cfg, self.thermal.t_c, occ, p_dyn, dt)
     }
 
     /// Bulk telemetry synthesis for a run segment: closed-form temperature
@@ -446,6 +500,54 @@ mod tests {
             close(ta.energy_counter_j, tb.energy_counter_j, 1e-9, 1e-6)?;
             close(synth.thermal.t_c, stepped.thermal.t_c, 0.0, 1e-6)
         });
+    }
+
+    #[test]
+    fn advance_energy_matches_stepped_accumulation() {
+        use crate::util::proptest::{check, close};
+        check("segment-energy-closed-form", 32, |rng| {
+            let cfg = if rng.below(2) == 0 {
+                ArchConfig::cloudlab_v100()
+            } else {
+                ArchConfig::summit_v100()
+            };
+            let dt = cfg.nvml_period_s;
+            let t0 = rng.uniform(cfg.cooling.t_ambient, 90.0);
+            let occ = rng.uniform(0.05, 1.0);
+            let p_dyn = rng.uniform(0.0, 220.0);
+            let n = 1 + rng.below(1200) as u32;
+            let dynp = PowerDynamics::new(&cfg, t0, occ, p_dyn, dt);
+            if !dynp.closed_ok {
+                return Err("closed form unexpectedly rejected".into());
+            }
+            // Reference: step_run_telemetry's physics (pre-step power).
+            let mut st = ThermalState { t_c: t0 };
+            let mut energy = 0.0;
+            for _ in 0..n {
+                let p = cfg.const_power_w + cfg.static_power_at(st.t_c, occ) + p_dyn;
+                st.step(&cfg.cooling, p, dt);
+                energy += p * dt;
+            }
+            let (e_closed, t_end) = dynp.advance_energy(t0, dt, n);
+            close(e_closed, energy, 1e-9, 1e-9)?;
+            close(t_end, st.t_c, 0.0, 1e-6)
+        });
+    }
+
+    #[test]
+    fn idle_dynamics_match_advance_steps_and_constant_power() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let dt = cfg.nvml_period_s;
+        let dynp = PowerDynamics::idle(&cfg, dt);
+        assert!(dynp.closed_ok);
+        let (energy, t_end) = dynp.advance_energy(82.0, dt, 600);
+        // Idle burns exactly constant power.
+        assert!((energy - cfg.const_power_w * dt * 600.0).abs() < 1e-9);
+        let mut st = ThermalState { t_c: 82.0 };
+        st.advance_steps(&cfg.cooling, cfg.const_power_w, dt, 600);
+        assert!((t_end - st.t_c).abs() < 1e-9, "{t_end} vs {}", st.t_c);
+        // Zero steps is the identity.
+        assert_eq!(dynp.advance_energy(55.0, dt, 0), (0.0, 55.0));
     }
 
     #[test]

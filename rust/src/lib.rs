@@ -40,6 +40,12 @@
 //! Remote consumers use [`engine::client::RemoteClient`], the typed
 //! protocol-v2 client (with transparent v1 fallback) for a running
 //! `wattchmen serve`.
+//!
+//! The [`fleet`] module scales the model out: `wattchmen fleet`
+//! simulates thousands of heterogeneous devices replaying a day of
+//! seeded job traffic — closed-form per-segment thermal/energy
+//! advancement, per-arch tables resolved once through the engine, and a
+//! byte-deterministic parallel merge.
 
 // CI gates the crate with `cargo clippy -- -D warnings`.  Correctness
 // lints stay hard errors; the style lints below fight this codebase's
@@ -70,6 +76,7 @@ pub mod isa;
 pub mod microbench;
 pub mod baselines;
 pub mod cluster;
+pub mod fleet;
 pub mod model;
 pub mod util;
 pub mod workloads;

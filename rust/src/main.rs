@@ -6,6 +6,7 @@
 //!   train                 run a training campaign, save the energy table
 //!   predict               predict a workload's energy from a saved table
 //!   serve                 JSON-over-TCP batched prediction service
+//!   fleet                 simulate a heterogeneous device fleet for a day
 //!   list                  list environments / workloads / experiments
 //!   version
 //!
@@ -18,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use wattchmen::engine::client::RemoteClient;
 use wattchmen::engine::DEFAULT_TOP;
+use wattchmen::fleet;
 use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::isa::Gen;
 use wattchmen::report::{self, EvalCache};
@@ -229,6 +231,60 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
     Ok(())
 }
 
+/// `wattchmen fleet`: simulate a heterogeneous device fleet replaying a
+/// day of seeded job traffic.  Per-arch tables resolve once through the
+/// engine (a fast campaign by default; `--full` for the full protocol),
+/// then devices simulate closed-form on the worker pool — `--jobs` only
+/// changes wall-clock time, never a byte of the report.
+fn cmd_fleet(args: &Args) -> Result<(), Error> {
+    let jobs = match args.get_usize("jobs", 0)? {
+        0 => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4),
+        j => j,
+    };
+    let mut fc = fleet::FleetConfig {
+        devices: args.get_usize("devices", 1000)?,
+        hours: args.get_f64("hours", 24.0)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        jobs,
+        fast: !args.flag("full"),
+        bin_secs: args.get_f64("bin-secs", 60.0)?,
+        mean_gap_secs: args.get_f64("gap-secs", 600.0)?,
+        ..fleet::FleetConfig::default()
+    };
+    if let Some(spec) = args.get("archs") {
+        fc.arch_weights = fleet::parse_archs(spec)?;
+    }
+    let cap_w = args.get_f64("power-cap", 0.0)?;
+    if cap_w > 0.0 {
+        fc.power_cap_w = Some(cap_w);
+    }
+
+    let cache = Arc::new(EvalCache::new());
+    let t0 = Instant::now();
+    let plans = fleet::resolve_plans(&fc, &cache)?;
+    let t_plans = t0.elapsed();
+    let t1 = Instant::now();
+    let rep = fleet::run(&fc, &plans)?;
+    print!("{}", rep.text());
+    println!(
+        "fleet: {} arch plans in {:.1}s, {} devices × {:.1} h simulated in {:.2}s ({} workers)",
+        plans.len(),
+        t_plans.as_secs_f64(),
+        fc.devices,
+        fc.hours,
+        t1.elapsed().as_secs_f64(),
+        fc.jobs
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, rep.to_json().to_string_pretty())
+            .map_err(|e| Error::internal(format!("writing {out}: {e}")))?;
+        println!("fleet report saved to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_list() {
     println!("environments:");
     for n in ["cloudlab-v100", "summit-v100", "ref-v100", "lonestar-a100", "lonestar-h100"] {
@@ -258,6 +314,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("list") => {
             cmd_list();
             Ok(())
@@ -278,6 +335,8 @@ fn main() {
                          (no --workload: one predict_all request for the whole suite)\n\
                  serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N]\n\
                          [--linger-ms MS] [--queue N] [--deadline-ms MS]\n\
+                 fleet   [--devices N] [--hours H] [--jobs N] [--seed N] [--power-cap W]\n\
+                         [--bin-secs S] [--gap-secs S] [--archs name[=w],...] [--full] [--out FILE]\n\
                  list"
             );
             std::process::exit(2);

@@ -143,7 +143,9 @@ impl EvalCtx {
         self.cache.trained(&cfg.name, self.seed, self.fast, || {
             let campaign = ClusterCampaign::new(cfg.clone(), 4, self.seed);
             let tc = self.train_cfg();
-            self.with_arts(move |arts| campaign.train(&tc, arts))?
+            // Outer `?`: coordinator plumbing (anyhow); inner `?`: the
+            // campaign's typed `wattchmen::Error`, which anyhow absorbs.
+            Ok(self.with_arts(move |arts| campaign.train(&tc, arts))??)
         })
     }
 

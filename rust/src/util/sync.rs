@@ -266,6 +266,28 @@ impl Drop for OwnedSemaphorePermit {
     }
 }
 
+/// Round-robin sharding: the items of shard `shard` out of `shards`
+/// (shard `s` keeps input positions `s`, `s + shards`, `s + 2·shards`, …).
+/// Shards partition the input, and the partition depends only on
+/// (`shards`, input order) — never on which worker runs which shard — so
+/// results merged back in shard order are deterministic.  This is the one
+/// definition shared by the cluster campaign (benchmarks → simulated
+/// GPUs) and the fleet campaign (devices → aggregation blocks).
+pub fn round_robin_shard<T>(
+    items: impl IntoIterator<Item = T>,
+    shards: usize,
+    shard: usize,
+) -> Vec<T> {
+    let shards = shards.max(1);
+    debug_assert!(shard < shards);
+    items
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| i % shards == shard)
+        .map(|(_, x)| x)
+        .collect()
+}
+
 /// Order-preserving parallel map over `0..n` with a bounded worker pool:
 /// result `i` is `f(i)`, regardless of which worker ran it or when it
 /// finished.  Shared by the measurement fan-out (and any future
@@ -465,6 +487,27 @@ mod tests {
         *guard += 1;
         drop(guard);
         assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn round_robin_shards_partition_the_input() {
+        let items: Vec<usize> = (0..23).collect();
+        let shards = 4;
+        let mut seen = Vec::new();
+        for s in 0..shards {
+            let shard = round_robin_shard(items.clone(), shards, s);
+            // Within a shard the input order is preserved.
+            assert!(shard.windows(2).all(|w| w[0] < w[1]));
+            seen.extend(shard);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, items, "shards must partition the input exactly");
+        // Degenerate shapes: one shard is the identity, empty input is fine.
+        assert_eq!(round_robin_shard(items.clone(), 1, 0), items);
+        assert_eq!(round_robin_shard(Vec::<usize>::new(), 4, 2), vec![]);
+        // More shards than items: trailing shards are empty, not an error.
+        assert_eq!(round_robin_shard(vec![7, 8], 5, 1), vec![8]);
+        assert_eq!(round_robin_shard(vec![7, 8], 5, 4), vec![]);
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Fleet campaign parity: over one set of resolved plans, `--jobs 1`
+//! and parallel runs must render **byte-identical** reports — devices
+//! deal into a fixed block count, blocks merge in index order, so the
+//! worker count never reaches a floating-point sum.  Also pins the
+//! shared-cache contract: every architecture trains exactly once no
+//! matter how many engines, plan resolutions, or runs share the cache.
+
+use std::sync::Arc;
+
+use wattchmen::fleet::{self, FleetConfig};
+use wattchmen::report::EvalCache;
+
+fn config() -> FleetConfig {
+    FleetConfig {
+        devices: 48,
+        hours: 0.2, // 720 s — enough for several jobs per device
+        seed: 1234,
+        jobs: 1,
+        fast: true,
+        power_cap_w: Some(9_000.0), // exercises the violation accounting
+        bin_secs: 60.0,
+        mean_gap_secs: 120.0,
+        job_secs: (10.0, 60.0),
+        arch_weights: fleet::parse_archs("cloudlab-v100=3,lonestar-a100=1").unwrap(),
+    }
+}
+
+#[test]
+fn parallel_fleet_report_is_byte_identical_to_sequential() {
+    let cache = Arc::new(EvalCache::new());
+    let fc = config();
+    let plans = fleet::resolve_plans(&fc, &cache).unwrap();
+    // One training campaign per architecture, through the shared cache.
+    assert_eq!(cache.trained_archs(), 2);
+
+    let seq = fleet::run(&fc, &plans).unwrap();
+    let par = fleet::run(&FleetConfig { jobs: 4, ..fc.clone() }, &plans).unwrap();
+    let wide = fleet::run(&FleetConfig { jobs: 13, ..fc.clone() }, &plans).unwrap();
+
+    // The whole rendered surface, bytes.
+    assert_eq!(seq.text(), par.text());
+    assert_eq!(seq.text(), wide.text());
+    assert_eq!(
+        seq.to_json().to_string_pretty(),
+        par.to_json().to_string_pretty()
+    );
+    // And the raw accumulators, bit for bit.
+    assert_eq!(seq.total_energy_j.to_bits(), par.total_energy_j.to_bits());
+    assert_eq!(seq.idle_energy_j.to_bits(), par.idle_energy_j.to_bits());
+    for (a, b) in seq.bins_w.iter().zip(&par.bins_w) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // Physical sanity of the shared result.
+    assert!(seq.jobs > 0, "720 s at 2 min mean gaps must queue jobs");
+    assert!(seq.utilization > 0.0 && seq.utilization < 1.0);
+    assert!(seq.idle_energy_j > 0.0 && seq.idle_energy_j < seq.total_energy_j);
+    assert_eq!(
+        seq.per_arch.iter().map(|r| r.devices).sum::<u64>(),
+        fc.devices as u64
+    );
+    let workload_e: f64 = seq.per_workload.iter().map(|r| r.energy_j).sum();
+    let arch_e: f64 = seq.per_arch.iter().map(|r| r.energy_j).sum();
+    assert!((arch_e - seq.total_energy_j).abs() < 1e-6);
+    assert!((workload_e - (seq.total_energy_j - seq.idle_energy_j)).abs() < 1e-6);
+    assert!(seq.power_cap.is_some());
+
+    // Re-resolving plans over the same cache retrains nothing, and the
+    // rerun reproduces the report bytes.
+    let replans = fleet::resolve_plans(&fc, &cache).unwrap();
+    assert_eq!(cache.trained_archs(), 2);
+    let rerun = fleet::run(&fc, &replans).unwrap();
+    assert_eq!(seq.text(), rerun.text());
+}
