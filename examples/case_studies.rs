@@ -19,7 +19,7 @@ use wattchmen::report::{measure_workload, scaled_workload};
 use wattchmen::runtime::Artifacts;
 use wattchmen::workloads::{qmcpack::qmcpack, rodinia::backprop_k2};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), wattchmen::Error> {
     let arts = Artifacts::load_default().ok();
     let cfg = ArchConfig::cloudlab_v100();
     let tc = TrainConfig {

@@ -14,7 +14,7 @@ use wattchmen::util::stats;
 use wattchmen::workloads;
 use wattchmen::Engine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), wattchmen::Error> {
     // Each engine owns its (optionally loaded) artifacts; the `fast`
     // flag selects the shortened 2 × 60 s campaign protocol.
     let engine_for = |arch: &str| {

@@ -26,7 +26,7 @@ use wattchmen::util::text::{f, render_table};
 use wattchmen::workloads;
 use wattchmen::{Engine, PredictRequest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), wattchmen::Error> {
     let t0 = Instant::now();
     let arts = Artifacts::load_default()?; // end-to-end REQUIRES the artifacts
     println!("PJRT artifacts loaded (nnls, integrate, affine_fit, predict)");

@@ -15,7 +15,7 @@ use wattchmen::runtime::Artifacts;
 use wattchmen::util::stats;
 use wattchmen::workloads;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), wattchmen::Error> {
     let arts = Artifacts::load_default().ok();
     let cfg = ArchConfig::lonestar_h100();
     let tc = TrainConfig {

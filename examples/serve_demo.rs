@@ -18,9 +18,8 @@ use std::sync::{Arc, Barrier};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-
 use wattchmen::cluster::ClusterCampaign;
+use wattchmen::error::Error;
 use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::gpusim::profiler::profile_app;
 use wattchmen::model::{predict_suite, Mode, TrainConfig};
@@ -43,7 +42,7 @@ fn run_burst(
     names: &[String],
     expected: &Arc<BTreeMap<String, (String, f64)>>,
     exact: bool,
-) -> Result<Duration> {
+) -> Result<Duration, Error> {
     let barrier = Arc::new(Barrier::new(BURST));
     let t0 = Instant::now();
     let mut clients = Vec::new();
@@ -51,7 +50,7 @@ fn run_burst(
         let workload = names[i % names.len()].clone();
         let expected = expected.clone();
         let barrier = barrier.clone();
-        clients.push(thread::spawn(move || -> Result<()> {
+        clients.push(thread::spawn(move || -> Result<(), Error> {
             barrier.wait();
             let stream = TcpStream::connect(addr)?;
             let mut reader = BufReader::new(stream.try_clone()?);
@@ -61,25 +60,27 @@ fn run_burst(
             writer.write_all(b"\n")?;
             let mut line = String::new();
             reader.read_line(&mut line)?;
-            let resp = parse(line.trim()).map_err(anyhow::Error::msg)?;
+            let resp = parse(line.trim())?;
             if resp.get("ok") != Some(&Json::Bool(true)) {
-                bail!("{workload}: error response {line}");
+                return Err(Error::internal(format!(
+                    "{workload}: error response {line}"
+                )));
             }
             let (cli_line, cli_energy) = &expected[&workload];
             let text = resp.get("text").and_then(Json::as_str).unwrap_or("");
             if exact && text != *cli_line {
-                bail!(
+                return Err(Error::internal(format!(
                     "{workload}: served line diverged from the CLI\n  served: {text}\n  cli:    {cli_line}"
-                );
+                )));
             }
             let energy = resp
                 .get("energy_j")
                 .and_then(Json::as_f64)
                 .unwrap_or(f64::NAN);
             if !((energy - cli_energy).abs() <= 1e-4 * cli_energy.abs().max(1.0)) {
-                bail!(
+                return Err(Error::internal(format!(
                     "{workload}: served energy {energy} J vs CLI {cli_energy} J"
-                );
+                )));
             }
             Ok(())
         }));
@@ -89,7 +90,7 @@ fn run_burst(
         match c.join() {
             Ok(Ok(())) => {}
             Ok(Err(e)) => failure = Some(e),
-            Err(_) => failure = Some(anyhow::anyhow!("client thread panicked")),
+            Err(_) => failure = Some(Error::internal("client thread panicked")),
         }
     }
     match failure {
@@ -106,7 +107,7 @@ fn run_predict_all(
     names: &[String],
     expected: &Arc<BTreeMap<String, (String, f64)>>,
     exact: bool,
-) -> Result<()> {
+) -> Result<(), Error> {
     let stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -115,35 +116,39 @@ fn run_predict_all(
     writer.write_all(b"\n")?;
     let mut line = String::new();
     reader.read_line(&mut line)?;
-    let resp = parse(line.trim()).map_err(anyhow::Error::msg)?;
+    let resp = parse(line.trim())?;
     if resp.get("ok") != Some(&Json::Bool(true)) {
-        bail!("predict_all error response: {line}");
+        return Err(Error::internal(format!(
+            "predict_all error response: {line}"
+        )));
     }
     let preds = resp
         .get("predictions")
         .and_then(Json::as_arr)
         .unwrap_or(&[]);
     if preds.len() != names.len() {
-        bail!(
+        return Err(Error::internal(format!(
             "predict_all answered {} of {} workloads",
             preds.len(),
             names.len()
-        );
+        )));
     }
     for p in preds {
         let workload = p.get("workload").and_then(Json::as_str).unwrap_or("");
-        let (cli_line, cli_energy) = expected
-            .get(workload)
-            .ok_or_else(|| anyhow::anyhow!("unexpected workload '{workload}' in predict_all"))?;
+        let (cli_line, cli_energy) = expected.get(workload).ok_or_else(|| {
+            Error::internal(format!("unexpected workload '{workload}' in predict_all"))
+        })?;
         let text = p.get("text").and_then(Json::as_str).unwrap_or("");
         if exact && text != *cli_line {
-            bail!(
+            return Err(Error::internal(format!(
                 "{workload}: predict_all line diverged from the CLI\n  served: {text}\n  cli:    {cli_line}"
-            );
+            )));
         }
         let energy = p.get("energy_j").and_then(Json::as_f64).unwrap_or(f64::NAN);
         if !((energy - cli_energy).abs() <= 1e-4 * cli_energy.abs().max(1.0)) {
-            bail!("{workload}: predict_all energy {energy} J vs CLI {cli_energy} J");
+            return Err(Error::internal(format!(
+                "{workload}: predict_all energy {energy} J vs CLI {cli_energy} J"
+            )));
         }
     }
     println!(
@@ -153,7 +158,7 @@ fn run_predict_all(
     Ok(())
 }
 
-fn send_shutdown(addr: std::net::SocketAddr) -> Result<()> {
+fn send_shutdown(addr: std::net::SocketAddr) -> Result<(), Error> {
     let stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -161,12 +166,12 @@ fn send_shutdown(addr: std::net::SocketAddr) -> Result<()> {
     let mut ack = String::new();
     reader.read_line(&mut ack)?;
     if !ack.contains("\"ok\":true") {
-        bail!("shutdown not acknowledged: {ack}");
+        return Err(Error::internal(format!("shutdown not acknowledged: {ack}")));
     }
     Ok(())
 }
 
-fn main() -> Result<()> {
+fn main() -> Result<(), Error> {
     let arts = Artifacts::load_default()
         .map_err(|e| eprintln!("(artifacts unavailable: {e:#}; serving native paths)"))
         .ok();
@@ -208,7 +213,7 @@ fn main() -> Result<()> {
                     (protocol::render_line(&pred), pred.energy_j),
                 ))
             })
-            .collect::<Result<_>>()?,
+            .collect::<Result<_, Error>>()?,
     );
     let names: Vec<String> = suite.iter().map(|w| w.name.clone()).collect();
     let exact_parity = arts.is_none();
@@ -240,7 +245,7 @@ fn main() -> Result<()> {
     let elapsed = burst
         .join()
         .expect("burst thread panicked")
-        .context("client burst failed")?;
+        .map_err(|e| Error::internal(format!("client burst failed: {e}")))?;
 
     // 4. Assert the burst actually coalesced (≤ ⌈64/32⌉ batched calls).
     let batches = server.batch_calls();
@@ -252,12 +257,18 @@ fn main() -> Result<()> {
     );
     // The burst plus the one predict_all suite request.
     if server.served() != BURST + 1 {
-        bail!("served {} of {} requests", server.served(), BURST + 1);
+        return Err(Error::internal(format!(
+            "served {} of {} requests",
+            server.served(),
+            BURST + 1
+        )));
     }
     // ≤ ⌈64/32⌉ for the burst, plus one batch for the predict_all suite.
     let max_batches = BURST.div_ceil(32) + 1;
     if batches > max_batches {
-        bail!("burst fanned out into {batches} batched calls (want ≤ {max_batches})");
+        return Err(Error::internal(format!(
+            "burst fanned out into {batches} batched calls (want ≤ {max_batches})"
+        )));
     }
     println!("serve_demo: clean shutdown");
     Ok(())

@@ -1,0 +1,86 @@
+//! `wlint` — run the crate's own lint pass over a source tree.
+//!
+//! ```text
+//! wlint [--json] <path>...
+//! ```
+//!
+//! Each `<path>` may be a `.rs` file or a directory (walked
+//! recursively).  Paths are resolved leniently so the same invocation
+//! works from the repo root and from `rust/` (CI runs with
+//! `working-directory: rust`): a path that does not exist is retried
+//! with a leading `rust/` stripped, then with `rust/` prepended.
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use wattchmen::lint::{lint_tree, to_json, Diagnostic};
+
+fn resolve(arg: &str) -> Option<PathBuf> {
+    let direct = PathBuf::from(arg);
+    if direct.exists() {
+        return Some(direct);
+    }
+    if let Some(stripped) = arg.strip_prefix("rust/") {
+        let p = PathBuf::from(stripped);
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    let prefixed = PathBuf::from("rust").join(arg);
+    if prefixed.exists() {
+        return Some(prefixed);
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut paths: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                eprintln!("usage: wlint [--json] <path>...");
+                return ExitCode::from(0);
+            }
+            _ => paths.push(arg),
+        }
+    }
+    if paths.is_empty() {
+        eprintln!("usage: wlint [--json] <path>...");
+        return ExitCode::from(2);
+    }
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    for arg in &paths {
+        let Some(path) = resolve(arg) else {
+            eprintln!("wlint: path not found: {arg}");
+            return ExitCode::from(2);
+        };
+        match lint_tree(&path) {
+            Ok(d) => diags.extend(d),
+            Err(e) => {
+                eprintln!("wlint: {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if json {
+        println!("{}", to_json(&diags).to_string_pretty());
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        if !diags.is_empty() {
+            eprintln!("wlint: {} finding(s)", diags.len());
+        }
+    }
+    if diags.is_empty() {
+        ExitCode::from(0)
+    } else {
+        ExitCode::from(1)
+    }
+}

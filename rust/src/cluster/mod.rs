@@ -75,9 +75,8 @@ impl ClusterCampaign {
             by_worker.into_iter().flat_map(|(_, r)| r).collect();
         raws.sort_by(|a, b| a.name.cmp(&b.name));
 
-        let measurements = reduce_benches(&raws, arts).map_err(Error::from)?;
+        let measurements = reduce_benches(&raws, arts)?;
         assemble_and_solve(&self.cfg.name, const_power, static_power, measurements, arts)
-            .map_err(Error::from)
     }
 }
 

@@ -436,8 +436,7 @@ impl Engine {
                 Ok(self.with_arts(move |arts| {
                     ClusterCampaign::new(cfg, gpus, seed).train(&tc, arts)
                 })??)
-            })
-            .map_err(Error::from)?;
+            })?;
         let table = self.cache.table(&self.cfg.name, self.seed, self.fast, &result);
         *lock_unpoisoned(&self.table) = Some(table.clone());
         Ok(TrainOutcome {
@@ -538,7 +537,7 @@ impl Engine {
                     .iter()
                     .map(|(name, profiles)| (name.as_str(), profiles.as_slice()))
                     .collect();
-                model::predict_many(table, &view, mode, arts.as_ref()).map_err(Error::from)
+                model::predict_many(table, &view, mode, arts.as_ref())
             }
             Backend::Coordinated(jobs) => submit_suite_and_wait_deadline(
                 jobs,
@@ -603,7 +602,6 @@ impl Engine {
         self.with_arts(move |arts| {
             model::transfer_table(&src, &subset, dst_const_power_w, dst_static_power_w, arts)
         })?
-        .map_err(Error::from)
     }
 
     /// The request's slice of the arch's evaluation suite, in suite

@@ -208,12 +208,6 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Error {
-        Error::Internal(format!("{e:#}"))
-    }
-}
-
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Error {
         Error::Io(e.to_string())
@@ -282,11 +276,7 @@ mod tests {
     }
 
     #[test]
-    fn converts_from_anyhow_and_io() {
-        let a = anyhow::anyhow!("inner").context("outer");
-        let e: Error = a.into();
-        assert_eq!(e.code(), "internal");
-        assert_eq!(e.to_string(), "outer: inner");
+    fn converts_from_io() {
         let io = std::io::Error::other("disk on fire");
         let e: Error = io.into();
         assert_eq!(e.code(), "io_failed");

@@ -6,9 +6,10 @@
 //! advances in O(1) per *bin slice* via
 //! [`PowerDynamics::advance_energy`] — the only loop is over the
 //! power-bin boundaries a segment crosses, giving O(segments + bins
-//! touched) per device.  The reference Euler stepper survives solely as
-//! the fallback for the (practically unreachable) leakage-clamp region
-//! and as the oracle the closed form is property-tested against.
+//! touched) per device.  `advance_binned` is the *checked* entry
+//! point: it tests `closed_ok` at runtime (release builds included) and
+//! routes invalid dynamics to the reference Euler stepper, which also
+//! serves as the oracle the closed form is property-tested against.
 
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::PowerDynamics;
@@ -90,12 +91,31 @@ impl FleetAccum {
     }
 }
 
-/// Advance one closed-form segment of `n` steps starting at absolute
-/// step `from_step`, splitting energy at power-bin boundaries.  Returns
-/// (segment energy [J], peak instantaneous power [W]).  The trajectory
-/// is monotone toward the fixed point, so the peak sits at an endpoint.
+/// What a segment is running — fixes the fallback power law when its
+/// affine closed form is invalid.
+#[derive(Clone, Copy, Debug)]
+pub enum SegmentLoad {
+    /// Idle gap: constant power only (clock-gated, the semantics of
+    /// [`PowerDynamics::idle`]).
+    Idle,
+    /// Job run at occupancy `occ` drawing `p_dyn` W of dynamic power.
+    Job { occ: f64, p_dyn: f64 },
+}
+
+/// Advance one segment of `n` steps starting at absolute step
+/// `from_step`, splitting energy at power-bin boundaries.  Returns
+/// (segment energy [J], peak instantaneous power [W]).
+///
+/// This is the checked entry point for [`PowerDynamics::advance_energy`]:
+/// dynamics whose closed form is invalid (`!closed_ok` — leakage clamp
+/// reachable or γ degenerate) are routed to [`stepped_binned`], the
+/// reference Euler stepper, in release builds as much as debug ones.
+/// For valid dynamics the trajectory is monotone toward the fixed point,
+/// so the peak sits at an endpoint.
 fn advance_binned(
+    cfg: &ArchConfig,
     dynp: &PowerDynamics,
+    load: SegmentLoad,
     t_c: &mut f64,
     from_step: u64,
     n: u64,
@@ -103,6 +123,9 @@ fn advance_binned(
     bin_steps: u64,
     bins: &mut [f64],
 ) -> (f64, f64) {
+    if !dynp.closed_ok {
+        return stepped_binned(cfg, load, t_c, from_step, n, dt, bin_steps, bins);
+    }
     let p_entry = dynp.power_at(*t_c);
     let mut step = from_step;
     let mut remaining = n;
@@ -120,13 +143,12 @@ fn advance_binned(
     (total, p_entry.max(dynp.power_at(*t_c)))
 }
 
-/// Reference Euler fallback for a job segment whose affine closed form
-/// is invalid (leakage clamp reachable) — `step_run_telemetry` physics:
+/// Reference Euler fallback for a segment whose affine closed form is
+/// invalid (leakage clamp reachable) — `step_run_telemetry` physics:
 /// power from the pre-step temperature, then the thermal step.
 fn stepped_binned(
     cfg: &ArchConfig,
-    occ: f64,
-    p_dyn: f64,
+    load: SegmentLoad,
     t_c: &mut f64,
     from_step: u64,
     n: u64,
@@ -138,7 +160,12 @@ fn stepped_binned(
     let mut total = 0.0;
     let mut peak = 0.0f64;
     for k in 0..n {
-        let p = cfg.const_power_w + cfg.static_power_at(st.t_c, occ) + p_dyn;
+        let p = match load {
+            SegmentLoad::Idle => cfg.const_power_w,
+            SegmentLoad::Job { occ, p_dyn } => {
+                cfg.const_power_w + cfg.static_power_at(st.t_c, occ) + p_dyn
+            }
+        };
         st.step(&cfg.cooling, p, dt);
         let e = p * dt;
         bins[((from_step + k) / bin_steps) as usize] += e;
@@ -168,7 +195,9 @@ pub fn simulate_device(
     for job in jobs {
         if job.start_step > cursor {
             let (e, p_peak) = advance_binned(
+                cfg,
                 &plan.idle,
+                SegmentLoad::Idle,
                 &mut t_c,
                 cursor,
                 job.start_step - cursor,
@@ -182,29 +211,20 @@ pub fn simulate_device(
         }
         let wp = &plan.workloads[job.workload];
         let dynp = PowerDynamics::new(cfg, t_c, wp.occupancy, wp.p_dyn_w, dt);
-        let (e, p_peak) = if dynp.closed_ok {
-            advance_binned(
-                &dynp,
-                &mut t_c,
-                job.start_step,
-                job.dur_steps,
-                dt,
-                bin_steps,
-                &mut acc.bin_energy_j,
-            )
-        } else {
-            stepped_binned(
-                cfg,
-                wp.occupancy,
-                wp.p_dyn_w,
-                &mut t_c,
-                job.start_step,
-                job.dur_steps,
-                dt,
-                bin_steps,
-                &mut acc.bin_energy_j,
-            )
-        };
+        let (e, p_peak) = advance_binned(
+            cfg,
+            &dynp,
+            SegmentLoad::Job {
+                occ: wp.occupancy,
+                p_dyn: wp.p_dyn_w,
+            },
+            &mut t_c,
+            job.start_step,
+            job.dur_steps,
+            dt,
+            bin_steps,
+            &mut acc.bin_energy_j,
+        );
         device_energy += e;
         acc.energy_by_workload[arch_idx][job.workload] += e;
         acc.jobs_by_workload[arch_idx][job.workload] += 1;
@@ -218,7 +238,9 @@ pub fn simulate_device(
     }
     if horizon_steps > cursor {
         let (e, p_peak) = advance_binned(
+            cfg,
             &plan.idle,
+            SegmentLoad::Idle,
             &mut t_c,
             cursor,
             horizon_steps - cursor,
@@ -325,6 +347,61 @@ mod tests {
         assert!((acc.energy_j - expect).abs() < 1e-9);
         assert_eq!(acc.jobs, 0);
         assert_eq!(acc.energy_j, acc.idle_energy_j);
+    }
+
+    #[test]
+    fn invalid_closed_form_routes_to_the_euler_fallback() {
+        // Forge dynamics flagged invalid: the checked entry point must
+        // reproduce the Euler stepper bit-for-bit — in release builds
+        // too, where a debug_assert would have vanished.
+        let cfg = ArchConfig::cloudlab_v100();
+        let dt = cfg.nvml_period_s;
+        let (occ, p_dyn) = (0.5, 120.0);
+        let mut dynp = PowerDynamics::new(&cfg, cfg.cooling.t_ambient, occ, p_dyn, dt);
+        dynp.closed_ok = false;
+        let mut t_c = cfg.cooling.t_ambient;
+        let mut bins = vec![0.0; 10];
+        let (e, peak) = advance_binned(
+            &cfg,
+            &dynp,
+            SegmentLoad::Job { occ, p_dyn },
+            &mut t_c,
+            0,
+            2_000,
+            dt,
+            600,
+            &mut bins,
+        );
+        let mut st = ThermalState { t_c: cfg.cooling.t_ambient };
+        let mut energy = 0.0;
+        let mut peak_ref = 0.0f64;
+        for _ in 0..2_000 {
+            let p = cfg.const_power_w + cfg.static_power_at(st.t_c, occ) + p_dyn;
+            st.step(&cfg.cooling, p, dt);
+            energy += p * dt;
+            peak_ref = peak_ref.max(p);
+        }
+        assert_eq!(e.to_bits(), energy.to_bits());
+        assert_eq!(peak.to_bits(), peak_ref.to_bits());
+        assert_eq!(t_c.to_bits(), st.t_c.to_bits());
+
+        // Idle fallback: clock-gated constant power, no static term.
+        let mut idle = PowerDynamics::idle(&cfg, dt);
+        idle.closed_ok = false;
+        let mut t_idle = cfg.cooling.t_ambient;
+        let (e_idle, p_idle) = advance_binned(
+            &cfg,
+            &idle,
+            SegmentLoad::Idle,
+            &mut t_idle,
+            0,
+            500,
+            dt,
+            600,
+            &mut bins,
+        );
+        assert!((e_idle - cfg.const_power_w * 500.0 * dt).abs() < 1e-9);
+        assert_eq!(p_idle, cfg.const_power_w);
     }
 
     #[test]

@@ -94,10 +94,15 @@ impl PowerDynamics {
     /// `synth_run_telemetry`/`step_run_telemetry` — so with
     /// `T_k = F + (T_0 − F)·γᵏ` the per-step powers form a geometric
     /// sequence and `Σ_{k<n} T_k = n·F + (T_0 − F)·(1 − γⁿ)/(1 − γ)`.
-    /// Callers must check `closed_ok` first and fall back to reference
-    /// Euler stepping when it is false.
+    ///
+    /// The formula is only meaningful when `closed_ok` holds; callers go
+    /// through a checked entry point ([`fleet::sim`]'s `advance_binned`)
+    /// that tests the flag at runtime — release builds included — and
+    /// routes invalid dynamics to the reference Euler stepper instead of
+    /// silently evaluating a wrong geometric sum here.
+    ///
+    /// [`fleet::sim`]: crate::fleet::sim
     pub fn advance_energy(&self, t0_c: f64, dt: f64, n: u32) -> (f64, f64) {
-        debug_assert!(self.closed_ok, "advance_energy needs closed_ok dynamics");
         if n == 0 {
             return (0.0, t0_c);
         }

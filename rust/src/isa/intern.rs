@@ -17,6 +17,8 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Mutex, OnceLock};
 
+use crate::util::sync::lock_unpoisoned;
+
 use super::class::{classify_str, InstrClass, MemLevel};
 use super::grouping::canonicalize;
 
@@ -69,19 +71,17 @@ fn intern_in(st: &mut InternerState, key: &str) -> KeyId {
 
 /// Intern a column key (idempotent).
 pub fn intern(key: &str) -> KeyId {
-    intern_in(&mut state().lock().unwrap(), key)
+    intern_in(&mut lock_unpoisoned(state()), key)
 }
 
 /// Look a key up without inserting it.
 pub fn lookup(key: &str) -> Option<KeyId> {
-    state().lock().unwrap().by_key.get(key).map(|&id| KeyId(id))
+    lock_unpoisoned(state()).by_key.get(key).map(|&id| KeyId(id))
 }
 
 /// Resolve an id back to its key string (the serialization boundary).
 pub fn resolve_key(id: KeyId) -> String {
-    state()
-        .lock()
-        .unwrap()
+    lock_unpoisoned(state())
         .keys
         .get(id.index())
         .cloned()
@@ -91,12 +91,12 @@ pub fn resolve_key(id: KeyId) -> String {
 /// Number of keys interned so far — an upper bound for dense id-indexed
 /// lookup tables.
 pub fn interned_count() -> usize {
-    state().lock().unwrap().keys.len()
+    lock_unpoisoned(state()).keys.len()
 }
 
 /// Resolve many ids in one lock acquisition (bulk serialization boundary).
 pub fn resolve_keys(ids: &[KeyId]) -> Vec<String> {
-    let st = state().lock().unwrap();
+    let st = lock_unpoisoned(state());
     ids.iter()
         .map(|id| {
             st.keys
@@ -110,7 +110,7 @@ pub fn resolve_keys(ids: &[KeyId]) -> Vec<String> {
 /// Canonicalize a raw profiler opcode into its grouped column id(s),
 /// memoized on the raw string.
 pub fn raw_group(raw: &str) -> RawGroup {
-    let mut st = state().lock().unwrap();
+    let mut st = lock_unpoisoned(state());
     if let Some(rg) = st.raw_memo.get(raw) {
         return *rg;
     }

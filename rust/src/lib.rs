@@ -46,6 +46,11 @@
 //! seeded job traffic — closed-form per-segment thermal/energy
 //! advancement, per-arch tables resolved once through the engine, and a
 //! byte-deterministic parallel merge.
+//!
+//! The crate lints itself: the [`lint`] module and its `wlint` binary
+//! enforce repo-specific invariants (panic-safe request paths, typed
+//! errors, deterministic simulation layers) in CI.  The rule catalog
+//! and pragma policy are documented in `LINTS.md` at the repo root.
 
 // CI gates the crate with `cargo clippy -- -D warnings`.  Correctness
 // lints stay hard errors; the style lints below fight this codebase's
@@ -73,6 +78,7 @@ pub mod trace;
 pub mod engine;
 pub mod error;
 pub mod isa;
+pub mod lint;
 pub mod microbench;
 pub mod baselines;
 pub mod cluster;

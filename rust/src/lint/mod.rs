@@ -1,0 +1,191 @@
+//! # wlint — the repo's own static analyzer
+//!
+//! A std-only lint pass over this crate's sources, run by CI (`cargo
+//! run --release --bin wlint -- rust/src`) before the test suite.  Every
+//! rule encodes a defect class that actually bit this repo in an earlier
+//! PR; the full catalog, with the motivating incidents and the pragma
+//! policy, lives in `LINTS.md` at the repo root.
+//!
+//! The pass is deliberately token-level, not AST-level: it lexes each
+//! file with [`tokens::lex`] and pattern-matches token windows in
+//! [`rules`].  That keeps it dependency-free and fast (the whole tree
+//! lints in well under a second) at the cost of some precision — which
+//! is what the pragma escape hatch is for:
+//!
+//! ```text
+//! // wlint::allow(rule-id): why this site is intentionally exempt
+//! ```
+//!
+//! A pragma suppresses findings of `rule-id` on its own line and the
+//! next line.  The justification is mandatory — a pragma without the
+//! `: <why>` suffix is itself reported (`pragma-justification`).
+
+pub mod rules;
+pub mod tokens;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One finding, rendered as `file:line: rule-id: message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Path relative to the crate `src/` root — the unit rule scoping works
+/// on (`service/mod.rs`, `runtime/coalescer.rs`, `main.rs`, ...).
+fn rel_of(path: &str) -> &str {
+    match path.rfind("src/") {
+        Some(i) => &path[i + 4..],
+        None => path,
+    }
+}
+
+/// Lint one source file given its (display) path and contents.
+/// Pure: the path only drives rule scoping and the `file` field.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let lx = tokens::lex(src);
+    let mut diags = rules::check(rel_of(path), src, &lx);
+
+    // A pragma covers its own line and the next (so it can sit above
+    // the offending line or, for short sites, on it).
+    diags.retain(|d| {
+        !lx.pragmas
+            .iter()
+            .any(|p| p.rule == d.rule && (p.line == d.line || p.line + 1 == d.line))
+    });
+
+    for p in &lx.pragmas {
+        if !p.justified {
+            diags.push(Diagnostic {
+                file: String::new(),
+                line: p.line,
+                rule: "pragma-justification".to_string(),
+                message: format!(
+                    "pragma needs a justification: `// wlint::allow({}): <why>`",
+                    p.rule
+                ),
+            });
+        }
+    }
+
+    for d in &mut diags {
+        d.file = path.to_string();
+    }
+    diags.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    diags
+}
+
+/// Lint one file from disk.
+pub fn lint_path(path: &Path) -> io::Result<Vec<Diagnostic>> {
+    let src = fs::read_to_string(path)?;
+    Ok(lint_source(&path.display().to_string(), &src))
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself if it is a
+/// file), in sorted path order so output is deterministic.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        out.extend(lint_path(&f)?);
+    }
+    Ok(out)
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(p)?;
+    if meta.is_file() {
+        if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(p)? {
+        collect_rs(&entry?.path(), out)?;
+    }
+    Ok(())
+}
+
+/// JSON rendering for `wlint --json`: an array of
+/// `{file, line, rule, message}` objects.
+pub fn to_json(diags: &[Diagnostic]) -> Json {
+    Json::Arr(
+        diags
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::Str(d.file.clone())),
+                    ("line", Json::Num(d.line as f64)),
+                    ("rule", Json::Str(d.rule.clone())),
+                    ("message", Json::Str(d.message.clone())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_suppresses_own_and_next_line() {
+        let src = "\
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    // wlint::allow(lock-unwrap): test of the suppression window
+    *m.lock().unwrap()
+}
+fn g(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+";
+        let diags = lint_source("gpusim/x.rs", src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 6);
+        assert_eq!(diags[0].rule, "lock-unwrap");
+    }
+
+    #[test]
+    fn unjustified_pragma_is_a_finding() {
+        let src = "// wlint::allow(line-width)\nfn f() {}\n";
+        let diags = lint_source("gpusim/x.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "pragma-justification");
+        assert!(diags[0].to_string().starts_with("gpusim/x.rs:1: "));
+    }
+
+    #[test]
+    fn json_shape_matches_text_output() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) { m.lock().unwrap(); }\n";
+        let diags = lint_source("a.rs", src);
+        let j = to_json(&diags);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("file").unwrap().as_str(), Some("a.rs"));
+        assert_eq!(arr[0].get("line").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[0].get("rule").unwrap().as_str(), Some("lock-unwrap"));
+    }
+
+    #[test]
+    fn rel_of_strips_through_src() {
+        assert_eq!(rel_of("/root/repo/rust/src/service/mod.rs"), "service/mod.rs");
+        assert_eq!(rel_of("service/mod.rs"), "service/mod.rs");
+        assert_eq!(rel_of("rust/src/main.rs"), "main.rs");
+    }
+}

@@ -1,0 +1,429 @@
+//! The wlint rule set.  Every rule here encodes an incident from this
+//! repo's own PR history — see `LINTS.md` at the repo root for the
+//! stories and the pragma policy.
+//!
+//! Rules operate on the token stream from [`super::tokens`], scoped by
+//! the file's path relative to `src/`.  Panic-safety and discipline
+//! rules skip `#[cfg(test)]` regions: test code unwraps by design.
+
+use super::tokens::{Lexed, TokKind, Token};
+use super::Diagnostic;
+
+/// Rule identifiers, in the order diagnostics sort within a line.
+pub const RULE_IDS: &[&str] = &[
+    "lock-unwrap",
+    "request-unwrap",
+    "no-anyhow",
+    "err-string",
+    "hashmap-iter",
+    "wallclock",
+    "stmt-ctrlflow",
+    "delim-balance",
+    "line-width",
+    "pragma-justification",
+];
+
+/// Directories whose request paths must be panic-free (plus
+/// `runtime/coalescer.rs`, matched exactly).
+const REQUEST_PATH_DIRS: &[&str] = &["service/"];
+
+/// Engine-reachable code: stringly-typed `Result`s are banned here in
+/// favor of `wattchmen::Error`.
+const TYPED_ERROR_DIRS: &[&str] = &[
+    "engine/", "service/", "runtime/", "model/", "report/", "fleet/", "cluster/",
+];
+
+/// Layers that must stay deterministic: no unordered-map iteration
+/// feeding float accumulation, no wall-clock reads.
+const DETERMINISTIC_DIRS: &[&str] = &["fleet/", "gpusim/", "model/", "solver/"];
+
+/// Keywords that can directly precede `[` without it being an index
+/// expression (slice patterns, array types in generic positions, ...).
+const NON_INDEX_PREFIX_KEYWORDS: &[&str] = &[
+    "let", "mut", "ref", "in", "return", "if", "else", "match", "while", "for", "loop", "move",
+    "as", "where", "impl", "fn", "pub", "use", "static", "const", "type", "struct", "enum", "dyn",
+    "box", "break",
+];
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// Token-index spans covered by `#[cfg(test)]` items.
+fn test_spans(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            let mut j = i + 7;
+            let mut depth = 0i32;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => break,
+                    ";" if depth == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].text == "{" {
+                let end = matching_brace(toks, j);
+                spans.push((i, end));
+                i = end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn is_cfg_test_attr(toks: &[Token], i: usize) -> bool {
+    i + 6 < toks.len()
+        && toks[i].text == "#"
+        && toks[i + 1].text == "["
+        && toks[i + 2].text == "cfg"
+        && toks[i + 3].text == "("
+        && toks[i + 4].text == "test"
+        && toks[i + 5].text == ")"
+        && toks[i + 6].text == "]"
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token if
+/// unbalanced — delim-balance reports that separately).
+fn matching_brace(toks: &[Token], open: usize) -> usize {
+    let mut depth = 1i32;
+    let mut j = open + 1;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn in_spans(i: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| i >= a && i <= b)
+}
+
+fn ident_is(t: &Token, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+pub fn check(rel: &str, src: &str, lx: &Lexed) -> Vec<Diagnostic> {
+    let toks = &lx.tokens;
+    let tests = test_spans(toks);
+    let mut out = Vec::new();
+    let mut diag = |line: u32, rule: &'static str, message: String| {
+        out.push(Diagnostic {
+            file: String::new(), // filled in by the caller
+            line,
+            rule: rule.to_string(),
+            message,
+        });
+    };
+
+    // --- lock-unwrap: `.lock().unwrap()` / `.lock().expect(...)` -----
+    for i in 0..toks.len().saturating_sub(5) {
+        if ident_is(&toks[i], "lock")
+            && toks[i + 1].text == "("
+            && toks[i + 2].text == ")"
+            && toks[i + 3].text == "."
+            && (ident_is(&toks[i + 4], "unwrap") || ident_is(&toks[i + 4], "expect"))
+            && toks[i + 5].text == "("
+            && !in_spans(i, &tests)
+        {
+            diag(
+                toks[i].line,
+                "lock-unwrap",
+                "`.lock().unwrap()` cascades panics across threads on poison; use \
+                 `util::sync::lock_unpoisoned` (or justify with a pragma)"
+                    .to_string(),
+            );
+        }
+    }
+
+    // --- request-unwrap: panics on the serve request path ------------
+    if in_dirs(rel, REQUEST_PATH_DIRS) || rel == "runtime/coalescer.rs" {
+        for i in 0..toks.len() {
+            if in_spans(i, &tests) {
+                continue;
+            }
+            let t = &toks[i];
+            if (ident_is(t, "unwrap") || ident_is(t, "expect"))
+                && i > 0
+                && toks[i - 1].text == "."
+                && i + 1 < toks.len()
+                && toks[i + 1].text == "("
+            {
+                diag(
+                    t.line,
+                    "request-unwrap",
+                    format!(
+                        "`.{}()` can panic on the request path — return an error instead",
+                        t.text
+                    ),
+                );
+            }
+            if t.kind == TokKind::Punct && t.text == "[" && i > 0 {
+                let p = &toks[i - 1];
+                let indexable = (p.kind == TokKind::Ident
+                    && !NON_INDEX_PREFIX_KEYWORDS.contains(&p.text.as_str()))
+                    || p.text == ")"
+                    || p.text == "]";
+                if indexable {
+                    diag(
+                        t.line,
+                        "request-unwrap",
+                        "indexing can panic on the request path — use `.get(..)` and handle \
+                         the miss"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+
+    // --- no-anyhow: the crate-wide typed-error discipline ------------
+    for (i, t) in toks.iter().enumerate() {
+        if ident_is(t, "anyhow") && !in_spans(i, &tests) {
+            diag(
+                t.line,
+                "no-anyhow",
+                "the crate's error type is `wattchmen::Error`; `anyhow` erases wire codes"
+                    .to_string(),
+            );
+        }
+    }
+
+    // --- err-string: `Result<_, String>` in engine-reachable code ----
+    if in_dirs(rel, TYPED_ERROR_DIRS) || rel == "main.rs" {
+        let mut i = 0;
+        while i + 1 < toks.len() {
+            if ident_is(&toks[i], "Result") && toks[i + 1].text == "<" && !in_spans(i, &tests) {
+                let mut depth = 1i32;
+                let mut j = i + 2;
+                while j < toks.len() && depth > 0 {
+                    match toks[j].text.as_str() {
+                        "<" => depth += 1,
+                        // `>` closing an arrow (`->` / `=>`) is not a
+                        // generic-arg close.
+                        ">" if toks[j - 1].text != "-" && toks[j - 1].text != "=" => depth -= 1,
+                        "," if depth == 1 => {
+                            if j + 2 < toks.len()
+                                && ident_is(&toks[j + 1], "String")
+                                && toks[j + 2].text == ">"
+                            {
+                                diag(
+                                    toks[i].line,
+                                    "err-string",
+                                    "`Result<_, String>` loses the wire code; engine-reachable \
+                                     code returns `Result<_, wattchmen::Error>`"
+                                        .to_string(),
+                                );
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    // --- hashmap-iter / wallclock: determinism in simulation layers --
+    if in_dirs(rel, DETERMINISTIC_DIRS) {
+        for (i, t) in toks.iter().enumerate() {
+            if in_spans(i, &tests) {
+                continue;
+            }
+            if ident_is(t, "HashMap") {
+                diag(
+                    t.line,
+                    "hashmap-iter",
+                    "HashMap iteration order is nondeterministic and poisons float \
+                     accumulation — use BTreeMap or sort before reducing"
+                        .to_string(),
+                );
+            }
+            if ident_is(t, "Instant") || ident_is(t, "SystemTime") {
+                diag(
+                    t.line,
+                    "wallclock",
+                    format!(
+                        "`{}` reads the wall clock inside a deterministic layer — thread \
+                         simulated time through instead",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- stmt-ctrlflow: the PR 1 compile blocker ---------------------
+    stmt_ctrlflow(toks, &mut diag);
+
+    // --- delim-balance ----------------------------------------------
+    delim_balance(toks, &mut diag);
+
+    // --- line-width: >100 chars, comment/string lines exempt ---------
+    for (idx, l) in src.lines().enumerate() {
+        let line = idx as u32 + 1;
+        if l.chars().count() > 100
+            && !lx.comment_lines.contains(&line)
+            && !lx.string_lines.contains(&line)
+        {
+            diag(
+                line,
+                "line-width",
+                format!("line is {} chars (limit 100)", l.chars().count()),
+            );
+        }
+    }
+
+    out
+}
+
+/// A control-flow expression in statement position whose block is
+/// followed by `.` — `if c { .. }.method()` parses as a statement plus
+/// a dangling method call and does not compile.  This pattern slipped
+/// into generated code in PR 1 and blocked the build; the lint catches
+/// it before rustc does.
+fn stmt_ctrlflow(toks: &[Token], diag: &mut impl FnMut(u32, &'static str, String)) {
+    const KWS: &[&str] = &["if", "match", "while", "for", "loop"];
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || !KWS.contains(&t.text.as_str()) {
+            i += 1;
+            continue;
+        }
+        let stmt_pos = i == 0 || matches!(toks[i - 1].text.as_str(), ";" | "{" | "}");
+        if !stmt_pos {
+            i += 1;
+            continue;
+        }
+        // Find the block `{` at paren/bracket depth 0.
+        let Some(open) = find_block_open(toks, i + 1) else {
+            i += 1;
+            continue;
+        };
+        let mut close = matching_brace(toks, open);
+        // Walk `else if` / `else` chains to the final block.
+        if t.text == "if" {
+            while close + 2 < toks.len() && ident_is(&toks[close + 1], "else") {
+                if toks[close + 2].text == "{" {
+                    close = matching_brace(toks, close + 2);
+                    break;
+                } else if ident_is(&toks[close + 2], "if") {
+                    match find_block_open(toks, close + 3) {
+                        Some(o) => close = matching_brace(toks, o),
+                        None => break,
+                    }
+                } else {
+                    break;
+                }
+            }
+        }
+        if close + 1 < toks.len() && toks[close + 1].text == "." {
+            diag(
+                t.line,
+                "stmt-ctrlflow",
+                format!(
+                    "statement-position `{}` with a trailing method call does not parse — \
+                     bind the expression with `let` first",
+                    t.text
+                ),
+            );
+        }
+        i = open + 1;
+    }
+}
+
+/// First `{` at paren/bracket depth 0 scanning from `from`; `None` if a
+/// `;` at depth 0 (or EOF) comes first.
+fn find_block_open(toks: &[Token], from: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = from;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "{" if depth == 0 => return Some(j),
+            ";" if depth == 0 => return None,
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+fn delim_balance(toks: &[Token], diag: &mut impl FnMut(u32, &'static str, String)) {
+    let mut stack: Vec<(&str, u32)> = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "(" | "[" | "{" => stack.push((closer_of(&t.text), t.line)),
+            ")" | "]" | "}" => match stack.pop() {
+                Some((want, _)) if want == t.text => {}
+                Some((want, opened)) => {
+                    diag(
+                        t.line,
+                        "delim-balance",
+                        format!(
+                            "mismatched delimiter: found `{}` but the `{}` opened on line \
+                             {opened} expects `{want}`",
+                            t.text,
+                            opener_of(want)
+                        ),
+                    );
+                    return;
+                }
+                None => {
+                    diag(
+                        t.line,
+                        "delim-balance",
+                        format!("unmatched closing `{}`", t.text),
+                    );
+                    return;
+                }
+            },
+            _ => {}
+        }
+    }
+    if let Some(&(want, opened)) = stack.last() {
+        diag(
+            opened,
+            "delim-balance",
+            format!("unclosed `{}` opened here", opener_of(want)),
+        );
+    }
+}
+
+fn closer_of(open: &str) -> &'static str {
+    match open {
+        "(" => ")",
+        "[" => "]",
+        _ => "}",
+    }
+}
+
+fn opener_of(close: &str) -> &'static str {
+    match close {
+        ")" => "(",
+        "]" => "[",
+        _ => "{",
+    }
+}

@@ -1,0 +1,476 @@
+//! A minimal Rust lexer for `wlint` (std-only, like everything else in
+//! the offline build).
+//!
+//! This is not a general-purpose parser: it produces exactly what the
+//! rule layer needs — a flat token stream with per-token line numbers,
+//! the set of lines carrying comment or string-literal content (the
+//! line-width exemptions), and any `wlint::allow` pragmas found in
+//! comments.  The hard parts of lexing Rust at this level are all about
+//! *not* mis-tokenizing: nested block comments, raw/byte string
+//! literals, char-literal-vs-lifetime disambiguation, and float
+//! literals (so `1.0` never emits a `.` punct that the control-flow
+//! rule could mistake for a method call).
+
+use std::collections::BTreeSet;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Token text; empty for `Str`/`Char` (rules never inspect literal
+    /// contents, and not retaining them keeps big files cheap).
+    pub text: String,
+    /// 1-indexed line the token starts on.
+    pub line: u32,
+}
+
+/// One `// wlint::allow(rule-id): justification` pragma.  A pragma
+/// suppresses findings of `rule` on its own line and the next line;
+/// a pragma without a non-empty justification is itself a finding.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub rule: String,
+    pub line: u32,
+    pub justified: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<Pragma>,
+    /// 1-indexed lines containing comment content.
+    pub comment_lines: BTreeSet<u32>,
+    /// 1-indexed lines containing string-literal content.
+    pub string_lines: BTreeSet<u32>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does a raw-string body start at `i` (the position of `r`)?  Returns
+/// the index of the opening quote and the number of `#`s, or None for a
+/// raw identifier / plain ident.
+fn raw_string_at(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            out.comment_lines.insert(line);
+            scan_pragmas(&src[start..i], line, &mut out.pragmas);
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            out.comment_lines.insert(line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    out.comment_lines.insert(line);
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            let tok_line = line;
+            out.string_lines.insert(line);
+            i += 1;
+            while i < b.len() {
+                match b[i] {
+                    b'\\' => {
+                        // An escaped newline (`\` line continuation)
+                        // still puts string content on the next line.
+                        if i + 1 < b.len() && b[i + 1] == b'\n' {
+                            line += 1;
+                            out.string_lines.insert(line);
+                        }
+                        i += 2;
+                    }
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        out.string_lines.insert(line);
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Str,
+                text: String::new(),
+                line: tok_line,
+            });
+        } else if (c == b'r' || c == b'b') && raw_or_byte_literal(b, i) {
+            let (ni, nline) = consume_literal_prefix(b, i, line, &mut out);
+            i = ni;
+            line = nline;
+        } else if c == b'\'' {
+            // Lifetime vs char literal.
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                // Escaped char literal: '\n', '\'', '\u{..}', ...
+                let tok_line = line;
+                i += 2; // past '\ and the escape lead
+                while i < b.len() && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.tokens.push(Token {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line: tok_line,
+                });
+            } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                // Plain single-char literal 'x'.
+                out.tokens.push(Token {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line,
+                });
+                i += 3;
+            } else if i + 1 < b.len() && is_ident_start(b[i + 1]) {
+                // Lifetime: 'a, 'static, '_, label names.
+                let mut j = i + 1;
+                while j < b.len() && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: src[i..j].to_string(),
+                    line,
+                });
+                i = j;
+            } else {
+                // Stray quote (shouldn't happen in valid Rust).
+                out.tokens.push(Token {
+                    kind: TokKind::Punct,
+                    text: "'".to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < b.len() && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Ident,
+                text: src[start..i].to_string(),
+                line,
+            });
+        } else if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            if i < b.len() && c == b'0' && (b[i] == b'x' || b[i] == b'o' || b[i] == b'b') {
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_hexdigit() || b[i] == b'_') {
+                    i += 1;
+                }
+            } else {
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                    i += 1;
+                }
+                // Fractional part only when a digit follows the dot —
+                // `0..n` and `0.max(x)` keep their `.` puncts.
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                        i += 1;
+                    }
+                }
+                // Exponent: 1e9, 1e-9, 2.5E+3.
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    let sign = i + 1 < b.len() && (b[i + 1] == b'+' || b[i + 1] == b'-');
+                    let digits_at = i + 1 + usize::from(sign);
+                    if digits_at < b.len() && b[digits_at].is_ascii_digit() {
+                        i = digits_at;
+                        while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            // Type suffix (u64, f64, usize, ...).
+            while i < b.len() && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Num,
+                text: src[start..i].to_string(),
+                line,
+            });
+        } else {
+            out.tokens.push(Token {
+                kind: TokKind::Punct,
+                text: (c as char).to_string(),
+                line,
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Is the `r`/`b` at `i` the start of a raw string, byte string, raw
+/// byte string, or byte char — as opposed to a plain identifier?
+fn raw_or_byte_literal(b: &[u8], i: usize) -> bool {
+    match b[i] {
+        b'r' => raw_string_at(b, i).is_some(),
+        b'b' => {
+            if i + 1 >= b.len() {
+                false
+            } else if b[i + 1] == b'"' || b[i + 1] == b'\'' {
+                true
+            } else if b[i + 1] == b'r' {
+                raw_string_at(b, i + 1).is_some()
+            } else {
+                false
+            }
+        }
+        _ => false,
+    }
+}
+
+/// Consume a raw string / byte string / raw byte string / byte char
+/// starting at `i`; returns (next index, next line).
+fn consume_literal_prefix(b: &[u8], i: usize, mut line: u32, out: &mut Lexed) -> (usize, u32) {
+    let tok_line = line;
+    let (mut j, kind) = match b[i] {
+        b'r' => {
+            let (q, hashes) = raw_string_at(b, i).expect("checked by caller");
+            let end = consume_raw_body(b, q + 1, hashes, &mut line, out);
+            (end, TokKind::Str)
+        }
+        b'b' if b[i + 1] == b'"' => {
+            let mut j = i + 2;
+            while j < b.len() {
+                match b[j] {
+                    b'\\' => {
+                        if j + 1 < b.len() && b[j + 1] == b'\n' {
+                            line += 1;
+                            out.string_lines.insert(line);
+                        }
+                        j += 2;
+                    }
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        out.string_lines.insert(line);
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            (j, TokKind::Str)
+        }
+        b'b' if b[i + 1] == b'\'' => {
+            let mut j = i + 2;
+            if j < b.len() && b[j] == b'\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < b.len() && b[j] != b'\'' {
+                j += 1;
+            }
+            (j + 1, TokKind::Char)
+        }
+        _ => {
+            // b'r' prefix: br"..." / br#"..."#.
+            let (q, hashes) = raw_string_at(b, i + 1).expect("checked by caller");
+            let end = consume_raw_body(b, q + 1, hashes, &mut line, out);
+            (end, TokKind::Str)
+        }
+    };
+    out.string_lines.insert(tok_line);
+    if j > b.len() {
+        j = b.len();
+    }
+    out.tokens.push(Token {
+        kind,
+        text: String::new(),
+        line: tok_line,
+    });
+    (j, line)
+}
+
+/// Body of a raw string opened with `hashes` `#`s; `i` is just past the
+/// opening quote.  Returns the index just past the closing delimiter.
+fn consume_raw_body(
+    b: &[u8],
+    mut i: usize,
+    hashes: usize,
+    line: &mut u32,
+    out: &mut Lexed,
+) -> usize {
+    while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            out.string_lines.insert(*line);
+            i += 1;
+        } else if b[i] == b'"' {
+            let mut k = 0;
+            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == b'#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+fn scan_pragmas(comment: &str, line: u32, pragmas: &mut Vec<Pragma>) {
+    const NEEDLE: &str = "wlint::allow(";
+    let mut rest = comment;
+    while let Some(at) = rest.find(NEEDLE) {
+        let after = &rest[at + NEEDLE.len()..];
+        let Some(close) = after.find(')') else { break };
+        let rule = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let justified = tail
+            .strip_prefix(':')
+            .map(|j| !j.trim().is_empty())
+            .unwrap_or(false);
+        if !rule.is_empty() {
+            pragmas.push(Pragma {
+                rule,
+                line,
+                justified,
+            });
+        }
+        rest = tail;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn floats_do_not_emit_dot_puncts() {
+        let toks = lex("let x = 1.0 + 2.5e-3; y.max(0.0); 0..10; v.0");
+        let dots: Vec<u32> = toks
+            .tokens
+            .iter()
+            .filter(|t| t.text == ".")
+            .map(|t| t.line)
+            .collect();
+        // Only `.max`, the two range dots, and the tuple index remain.
+        assert_eq!(dots.len(), 4);
+        assert!(toks.tokens.iter().any(|t| t.text == "2.5e-3"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes: Vec<&str> = toks
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        assert_eq!(
+            toks.tokens.iter().filter(|t| t.kind == TokKind::Char).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = "let s = \"lock().unwrap() // not code\"; // wlint is fine\nr#\"raw \"quoted\" body\"# ;";
+        let t = texts(src);
+        assert!(!t.contains(&"unwrap".to_string()));
+        assert!(!t.contains(&"wlint".to_string()));
+        let lx = lex(src);
+        assert!(lx.comment_lines.contains(&1));
+        assert!(lx.string_lines.contains(&1) && lx.string_lines.contains(&2));
+    }
+
+    #[test]
+    fn nested_block_comments_terminate() {
+        let t = texts("a /* x /* y */ z */ b");
+        assert_eq!(t, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn escaped_char_literals_and_byte_literals() {
+        let t = lex(r"let c = '\''; let b = b'x'; let s = b0; let n = '\n';");
+        assert_eq!(
+            t.tokens.iter().filter(|k| k.kind == TokKind::Char).count(),
+            3
+        );
+        assert!(t.tokens.iter().any(|k| k.text == "b0"));
+    }
+
+    #[test]
+    fn pragmas_parse_rule_and_justification() {
+        let lx = lex("// wlint::allow(lock-unwrap): the report path owns this\n// wlint::allow(no-anyhow)\nx");
+        assert_eq!(lx.pragmas.len(), 2);
+        assert_eq!(lx.pragmas[0].rule, "lock-unwrap");
+        assert!(lx.pragmas[0].justified);
+        assert_eq!(lx.pragmas[1].rule, "no-anyhow");
+        assert!(!lx.pragmas[1].justified);
+        assert_eq!(lx.pragmas[1].line, 2);
+    }
+}

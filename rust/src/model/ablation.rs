@@ -15,8 +15,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
-
+use crate::error::Error;
 use crate::util::stats;
 
 use super::table::EnergyTable;
@@ -86,7 +85,7 @@ pub struct AblationRow {
     pub note: String,
 }
 
-pub fn render(rows: &[AblationRow]) -> Result<String> {
+pub fn render(rows: &[AblationRow]) -> Result<String, Error> {
     let table_rows: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {

@@ -11,7 +11,10 @@ pub mod table;
 pub mod train;
 pub mod transfer;
 
-pub use predict::{predict_app, predict_app_with, predict_many, predict_suite, resolve_energy, Mode, Prediction, Source, StaticModel};
+pub use predict::{
+    predict_app, predict_app_with, predict_many, predict_suite, resolve_energy, Mode, Prediction,
+    Source, StaticModel,
+};
 pub use table::EnergyTable;
 pub use train::{calibrate_static_floor, train, SolverPath, TrainConfig, TrainResult};
 pub use transfer::{random_subset, table_r_squared, transfer_table, TransferResult};

@@ -4,8 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
-
+use crate::error::Error;
 use crate::gpusim::profiler::KernelProfile;
 use crate::isa::intern::{self, KeyCounts, KeyId};
 use crate::isa::opcode::Opcode;
@@ -174,7 +173,13 @@ impl ResolveCache {
         ResolveCache { slots: Vec::new() }
     }
 
-    fn get(&mut self, table: &EnergyTable, id: KeyId, key: &str, mode: Mode) -> (Option<f64>, Source) {
+    fn get(
+        &mut self,
+        table: &EnergyTable,
+        id: KeyId,
+        key: &str,
+        mode: Mode,
+    ) -> (Option<f64>, Source) {
         let i = id.index();
         if i >= self.slots.len() {
             self.slots.resize(i + 1, None);
@@ -305,7 +310,7 @@ pub fn predict_suite(
     apps: &[(String, Vec<KernelProfile>)],
     mode: Mode,
     arts: Option<&Artifacts>,
-) -> Result<Vec<Prediction>> {
+) -> Result<Vec<Prediction>, Error> {
     let view: Vec<(&str, &[KernelProfile])> = apps
         .iter()
         .map(|(name, profiles)| (name.as_str(), profiles.as_slice()))
@@ -327,7 +332,7 @@ pub fn predict_many(
     apps: &[(&str, &[KernelProfile])],
     mode: Mode,
     arts: Option<&Artifacts>,
-) -> Result<Vec<Prediction>> {
+) -> Result<Vec<Prediction>, Error> {
     // Group each workload's profiles once; both the native predictions and
     // the artifact batch below reuse the merged counts and resolve cache.
     // Canonical (string-sorted) per-app key order keeps every reduction —

@@ -3,8 +3,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::Error;
 use crate::isa::{bucket_of_key, Bucket};
 use crate::util::json::{parse, Json};
 
@@ -63,23 +62,23 @@ impl EnergyTable {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<EnergyTable> {
-        let get_num = |k: &str| -> Result<f64> {
+    pub fn from_json(j: &Json) -> Result<EnergyTable, Error> {
+        let get_num = |k: &str| -> Result<f64, Error> {
             j.get(k)
                 .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("missing numeric field '{k}'"))
+                .ok_or_else(|| Error::bad_request(format!("missing numeric field '{k}'")))
         };
         let entries = j
             .get("entries")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("missing 'entries'"))?
+            .ok_or_else(|| Error::bad_request("missing 'entries'"))?
             .iter()
             .map(|(k, v)| {
                 v.as_f64()
                     .map(|x| (k.clone(), x))
-                    .ok_or_else(|| anyhow!("non-numeric entry '{k}'"))
+                    .ok_or_else(|| Error::bad_request(format!("non-numeric entry '{k}'")))
             })
-            .collect::<Result<BTreeMap<_, _>>>()?;
+            .collect::<Result<BTreeMap<_, _>, Error>>()?;
         Ok(EnergyTable {
             arch: j
                 .get("arch")
@@ -92,15 +91,17 @@ impl EnergyTable {
         })
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
+    pub fn save(&self, path: &Path) -> Result<(), Error> {
+        // Message shape matches the legacy anyhow context chain
+        // ("writing <path>: <io error>") byte-for-byte.
         std::fs::write(path, self.to_json().to_string_pretty())
-            .with_context(|| format!("writing {}", path.display()))
+            .map_err(|e| Error::io(format!("writing {}: {e}", path.display())))
     }
 
-    pub fn load(path: &Path) -> Result<EnergyTable> {
+    pub fn load(path: &Path) -> Result<EnergyTable, Error> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        EnergyTable::from_json(&parse(&text).map_err(|e| anyhow!(e))?)
+            .map_err(|e| Error::io(format!("reading {}: {e}", path.display())))?;
+        EnergyTable::from_json(&parse(&text)?)
     }
 }
 

@@ -13,8 +13,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
-
+use crate::error::Error;
 use crate::gpusim::device::Device;
 use crate::isa::intern::{self, KeyCounts};
 use crate::microbench::{nanosleep_bench, suite, BenchSpec};
@@ -152,7 +151,7 @@ pub fn collect_bench(device: &mut Device, bench: &BenchSpec, tc: &TrainConfig) -
 pub fn reduce_benches(
     raws: &[RawBenchData],
     arts: Option<&Artifacts>,
-) -> Result<Vec<BenchMeasurement>> {
+) -> Result<Vec<BenchMeasurement>, Error> {
     let Some(arts) = arts else {
         return raws.iter().map(|r| reduce_bench(r, None)).collect();
     };
@@ -201,7 +200,10 @@ fn measurement_from(raw: &RawBenchData, steady: f64) -> BenchMeasurement {
 
 /// Reduce a raw capture to one system row: batched integration (PJRT
 /// artifact when available) + median across repetitions.
-pub fn reduce_bench(raw: &RawBenchData, arts: Option<&Artifacts>) -> Result<BenchMeasurement> {
+pub fn reduce_bench(
+    raw: &RawBenchData,
+    arts: Option<&Artifacts>,
+) -> Result<BenchMeasurement, Error> {
     let mut steady_powers = Vec::with_capacity(raw.traces.len());
     if let Some(arts) = arts {
         for (_, mean) in arts.integrate(&raw.traces, &raw.windows, raw.period_s)? {
@@ -238,7 +240,7 @@ pub fn assemble_and_solve(
     static_power: f64,
     mut measurements: Vec<BenchMeasurement>,
     arts: Option<&Artifacts>,
-) -> Result<TrainResult> {
+) -> Result<TrainResult, Error> {
     for m in &mut measurements {
         let dyn_power = (m.steady_power_w - const_power - static_power).max(0.0);
         m.dyn_power_w = dyn_power;
@@ -250,11 +252,11 @@ pub fn assemble_and_solve(
     columns.dedup();
     let n = columns.len();
     if measurements.len() != n {
-        bail!(
+        return Err(Error::internal(format!(
             "system is not square: {} benchmarks vs {} columns",
             measurements.len(),
             n
-        );
+        )));
     }
     // Dense id → column lookup (system assembly never touches strings).
     let col_ids: Vec<intern::KeyId> = columns.iter().map(|c| intern::intern(c)).collect();
@@ -269,11 +271,11 @@ pub fn assemble_and_solve(
         for (id, frac) in m.fractions.iter() {
             let c = id_to_col.get(id.index()).copied().unwrap_or(usize::MAX);
             if c == usize::MAX {
-                bail!(
+                return Err(Error::internal(format!(
                     "benchmark {} emits uncovered column {}",
                     m.name,
                     intern::resolve_key(id)
-                );
+                )));
             }
             a[r * n + c] = frac;
         }
@@ -351,7 +353,7 @@ pub fn train(
     device: &mut Device,
     arts: Option<&Artifacts>,
     tc: &TrainConfig,
-) -> Result<TrainResult> {
+) -> Result<TrainResult, Error> {
     // Phases 1–2: base-power calibration.
     let (const_power, static_power) = calibrate_base_power(device, tc);
 

@@ -6,8 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
-
+use crate::error::Error;
 use crate::runtime::{Artifacts, AFFINE_N};
 use crate::util::prng::Rng;
 use crate::util::stats;
@@ -33,13 +32,13 @@ pub fn transfer_table(
     dst_const_power_w: f64,
     dst_static_power_w: f64,
     arts: Option<&Artifacts>,
-) -> Result<TransferResult> {
+) -> Result<TransferResult, Error> {
     if dst_subset.is_empty() {
-        bail!(
+        return Err(Error::bad_request(format!(
             "transfer_table: empty destination subset — measure at least one \
              instruction on the destination system before transferring '{}'",
             src.arch
-        );
+        )));
     }
     let mut xs = Vec::with_capacity(dst_subset.len());
     let mut ys = Vec::with_capacity(dst_subset.len());
@@ -52,14 +51,14 @@ pub fn transfer_table(
         }
     }
     if xs.is_empty() {
-        bail!(
+        return Err(Error::bad_request(format!(
             "transfer_table: none of the {} measured destination keys exist in \
              the source table '{}' ({} entries) — no overlap to fit the affine \
              map through",
             dst_subset.len(),
             src.arch,
             src.entries.len()
-        );
+        )));
     }
     // The affine_fit artifact is compiled for ≤ AFFINE_N (256) points;
     // larger measured subsets fall back to the native fit instead of
@@ -103,15 +102,15 @@ pub fn random_subset(
     table: &EnergyTable,
     fraction: f64,
     seed: u64,
-) -> Result<Vec<String>> {
+) -> Result<Vec<String>, Error> {
     let keys: Vec<String> = table.entries.keys().cloned().collect();
     if keys.len() < 2 {
-        bail!(
+        return Err(Error::bad_request(format!(
             "random_subset: table '{}' has {} entries — an affine transfer \
              needs at least 2 measured points",
             table.arch,
             keys.len()
-        );
+        )));
     }
     let k = ((keys.len() as f64 * fraction).round() as usize).clamp(2, keys.len());
     let mut rng = Rng::new(seed);

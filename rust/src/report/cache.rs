@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::baselines::{AccelWattchModel, GuserModel};
+use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::profiler::{profile_app, KernelProfile};
 use crate::model::{EnergyTable, TrainResult};
@@ -123,18 +124,20 @@ impl EvalCache {
         arch: &str,
         seed: u64,
         fast: bool,
-        build: impl FnOnce() -> anyhow::Result<TrainResult>,
-    ) -> anyhow::Result<Arc<TrainResult>> {
+        build: impl FnOnce() -> Result<TrainResult, Error>,
+    ) -> Result<Arc<TrainResult>, Error> {
         let key = ModelKey {
             arch: arch.to_string(),
             seed,
             fast,
         };
+        // The cache's slot-failure state is a plain String (it must be
+        // clonable across waiters); a builder's typed error rides through
+        // as its wire string and resurfaces as `Error::Internal` — the
+        // same shape the pre-typed pipeline produced.
         self.trained
-            .get_or_try_init(&key, || {
-                build().map(Arc::new).map_err(|e| format!("{e:#}"))
-            })
-            .map_err(anyhow::Error::msg)
+            .get_or_try_init(&key, || build().map(Arc::new))
+            .map_err(Error::internal)
     }
 
     /// The model's energy table behind a stable `Arc` (identity is the

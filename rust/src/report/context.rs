@@ -20,11 +20,10 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
 use crate::baselines::{train_accelwattch, AccelWattchModel, GuserModel};
 use crate::cluster::ClusterCampaign;
 use crate::engine::Engine;
+use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::Device;
 use crate::gpusim::profiler::KernelProfile;
@@ -113,16 +112,14 @@ impl EvalCtx {
     /// Run `f` where the PJRT artifacts live: inline (with `None`) for a
     /// native context, on the coordinator thread for a coordinated one.
     /// The closure must own its captures — it may cross threads.
-    pub fn with_arts<R, F>(&self, f: F) -> Result<R>
+    pub fn with_arts<R, F>(&self, f: F) -> Result<R, Error>
     where
         R: Send + 'static,
         F: FnOnce(Option<&Artifacts>) -> R + Send + 'static,
     {
         match &self.predictor {
             Predictor::Native => Ok(f(None)),
-            Predictor::Coordinated(jobs) => {
-                exec_on_coordinator(jobs, f).map_err(|e| anyhow!(e))
-            }
+            Predictor::Coordinated(jobs) => exec_on_coordinator(jobs, f),
         }
     }
 
@@ -139,12 +136,12 @@ impl EvalCtx {
 
     /// Wattchmen training campaign for an environment (cached; the solve
     /// runs where the artifacts live).
-    pub fn wattchmen(&self, cfg: &ArchConfig) -> Result<Arc<TrainResult>> {
+    pub fn wattchmen(&self, cfg: &ArchConfig) -> Result<Arc<TrainResult>, Error> {
         self.cache.trained(&cfg.name, self.seed, self.fast, || {
             let campaign = ClusterCampaign::new(cfg.clone(), 4, self.seed);
             let tc = self.train_cfg();
-            // Outer `?`: coordinator plumbing (anyhow); inner `?`: the
-            // campaign's typed `wattchmen::Error`, which anyhow absorbs.
+            // Outer `?`: coordinator plumbing; inner `?`: the campaign's
+            // own result — both sides are `wattchmen::Error` now.
             Ok(self.with_arts(move |arts| campaign.train(&tc, arts))??)
         })
     }
@@ -152,7 +149,7 @@ impl EvalCtx {
     /// The environment's energy table behind a stable `Arc` (identity is
     /// the coalescer's batching key, so two figures predicting over the
     /// same arch share one batched call).
-    pub fn table(&self, cfg: &ArchConfig) -> Result<Arc<EnergyTable>> {
+    pub fn table(&self, cfg: &ArchConfig) -> Result<Arc<EnergyTable>, Error> {
         let tr = self.wattchmen(cfg)?;
         Ok(self.cache.table(&cfg.name, self.seed, self.fast, &tr))
     }
@@ -300,7 +297,7 @@ pub fn compare_models(
     cfg: &ArchConfig,
     suite: &[Workload],
     labels: &[&str],
-) -> Result<Comparison> {
+) -> Result<Comparison, Error> {
     // One engine handle per comparison: scaling, profiling, ground-truth
     // measurement, and the batched predictions all route through it (and
     // therefore through the shared cache / coalescer).
@@ -349,7 +346,7 @@ pub fn compare_models(
                 cmp.coverage
                     .insert(label.into(), preds.iter().map(|p| p.coverage).collect());
             }
-            other => anyhow::bail!("unknown model label {other}"),
+            other => return Err(Error::internal(format!("unknown model label {other}"))),
         }
     }
     Ok(cmp)

@@ -3,8 +3,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
+use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
 use crate::gpusim::device::Device;
 use crate::gpusim::profiler::KernelProfile;
@@ -28,7 +27,7 @@ pub struct ExperimentResult {
 }
 
 /// Fig 1: AccelWattch predictions vs measurements on the air-cooled V100.
-pub fn fig1(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig1(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let suite = workloads::evaluation_suite(Gen::Volta);
     let cmp = compare_models(ctx, &cfg, &suite, &["A"])?;
@@ -56,7 +55,7 @@ pub fn fig1(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Table 1: qualitative feature comparison (static).
-pub fn table1(_ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn table1(_ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let rows = vec![
         vec!["Portable across vendor architecture", "Y", "Y", "Y", "Y", "N", "Y"],
         vec!["Adapts to different cooling policies", "N", "Y", "Y", "Y", "N", "Y"],
@@ -86,7 +85,7 @@ pub fn table1(_ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 3: instruction-share subset of the V100 system of equations.
-pub fn fig3(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig3(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let tr = ctx.wattchmen(&cfg)?;
     let show_benches = [
@@ -136,7 +135,7 @@ pub fn fig3(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 4: power + utilization trace of the DADD (double add) benchmark.
-pub fn fig4(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig4(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let mut dev = Device::new(cfg, ctx.seed);
     dev.cooldown(120.0);
@@ -168,7 +167,7 @@ pub fn fig4(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 5: dynamic energy scales linearly with instruction count.
-pub fn fig5(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig5(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let mut dev = Device::new(cfg.clone(), ctx.seed);
     // Base: 2 mul + 2 add; Additional Mul: 4 mul + 2 add; 2x Base: 4+4.
@@ -238,7 +237,7 @@ fn comparison_table(
 }
 
 /// Fig 6 + Table 4: air-cooled V100 — A/G/B/C vs D.
-pub fn fig6(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig6(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let suite = workloads::evaluation_suite(Gen::Volta);
     let cmp = compare_models(ctx, &cfg, &suite, &["A", "G", "B", "C"])?;
@@ -264,7 +263,7 @@ pub fn fig6(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 7 + Table 5: water-cooled V100 (Summit).
-pub fn fig7(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig7(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let water = ArchConfig::summit_v100();
     let suite = workloads::evaluation_suite(Gen::Volta);
     let cmp = compare_models(ctx, &water, &suite, &["A", "B", "C"])?;
@@ -316,7 +315,7 @@ fn arch_experiment(
     name: &str,
     title: &str,
     paper: (f64, f64, f64, f64), // direct/pred MAPE, direct/pred coverage
-) -> Result<ExperimentResult> {
+) -> Result<ExperimentResult, Error> {
     let suite = workloads::evaluation_suite(gen);
     let cmp = compare_models(ctx, &cfg, &suite, &["B", "C"])?;
     let cov_b = 100.0 * cmp.mean_coverage("B");
@@ -347,7 +346,7 @@ fn arch_experiment(
 }
 
 /// Fig 8 + Table 6: A100.
-pub fn fig8(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig8(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     arch_experiment(
         ctx,
         ArchConfig::lonestar_a100(),
@@ -359,7 +358,7 @@ pub fn fig8(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 9 + Table 7: H100.
-pub fn fig9(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig9(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     arch_experiment(
         ctx,
         ArchConfig::lonestar_h100(),
@@ -371,7 +370,7 @@ pub fn fig9(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 10: backprop_k2 opcode counts before/after the precision fix.
-pub fn fig10(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig10(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let buggy = scaled_workload(
         &cfg,
@@ -414,7 +413,7 @@ pub fn fig10(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 11: backprop_k2 energy before/after (−16%, perf ≈ 1%).
-pub fn fig11(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig11(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let table = ctx.table(&cfg)?;
     let mut rows = Vec::new();
@@ -461,7 +460,7 @@ pub fn fig11(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 12: QMCPACK power traces, mixed-precision bug vs fixed.
-pub fn fig12(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig12(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let mut text = String::from("Fig 12 — QMCPACK power traces (mixed precision)\n");
     let mut spike_counts = Vec::new();
@@ -504,7 +503,7 @@ pub fn fig12(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 13: QMCPACK energy prediction before/after (−36% pred, −35% real).
-pub fn fig13(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig13(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let cfg = ArchConfig::cloudlab_v100();
     let table = ctx.table(&cfg)?;
     let mut vals = std::collections::BTreeMap::new();
@@ -553,7 +552,7 @@ pub fn fig13(ctx: &EvalCtx) -> Result<ExperimentResult> {
 }
 
 /// Fig 14 + §6 R²: air→water affine table transfer from subsets.
-pub fn fig14(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn fig14(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     let air = ArchConfig::cloudlab_v100();
     let water = ArchConfig::summit_v100();
     let air_tr = ctx.wattchmen(&air)?;
@@ -626,7 +625,7 @@ pub fn fig14(ctx: &EvalCtx) -> Result<ExperimentResult> {
 /// Ablation study: remove one §3 ingredient at a time (DESIGN.md §4) and
 /// re-evaluate on the air-cooled V100 suite.  Also evaluates the §6
 /// occupancy-aware static-power extension.
-pub fn ablations(ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn ablations(ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     use crate::gpusim::device::Device;
     use crate::model::ablation;
     use crate::model::train::{assemble_and_solve, calibrate_static_floor};
@@ -729,7 +728,7 @@ pub fn all_names() -> Vec<&'static str> {
 }
 
 /// Run one experiment by name.
-pub fn run(name: &str, ctx: &EvalCtx) -> Result<ExperimentResult> {
+pub fn run(name: &str, ctx: &EvalCtx) -> Result<ExperimentResult, Error> {
     match name {
         "fig1" => fig1(ctx),
         "table1" => table1(ctx),
@@ -746,6 +745,11 @@ pub fn run(name: &str, ctx: &EvalCtx) -> Result<ExperimentResult> {
         "fig13" => fig13(ctx),
         "fig14" | "r2" => fig14(ctx),
         "ablations" => ablations(ctx),
-        other => anyhow::bail!("unknown experiment '{other}' (try: {:?})", all_names()),
+        other => {
+            return Err(Error::internal(format!(
+                "unknown experiment '{other}' (try: {:?})",
+                all_names()
+            )))
+        }
     }
 }

@@ -24,11 +24,11 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use crate::error::Error;
 use crate::runtime::coalescer::Coalescer;
 use crate::runtime::Artifacts;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 
 pub use cache::EvalCache;
 pub use context::{compare_models, measure_workload, scaled_workload, EvalCtx, Predictor};
@@ -58,7 +58,7 @@ impl ExperimentResult {
     }
 
     /// Write `<out_dir>/<name>.json` next to the textual report.
-    pub fn save(&self, out_dir: &Path) -> Result<()> {
+    pub fn save(&self, out_dir: &Path) -> Result<(), Error> {
         std::fs::create_dir_all(out_dir)?;
         std::fs::write(
             out_dir.join(format!("{}.json", self.name)),
@@ -89,16 +89,16 @@ pub fn run_all<F>(
     arts: Option<&Artifacts>,
     cache: &Arc<EvalCache>,
     on_done: F,
-) -> Vec<(String, Result<ExperimentResult>)>
+) -> Vec<(String, Result<ExperimentResult, Error>)>
 where
-    F: FnMut(&str, &Result<ExperimentResult>, Duration) + Send,
+    F: FnMut(&str, &Result<ExperimentResult, Error>, Duration) + Send,
 {
     let n = names.len();
     if n == 0 {
         return Vec::new();
     }
     let jobs = jobs.max(1).min(n);
-    let slots: Vec<Mutex<Option<(Result<ExperimentResult>, Duration)>>> =
+    let slots: Vec<Mutex<Option<(Result<ExperimentResult, Error>, Duration)>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
     let (done_tx, done_rx) = mpsc::channel::<usize>();
@@ -129,7 +129,7 @@ where
             let Ok(i) = done_rx.recv() else { break };
             finished[i] = true;
             while next_print < n && finished[next_print] {
-                let guard = slots_ref[next_print].lock().unwrap();
+                let guard = lock_unpoisoned(&slots_ref[next_print]);
                 let (r, elapsed) = guard.as_ref().expect("completed slot is filled");
                 on_done(&names[next_print], r, *elapsed);
                 next_print += 1;
@@ -151,7 +151,7 @@ where
                 }
                 let t0 = Instant::now();
                 let r = experiments::run(&names[i], &ctx);
-                *slots_ref[i].lock().unwrap() = Some((r, t0.elapsed()));
+                *lock_unpoisoned(&slots_ref[i]) = Some((r, t0.elapsed()));
                 let _ = done.send(i);
             });
         }
@@ -181,7 +181,7 @@ where
                 .into_inner()
                 .unwrap()
                 .map(|(r, _)| r)
-                .unwrap_or_else(|| Err(anyhow::anyhow!("experiment did not run")));
+                .unwrap_or_else(|| Err(Error::internal("experiment did not run")));
             (name.clone(), r)
         })
         .collect()

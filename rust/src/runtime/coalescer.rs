@@ -102,6 +102,7 @@ impl Coalescer {
     pub fn run(&self, arts: Option<&Artifacts>) {
         let rx = lock_unpoisoned(&self.rx)
             .take()
+            // wlint::allow(request-unwrap): startup invariant; run() is consumed once per worker.
             .expect("Coalescer::run called twice");
         while let Ok(job) = rx.recv() {
             let first = match job {
@@ -152,13 +153,15 @@ impl Coalescer {
         for job in live {
             let key = Arc::as_ptr(&job.table) as usize;
             match groups.iter().position(|(k, m, _)| *k == key && *m == job.mode) {
+                // wlint::allow(request-unwrap): index returned by `position` on the same vec.
                 Some(i) => groups[i].2.push(job),
                 None => groups.push((key, job.mode, vec![job])),
             }
         }
         for (_, mode, group) in groups {
+            let Some(first) = group.first() else { continue };
             self.batch_calls.fetch_add(1, Ordering::SeqCst);
-            let table = group[0].table.clone();
+            let table = first.table.clone();
             let apps: Vec<(&str, &[KernelProfile])> = group
                 .iter()
                 .flat_map(|j| j.apps.iter().map(|(n, p)| (n.as_str(), p.as_slice())))

@@ -9,7 +9,15 @@ pub mod coalescer;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::error::Error;
+
+/// Every PJRT-binding failure surfaces as [`Error::ArtifactFailed`]:
+/// the `?`s below stay terse and the wire code stays stable.
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::ArtifactFailed(e.to_string())
+    }
+}
 
 /// Fixed artifact shape contract (must match python/compile/model.py).
 pub const NNLS_N: usize = 128;
@@ -32,27 +40,30 @@ fn load_exe(
     client: &xla::PjRtClient,
     dir: &Path,
     name: &str,
-) -> Result<xla::PjRtLoadedExecutable> {
+) -> Result<xla::PjRtLoadedExecutable, Error> {
     let path = dir.join(format!("{name}.hlo.txt"));
     if !path.is_file() {
-        bail!(
+        return Err(Error::artifact_failed(format!(
             "artifact {} not found — run `make artifacts` first",
             path.display()
-        );
+        )));
     }
-    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-        .with_context(|| format!("parsing {}", path.display()))?;
+    let text_path = path.to_str().ok_or_else(|| {
+        Error::artifact_failed(format!("non-UTF-8 artifact path {}", path.display()))
+    })?;
+    let proto = xla::HloModuleProto::from_text_file(text_path)
+        .map_err(|e| Error::artifact_failed(format!("parsing {}: {e}", path.display())))?;
     let comp = xla::XlaComputation::from_proto(&proto);
     client
         .compile(&comp)
-        .with_context(|| format!("compiling {name}"))
+        .map_err(|e| Error::artifact_failed(format!("compiling {name}: {e}")))
 }
 
 fn lit_f32_1d(data: &[f32]) -> xla::Literal {
     xla::Literal::vec1(data)
 }
 
-fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal, Error> {
     assert_eq!(data.len(), rows * cols);
     Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
 }
@@ -63,8 +74,9 @@ fn lit_f32_scalar(v: f32) -> xla::Literal {
 
 impl Artifacts {
     /// Load + compile every artifact from `dir` on the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Artifacts> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    pub fn load(dir: &Path) -> Result<Artifacts, Error> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::artifact_failed(format!("creating PJRT CPU client: {e}")))?;
         Ok(Artifacts {
             nnls: load_exe(&client, dir, &format!("nnls_{NNLS_N}"))?,
             integrate: load_exe(&client, dir, &format!("integrate_{TRACE_B}x{TRACE_T}"))?,
@@ -81,7 +93,7 @@ impl Artifacts {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
-    pub fn load_default() -> Result<Artifacts> {
+    pub fn load_default() -> Result<Artifacts, Error> {
         Self::load(&Self::default_dir())
     }
 
@@ -90,9 +102,11 @@ impl Artifacts {
     /// `a` is row-major `rows × n`; rows are padded into the square
     /// 128-system the artifact expects (rows > 128 are rejected —
     /// Wattchmen keeps a square system by construction, paper §3.1).
-    pub fn nnls(&self, a: &[f64], rows: usize, n: usize, b: &[f64]) -> Result<Vec<f64>> {
+    pub fn nnls(&self, a: &[f64], rows: usize, n: usize, b: &[f64]) -> Result<Vec<f64>, Error> {
         if n > NNLS_N || rows > NNLS_N {
-            bail!("nnls: system {rows}x{n} exceeds artifact size {NNLS_N}");
+            return Err(Error::artifact_failed(format!(
+                "nnls: system {rows}x{n} exceeds artifact size {NNLS_N}"
+            )));
         }
         assert_eq!(a.len(), rows * n);
         assert_eq!(b.len(), rows);
@@ -131,7 +145,7 @@ impl Artifacts {
         traces: &[T],
         windows: &[(usize, usize)],
         dt: f64,
-    ) -> Result<Vec<(f64, f64)>> {
+    ) -> Result<Vec<(f64, f64)>, Error> {
         assert_eq!(traces.len(), windows.len());
         let mut out = Vec::with_capacity(traces.len());
         for chunk_start in (0..traces.len()).step_by(TRACE_B) {
@@ -142,11 +156,17 @@ impl Artifacts {
             for (i, idx) in (chunk_start..chunk_end).enumerate() {
                 let tr = traces[idx].as_ref();
                 if tr.len() > TRACE_T {
-                    bail!("trace {idx} has {} samples > {TRACE_T}", tr.len());
+                    return Err(Error::artifact_failed(format!(
+                        "trace {idx} has {} samples > {TRACE_T}",
+                        tr.len()
+                    )));
                 }
                 let (lo, hi) = windows[idx];
                 if lo > hi || hi > tr.len() {
-                    bail!("bad window ({lo}, {hi}) for trace of {}", tr.len());
+                    return Err(Error::artifact_failed(format!(
+                        "bad window ({lo}, {hi}) for trace of {}",
+                        tr.len()
+                    )));
                 }
                 for (t, &pw) in tr.iter().enumerate() {
                     p[i * TRACE_T + t] = pw as f32;
@@ -172,10 +192,13 @@ impl Artifacts {
     }
 
     /// Masked affine fit `y ≈ slope·x + intercept` over up to 256 points.
-    pub fn affine_fit(&self, x: &[f64], y: &[f64]) -> Result<(f64, f64)> {
+    pub fn affine_fit(&self, x: &[f64], y: &[f64]) -> Result<(f64, f64), Error> {
         assert_eq!(x.len(), y.len());
         if x.len() > AFFINE_N {
-            bail!("affine_fit: {} points > {AFFINE_N}", x.len());
+            return Err(Error::artifact_failed(format!(
+                "affine_fit: {} points > {AFFINE_N}",
+                x.len()
+            )));
         }
         let mut xp = vec![0.0f32; AFFINE_N];
         let mut yp = vec![0.0f32; AFFINE_N];
@@ -211,7 +234,7 @@ impl Artifacts {
         e: &[f64],
         p0: &[f64],
         t: &[f64],
-    ) -> Result<Vec<f64>> {
+    ) -> Result<Vec<f64>, Error> {
         if groups > PREDICT_I {
             assert_eq!(c.len(), workloads * groups);
             assert_eq!(e.len(), groups);

@@ -52,8 +52,6 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
-
 use crate::engine::{Engine, PredictRequest};
 use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
@@ -148,9 +146,9 @@ pub struct PredictServer {
 impl PredictServer {
     /// Bind the listener and spawn the acceptor + worker pool.  Call
     /// [`run`](Self::run) (blocking) to start answering predictions.
-    pub fn bind(cfg: ServeConfig) -> Result<PredictServer> {
-        let listener =
-            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    pub fn bind(cfg: ServeConfig) -> Result<PredictServer, Error> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::io(format!("binding {}: {e}", cfg.addr)))?;
         let addr = listener.local_addr()?;
         let (coalescer, jobs_tx) = Coalescer::new(cfg.linger);
         let shared = Arc::new(Shared {
@@ -274,7 +272,7 @@ impl PredictServer {
     /// thread.  Runs the coalescer on the calling thread — the PJRT
     /// artifacts are not Sync, so they stay with the coordinator (the same
     /// design as the cluster campaign).
-    pub fn run(&self, arts: Option<&Artifacts>) -> Result<()> {
+    pub fn run(&self, arts: Option<&Artifacts>) -> Result<(), Error> {
         self.shared.coalescer.run(arts);
         for h in lock_unpoisoned(&self.handles).drain(..) {
             let _ = h.join();

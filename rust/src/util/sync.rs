@@ -70,10 +70,12 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
         self.shards
             .iter()
             .map(|s| {
+                // wlint::allow(lock-unwrap): coordinator-side cache internals fail loud on poison by design.
                 s.lock()
                     .unwrap()
                     .values()
                     .filter(|slot| {
+                        // wlint::allow(lock-unwrap): same fail-loud discipline as the shard lock above.
                         matches!(*slot.state.lock().unwrap(), SlotState::Ready(_))
                     })
                     .count()
@@ -101,6 +103,7 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
     ) -> Result<V, String> {
         // Fast path / builder election.
         let (slot, builder) = {
+            // wlint::allow(lock-unwrap): builder election must not proceed over a poisoned shard map.
             let mut map = self.shard(key).lock().unwrap();
             match map.get(key) {
                 Some(slot) => (slot.clone(), false),
@@ -130,10 +133,12 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
                     if !self.armed {
                         return;
                     }
+                    // wlint::allow(lock-unwrap): unwind-guard cleanup; double panic aborts, which beats leaking a Building slot.
                     let mut state = self.slot.state.lock().unwrap();
                     *state = SlotState::Failed("cache builder panicked".into());
                     self.slot.ready.notify_all();
                     drop(state);
+                    // wlint::allow(lock-unwrap): unwind-guard cleanup (see above).
                     self.cache.shard(self.key).lock().unwrap().remove(self.key);
                 }
             }
@@ -145,6 +150,7 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
             };
             let built = init();
             guard.armed = false;
+            // wlint::allow(lock-unwrap): publication point; waiters must never consume a value published over poison.
             let mut state = slot.state.lock().unwrap();
             match built {
                 Ok(v) => {
@@ -159,11 +165,13 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
                     drop(state);
                     // Vacate the key so the next caller can retry; waiters
                     // already holding this slot still see the failure.
+                    // wlint::allow(lock-unwrap): vacating over a poisoned map would hide the original panic.
                     self.shard(key).lock().unwrap().remove(key);
                     Err(msg)
                 }
             }
         } else {
+            // wlint::allow(lock-unwrap): waiter side of the publication lock above — same poison discipline.
             let mut state = slot.state.lock().unwrap();
             while matches!(*state, SlotState::Building) {
                 state = slot.ready.wait(state).unwrap();
@@ -178,7 +186,9 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedCache<K, V> {
 
     /// Peek without building.
     pub fn get(&self, key: &K) -> Option<V> {
+        // wlint::allow(lock-unwrap): coordinator-side cache internals fail loud on poison by design.
         let slot = self.shard(key).lock().unwrap().get(key).cloned()?;
+        // wlint::allow(lock-unwrap): same discipline as the shard lock above.
         let state = slot.state.lock().unwrap();
         match &*state {
             SlotState::Ready(v) => Some(v.clone()),
@@ -212,6 +222,7 @@ impl Semaphore {
 
     /// Block until a permit is free; the permit is released on drop.
     pub fn acquire(&self) -> SemaphorePermit<'_> {
+        // wlint::allow(lock-unwrap): blocking acquire is report-pipeline only; the serve path uses the poison-tolerant try_acquire.
         let mut permits = self.permits.lock().unwrap();
         while *permits == 0 {
             permits = self.available.wait(permits).unwrap();
@@ -251,6 +262,7 @@ pub struct SemaphorePermit<'a>(&'a Semaphore);
 
 impl Drop for SemaphorePermit<'_> {
     fn drop(&mut self) {
+        // wlint::allow(lock-unwrap): pairs with the fail-loud blocking acquire above.
         *self.0.permits.lock().unwrap() += 1;
         self.0.available.notify_one();
     }
@@ -309,6 +321,7 @@ where
                     break;
                 }
                 let v = f_ref(i);
+                // wlint::allow(lock-unwrap): slot mutexes are uncontended write-once cells; a poisoned slot means f panicked and the scope is unwinding anyway.
                 *slots_ref[i].lock().unwrap() = Some(v);
             });
         }

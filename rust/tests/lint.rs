@@ -1,0 +1,240 @@
+//! Golden-fixture suite for the `wlint` static-analysis pass, plus the
+//! clean-tree self-check: every rule gets a seeded-violation fixture
+//! whose diagnostic is pinned byte-for-byte (the `file:line: rule-id:
+//! message` rendering is part of the tool's contract — CI logs and
+//! editors parse it), and the crate's own `src/` tree must lint clean.
+//!
+//! Fixture paths are fake but meaningful: path-scoped rules
+//! (request-unwrap, err-string, hashmap-iter, wallclock) key off the
+//! path relative to `src/`, so `"service/mod.rs"` exercises the
+//! request-path scope without touching the real file.
+
+use std::path::Path;
+
+use wattchmen::lint::{lint_source, lint_tree};
+
+/// Render diagnostics the way `wlint` prints them.
+fn rendered(path: &str, src: &str) -> Vec<String> {
+    lint_source(path, src)
+        .iter()
+        .map(|d| d.to_string())
+        .collect()
+}
+
+#[test]
+fn lock_unwrap_fixture() {
+    let src = "\
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+";
+    assert_eq!(
+        rendered("report/mod.rs", src),
+        vec![
+            "report/mod.rs:2: lock-unwrap: `.lock().unwrap()` cascades panics across threads \
+             on poison; use `util::sync::lock_unpoisoned` (or justify with a pragma)"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn request_unwrap_fixture() {
+    let src = "\
+fn f(v: &[u32]) -> u32 {
+    let x = v.first().unwrap();
+    *x + v[0]
+}
+";
+    assert_eq!(
+        rendered("service/mod.rs", src),
+        vec![
+            "service/mod.rs:2: request-unwrap: `.unwrap()` can panic on the request path — \
+             return an error instead"
+                .to_string(),
+            "service/mod.rs:3: request-unwrap: indexing can panic on the request path — use \
+             `.get(..)` and handle the miss"
+                .to_string(),
+        ]
+    );
+    // The same source outside the request-path scope is clean.
+    assert!(rendered("isa/mod.rs", src).is_empty());
+}
+
+#[test]
+fn no_anyhow_fixture() {
+    let src = "use anyhow::Context;\n";
+    assert_eq!(
+        rendered("isa/mod.rs", src),
+        vec![
+            "isa/mod.rs:1: no-anyhow: the crate's error type is `wattchmen::Error`; `anyhow` \
+             erases wire codes"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn err_string_fixture() {
+    let src = "\
+fn parse(s: &str) -> Result<u32, String> {
+    s.parse::<u32>().map_err(|e| e.to_string())
+}
+";
+    assert_eq!(
+        rendered("engine/mod.rs", src),
+        vec![
+            "engine/mod.rs:1: err-string: `Result<_, String>` loses the wire code; \
+             engine-reachable code returns `Result<_, wattchmen::Error>`"
+                .to_string()
+        ]
+    );
+    // Typed results and String *values* (not error types) are fine.
+    assert!(rendered("engine/mod.rs", "fn g() -> Result<String, Error> { todo!() }\n").is_empty());
+    // Outside engine-reachable code the rule does not apply.
+    assert!(rendered("util/json.rs", src).is_empty());
+}
+
+#[test]
+fn hashmap_iter_fixture() {
+    let src = "use std::collections::HashMap;\n";
+    assert_eq!(
+        rendered("fleet/sim.rs", src),
+        vec![
+            "fleet/sim.rs:1: hashmap-iter: HashMap iteration order is nondeterministic and \
+             poisons float accumulation — use BTreeMap or sort before reducing"
+                .to_string()
+        ]
+    );
+    // The interner (isa/) may use HashMap — scope check.
+    assert!(rendered("isa/intern.rs", src).is_empty());
+}
+
+#[test]
+fn wallclock_fixture() {
+    let src = "\
+fn now_ms() -> u128 {
+    std::time::Instant::now().elapsed().as_millis()
+}
+";
+    assert_eq!(
+        rendered("gpusim/device.rs", src),
+        vec![
+            "gpusim/device.rs:2: wallclock: `Instant` reads the wall clock inside a \
+             deterministic layer — thread simulated time through instead"
+                .to_string()
+        ]
+    );
+    // The serve layer is allowed to read real time.
+    assert!(rendered("service/mod.rs", src).is_empty());
+}
+
+#[test]
+fn stmt_ctrlflow_fixture() {
+    // The PR 1 compile blocker: statement-position control flow with a
+    // trailing method call (seed incident: telemetry.rs).
+    let src = "\
+fn f(x: f64) -> f64 {
+    if x > 0.0 { x } else { 0.0 }.max(1.0);
+    x
+}
+";
+    assert_eq!(
+        rendered("model/train.rs", src),
+        vec![
+            "model/train.rs:2: stmt-ctrlflow: statement-position `if` with a trailing method \
+             call does not parse — bind the expression with `let` first"
+                .to_string()
+        ]
+    );
+    // Expression position (after `=`) is fine.
+    let ok = "\
+fn f(x: f64) -> f64 {
+    let y = if x > 0.0 { x } else { 0.0 }.max(1.0);
+    y
+}
+";
+    assert!(rendered("model/train.rs", ok).is_empty());
+}
+
+#[test]
+fn delim_balance_fixture() {
+    let src = "\
+fn f() {
+    let v = (1, 2];
+}
+";
+    assert_eq!(
+        rendered("util/x.rs", src),
+        vec![
+            "util/x.rs:2: delim-balance: mismatched delimiter: found `]` but the `(` opened \
+             on line 2 expects `)`"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn line_width_fixture() {
+    let src = format!("fn f() {{\n    let {}: u64 = 0;\n}}\n", "a".repeat(96));
+    assert_eq!(
+        rendered("solver/mod.rs", &src),
+        vec!["solver/mod.rs:2: line-width: line is 114 chars (limit 100)".to_string()]
+    );
+    // Long lines carrying string or comment content are exempt.
+    let doc = format!("// {}\n", "d".repeat(120));
+    assert!(rendered("solver/mod.rs", &doc).is_empty());
+}
+
+#[test]
+fn pragma_fixtures() {
+    // A justified pragma suppresses the finding on the next line.
+    let ok = "\
+// wlint::allow(hashmap-iter): construction only; iteration is sorted downstream.
+use std::collections::HashMap;
+";
+    assert!(rendered("fleet/mod.rs", ok).is_empty());
+
+    // An unjustified pragma still suppresses, but is itself a finding.
+    let bare = "\
+// wlint::allow(hashmap-iter)
+use std::collections::HashMap;
+";
+    assert_eq!(
+        rendered("fleet/mod.rs", bare),
+        vec![
+            "fleet/mod.rs:1: pragma-justification: pragma needs a justification: \
+             `// wlint::allow(hashmap-iter): <why>`"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn test_code_is_exempt_from_panic_rules() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    fn f(m: &std::sync::Mutex<u32>) -> u32 {
+        *m.lock().unwrap()
+    }
+}
+";
+    assert!(rendered("service/mod.rs", src).is_empty());
+}
+
+#[test]
+fn clean_tree_self_check() {
+    let src_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let diags = lint_tree(&src_root).expect("walk src tree");
+    assert!(
+        diags.is_empty(),
+        "wlint found {} issue(s) in the crate's own sources:\n{}",
+        diags.len(),
+        diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
