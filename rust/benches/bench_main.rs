@@ -27,6 +27,9 @@
 //!                          the timed region is pure simulation + merge)
 //!   fleet_10k_day_jobs1  — the same campaign on ONE worker: the ratio
 //!                          to fleet_10k_day is the parallel speedup
+//!   daemon_overhead_*    — `wattchmen daemon` supervised loop at three
+//!                          sampling intervals (0 µs / 500 µs / 2 ms);
+//!                          the note reports supervisor wakeups/sec
 //!
 //! Each benchmark also prints the headline numbers it reproduces so
 //! `cargo bench` doubles as a quick regeneration harness.  Pass
@@ -41,6 +44,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use wattchmen::cluster::ClusterCampaign;
+use wattchmen::daemon::{self, faults::FaultPlan, DaemonConfig};
 use wattchmen::fleet;
 use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::gpusim::device::Device;
@@ -447,6 +451,42 @@ fn main() {
         let mut ack = String::new();
         reader.read_line(&mut ack).unwrap();
         runner.join().unwrap();
+    }
+
+    // --- daemon: supervised attribution loop at three sampling intervals ---
+    // Overhead question: what does supervision + checkpoint plumbing cost
+    // per wakeup as the sampler interval shrinks?  No checkpoints, no
+    // faults — the timed region is the pure worker/supervisor machinery.
+    if selected("daemon_overhead") {
+        for &(name, interval_us, samples) in &[
+            ("daemon_overhead_0us", 0u64, 20_000u64),
+            ("daemon_overhead_500us", 500, 2_000),
+            ("daemon_overhead_2ms", 2_000, 500),
+        ] {
+            bench(name, 3, &mut results, || {
+                let cfg = DaemonConfig {
+                    samples,
+                    interval: Duration::from_micros(interval_us),
+                    export_interval: Duration::from_millis(5),
+                    checkpoint_dir: None,
+                    final_checkpoint: false,
+                    ..DaemonConfig::default()
+                };
+                let batch = cfg.batch as u64;
+                let t0 = Instant::now();
+                let report = daemon::run(cfg, FaultPlan::default()).unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                assert!(report.conserved(), "daemon bench violated conservation");
+                assert_eq!(report.ledger.samples, samples);
+                let wakeups = samples.div_ceil(batch) + report.export_ticks;
+                format!(
+                    "{} samples, {:.0} wakeups/s at {} µs interval",
+                    report.ledger.samples,
+                    wakeups as f64 / dt,
+                    interval_us
+                )
+            });
+        }
     }
 
     if let Some(path) = &json_path {

@@ -1,0 +1,460 @@
+//! Crash-safe attribution checkpoints.
+//!
+//! Layout of a checkpoint file (`ckpt-<generation>.wck`):
+//!
+//! ```text
+//! [ body: compact JSON, schema "wattchmen-ckpt-v1"            ]
+//! [ footer: 8-byte LE body length | 8-byte LE FNV-1a(body)    ]
+//! ```
+//!
+//! Writes go temp-file → `fsync` → atomic rename (plus a best-effort
+//! directory fsync), so a crash at any instant leaves either the old
+//! generation or the new one — never a torn file.  Reads walk
+//! generations newest-first and take the first file whose footer
+//! verifies, so truncation, bit flips, zero-length files, and a missing
+//! latest generation all degrade to "resume from the previous good
+//! generation" instead of an error.
+//!
+//! The body is a pure function of the attribution state: exact integers
+//! serialize as decimal strings (u128 nanojoules don't fit JSON
+//! doubles), floats serialize as `to_bits()` hex so no formatting /
+//! parsing round-trip can perturb them, and nothing derived from wall
+//! time is included.  Two daemons that processed the same samples write
+//! byte-identical checkpoints regardless of timing.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::error::Error;
+use crate::util::json::{self, Json};
+use crate::util::prng::fnv1a_bytes;
+
+use super::stream::{Health, Ledger, StreamCounters, StreamState};
+
+const SCHEMA: &str = "wattchmen-ckpt-v1";
+const FOOTER_LEN: usize = 16;
+
+/// Everything the daemon needs to resume attribution bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointState {
+    /// Monotone checkpoint generation (also the filename key).
+    pub generation: u64,
+    /// Samples the attributor has fully processed.
+    pub processed: u64,
+    pub ledger: Ledger,
+    pub streams: Vec<StreamState>,
+}
+
+fn u128_json(v: u128) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn bits_json(v: f64) -> Json {
+    Json::Str(format!("0x{:016x}", v.to_bits()))
+}
+
+fn num_json(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, Error> {
+    v.get(key)
+        .ok_or_else(|| Error::internal(format!("checkpoint: missing field '{key}'")))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, Error> {
+    let x = field(v, key)?
+        .as_f64()
+        .ok_or_else(|| Error::internal(format!("checkpoint: field '{key}' is not a number")))?;
+    if !(x.is_finite() && x >= 0.0) {
+        return Err(Error::internal(format!("checkpoint: field '{key}' out of range")));
+    }
+    Ok(x as u64)
+}
+
+fn get_u128(v: &Json, key: &str) -> Result<u128, Error> {
+    let s = field(v, key)?
+        .as_str()
+        .ok_or_else(|| Error::internal(format!("checkpoint: field '{key}' is not a string")))?;
+    s.parse::<u128>()
+        .map_err(|e| Error::internal(format!("checkpoint: field '{key}': {e}")))
+}
+
+fn parse_bits(s: &str) -> Result<f64, Error> {
+    let hex = s
+        .strip_prefix("0x")
+        .ok_or_else(|| Error::internal("checkpoint: float bits missing 0x prefix"))?;
+    let bits = u64::from_str_radix(hex, 16)
+        .map_err(|e| Error::internal(format!("checkpoint: bad float bits: {e}")))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn get_bits(v: &Json, key: &str) -> Result<f64, Error> {
+    let s = field(v, key)?
+        .as_str()
+        .ok_or_else(|| Error::internal(format!("checkpoint: field '{key}' is not a string")))?;
+    parse_bits(s)
+}
+
+fn ledger_json(l: &Ledger) -> Json {
+    let attributed: BTreeMap<String, Json> = l
+        .attributed_nj
+        .iter()
+        .map(|(tag, nj)| (tag.to_string(), u128_json(*nj)))
+        .collect();
+    Json::obj(vec![
+        ("attributed", Json::Obj(attributed)),
+        ("idle", u128_json(l.idle_nj)),
+        ("samples", num_json(l.samples)),
+        ("total", u128_json(l.total_nj)),
+        ("unattributed", u128_json(l.unattributed_nj)),
+    ])
+}
+
+fn ledger_from_json(v: &Json) -> Result<Ledger, Error> {
+    let mut attributed_nj = BTreeMap::new();
+    let obj = field(v, "attributed")?
+        .as_obj()
+        .ok_or_else(|| Error::internal("checkpoint: 'attributed' is not an object"))?;
+    for (tag, nj) in obj {
+        let tag: u16 = tag
+            .parse()
+            .map_err(|e| Error::internal(format!("checkpoint: bad tag '{tag}': {e}")))?;
+        let nj = nj
+            .as_str()
+            .ok_or_else(|| Error::internal("checkpoint: attributed value is not a string"))?
+            .parse::<u128>()
+            .map_err(|e| Error::internal(format!("checkpoint: bad attributed energy: {e}")))?;
+        attributed_nj.insert(tag, nj);
+    }
+    Ok(Ledger {
+        attributed_nj,
+        idle_nj: get_u128(v, "idle")?,
+        unattributed_nj: get_u128(v, "unattributed")?,
+        total_nj: get_u128(v, "total")?,
+        samples: get_u64(v, "samples")?,
+    })
+}
+
+fn stream_json(s: &StreamState) -> Json {
+    let c = &s.counters;
+    Json::obj(vec![
+        ("consec_invalid", num_json(s.consec_invalid as u64)),
+        (
+            "counters",
+            Json::obj(vec![
+                ("dropped_dup", num_json(c.dropped_dup)),
+                ("gaps_interpolated", num_json(c.gaps_interpolated)),
+                ("invalid", num_json(c.invalid)),
+                ("out_of_order", num_json(c.out_of_order)),
+                ("unbounded_gaps", num_json(c.unbounded_gaps)),
+            ]),
+        ),
+        ("good_streak", num_json(s.good_streak as u64)),
+        ("health", num_json(s.health.gauge() as u64)),
+        ("last_power_bits", bits_json(s.last_power_w)),
+        (
+            "last_t_bits",
+            match s.last_t_s {
+                Some(t) => bits_json(t),
+                None => Json::Null,
+            },
+        ),
+        ("next_index", num_json(s.next_index)),
+    ])
+}
+
+fn stream_from_json(v: &Json) -> Result<StreamState, Error> {
+    let c = field(v, "counters")?;
+    let last_t_s = match field(v, "last_t_bits")? {
+        Json::Null => None,
+        Json::Str(s) => Some(parse_bits(s)?),
+        _ => {
+            return Err(Error::internal("checkpoint: 'last_t_bits' is neither string nor null"));
+        }
+    };
+    Ok(StreamState {
+        next_index: get_u64(v, "next_index")?,
+        last_t_s,
+        last_power_w: get_bits(v, "last_power_bits")?,
+        health: Health::from_gauge(get_u64(v, "health")? as u8),
+        good_streak: get_u64(v, "good_streak")? as u32,
+        consec_invalid: get_u64(v, "consec_invalid")? as u32,
+        counters: StreamCounters {
+            dropped_dup: get_u64(c, "dropped_dup")?,
+            out_of_order: get_u64(c, "out_of_order")?,
+            invalid: get_u64(c, "invalid")?,
+            gaps_interpolated: get_u64(c, "gaps_interpolated")?,
+            unbounded_gaps: get_u64(c, "unbounded_gaps")?,
+        },
+    })
+}
+
+/// Serialize a checkpoint: compact JSON body + 16-byte footer.
+pub fn encode(state: &CheckpointState) -> Vec<u8> {
+    let body = Json::obj(vec![
+        ("generation", num_json(state.generation)),
+        ("ledger", ledger_json(&state.ledger)),
+        ("processed", num_json(state.processed)),
+        ("schema", Json::Str(SCHEMA.to_string())),
+        ("streams", Json::Arr(state.streams.iter().map(stream_json).collect())),
+    ])
+    .to_string_compact()
+    .into_bytes();
+    let mut out = body;
+    let len = out.len() as u64;
+    let sum = fnv1a_bytes(&out);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Deserialize and verify a checkpoint file's bytes.
+pub fn decode(bytes: &[u8]) -> Result<CheckpointState, Error> {
+    if bytes.len() < FOOTER_LEN {
+        return Err(Error::internal("checkpoint: shorter than its footer"));
+    }
+    let body_end = bytes.len() - FOOTER_LEN;
+    let body = bytes.get(..body_end).unwrap_or(&[]);
+    let mut len8 = [0u8; 8];
+    let mut sum8 = [0u8; 8];
+    len8.copy_from_slice(bytes.get(body_end..body_end + 8).unwrap_or(&[0; 8]));
+    sum8.copy_from_slice(bytes.get(body_end + 8..).unwrap_or(&[0; 8]));
+    if u64::from_le_bytes(len8) != body.len() as u64 {
+        return Err(Error::internal("checkpoint: footer length mismatch (truncated?)"));
+    }
+    if u64::from_le_bytes(sum8) != fnv1a_bytes(body) {
+        return Err(Error::internal("checkpoint: checksum mismatch (corrupt)"));
+    }
+    let text = std::str::from_utf8(body)
+        .map_err(|_| Error::internal("checkpoint: body is not UTF-8"))?;
+    let v = json::parse(text)
+        .map_err(|e| Error::internal(format!("checkpoint: body does not parse: {e}")))?;
+    let schema = field(&v, "schema")?.as_str().unwrap_or("");
+    if schema != SCHEMA {
+        return Err(Error::internal(format!("checkpoint: unknown schema '{schema}'")));
+    }
+    let streams = field(&v, "streams")?
+        .as_arr()
+        .ok_or_else(|| Error::internal("checkpoint: 'streams' is not an array"))?
+        .iter()
+        .map(stream_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(CheckpointState {
+        generation: get_u64(&v, "generation")?,
+        processed: get_u64(&v, "processed")?,
+        ledger: ledger_from_json(field(&v, "ledger")?)?,
+        streams,
+    })
+}
+
+/// Writes and recovers checkpoint generations in a directory.
+#[derive(Debug)]
+pub struct Checkpointer {
+    dir: PathBuf,
+    /// Generations retained on disk (older ones are pruned after each
+    /// successful write).  At least 1.
+    keep: usize,
+}
+
+fn gen_of(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    let middle = name.strip_prefix("ckpt-")?.strip_suffix(".wck")?;
+    middle.parse().ok()
+}
+
+impl Checkpointer {
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> Result<Checkpointer, Error> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| Error::io(format!("checkpoint dir {}: {e}", dir.display())))?;
+        Ok(Checkpointer { dir, keep: keep.max(1) })
+    }
+
+    pub fn path_for(&self, generation: u64) -> PathBuf {
+        self.dir.join(format!("ckpt-{generation:08}.wck"))
+    }
+
+    /// Write one generation crash-safely: temp file, fsync, rename,
+    /// best-effort directory fsync, then prune old generations.
+    pub fn write(&self, state: &CheckpointState) -> Result<PathBuf, Error> {
+        let bytes = encode(state);
+        let tmp = self.dir.join(format!("ckpt-{:08}.tmp", state.generation));
+        let path = self.path_for(state.generation);
+        let mut f = fs::File::create(&tmp)
+            .map_err(|e| Error::io(format!("checkpoint {}: {e}", tmp.display())))?;
+        f.write_all(&bytes)
+            .and_then(|_| f.sync_all())
+            .map_err(|e| Error::io(format!("checkpoint {}: {e}", tmp.display())))?;
+        drop(f);
+        fs::rename(&tmp, &path)
+            .map_err(|e| Error::io(format!("checkpoint rename {}: {e}", path.display())))?;
+        // Persist the rename itself where the platform allows opening a
+        // directory; failure here only risks losing the *newest*
+        // generation on power loss, which recovery already tolerates.
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.prune();
+        Ok(path)
+    }
+
+    fn prune(&self) {
+        let mut gens = self.generations();
+        if gens.len() > self.keep {
+            gens.sort_unstable();
+            let cut = gens.len() - self.keep;
+            for g in gens.iter().take(cut) {
+                let _ = fs::remove_file(self.path_for(*g));
+            }
+        }
+    }
+
+    /// All on-disk generations, unsorted.
+    pub fn generations(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        if let Ok(rd) = fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                if let Some(g) = gen_of(&entry.path()) {
+                    out.push(g);
+                }
+            }
+        }
+        out
+    }
+
+    /// Load the newest generation whose footer verifies.  Returns the
+    /// state (if any survives) and how many newer-but-corrupt
+    /// generations were skipped on the way.
+    pub fn load_latest(&self) -> (Option<CheckpointState>, usize) {
+        let mut gens = self.generations();
+        gens.sort_unstable_by(|a, b| b.cmp(a));
+        let mut skipped = 0;
+        for g in gens {
+            match fs::read(self.path_for(g)).map_err(Error::from).and_then(|b| decode(&b)) {
+                Ok(state) => return (Some(state), skipped),
+                Err(_) => skipped += 1,
+            }
+        }
+        (None, skipped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemon::stream::{StreamPolicy, StreamSample};
+
+    fn state(generation: u64) -> CheckpointState {
+        let mut ledger = Ledger::default();
+        let mut st = StreamState::default();
+        let policy = StreamPolicy::default();
+        for i in 0..(20 + generation) {
+            let s = StreamSample {
+                stream: 0,
+                index: i,
+                t_s: i as f64 * 0.1,
+                power_w: if i % 5 == 0 { f64::NAN } else { 100.0 + i as f64 },
+                tag: if i % 2 == 0 { Some(1) } else { None },
+            };
+            st.ingest(&s, &policy, &mut ledger);
+        }
+        CheckpointState {
+            generation,
+            processed: ledger.samples,
+            ledger,
+            streams: vec![st, StreamState::default()],
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("wattchmen-ckpt-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn encode_decode_round_trips_exactly() {
+        let s = state(3);
+        let bytes = encode(&s);
+        assert_eq!(decode(&bytes).unwrap(), s);
+        // Byte-deterministic: encoding again is identical.
+        assert_eq!(encode(&s), bytes);
+    }
+
+    #[test]
+    fn footer_rejects_corruption() {
+        let bytes = encode(&state(1));
+        // Truncated.
+        assert!(decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode(&bytes[..4]).is_err());
+        assert!(decode(&[]).is_err());
+        // Bit flip in the body.
+        let mut flipped = bytes.clone();
+        flipped[10] ^= 0x40;
+        assert!(decode(&flipped).is_err());
+        // Bit flip in the checksum.
+        let mut flipped = bytes.clone();
+        let n = flipped.len();
+        flipped[n - 1] ^= 0x01;
+        assert!(decode(&flipped).is_err());
+    }
+
+    #[test]
+    fn write_then_load_latest() {
+        let dir = tmpdir("rt");
+        let ck = Checkpointer::new(&dir, 3).unwrap();
+        for g in 1..=5 {
+            ck.write(&state(g)).unwrap();
+        }
+        // Pruned to the last 3 generations.
+        let mut gens = ck.generations();
+        gens.sort_unstable();
+        assert_eq!(gens, vec![3, 4, 5]);
+        let (loaded, skipped) = ck.load_latest();
+        assert_eq!(loaded.unwrap(), state(5));
+        assert_eq!(skipped, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_previous_generation() {
+        let dir = tmpdir("fb");
+        let ck = Checkpointer::new(&dir, 4).unwrap();
+        for g in 1..=3 {
+            ck.write(&state(g)).unwrap();
+        }
+        // Truncate generation 3 on disk.
+        let p3 = ck.path_for(3);
+        let bytes = fs::read(&p3).unwrap();
+        fs::write(&p3, &bytes[..bytes.len() / 2]).unwrap();
+        let (loaded, skipped) = ck.load_latest();
+        assert_eq!(loaded.unwrap(), state(2));
+        assert_eq!(skipped, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_loads_nothing() {
+        let dir = tmpdir("empty");
+        let ck = Checkpointer::new(&dir, 2).unwrap();
+        let (loaded, skipped) = ck.load_latest();
+        assert!(loaded.is_none());
+        assert_eq!(skipped, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn floats_round_trip_bit_for_bit() {
+        let mut s = state(1);
+        // A value with no short decimal representation.
+        if let Some(st) = s.streams.first_mut() {
+            st.last_t_s = Some(0.1 + 0.2);
+            st.last_power_w = f64::MIN_POSITIVE;
+        }
+        let back = decode(&encode(&s)).unwrap();
+        assert_eq!(back, s);
+    }
+}

@@ -1,0 +1,318 @@
+//! Deterministic fault injection for the daemon.
+//!
+//! A [`FaultPlan`] is a *schedule*, not a random process: every fault
+//! fires at a planned index (a global sample emission index, an
+//! attributor processed-count, an exporter tick, or a checkpoint
+//! generation), so a test that runs the same plan twice sees the exact
+//! same failure sequence and can pin the resulting ledger to the bit.
+//! The plan is compiled in — CI drives it through `--fault-plan` with
+//! no extra tooling — and `seeded:<n>` expands to a plan covering all
+//! six fault kinds at indices derived from the seed.
+//!
+//! Fault kinds (one query per kind, all pure):
+//!
+//! | spec entry          | kind                  | query        |
+//! |---------------------|-----------------------|--------------|
+//! | `panic:sampler@N`   | worker panic          | `panic_index`|
+//! | `drop@N+L`          | sensor dropout        | `dropped`    |
+//! | `nan@N+L`           | NaN burst             | `nan_at`     |
+//! | `skip@N=D`          | clock skip (D secs)   | `skew_s`     |
+//! | `ckpt@G`            | checkpoint write fail | `ckpt_fail`  |
+//! | `io@K`              | exporter I/O error    | `io_fail`    |
+
+use crate::error::Error;
+
+/// The three supervised workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Worker {
+    Sampler,
+    Attributor,
+    Exporter,
+}
+
+impl Worker {
+    pub fn name(self) -> &'static str {
+        match self {
+            Worker::Sampler => "sampler",
+            Worker::Attributor => "attributor",
+            Worker::Exporter => "exporter",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Worker, Error> {
+        match s {
+            "sampler" => Ok(Worker::Sampler),
+            "attributor" => Ok(Worker::Attributor),
+            "exporter" => Ok(Worker::Exporter),
+            other => Err(Error::bad_request(format!("fault plan: unknown worker '{other}'"))),
+        }
+    }
+}
+
+/// One planned worker panic.  `at` counts in the worker's own progress
+/// unit: global emissions (sampler), processed samples (attributor), or
+/// export ticks (exporter).  Each entry fires at most once per daemon
+/// run — the daemon tracks consumed entries so a restarted worker does
+/// not re-panic at the same count forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PanicFault {
+    pub worker: Worker,
+    pub at: u64,
+}
+
+/// A half-open index span `[at, at+len)` of global emission indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub at: u64,
+    pub len: u64,
+}
+
+impl Span {
+    pub fn contains(&self, idx: u64) -> bool {
+        idx >= self.at && idx - self.at < self.len
+    }
+}
+
+/// A clock discontinuity: from global emission `at` onward, sensor
+/// timestamps are shifted by `delta_s` (cumulative across skips).
+/// Positive deltas open gaps; negative deltas send time backwards.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClockSkip {
+    pub at: u64,
+    pub delta_s: f64,
+}
+
+/// The full deterministic fault schedule (empty = no faults).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub panics: Vec<PanicFault>,
+    /// Exporter I/O failures, by export tick index.
+    pub io_errors: Vec<u64>,
+    /// Sensor dropouts: spans of emission indices that never produce a
+    /// sample.
+    pub dropouts: Vec<Span>,
+    /// NaN bursts: spans of emission indices whose power reads as NaN.
+    pub nan_bursts: Vec<Span>,
+    pub clock_skips: Vec<ClockSkip>,
+    /// Checkpoint write failures, by generation index.
+    pub ckpt_fails: Vec<u64>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.panics.is_empty()
+            && self.io_errors.is_empty()
+            && self.dropouts.is_empty()
+            && self.nan_bursts.is_empty()
+            && self.clock_skips.is_empty()
+            && self.ckpt_fails.is_empty()
+    }
+
+    /// Is emission index `idx` swallowed by a sensor dropout?
+    pub fn dropped(&self, idx: u64) -> bool {
+        self.dropouts.iter().any(|s| s.contains(idx))
+    }
+
+    /// Does emission index `idx` read NaN power?
+    pub fn nan_at(&self, idx: u64) -> bool {
+        self.nan_bursts.iter().any(|s| s.contains(idx))
+    }
+
+    /// Cumulative clock skew [s] applied to emission index `idx`.
+    pub fn skew_s(&self, idx: u64) -> f64 {
+        self.clock_skips
+            .iter()
+            .filter(|k| k.at <= idx)
+            .map(|k| k.delta_s)
+            .sum()
+    }
+
+    /// Does checkpoint generation `gen` fail to write?
+    pub fn ckpt_fail(&self, generation: u64) -> bool {
+        self.ckpt_fails.contains(&generation)
+    }
+
+    /// Does export tick `tick` hit an I/O error?
+    pub fn io_fail(&self, tick: u64) -> bool {
+        self.io_errors.contains(&tick)
+    }
+
+    /// Index into `panics` of an entry for `worker` due at exactly
+    /// `count`, if any.  The caller owns the fired-once bookkeeping.
+    pub fn panic_index(&self, worker: Worker, count: u64) -> Option<usize> {
+        self.panics
+            .iter()
+            .position(|p| p.worker == worker && p.at == count)
+    }
+
+    /// Parse a `--fault-plan` spec: `;`-separated entries (see the
+    /// module table), or `seeded:<n>` for a generated all-kinds plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, Error> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        if let Some(seed) = spec.strip_prefix("seeded:") {
+            let seed: u64 = seed
+                .trim()
+                .parse()
+                .map_err(|e| Error::bad_request(format!("fault plan: bad seed: {e}")))?;
+            return Ok(FaultPlan::seeded(seed));
+        }
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            plan.parse_entry(entry)?;
+        }
+        Ok(plan)
+    }
+
+    fn parse_entry(&mut self, entry: &str) -> Result<(), Error> {
+        let bad = |msg: &str| Error::bad_request(format!("fault plan entry '{entry}': {msg}"));
+        let (kind, rest) = entry
+            .split_once('@')
+            .ok_or_else(|| bad("expected '<kind>@<index>'"))?;
+        match kind {
+            k if k.starts_with("panic:") => {
+                let worker = Worker::parse(k.trim_start_matches("panic:"))?;
+                let at = rest.parse().map_err(|_| bad("bad index"))?;
+                self.panics.push(PanicFault { worker, at });
+            }
+            "drop" | "nan" => {
+                let (at, len) = rest.split_once('+').ok_or_else(|| bad("expected 'N+L'"))?;
+                let span = Span {
+                    at: at.parse().map_err(|_| bad("bad start index"))?,
+                    len: len.parse().map_err(|_| bad("bad length"))?,
+                };
+                if kind == "drop" {
+                    self.dropouts.push(span);
+                } else {
+                    self.nan_bursts.push(span);
+                }
+            }
+            "skip" => {
+                let (at, delta) = rest.split_once('=').ok_or_else(|| bad("expected 'N=D'"))?;
+                let skip = ClockSkip {
+                    at: at.parse().map_err(|_| bad("bad index"))?,
+                    delta_s: delta.parse().map_err(|_| bad("bad delta"))?,
+                };
+                if !skip.delta_s.is_finite() {
+                    return Err(bad("delta must be finite"));
+                }
+                self.clock_skips.push(skip);
+            }
+            "ckpt" => self.ckpt_fails.push(rest.parse().map_err(|_| bad("bad generation"))?),
+            "io" => self.io_errors.push(rest.parse().map_err(|_| bad("bad tick"))?),
+            other => return Err(bad(&format!("unknown kind '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// A seed-derived plan exercising **all six** fault kinds within
+    /// the first ~2500 emissions — the CI soak schedule.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        let mut rng = crate::util::prng::Rng::new(seed ^ 0x77a7c4);
+        let mut at = |lo: u64, hi: u64| lo + rng.next_u64() % (hi - lo);
+        FaultPlan {
+            panics: vec![
+                PanicFault { worker: Worker::Sampler, at: at(200, 500) },
+                PanicFault { worker: Worker::Attributor, at: at(600, 1000) },
+                PanicFault { worker: Worker::Attributor, at: at(1100, 1500) },
+                PanicFault { worker: Worker::Exporter, at: 2 },
+            ],
+            io_errors: vec![1, at(3, 6)],
+            dropouts: vec![
+                Span { at: at(300, 700), len: at(2, 8) },
+                Span { at: at(1600, 2000), len: at(10, 30) },
+            ],
+            nan_bursts: vec![
+                Span { at: at(100, 400), len: at(2, 6) },
+                Span { at: at(900, 1300), len: at(3, 9) },
+            ],
+            clock_skips: vec![
+                ClockSkip { at: at(500, 900), delta_s: 5.0 },
+                ClockSkip { at: at(1400, 1800), delta_s: -2.5 },
+            ],
+            ckpt_fails: vec![2],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_entry_kind() {
+        let plan = FaultPlan::parse(
+            "panic:sampler@300; panic:attributor@800; drop@100+5; nan@50+3; \
+             skip@400=5.0; skip@900=-2.5; ckpt@2; io@1",
+        )
+        .unwrap();
+        assert_eq!(plan.panics.len(), 2);
+        assert_eq!(plan.panic_index(Worker::Sampler, 300), Some(0));
+        assert_eq!(plan.panic_index(Worker::Attributor, 800), Some(1));
+        assert_eq!(plan.panic_index(Worker::Exporter, 800), None);
+        assert!(plan.dropped(100) && plan.dropped(104) && !plan.dropped(105));
+        assert!(plan.nan_at(50) && plan.nan_at(52) && !plan.nan_at(53));
+        assert_eq!(plan.skew_s(399), 0.0);
+        assert_eq!(plan.skew_s(400), 5.0);
+        assert_eq!(plan.skew_s(900), 2.5);
+        assert!(plan.ckpt_fail(2) && !plan.ckpt_fail(3));
+        assert!(plan.io_fail(1) && !plan.io_fail(0));
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_no_fault() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        for bad in [
+            "panic:reaper@3",
+            "panic:sampler",
+            "drop@5",
+            "nan@x+2",
+            "skip@4",
+            "skip@4=inf+",
+            "ckpt@-1",
+            "warp@9",
+            "seeded:xyz",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_covers_all_kinds() {
+        let a = FaultPlan::seeded(42);
+        let b = FaultPlan::seeded(42);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::seeded(43));
+        assert!(!a.panics.is_empty());
+        assert!(!a.io_errors.is_empty());
+        assert!(!a.dropouts.is_empty());
+        assert!(!a.nan_bursts.is_empty());
+        assert!(!a.clock_skips.is_empty());
+        assert!(!a.ckpt_fails.is_empty());
+        // The same plan round-trips through the spec shorthand.
+        assert_eq!(FaultPlan::parse("seeded:42").unwrap(), a);
+        // Every worker is targeted at least once.
+        for w in [Worker::Sampler, Worker::Attributor, Worker::Exporter] {
+            assert!(a.panics.iter().any(|p| p.worker == w), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn span_contains_does_not_overflow() {
+        let s = Span { at: u64::MAX - 1, len: 2 };
+        assert!(s.contains(u64::MAX - 1) && s.contains(u64::MAX));
+        assert!(!s.contains(0));
+    }
+}

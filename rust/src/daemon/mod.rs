@@ -1,0 +1,862 @@
+//! `wattchmen daemon` — supervised continuous attribution.
+//!
+//! Three named workers run under a panic [`supervisor`]:
+//!
+//! * **sampler** — generates telemetry from a pure
+//!   [`StreamSpec`](crate::gpusim::telemetry::StreamSpec) emission rule
+//!   (`(stream, index)` → sample), applying any planned sensor faults;
+//! * **attributor** — runs every sample through the per-stream health
+//!   machine ([`stream`]) into the integer-nanojoule [`Ledger`], and
+//!   takes crash-safe [`checkpoint`]s every N processed samples;
+//! * **exporter** — renders the Prometheus text families
+//!   ([`service::protocol::daemon_prometheus_text`]
+//!   (crate::service::protocol::daemon_prometheus_text)) and
+//!   hot-reloads the stream policy with the validate-then-swap
+//!   discipline (a bad reload keeps the old policy and raises the
+//!   `config_stale` flag).
+//!
+//! Faults — worker panics, exporter I/O errors, sensor dropouts, NaN
+//! bursts, clock skips, checkpoint-write failures — come from a
+//! deterministic [`FaultPlan`] keyed on sample/tick indices, never the
+//! wall clock.  Two invariants hold under any plan:
+//!
+//! 1. **No double counting.** Samples are deduplicated by per-stream
+//!    index, the sampler commits its generation cursor before a batch
+//!    becomes visible, and injected panics fire *before* any state
+//!    mutation — so a restart re-derives exactly the pending work.
+//! 2. **Conservation to the bit.** `attributed + idle + unattributed ==
+//!    total` in integer nanojoules (see [`stream::Ledger`]).
+
+pub mod checkpoint;
+pub mod faults;
+pub mod stream;
+pub mod supervisor;
+
+use std::collections::VecDeque;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::error::Error;
+use crate::gpusim::telemetry::{StreamPhase, StreamSpec};
+use crate::service::protocol::{daemon_prometheus_text, DaemonMetrics};
+use crate::util::json::{self, Json};
+use crate::util::sync::lock_unpoisoned;
+
+use checkpoint::{Checkpointer, CheckpointState};
+use faults::{FaultPlan, Worker};
+use stream::{Health, Ledger, StreamPolicy, StreamSample, StreamState};
+use supervisor::{RestartPolicy, Supervisor, WorkerStatus};
+
+/// Full daemon configuration.  [`Default`] is the self-contained demo:
+/// two synthetic streams alternating idle / `hotspot` / `backprop_k2`
+/// phases at a 100 ms period.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Number of telemetry streams (round-robin sampled).
+    pub streams: usize,
+    /// Total samples to emit before clean shutdown.
+    pub samples: u64,
+    /// Samples generated per sampler pass.
+    pub batch: usize,
+    /// Sleep between sampler passes (zero = as fast as possible).
+    pub interval: Duration,
+    /// Sleep between exporter ticks.
+    pub export_interval: Duration,
+    pub spec: StreamSpec,
+    pub policy: StreamPolicy,
+    pub restart: RestartPolicy,
+    /// Workload names by tag index (for the report).
+    pub tag_names: Vec<String>,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint every N processed samples (0 = only the final one).
+    pub checkpoint_every: u64,
+    /// Checkpoint generations retained on disk.
+    pub keep: usize,
+    /// Prometheus text file target (atomic tmp+rename writes).
+    pub metrics_out: Option<PathBuf>,
+    /// Hot-reloadable stream-policy overrides (JSON).
+    pub config_path: Option<PathBuf>,
+    /// Write a final checkpoint on clean shutdown.  Tests simulating a
+    /// hard crash turn this off.
+    pub final_checkpoint: bool,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            streams: 2,
+            samples: 3000,
+            batch: 16,
+            interval: Duration::ZERO,
+            export_interval: Duration::from_millis(25),
+            spec: StreamSpec {
+                seed: 7355112,
+                period_s: 0.1,
+                quant_w: 1.0,
+                noise_frac: 0.01,
+                phases: vec![
+                    StreamPhase { tag: None, secs: 0.8, power_w: 55.0 },
+                    StreamPhase { tag: Some(0), secs: 1.2, power_w: 230.0 },
+                    StreamPhase { tag: None, secs: 0.5, power_w: 55.0 },
+                    StreamPhase { tag: Some(1), secs: 0.9, power_w: 180.0 },
+                ],
+            },
+            policy: StreamPolicy::default(),
+            restart: RestartPolicy::default(),
+            tag_names: vec!["hotspot".to_string(), "backprop_k2".to_string()],
+            checkpoint_dir: None,
+            checkpoint_every: 500,
+            keep: 3,
+            metrics_out: None,
+            config_path: None,
+            final_checkpoint: true,
+        }
+    }
+}
+
+impl DaemonConfig {
+    pub fn validate(&self) -> Result<(), Error> {
+        if self.streams == 0 {
+            return Err(Error::bad_request("daemon: streams must be >= 1"));
+        }
+        if self.samples == 0 {
+            return Err(Error::bad_request("daemon: samples must be >= 1"));
+        }
+        if self.batch == 0 {
+            return Err(Error::bad_request("daemon: batch must be >= 1"));
+        }
+        if self.keep == 0 {
+            return Err(Error::bad_request("daemon: keep must be >= 1"));
+        }
+        if !(self.spec.period_s.is_finite() && self.spec.period_s > 0.0) {
+            return Err(Error::bad_request("daemon: spec period_s must be finite and > 0"));
+        }
+        if self.spec.phases.is_empty() || self.spec.cycle_secs() <= 0.0 {
+            return Err(Error::bad_request("daemon: spec needs at least one phase with secs > 0"));
+        }
+        if !(self.spec.quant_w.is_finite() && self.spec.quant_w >= 0.0) {
+            return Err(Error::bad_request("daemon: spec quant_w must be finite and >= 0"));
+        }
+        if !(self.spec.noise_frac.is_finite() && self.spec.noise_frac >= 0.0) {
+            return Err(Error::bad_request("daemon: spec noise_frac must be finite and >= 0"));
+        }
+        self.policy.validate()
+    }
+}
+
+/// The daemon's emission rule: the sample for global emission index
+/// `g`, or `None` if a planned dropout swallows it.  Pure function of
+/// its arguments — the soak test's offline mirror replays this rule
+/// through a fresh state machine and must land on the same ledger bits.
+pub fn emission(
+    spec: &StreamSpec,
+    plan: &FaultPlan,
+    streams: usize,
+    g: u64,
+) -> Option<StreamSample> {
+    if plan.dropped(g) {
+        return None;
+    }
+    let n = streams.max(1) as u64;
+    let stream = (g % n) as usize;
+    let index = g / n;
+    let base = spec.sample_at(stream as u64, index);
+    let power_w = if plan.nan_at(g) { f64::NAN } else { base.power_w };
+    Some(StreamSample {
+        stream,
+        index,
+        t_s: base.t_s + plan.skew_s(g),
+        power_w,
+        tag: base.tag,
+    })
+}
+
+/// Attribution state shared between the workers (one mutex, one
+/// consistent snapshot for checkpoints).
+struct AttribState {
+    streams: Vec<StreamState>,
+    ledger: Ledger,
+    pending: VecDeque<StreamSample>,
+    /// Checkpoint generation counter (increments per attempt, so a
+    /// failed generation leaves a hole rather than wedging).
+    generation: u64,
+    /// `ledger.samples` at the last checkpoint attempt.
+    last_ckpt: u64,
+}
+
+struct Source {
+    /// Next global emission index to generate.
+    next_g: u64,
+}
+
+struct DaemonShared {
+    cfg: DaemonConfig,
+    plan: FaultPlan,
+    ck: Option<Checkpointer>,
+    source: Mutex<Source>,
+    attrib: Mutex<AttribState>,
+    /// Fire-once flags, parallel to `plan.panics` — a restarted worker
+    /// must not trip over the same planned panic forever.
+    fired: Mutex<Vec<bool>>,
+    policy: Mutex<StreamPolicy>,
+    reload_fp: Mutex<Option<(u64, u64)>>,
+    workers: Mutex<Vec<Arc<WorkerStatus>>>,
+    emitted: AtomicU64,
+    export_ticks: AtomicU64,
+    export_failures: AtomicU64,
+    dropouts_injected: AtomicU64,
+    ckpt_writes: AtomicU64,
+    ckpt_failures: AtomicU64,
+    config_reloads: AtomicU64,
+    config_reload_errors: AtomicU64,
+    config_stale: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+/// Consume panic entry `pi` exactly once.
+fn fire_once(shared: &DaemonShared, pi: usize) -> bool {
+    let mut fired = lock_unpoisoned(&shared.fired);
+    match fired.get_mut(pi) {
+        Some(f) if !*f => {
+            *f = true;
+            true
+        }
+        _ => false,
+    }
+}
+
+fn sampler_pass(shared: &DaemonShared) {
+    let cfg = &shared.cfg;
+    let emitted = shared.emitted.load(Ordering::SeqCst);
+    if emitted >= cfg.samples {
+        return;
+    }
+    let want = (cfg.samples - emitted).min(cfg.batch as u64) as usize;
+    let mut src = lock_unpoisoned(&shared.source);
+    let mut g = src.next_g;
+    let mut batch = Vec::with_capacity(want);
+    let mut dropped = 0u64;
+    while batch.len() < want {
+        // Injected panics fire before the cursor commits: a restarted
+        // sampler regenerates the identical batch from `src.next_g`.
+        if let Some(pi) = shared.plan.panic_index(Worker::Sampler, g) {
+            if fire_once(shared, pi) {
+                panic!("injected fault: sampler at emission {g}");
+            }
+        }
+        match emission(&cfg.spec, &shared.plan, cfg.streams, g) {
+            Some(s) => batch.push(s),
+            None => dropped += 1,
+        }
+        g += 1;
+    }
+    src.next_g = g;
+    drop(src);
+    shared.dropouts_injected.fetch_add(dropped, Ordering::SeqCst);
+    let len = batch.len() as u64;
+    lock_unpoisoned(&shared.attrib).pending.extend(batch);
+    shared.emitted.fetch_add(len, Ordering::SeqCst);
+}
+
+fn sampler_body(shared: &DaemonShared) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if shared.emitted.load(Ordering::SeqCst) >= shared.cfg.samples {
+            break;
+        }
+        sampler_pass(shared);
+        if !shared.cfg.interval.is_zero() {
+            thread::sleep(shared.cfg.interval);
+        }
+    }
+}
+
+/// Samples ingested per attributor pass before releasing the lock.
+const DRAIN_CHUNK: usize = 256;
+
+fn drain(shared: &DaemonShared) {
+    let policy = *lock_unpoisoned(&shared.policy);
+    let mut at = lock_unpoisoned(&shared.attrib);
+    for _ in 0..DRAIN_CHUNK {
+        let Some(s) = at.pending.front().copied() else {
+            break;
+        };
+        // Panic before any mutation: the sample stays at the front of
+        // the queue and is processed exactly once after restart.
+        if let Some(pi) = shared.plan.panic_index(Worker::Attributor, at.ledger.samples) {
+            if fire_once(shared, pi) {
+                panic!("injected fault: attributor at sample {}", at.ledger.samples);
+            }
+        }
+        let AttribState { streams, ledger, .. } = &mut *at;
+        if let Some(st) = streams.get_mut(s.stream) {
+            st.ingest(&s, &policy, ledger);
+        }
+        at.pending.pop_front();
+        if shared.cfg.checkpoint_every > 0
+            && at.ledger.samples.saturating_sub(at.last_ckpt) >= shared.cfg.checkpoint_every
+        {
+            at.last_ckpt = at.ledger.samples;
+            checkpoint_now(shared, &mut at);
+        }
+    }
+}
+
+fn attributor_body(shared: &DaemonShared) {
+    loop {
+        drain(shared);
+        let processed = lock_unpoisoned(&shared.attrib).ledger.samples;
+        if processed >= shared.cfg.samples {
+            break;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// Write one checkpoint generation (the caller holds the attrib lock,
+/// so the snapshot is consistent).  Injected and real write failures
+/// both count and leave a generation hole; recovery skips holes.
+fn checkpoint_now(shared: &DaemonShared, at: &mut AttribState) {
+    let Some(ck) = shared.ck.as_ref() else {
+        return;
+    };
+    at.generation += 1;
+    let generation = at.generation;
+    if shared.plan.ckpt_fail(generation) {
+        shared.ckpt_failures.fetch_add(1, Ordering::SeqCst);
+        return;
+    }
+    let state = CheckpointState {
+        generation,
+        processed: at.ledger.samples,
+        ledger: at.ledger.clone(),
+        streams: at.streams.clone(),
+    };
+    match ck.write(&state) {
+        Ok(_) => {
+            shared.ckpt_writes.fetch_add(1, Ordering::SeqCst);
+        }
+        Err(_) => {
+            shared.ckpt_failures.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn fingerprint(meta: &fs::Metadata) -> (u64, u64) {
+    let mtime = meta
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    (meta.len(), mtime)
+}
+
+/// Parse a stream-policy override file on top of `base`.  Unknown keys
+/// are ignored; the merged policy must validate.
+fn load_policy(path: &Path, base: StreamPolicy) -> Result<StreamPolicy, Error> {
+    let text = fs::read_to_string(path)
+        .map_err(|e| Error::io(format!("daemon config {}: {e}", path.display())))?;
+    let v = json::parse(&text)
+        .map_err(|e| Error::bad_request(format!("daemon config {}: {e}", path.display())))?;
+    let mut p = base;
+    if let Some(x) = v.get("period_s").and_then(Json::as_f64) {
+        p.period_s = x;
+    }
+    if let Some(x) = v.get("bounded_gap_s").and_then(Json::as_f64) {
+        p.bounded_gap_s = x;
+    }
+    if let Some(x) = v.get("recover_after").and_then(Json::as_f64) {
+        p.recover_after = x as u32;
+    }
+    if let Some(x) = v.get("stale_after_invalid").and_then(Json::as_f64) {
+        p.stale_after_invalid = x as u32;
+    }
+    if let Some(x) = v.get("gap_floor_w").and_then(Json::as_f64) {
+        p.gap_floor_w = x;
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// TableRegistry-style hot reload: cheap (len, mtime) fingerprint
+/// check, then validate-then-swap.  A bad file keeps the old policy
+/// and raises `config_stale`; the next good write clears it.
+fn maybe_reload(shared: &DaemonShared) {
+    let Some(path) = shared.cfg.config_path.as_ref() else {
+        return;
+    };
+    let Ok(meta) = fs::metadata(path) else {
+        return;
+    };
+    let fp = fingerprint(&meta);
+    {
+        let mut cur = lock_unpoisoned(&shared.reload_fp);
+        if *cur == Some(fp) {
+            return;
+        }
+        *cur = Some(fp);
+    }
+    let base = *lock_unpoisoned(&shared.policy);
+    match load_policy(path, base) {
+        Ok(p) => {
+            *lock_unpoisoned(&shared.policy) = p;
+            shared.config_reloads.fetch_add(1, Ordering::SeqCst);
+            shared.config_stale.store(false, Ordering::SeqCst);
+        }
+        Err(_) => {
+            shared.config_reload_errors.fetch_add(1, Ordering::SeqCst);
+            shared.config_stale.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+fn snapshot(shared: &DaemonShared) -> DaemonMetrics {
+    let mut m = DaemonMetrics::default();
+    {
+        let at = lock_unpoisoned(&shared.attrib);
+        m.samples_total = at.ledger.samples;
+        m.attributed_nj = at.ledger.attributed_total_nj();
+        m.idle_nj = at.ledger.idle_nj;
+        m.unattributed_nj = at.ledger.unattributed_nj;
+        m.total_nj = at.ledger.total_nj;
+        for st in &at.streams {
+            match st.health {
+                Health::Healthy => m.streams_healthy += 1,
+                Health::Degraded => m.streams_degraded += 1,
+                Health::Stale => m.streams_stale += 1,
+            }
+            m.duplicates_dropped += st.counters.dropped_dup;
+            m.out_of_order += st.counters.out_of_order;
+            m.invalid_samples += st.counters.invalid;
+            m.gaps_interpolated += st.counters.gaps_interpolated;
+            m.unbounded_gaps += st.counters.unbounded_gaps;
+        }
+    }
+    for w in lock_unpoisoned(&shared.workers).iter() {
+        m.worker_restarts += w.restarts();
+        if w.degraded() {
+            m.workers_degraded += 1;
+        }
+    }
+    m.dropouts_injected = shared.dropouts_injected.load(Ordering::SeqCst);
+    m.export_failures = shared.export_failures.load(Ordering::SeqCst);
+    m.checkpoint_writes = shared.ckpt_writes.load(Ordering::SeqCst);
+    m.checkpoint_failures = shared.ckpt_failures.load(Ordering::SeqCst);
+    m.config_reloads = shared.config_reloads.load(Ordering::SeqCst);
+    m.config_reload_errors = shared.config_reload_errors.load(Ordering::SeqCst);
+    m.config_stale = shared.config_stale.load(Ordering::SeqCst);
+    m
+}
+
+fn export(shared: &DaemonShared) -> Result<(), Error> {
+    let text = daemon_prometheus_text(&snapshot(shared));
+    let Some(path) = shared.cfg.metrics_out.as_ref() else {
+        return Ok(());
+    };
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, &text).map_err(|e| Error::io(format!("metrics {}: {e}", tmp.display())))?;
+    fs::rename(&tmp, path).map_err(|e| Error::io(format!("metrics {}: {e}", path.display())))
+}
+
+fn exporter_body(shared: &DaemonShared) {
+    loop {
+        let tick = shared.export_ticks.load(Ordering::SeqCst);
+        if let Some(pi) = shared.plan.panic_index(Worker::Exporter, tick) {
+            if fire_once(shared, pi) {
+                panic!("injected fault: exporter at tick {tick}");
+            }
+        }
+        maybe_reload(shared);
+        if shared.plan.io_fail(tick) {
+            shared.export_failures.fetch_add(1, Ordering::SeqCst);
+        } else if export(shared).is_err() {
+            shared.export_failures.fetch_add(1, Ordering::SeqCst);
+        }
+        shared.export_ticks.fetch_add(1, Ordering::SeqCst);
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        thread::sleep(shared.cfg.export_interval);
+    }
+}
+
+/// Final state of one daemon run.
+#[derive(Clone, Debug)]
+pub struct DaemonReport {
+    pub ledger: Ledger,
+    pub streams: Vec<StreamState>,
+    pub tag_names: Vec<String>,
+    pub emitted: u64,
+    pub restarts: u64,
+    pub degraded_workers: Vec<&'static str>,
+    pub resumed_from: Option<u64>,
+    /// Corrupt newer generations skipped during recovery.
+    pub skipped_checkpoints: usize,
+    pub final_generation: u64,
+    pub dropouts_injected: u64,
+    pub export_ticks: u64,
+    pub export_failures: u64,
+    pub checkpoint_writes: u64,
+    pub checkpoint_failures: u64,
+    pub config_reloads: u64,
+    pub config_reload_errors: u64,
+    pub config_stale: bool,
+}
+
+impl DaemonReport {
+    pub fn conserved(&self) -> bool {
+        self.ledger.conserved()
+    }
+
+    pub fn render(&self) -> String {
+        let j = |nj: u128| nj as f64 / 1e9;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "wattchmen daemon: {} samples over {} streams\n",
+            self.ledger.samples,
+            self.streams.len()
+        ));
+        for (tag, nj) in &self.ledger.attributed_nj {
+            let fallback = format!("tag{tag}");
+            let name = self
+                .tag_names
+                .get(*tag as usize)
+                .map(String::as_str)
+                .unwrap_or(&fallback);
+            out.push_str(&format!("  attributed[{name}]: {:.3} J\n", j(*nj)));
+        }
+        out.push_str(&format!("  idle: {:.3} J\n", j(self.ledger.idle_nj)));
+        out.push_str(&format!("  unattributed: {:.3} J\n", j(self.ledger.unattributed_nj)));
+        out.push_str(&format!("  total: {:.3} J\n", j(self.ledger.total_nj)));
+        out.push_str(if self.conserved() {
+            "  conservation: exact\n"
+        } else {
+            "  conservation: VIOLATED\n"
+        });
+        let degraded = if self.degraded_workers.is_empty() {
+            "none".to_string()
+        } else {
+            self.degraded_workers.join(",")
+        };
+        out.push_str(&format!(
+            "  restarts: {}  degraded workers: {degraded}\n",
+            self.restarts
+        ));
+        if let Some(g) = self.resumed_from {
+            out.push_str(&format!(
+                "  resumed from generation {g} ({} corrupt skipped)\n",
+                self.skipped_checkpoints
+            ));
+        }
+        out.push_str(&format!(
+            "  checkpoints: {} written, {} failed, final generation {}\n",
+            self.checkpoint_writes, self.checkpoint_failures, self.final_generation
+        ));
+        out.push_str(&format!(
+            "  exports: {} ticks, {} failures; config reloads: {} ({} errors)\n",
+            self.export_ticks, self.export_failures, self.config_reloads,
+            self.config_reload_errors
+        ));
+        let healthy = self.streams.iter().filter(|s| s.health == Health::Healthy).count();
+        let stale = self.streams.iter().filter(|s| s.health == Health::Stale).count();
+        out.push_str(&format!(
+            "  stream health: {healthy} healthy / {} degraded / {stale} stale\n",
+            self.streams.len() - healthy - stale
+        ));
+        out
+    }
+}
+
+/// Run the daemon to completion of `cfg.samples` (or until every
+/// worker that still matters is degraded).  The process never exits on
+/// worker failure — this function always returns a report.
+pub fn run(cfg: DaemonConfig, plan: FaultPlan) -> Result<DaemonReport, Error> {
+    cfg.validate()?;
+    let ck = match cfg.checkpoint_dir.as_ref() {
+        Some(d) => Some(Checkpointer::new(d.clone(), cfg.keep)?),
+        None => None,
+    };
+    let (resume, skipped_checkpoints) = match ck.as_ref() {
+        Some(c) => c.load_latest(),
+        None => (None, 0),
+    };
+    let mut streams_state = vec![StreamState::default(); cfg.streams];
+    let mut ledger = Ledger::default();
+    let mut generation = 0u64;
+    let mut resumed_from = None;
+    if let Some(state) = resume {
+        if state.streams.len() != cfg.streams {
+            return Err(Error::bad_request(format!(
+                "daemon: checkpoint has {} streams but config has {}",
+                state.streams.len(),
+                cfg.streams
+            )));
+        }
+        resumed_from = Some(state.generation);
+        generation = state.generation;
+        ledger = state.ledger;
+        streams_state = state.streams;
+    }
+    // Resume the emission cursor past everything already ingested.
+    // Processed samples form a prefix of the non-dropped emission
+    // sequence, so scanning to the first unprocessed index is exact —
+    // the sampler never regenerates a sample the attributor has seen.
+    let n = cfg.streams as u64;
+    let mut next_g = 0u64;
+    loop {
+        let cursor = streams_state
+            .get((next_g % n) as usize)
+            .map_or(0, |s| s.next_index);
+        if next_g / n < cursor {
+            next_g += 1;
+        } else {
+            break;
+        }
+    }
+    // Startup config load fails fast; only *re*loads degrade softly.
+    let mut policy = cfg.policy;
+    let mut reload_fp = None;
+    if let Some(path) = cfg.config_path.as_ref() {
+        if let Ok(meta) = fs::metadata(path) {
+            policy = load_policy(path, policy)?;
+            reload_fp = Some(fingerprint(&meta));
+        }
+    }
+    let min_ticks = plan
+        .io_errors
+        .iter()
+        .copied()
+        .chain(
+            plan.panics
+                .iter()
+                .filter(|p| p.worker == Worker::Exporter)
+                .map(|p| p.at),
+        )
+        .max()
+        .map_or(1, |m| m + 1);
+    let fired = vec![false; plan.panics.len()];
+    let emitted0 = ledger.samples;
+    let last_ckpt = ledger.samples;
+    let shared = Arc::new(DaemonShared {
+        plan,
+        ck,
+        source: Mutex::new(Source { next_g }),
+        attrib: Mutex::new(AttribState {
+            streams: streams_state,
+            ledger,
+            pending: VecDeque::new(),
+            generation,
+            last_ckpt,
+        }),
+        fired: Mutex::new(fired),
+        policy: Mutex::new(policy),
+        reload_fp: Mutex::new(reload_fp),
+        workers: Mutex::new(Vec::new()),
+        emitted: AtomicU64::new(emitted0),
+        export_ticks: AtomicU64::new(0),
+        export_failures: AtomicU64::new(0),
+        dropouts_injected: AtomicU64::new(0),
+        ckpt_writes: AtomicU64::new(0),
+        ckpt_failures: AtomicU64::new(0),
+        config_reloads: AtomicU64::new(0),
+        config_reload_errors: AtomicU64::new(0),
+        config_stale: AtomicBool::new(false),
+        shutdown: AtomicBool::new(false),
+        cfg,
+    });
+
+    let mut sup = Supervisor::new(shared.cfg.restart);
+    let sh = Arc::clone(&shared);
+    let w_samp = sup.spawn("sampler", move || sampler_body(&sh));
+    let sh = Arc::clone(&shared);
+    let w_attr = sup.spawn("attributor", move || attributor_body(&sh));
+    let sh = Arc::clone(&shared);
+    let w_exp = sup.spawn("exporter", move || exporter_body(&sh));
+    *lock_unpoisoned(&shared.workers) = sup.statuses().to_vec();
+
+    loop {
+        let processed = lock_unpoisoned(&shared.attrib).ledger.samples;
+        let done = processed >= shared.cfg.samples
+            && shared.export_ticks.load(Ordering::SeqCst) >= min_ticks;
+        let stuck = w_samp.degraded() || w_attr.degraded() || w_exp.degraded();
+        if done || stuck {
+            break;
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+    shared.shutdown.store(true, Ordering::SeqCst);
+    sup.join();
+
+    if shared.cfg.final_checkpoint {
+        let mut at = lock_unpoisoned(&shared.attrib);
+        checkpoint_now(&shared, &mut at);
+    }
+    let _ = export(&shared);
+
+    let at = lock_unpoisoned(&shared.attrib);
+    let statuses = [&w_samp, &w_attr, &w_exp];
+    Ok(DaemonReport {
+        ledger: at.ledger.clone(),
+        streams: at.streams.clone(),
+        tag_names: shared.cfg.tag_names.clone(),
+        emitted: shared.emitted.load(Ordering::SeqCst),
+        restarts: statuses.iter().map(|w| w.restarts()).sum(),
+        degraded_workers: statuses
+            .iter()
+            .filter(|w| w.degraded())
+            .map(|w| w.name())
+            .collect(),
+        resumed_from,
+        skipped_checkpoints,
+        final_generation: at.generation,
+        dropouts_injected: shared.dropouts_injected.load(Ordering::SeqCst),
+        export_ticks: shared.export_ticks.load(Ordering::SeqCst),
+        export_failures: shared.export_failures.load(Ordering::SeqCst),
+        checkpoint_writes: shared.ckpt_writes.load(Ordering::SeqCst),
+        checkpoint_failures: shared.ckpt_failures.load(Ordering::SeqCst),
+        config_reloads: shared.config_reloads.load(Ordering::SeqCst),
+        config_reload_errors: shared.config_reload_errors.load(Ordering::SeqCst),
+        config_stale: shared.config_stale.load(Ordering::SeqCst),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(samples: u64) -> DaemonConfig {
+        DaemonConfig {
+            samples,
+            export_interval: Duration::from_millis(2),
+            ..DaemonConfig::default()
+        }
+    }
+
+    #[test]
+    fn clean_run_conserves_and_reports() {
+        let report = run(quick_cfg(400), FaultPlan::default()).unwrap();
+        assert!(report.conserved());
+        assert_eq!(report.ledger.samples, 400);
+        assert_eq!(report.emitted, 400);
+        assert_eq!(report.restarts, 0);
+        assert!(report.degraded_workers.is_empty());
+        let text = report.render();
+        assert!(text.contains("conservation: exact"), "{text}");
+        assert!(text.contains("attributed[hotspot]"), "{text}");
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let mut cfg = quick_cfg(10);
+        cfg.streams = 0;
+        assert!(run(cfg, FaultPlan::default()).is_err());
+        let mut cfg = quick_cfg(10);
+        cfg.spec.phases.clear();
+        assert!(cfg.validate().is_err());
+        let mut cfg = quick_cfg(0);
+        cfg.samples = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn emission_rule_is_pure_and_respects_faults() {
+        let cfg = quick_cfg(10);
+        let plan = FaultPlan::parse("drop@4+2; nan@8+1; skip@6=3.5").unwrap();
+        assert!(emission(&cfg.spec, &plan, 2, 4).is_none());
+        assert!(emission(&cfg.spec, &plan, 2, 5).is_none());
+        let s6 = emission(&cfg.spec, &plan, 2, 6).unwrap();
+        let clean = emission(&cfg.spec, &FaultPlan::default(), 2, 6).unwrap();
+        assert_eq!(s6.t_s, clean.t_s + 3.5);
+        assert!(emission(&cfg.spec, &plan, 2, 8).unwrap().power_w.is_nan());
+        // Pure: same inputs, same sample.
+        assert_eq!(
+            emission(&cfg.spec, &plan, 2, 7),
+            emission(&cfg.spec, &plan, 2, 7)
+        );
+    }
+
+    fn write_cfg(path: &Path, body: &str) {
+        fs::write(path, body).unwrap();
+    }
+
+    #[test]
+    fn hot_reload_swaps_on_valid_and_keeps_old_on_bad() {
+        let dir = std::env::temp_dir().join(format!("wattchmen-reload-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("policy.json");
+        write_cfg(&cfg_path, "{\"gap_floor_w\": 25.0}");
+        let mut cfg = quick_cfg(10);
+        cfg.config_path = Some(cfg_path.clone());
+        cfg.validate().unwrap();
+        // Build a shared directly to drive maybe_reload deterministically.
+        let shared = DaemonShared {
+            plan: FaultPlan::default(),
+            ck: None,
+            source: Mutex::new(Source { next_g: 0 }),
+            attrib: Mutex::new(AttribState {
+                streams: vec![StreamState::default()],
+                ledger: Ledger::default(),
+                pending: VecDeque::new(),
+                generation: 0,
+                last_ckpt: 0,
+            }),
+            fired: Mutex::new(Vec::new()),
+            policy: Mutex::new(cfg.policy),
+            reload_fp: Mutex::new(None),
+            workers: Mutex::new(Vec::new()),
+            emitted: AtomicU64::new(0),
+            export_ticks: AtomicU64::new(0),
+            export_failures: AtomicU64::new(0),
+            dropouts_injected: AtomicU64::new(0),
+            ckpt_writes: AtomicU64::new(0),
+            ckpt_failures: AtomicU64::new(0),
+            config_reloads: AtomicU64::new(0),
+            config_reload_errors: AtomicU64::new(0),
+            config_stale: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        };
+        maybe_reload(&shared);
+        assert_eq!(shared.config_reloads.load(Ordering::SeqCst), 1);
+        assert_eq!(lock_unpoisoned(&shared.policy).gap_floor_w, 25.0);
+        // Same fingerprint: no re-reload.
+        maybe_reload(&shared);
+        assert_eq!(shared.config_reloads.load(Ordering::SeqCst), 1);
+        // Bad file (different length): old policy survives, flag raised.
+        write_cfg(&cfg_path, "{\"bounded_gap_s\": 0.00001}");
+        maybe_reload(&shared);
+        assert_eq!(shared.config_reload_errors.load(Ordering::SeqCst), 1);
+        assert!(shared.config_stale.load(Ordering::SeqCst));
+        assert_eq!(lock_unpoisoned(&shared.policy).gap_floor_w, 25.0);
+        // A good write clears the flag.
+        write_cfg(&cfg_path, "{\"gap_floor_w\": 30.25}");
+        maybe_reload(&shared);
+        assert!(!shared.config_stale.load(Ordering::SeqCst));
+        assert_eq!(lock_unpoisoned(&shared.policy).gap_floor_w, 30.25);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_startup_config_fails_fast() {
+        let dir = std::env::temp_dir().join(format!("wattchmen-badcfg-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("policy.json");
+        fs::write(&cfg_path, "{\"period_s\": -1}").unwrap();
+        let mut cfg = quick_cfg(10);
+        cfg.config_path = Some(cfg_path);
+        assert!(run(cfg, FaultPlan::default()).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

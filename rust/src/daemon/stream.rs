@@ -1,0 +1,561 @@
+//! Per-stream telemetry hygiene: a health state machine over raw power
+//! samples plus an integer-nanojoule energy ledger.
+//!
+//! The daemon's conservation invariant — `attributed + idle +
+//! unattributed == total` **to the bit** — is enforced structurally:
+//! every interval's energy is rounded to integer nanojoules *once*
+//! ([`to_nj`]) and then added to exactly one bucket and to the total in
+//! the same call ([`Ledger::credit`]).  Integer addition is associative,
+//! so no replay order, restart, or checkpoint round-trip can break the
+//! balance.
+//!
+//! Sample hygiene follows the paper's measurement-granularity findings
+//! (§6): vendor counters drop samples, repeat timestamps, and emit junk
+//! under driver resets.  Rather than silently extrapolating through
+//! those, each stream runs a `Healthy → Degraded → Stale` machine:
+//! bounded gaps are trapezoid-interpolated, invalid powers are
+//! zero-order-held into the explicit `unattributed` bucket, and
+//! unbounded gaps accrue `gap_floor_w * dt` to `unattributed` so the
+//! books stay honest about what was never observed.
+
+use std::collections::BTreeMap;
+
+use crate::error::Error;
+
+/// Stream health, exported as a gauge (0 = healthy, 1 = degraded,
+/// 2 = stale).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    Stale,
+}
+
+impl Health {
+    pub fn gauge(self) -> u8 {
+        match self {
+            Health::Healthy => 0,
+            Health::Degraded => 1,
+            Health::Stale => 2,
+        }
+    }
+
+    pub fn from_gauge(g: u8) -> Health {
+        match g {
+            0 => Health::Healthy,
+            1 => Health::Degraded,
+            _ => Health::Stale,
+        }
+    }
+}
+
+/// Tunables for the per-stream state machine.  Hot-reloadable (the
+/// daemon validates a candidate with [`StreamPolicy::validate`] and only
+/// then swaps it in — a bad reload keeps the old policy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamPolicy {
+    /// Nominal sample period [s]; gaps are judged relative to this.
+    pub period_s: f64,
+    /// Gaps up to this long [s] are trapezoid-interpolated; anything
+    /// longer is an unbounded gap charged to `unattributed`.
+    pub bounded_gap_s: f64,
+    /// Consecutive good samples required to return to `Healthy`.
+    pub recover_after: u32,
+    /// Consecutive invalid samples after which a stream goes `Stale`.
+    pub stale_after_invalid: u32,
+    /// Power floor [W] charged per second of unbounded gap, so silent
+    /// dropout still shows up in the books instead of vanishing.
+    pub gap_floor_w: f64,
+}
+
+impl Default for StreamPolicy {
+    fn default() -> Self {
+        StreamPolicy {
+            period_s: 0.1,
+            bounded_gap_s: 1.0,
+            recover_after: 5,
+            stale_after_invalid: 3,
+            gap_floor_w: 10.0,
+        }
+    }
+}
+
+impl StreamPolicy {
+    pub fn validate(&self) -> Result<(), Error> {
+        if !(self.period_s.is_finite() && self.period_s > 0.0) {
+            return Err(Error::bad_request("stream policy: period_s must be finite and > 0"));
+        }
+        if !(self.bounded_gap_s.is_finite() && self.bounded_gap_s >= self.period_s) {
+            return Err(Error::bad_request("stream policy: bounded_gap_s must be >= period_s"));
+        }
+        if self.recover_after == 0 {
+            return Err(Error::bad_request("stream policy: recover_after must be >= 1"));
+        }
+        if self.stale_after_invalid == 0 {
+            return Err(Error::bad_request("stream policy: stale_after_invalid must be >= 1"));
+        }
+        if !(self.gap_floor_w.is_finite() && self.gap_floor_w >= 0.0) {
+            return Err(Error::bad_request("stream policy: gap_floor_w must be finite and >= 0"));
+        }
+        Ok(())
+    }
+}
+
+/// One sample as it travels from the sampler to the attributor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamSample {
+    /// Which stream this sample belongs to.
+    pub stream: usize,
+    /// Monotone per-stream sample index (the dedup key across restarts).
+    pub index: u64,
+    /// Timestamp [s] as reported by the sensor (may skip or go
+    /// backwards under clock faults).
+    pub t_s: f64,
+    /// Reported power [W] (may be NaN or negative under sensor faults).
+    pub power_w: f64,
+    /// Workload tag (`None` = idle).
+    pub tag: Option<u16>,
+}
+
+/// Round an interval energy in joules to integer nanojoules.  Negative,
+/// NaN, and infinite inputs clamp to zero — garbage never enters the
+/// ledger.  This is the *single* float→integer crossing in the daemon.
+pub fn to_nj(joules: f64) -> u128 {
+    if !joules.is_finite() || joules <= 0.0 {
+        0
+    } else {
+        (joules * 1e9).round() as u128
+    }
+}
+
+/// The attribution ledger, in integer nanojoules.
+///
+/// `total_nj` is maintained *alongside* every bucket credit rather than
+/// recomputed, so `conserved()` checks a real runtime invariant, not a
+/// tautology over one summation path.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Ledger {
+    /// Energy per workload tag [nJ].
+    pub attributed_nj: BTreeMap<u16, u128>,
+    /// Energy observed while untagged (explicit idle) [nJ].
+    pub idle_nj: u128,
+    /// Energy from invalid samples and gaps — observed time the daemon
+    /// refuses to attribute [nJ].
+    pub unattributed_nj: u128,
+    /// Integrated stream energy [nJ]; every credit adds here too.
+    pub total_nj: u128,
+    /// Samples that contributed to the ledger (non-duplicate ingests).
+    pub samples: u64,
+}
+
+impl Ledger {
+    /// Credit an interval to a workload tag (or idle), and the total.
+    pub fn credit(&mut self, tag: Option<u16>, nj: u128) {
+        match tag {
+            Some(t) => *self.attributed_nj.entry(t).or_insert(0) += nj,
+            None => self.idle_nj += nj,
+        }
+        self.total_nj += nj;
+    }
+
+    /// Credit an interval to the unattributed bucket, and the total.
+    pub fn credit_unattributed(&mut self, nj: u128) {
+        self.unattributed_nj += nj;
+        self.total_nj += nj;
+    }
+
+    /// Sum of all per-tag attributed energy [nJ].
+    pub fn attributed_total_nj(&self) -> u128 {
+        self.attributed_nj.values().sum()
+    }
+
+    /// The conservation invariant: attributed + idle + unattributed
+    /// equals the integrated total, exactly.
+    pub fn conserved(&self) -> bool {
+        self.attributed_total_nj() + self.idle_nj + self.unattributed_nj == self.total_nj
+    }
+}
+
+/// Hygiene counters per stream (all monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StreamCounters {
+    /// Samples dropped because their index was already ingested
+    /// (replays after a restart).
+    pub dropped_dup: u64,
+    /// Samples whose timestamp did not advance (clock went backwards
+    /// or repeated) — no energy integrated.
+    pub out_of_order: u64,
+    /// NaN / negative power samples (zero-order-held to unattributed).
+    pub invalid: u64,
+    /// Bounded gaps (> 1.5 periods) that were trapezoid-interpolated.
+    pub gaps_interpolated: u64,
+    /// Unbounded gaps charged to unattributed at the gap floor.
+    pub unbounded_gaps: u64,
+}
+
+/// Per-stream attribution state: the dedup cursor, the last accepted
+/// point, and the health machine.  Everything here round-trips through
+/// checkpoints so a resumed daemon continues bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamState {
+    /// Next sample index expected; anything below is a duplicate.
+    pub next_index: u64,
+    /// Timestamp of the last accepted sample, once anchored.
+    pub last_t_s: Option<f64>,
+    /// Power of the last *valid* sample (the zero-order-hold level).
+    pub last_power_w: f64,
+    pub health: Health,
+    /// Consecutive good samples (drives Degraded → Healthy recovery).
+    pub good_streak: u32,
+    /// Consecutive invalid samples (drives Degraded → Stale).
+    pub consec_invalid: u32,
+    pub counters: StreamCounters,
+}
+
+impl Default for StreamState {
+    fn default() -> Self {
+        StreamState {
+            next_index: 0,
+            last_t_s: None,
+            last_power_w: 0.0,
+            health: Health::Healthy,
+            good_streak: 0,
+            consec_invalid: 0,
+            counters: StreamCounters::default(),
+        }
+    }
+}
+
+impl StreamState {
+    /// Ingest one sample, crediting any interval energy to `ledger`.
+    ///
+    /// Returns `true` if the sample was consumed (advanced the cursor),
+    /// `false` if it was dropped as a duplicate.  This is the only
+    /// mutation path for both the stream state and the ledger, and it
+    /// is a pure function of (state, sample, policy) — no clocks — so
+    /// an offline replay of the same samples reproduces the ledger
+    /// bit-for-bit.
+    pub fn ingest(
+        &mut self,
+        s: &StreamSample,
+        policy: &StreamPolicy,
+        ledger: &mut Ledger,
+    ) -> bool {
+        if s.index < self.next_index {
+            self.counters.dropped_dup += 1;
+            return false;
+        }
+        self.next_index = s.index + 1;
+        ledger.samples += 1;
+        let valid = s.power_w.is_finite() && s.power_w >= 0.0;
+
+        let last_t = match self.last_t_s {
+            None => {
+                // First sample anchors the stream; no interval yet.
+                if valid {
+                    self.last_t_s = Some(s.t_s);
+                    self.last_power_w = s.power_w;
+                    self.note_good(policy);
+                } else {
+                    self.note_invalid(policy);
+                }
+                return true;
+            }
+            Some(t) => t,
+        };
+
+        let dt = s.t_s - last_t;
+        if !dt.is_finite() || dt <= 0.0 {
+            // Clock repeated or went backwards: integrate nothing, keep
+            // the anchor, flag the stream.
+            self.counters.out_of_order += 1;
+            self.good_streak = 0;
+            self.health = Health::Degraded;
+            return true;
+        }
+
+        if dt > policy.bounded_gap_s {
+            // Unbounded gap: we refuse to interpolate.  Charge the gap
+            // floor to unattributed so the lost wall time stays on the
+            // books, and mark the stream stale.
+            ledger.credit_unattributed(to_nj(policy.gap_floor_w * dt));
+            self.counters.unbounded_gaps += 1;
+            self.health = Health::Stale;
+            self.good_streak = 0;
+            if valid {
+                // The stream is back: re-anchor and start recovering.
+                self.last_t_s = Some(s.t_s);
+                self.last_power_w = s.power_w;
+                self.consec_invalid = 0;
+                self.health = Health::Degraded;
+                self.good_streak = 1;
+            } else {
+                // Still junk: advance the anchor time (so the gap is
+                // not re-charged) but hold the old power level.
+                self.last_t_s = Some(s.t_s);
+                self.counters.invalid += 1;
+                self.consec_invalid += 1;
+            }
+            return true;
+        }
+
+        if valid {
+            // The normal path: trapezoid between the last accepted
+            // point and this one, credited to this sample's tag.
+            let joules = 0.5 * (self.last_power_w + s.power_w) * dt;
+            ledger.credit(s.tag, to_nj(joules));
+            self.last_t_s = Some(s.t_s);
+            self.last_power_w = s.power_w;
+            if dt > 1.5 * policy.period_s {
+                // A short dropout we bridged; flag it but keep going.
+                self.counters.gaps_interpolated += 1;
+                self.health = Health::Degraded;
+                self.good_streak = 0;
+            } else {
+                self.note_good(policy);
+            }
+            self.consec_invalid = 0;
+        } else {
+            // Invalid power inside a bounded interval: zero-order-hold
+            // the last valid level, but into `unattributed` — we are
+            // covering time, not endorsing a reading.
+            ledger.credit_unattributed(to_nj(self.last_power_w * dt));
+            self.last_t_s = Some(s.t_s);
+            self.note_invalid(policy);
+        }
+        true
+    }
+
+    fn note_good(&mut self, policy: &StreamPolicy) {
+        self.consec_invalid = 0;
+        self.good_streak += 1;
+        if self.health != Health::Healthy && self.good_streak >= policy.recover_after {
+            self.health = Health::Healthy;
+        }
+    }
+
+    fn note_invalid(&mut self, policy: &StreamPolicy) {
+        self.counters.invalid += 1;
+        self.consec_invalid += 1;
+        self.good_streak = 0;
+        if self.consec_invalid >= policy.stale_after_invalid {
+            self.health = Health::Stale;
+        } else if self.health == Health::Healthy {
+            self.health = Health::Degraded;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(index: u64, t_s: f64, power_w: f64, tag: Option<u16>) -> StreamSample {
+        StreamSample { stream: 0, index, t_s, power_w, tag }
+    }
+
+    fn pol() -> StreamPolicy {
+        StreamPolicy::default()
+    }
+
+    #[test]
+    fn to_nj_clamps_garbage() {
+        assert_eq!(to_nj(1.0), 1_000_000_000);
+        assert_eq!(to_nj(0.5e-9), 1); // rounds
+        assert_eq!(to_nj(-3.0), 0);
+        assert_eq!(to_nj(f64::NAN), 0);
+        assert_eq!(to_nj(f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn trapezoid_attribution_balances() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        assert!(st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led));
+        assert!(st.ingest(&sample(1, 0.1, 120.0, Some(3)), &p, &mut led));
+        assert!(st.ingest(&sample(2, 0.2, 80.0, None), &p, &mut led));
+        // 0.5*(100+120)*0.1 = 11 J to tag 3; 0.5*(120+80)*0.1 = 10 J idle.
+        assert_eq!(led.attributed_nj.get(&3), Some(&11_000_000_000));
+        assert_eq!(led.idle_nj, 10_000_000_000);
+        assert_eq!(led.unattributed_nj, 0);
+        assert!(led.conserved());
+        assert_eq!(led.samples, 3);
+        assert_eq!(st.health, Health::Healthy);
+    }
+
+    #[test]
+    fn duplicates_are_dropped_without_ledger_effect() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led);
+        st.ingest(&sample(1, 0.1, 100.0, None), &p, &mut led);
+        let before = led.clone();
+        assert!(!st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led));
+        assert!(!st.ingest(&sample(1, 0.1, 500.0, Some(9)), &p, &mut led));
+        assert_eq!(led, before);
+        assert_eq!(st.counters.dropped_dup, 2);
+    }
+
+    #[test]
+    fn invalid_power_holds_into_unattributed_then_goes_stale() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 0.0, 200.0, Some(1)), &p, &mut led);
+        for i in 1..=3u64 {
+            st.ingest(&sample(i, i as f64 * 0.1, f64::NAN, Some(1)), &p, &mut led);
+        }
+        // Three held intervals at 200 W * 0.1 s = 20 J each.
+        assert_eq!(led.unattributed_nj, 60_000_000_000);
+        assert_eq!(st.counters.invalid, 3);
+        assert_eq!(st.health, Health::Stale);
+        assert!(led.conserved());
+        // Recovery: default recover_after = 5 good samples.
+        for i in 4..9u64 {
+            st.ingest(&sample(i, i as f64 * 0.1, 200.0, Some(1)), &p, &mut led);
+        }
+        assert_eq!(st.health, Health::Healthy);
+    }
+
+    #[test]
+    fn negative_power_is_invalid() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led);
+        st.ingest(&sample(1, 0.1, -50.0, None), &p, &mut led);
+        assert_eq!(st.counters.invalid, 1);
+        assert_eq!(led.unattributed_nj, to_nj(100.0 * 0.1));
+        assert_eq!(st.health, Health::Degraded);
+    }
+
+    #[test]
+    fn out_of_order_timestamps_integrate_nothing() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 1.0, 100.0, None), &p, &mut led);
+        st.ingest(&sample(1, 0.5, 100.0, None), &p, &mut led);
+        st.ingest(&sample(2, 1.0, 100.0, None), &p, &mut led);
+        assert_eq!(st.counters.out_of_order, 2);
+        assert_eq!(led.total_nj, 0);
+        assert_eq!(st.health, Health::Degraded);
+        // The anchor never moved, so the next in-order sample works.
+        st.ingest(&sample(3, 1.1, 100.0, None), &p, &mut led);
+        assert_eq!(led.idle_nj, to_nj(100.0 * 0.1));
+        assert!(led.conserved());
+    }
+
+    #[test]
+    fn bounded_gap_interpolates_and_flags() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led);
+        // 0.4 s gap: bounded (<= 1.0 s) but > 1.5 periods.
+        st.ingest(&sample(1, 0.4, 100.0, None), &p, &mut led);
+        assert_eq!(st.counters.gaps_interpolated, 1);
+        assert_eq!(led.idle_nj, to_nj(100.0 * 0.4));
+        assert_eq!(st.health, Health::Degraded);
+    }
+
+    #[test]
+    fn unbounded_gap_charges_the_floor_to_unattributed() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led);
+        // 5 s gap > bounded_gap_s = 1.0: floor 10 W * 5 s = 50 J.
+        st.ingest(&sample(1, 5.0, 100.0, Some(2)), &p, &mut led);
+        assert_eq!(st.counters.unbounded_gaps, 1);
+        assert_eq!(led.unattributed_nj, to_nj(50.0));
+        assert_eq!(led.attributed_nj.get(&2), None);
+        // Came back valid: degraded with streak restarted.
+        assert_eq!(st.health, Health::Degraded);
+        assert_eq!(st.good_streak, 1);
+        // Next interval attributes normally from the new anchor.
+        st.ingest(&sample(2, 5.1, 100.0, Some(2)), &p, &mut led);
+        assert_eq!(led.attributed_nj.get(&2), Some(&to_nj(10.0)));
+        assert!(led.conserved());
+    }
+
+    #[test]
+    fn unbounded_gap_with_invalid_sample_does_not_recharge() {
+        let mut st = StreamState::default();
+        let mut led = Ledger::default();
+        let p = pol();
+        st.ingest(&sample(0, 0.0, 100.0, None), &p, &mut led);
+        st.ingest(&sample(1, 5.0, f64::NAN, None), &p, &mut led);
+        assert_eq!(led.unattributed_nj, to_nj(50.0));
+        assert_eq!(st.health, Health::Stale);
+        // The anchor advanced, so the next sample sees a 0.1 s interval,
+        // not another 5 s gap.
+        st.ingest(&sample(2, 5.1, 100.0, None), &p, &mut led);
+        assert_eq!(st.counters.unbounded_gaps, 1);
+        assert_eq!(led.idle_nj, to_nj(0.5 * (100.0 + 100.0) * 0.1));
+        assert!(led.conserved());
+    }
+
+    #[test]
+    fn replay_reproduces_the_ledger_exactly() {
+        // The determinism property the soak test leans on: same samples,
+        // same ledger bits, regardless of how ingestion is interleaved
+        // with clones/checkpoints.
+        let p = pol();
+        let samples: Vec<StreamSample> = (0..200)
+            .map(|i| {
+                let power = if i % 17 == 0 { f64::NAN } else { 50.0 + (i % 7) as f64 * 20.0 };
+                let tag = if i % 3 == 0 { None } else { Some((i % 2) as u16) };
+                sample(i, i as f64 * 0.1, power, tag)
+            })
+            .collect();
+        let mut st1 = StreamState::default();
+        let mut led1 = Ledger::default();
+        for s in &samples {
+            st1.ingest(s, &p, &mut led1);
+        }
+        // Second pass with a checkpoint-style clone midway.
+        let mut st2 = StreamState::default();
+        let mut led2 = Ledger::default();
+        for s in &samples[..100] {
+            st2.ingest(s, &p, &mut led2);
+        }
+        let mut st2 = st2.clone();
+        let mut led2 = led2.clone();
+        for s in &samples[100..] {
+            st2.ingest(s, &p, &mut led2);
+        }
+        assert_eq!(led1, led2);
+        assert_eq!(st1, st2);
+        assert!(led1.conserved());
+    }
+
+    #[test]
+    fn policy_validation_rejects_nonsense() {
+        assert!(StreamPolicy::default().validate().is_ok());
+        let mut p = StreamPolicy::default();
+        p.period_s = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = StreamPolicy::default();
+        p.bounded_gap_s = 0.01;
+        assert!(p.validate().is_err());
+        let mut p = StreamPolicy::default();
+        p.recover_after = 0;
+        assert!(p.validate().is_err());
+        let mut p = StreamPolicy::default();
+        p.stale_after_invalid = 0;
+        assert!(p.validate().is_err());
+        let mut p = StreamPolicy::default();
+        p.gap_floor_w = f64::NAN;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn health_gauge_round_trips() {
+        for h in [Health::Healthy, Health::Degraded, Health::Stale] {
+            assert_eq!(Health::from_gauge(h.gauge()), h);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Panic-supervision for the daemon's worker threads.
+//!
+//! Each worker runs inside `catch_unwind` on its own named thread.  A
+//! panic is counted and the worker body is re-entered after an
+//! exponential-backoff-with-jitter delay ([`util::sync::Backoff`]); a
+//! clean return ends supervision.  When the restart budget is exhausted
+//! the worker is marked **degraded** and parked — the daemon process
+//! itself *never* exits on a worker failure, it keeps serving whatever
+//! still works and raises the health flag for operators to see
+//! (`wattchmen_daemon_workers_degraded` in the Prometheus export).
+//!
+//! Jitter is seeded per worker name, so two daemons with the same seed
+//! replay identical restart timing — the property that keeps the
+//! fault-injected soak test deterministic.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::util::prng::{fnv1a, Rng};
+use crate::util::sync::Backoff;
+
+/// Restart discipline shared by all workers of one supervisor.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartPolicy {
+    pub backoff: Backoff,
+    /// Restarts allowed before a worker is declared degraded.
+    pub budget: u32,
+    /// Seed for the per-worker jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            backoff: Backoff {
+                base: Duration::from_millis(10),
+                max: Duration::from_secs(2),
+                jitter_frac: 0.5,
+            },
+            budget: 8,
+            seed: 0,
+        }
+    }
+}
+
+/// Live health of one supervised worker (shared with the exporter).
+#[derive(Debug)]
+pub struct WorkerStatus {
+    name: &'static str,
+    restarts: AtomicU64,
+    degraded: AtomicBool,
+    done: AtomicBool,
+}
+
+impl WorkerStatus {
+    fn new(name: &'static str) -> Arc<WorkerStatus> {
+        Arc::new(WorkerStatus {
+            name,
+            restarts: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            done: AtomicBool::new(false),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Restarts actually performed (panics caught minus a final
+    /// budget-exhausting panic, if any).
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::SeqCst)
+    }
+
+    /// True once the restart budget is exhausted (or the thread could
+    /// not be spawned at all).  A degraded worker stays down.
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    /// True once supervision has ended (clean return or degraded).
+    pub fn done(&self) -> bool {
+        self.done.load(Ordering::SeqCst)
+    }
+}
+
+/// Spawns and supervises named worker threads.
+pub struct Supervisor {
+    policy: RestartPolicy,
+    handles: Vec<thread::JoinHandle<()>>,
+    statuses: Vec<Arc<WorkerStatus>>,
+}
+
+impl Supervisor {
+    pub fn new(policy: RestartPolicy) -> Supervisor {
+        Supervisor { policy, handles: Vec::new(), statuses: Vec::new() }
+    }
+
+    /// Spawn a supervised worker.  `body` is re-invoked after each
+    /// caught panic (under the restart budget), so it must be safe to
+    /// re-enter — the daemon's workers keep all cross-restart state in
+    /// shared structures guarded by `lock_unpoisoned`.
+    pub fn spawn(
+        &mut self,
+        name: &'static str,
+        body: impl Fn() + Send + 'static,
+    ) -> Arc<WorkerStatus> {
+        let status = WorkerStatus::new(name);
+        let policy = self.policy;
+        let st = Arc::clone(&status);
+        let spawned = thread::Builder::new()
+            .name(format!("wattchmen-{name}"))
+            .spawn(move || {
+                let mut rng = Rng::new(policy.seed ^ fnv1a(name));
+                let mut attempt: u32 = 0;
+                loop {
+                    if catch_unwind(AssertUnwindSafe(&body)).is_ok() {
+                        break;
+                    }
+                    if attempt >= policy.budget {
+                        st.degraded.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    st.restarts.fetch_add(1, Ordering::SeqCst);
+                    thread::sleep(policy.backoff.delay(attempt, rng.f64()));
+                    attempt += 1;
+                }
+                st.done.store(true, Ordering::SeqCst);
+            });
+        match spawned {
+            Ok(h) => self.handles.push(h),
+            Err(_) => {
+                // Thread creation failed (resource exhaustion): the
+                // worker is degraded from birth, the daemon lives on.
+                status.degraded.store(true, Ordering::SeqCst);
+                status.done.store(true, Ordering::SeqCst);
+            }
+        }
+        self.statuses.push(Arc::clone(&status));
+        status
+    }
+
+    pub fn statuses(&self) -> &[Arc<WorkerStatus>] {
+        &self.statuses
+    }
+
+    pub fn total_restarts(&self) -> u64 {
+        self.statuses.iter().map(|s| s.restarts()).sum()
+    }
+
+    pub fn any_degraded(&self) -> bool {
+        self.statuses.iter().any(|s| s.degraded())
+    }
+
+    /// Wait for every worker to end supervision (clean or degraded).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn fast_policy(budget: u32) -> RestartPolicy {
+        RestartPolicy {
+            backoff: Backoff {
+                base: Duration::from_millis(1),
+                max: Duration::from_millis(2),
+                jitter_frac: 0.0,
+            },
+            budget,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn panicking_worker_is_restarted_then_finishes() {
+        let mut sup = Supervisor::new(fast_policy(8));
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&calls);
+        let status = sup.spawn("flaky", move || {
+            if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("injected");
+            }
+        });
+        sup.join();
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        assert_eq!(status.restarts(), 2);
+        assert!(!status.degraded());
+        assert!(status.done());
+        assert_eq!(status.name(), "flaky");
+    }
+
+    #[test]
+    fn budget_exhaustion_degrades_without_killing_the_process() {
+        let mut sup = Supervisor::new(fast_policy(2));
+        let status = sup.spawn("doomed", || panic!("always"));
+        sup.join();
+        // budget=2: initial run + 2 restarts, then degraded.
+        assert_eq!(status.restarts(), 2);
+        assert!(status.degraded());
+        assert!(status.done());
+        // The supervising test process is alive to assert this.
+    }
+
+    #[test]
+    fn clean_worker_never_restarts() {
+        let mut sup = Supervisor::new(fast_policy(8));
+        let status = sup.spawn("clean", || {});
+        assert_eq!(sup.statuses().len(), 1);
+        assert!(!sup.any_degraded());
+        assert_eq!(sup.total_restarts(), 0);
+        sup.join();
+        assert_eq!(status.restarts(), 0);
+        assert!(!status.degraded());
+    }
+}

@@ -14,11 +14,15 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
 
 use crate::error::Error;
 use crate::model::Mode;
 use crate::service::protocol;
 use crate::util::json::{parse, Json};
+use crate::util::prng::Rng;
+use crate::util::sync::Backoff;
 
 /// One served prediction, decoded from the wire.
 #[derive(Clone, Debug)]
@@ -68,10 +72,42 @@ pub struct RemoteSuite {
     pub text: String,
 }
 
+/// Opt-in retry discipline for `overloaded` responses (see
+/// [`RemoteClient::with_retry`]).  Only load-shedding is retried —
+/// every other failure (bad request, unknown arch, deadline, I/O) is
+/// surfaced immediately, because retrying it cannot succeed.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryConfig {
+    /// Extra attempts after the first (0 = behave as without retry).
+    pub max_retries: u32,
+    /// Backoff base when the server sends no `retry_after_ms` hint.
+    pub base: Duration,
+    /// Ceiling on any single wait, hinted or not.
+    pub max_wait: Duration,
+    /// Jitter fraction (see [`Backoff`]); desynchronizes clients that
+    /// were all shed by the same full queue.
+    pub jitter_frac: f64,
+    /// Seed for the jitter stream (deterministic in tests).
+    pub seed: u64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> RetryConfig {
+        RetryConfig {
+            max_retries: 3,
+            base: Duration::from_millis(10),
+            max_wait: Duration::from_secs(1),
+            jitter_frac: 0.5,
+            seed: 0,
+        }
+    }
+}
+
 /// Typed JSON-over-TCP client for `wattchmen serve`.
 pub struct RemoteClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    retry: Option<(RetryConfig, Rng)>,
 }
 
 impl RemoteClient {
@@ -89,7 +125,18 @@ impl RemoteClient {
         Ok(RemoteClient {
             reader,
             writer: stream,
+            retry: None,
         })
+    }
+
+    /// Enable bounded, jittered retries of `overloaded` responses.  The
+    /// server's `retry_after_ms` hint, when present and sane, replaces
+    /// the configured base as the backoff floor — the server knows its
+    /// own drain rate better than the client does.
+    pub fn with_retry(mut self, cfg: RetryConfig) -> RemoteClient {
+        let rng = Rng::new(cfg.seed);
+        self.retry = Some((cfg, rng));
+        self
     }
 
     /// Predict one workload.
@@ -167,7 +214,41 @@ impl RemoteClient {
 
     /// One request line out, one response line in, success checked and
     /// wire errors of either dialect mapped onto typed [`Error`]s.
+    /// With [`with_retry`](Self::with_retry), `overloaded` responses are
+    /// retried (only those — see [`RetryConfig`]) under the bounded
+    /// backoff schedule; I/O and parse failures are never retried, the
+    /// connection state after them is unknown.
     fn roundtrip(&mut self, req: &Json) -> Result<Json, Error> {
+        let mut attempt: u32 = 0;
+        loop {
+            let resp = self.send_recv(req)?;
+            if resp.get("ok") == Some(&Json::Bool(true)) {
+                return Ok(resp);
+            }
+            let err = wire_error(&resp);
+            // Server drain-rate hint, honored when present and sane.
+            let hint = resp
+                .get("retry_after_ms")
+                .and_then(Json::as_f64)
+                .filter(|ms| ms.is_finite() && *ms >= 0.0)
+                .map(|ms| Duration::from_secs_f64(ms / 1000.0));
+            let Some((cfg, rng)) = self.retry.as_mut() else {
+                return Err(err);
+            };
+            if err != Error::Overloaded || attempt >= cfg.max_retries {
+                return Err(err);
+            }
+            let schedule = Backoff {
+                base: hint.unwrap_or(cfg.base).min(cfg.max_wait),
+                max: cfg.max_wait,
+                jitter_frac: cfg.jitter_frac,
+            };
+            thread::sleep(schedule.delay(attempt, rng.f64()));
+            attempt += 1;
+        }
+    }
+
+    fn send_recv(&mut self, req: &Json) -> Result<Json, Error> {
         self.writer
             .write_all(req.to_string_compact().as_bytes())
             .map_err(|e| Error::io(format!("sending request: {e}")))?;
@@ -182,12 +263,8 @@ impl RemoteClient {
         if n == 0 {
             return Err(Error::io("server closed the connection"));
         }
-        let resp = parse(line.trim())
-            .map_err(|e| Error::internal(format!("malformed server response: {e}")))?;
-        if resp.get("ok") == Some(&Json::Bool(true)) {
-            return Ok(resp);
-        }
-        Err(wire_error(&resp))
+        parse(line.trim())
+            .map_err(|e| Error::internal(format!("malformed server response: {e}")))
     }
 }
 
@@ -353,6 +430,79 @@ mod tests {
         let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
         let caps = client.capabilities().unwrap().expect("v2 server");
         assert!(caps.get("protocol_versions").is_some());
+    }
+
+    /// Fast deterministic schedule for the retry tests.
+    fn test_retry(max_retries: u32) -> RetryConfig {
+        RetryConfig {
+            max_retries,
+            base: Duration::from_millis(1),
+            max_wait: Duration::from_millis(2),
+            jitter_frac: 0.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn overloaded_is_retried_until_success_honoring_the_hint() {
+        let shed = r#"{"error":"overloaded","ok":false,"retry_after_ms":1}"#.to_string();
+        let (addr, seen) = stub(vec![
+            shed.clone(),
+            shed,
+            sample_prediction_json().to_string_compact(),
+        ]);
+        let mut client = RemoteClient::connect(&addr.to_string())
+            .unwrap()
+            .with_retry(test_retry(3));
+        let pred = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+            .unwrap();
+        assert_eq!(pred.workload, "hotspot");
+        // The same request line went out three times (2 sheds + 1 hit).
+        let lines: Vec<String> = seen.try_iter().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines.iter().all(|l| l == &lines[0]));
+    }
+
+    #[test]
+    fn retries_are_bounded_then_overloaded_surfaces() {
+        let shed = r#"{"error":"overloaded","ok":false,"retry_after_ms":1}"#.to_string();
+        let (addr, seen) = stub(vec![shed.clone(), shed.clone(), shed.clone(), shed]);
+        let mut client = RemoteClient::connect(&addr.to_string())
+            .unwrap()
+            .with_retry(test_retry(2));
+        let err = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+            .unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        // Initial attempt + 2 retries, never a 4th.
+        assert_eq!(seen.try_iter().count(), 3);
+    }
+
+    #[test]
+    fn without_retry_config_overloaded_surfaces_immediately() {
+        let shed = r#"{"error":"overloaded","ok":false,"retry_after_ms":10}"#.to_string();
+        let (addr, seen) = stub(vec![shed]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let err = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+            .unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        assert_eq!(seen.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn non_overload_errors_are_never_retried() {
+        let canned = r#"{"error":"unknown arch 'nope' (see `wattchmen list`)","ok":false}"#;
+        let (addr, seen) = stub(vec![canned.to_string()]);
+        let mut client = RemoteClient::connect(&addr.to_string())
+            .unwrap()
+            .with_retry(test_retry(5));
+        let err = client
+            .predict("nope", "hotspot", Mode::Pred, None)
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_arch");
+        assert_eq!(seen.try_iter().count(), 1);
     }
 
     #[test]

@@ -68,6 +68,85 @@ pub fn sensor_read(
     sensor_apply(true_power_w, quant_w, noise_frac, rng.normal())
 }
 
+/// One phase of a [`StreamSpec`] schedule: a tag (index into the
+/// consumer's workload-name table; `None` is idle) held at a true power
+/// level for a fixed duration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamPhase {
+    pub tag: Option<u16>,
+    pub secs: f64,
+    pub power_w: f64,
+}
+
+/// A deterministic synthetic telemetry stream: a periodic schedule of
+/// [`StreamPhase`]s observed through the same quantizing/noisy sensor
+/// model as the campaign telemetry ([`sensor_apply`]).
+///
+/// [`sample_at`](StreamSpec::sample_at) is a *pure function* of
+/// `(stream, index)` — no generator state — so the stream is
+/// random-access: `wattchmen daemon` resuming from a checkpoint
+/// regenerates exactly the samples it has not yet attributed, and a
+/// sampler restarted mid-batch re-emits the identical batch.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    pub seed: u64,
+    /// Nominal sample period [s].
+    pub period_s: f64,
+    pub quant_w: f64,
+    pub noise_frac: f64,
+    pub phases: Vec<StreamPhase>,
+}
+
+/// One synthesized stream sample (see [`StreamSpec::sample_at`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SynthSample {
+    pub t_s: f64,
+    pub power_w: f64,
+    pub tag: Option<u16>,
+}
+
+impl StreamSpec {
+    /// Total schedule length [s]; the schedule repeats with this period.
+    pub fn cycle_secs(&self) -> f64 {
+        self.phases.iter().map(|p| p.secs.max(0.0)).sum()
+    }
+
+    /// The sample `index` of stream `stream`, as a pure function of its
+    /// arguments.  Streams are decorrelated by a per-stream schedule
+    /// offset and an independent per-sample noise draw.
+    pub fn sample_at(&self, stream: u64, index: u64) -> SynthSample {
+        let t_s = index as f64 * self.period_s;
+        let cycle = self.cycle_secs();
+        let (true_w, tag) = if cycle > 0.0 && !self.phases.is_empty() {
+            // Per-stream offset shifts where in the schedule this stream
+            // starts, so a fleet of streams is not phase-locked.
+            let shift = (stream as f64) * 0.37 * cycle;
+            let mut offset = (t_s + shift) % cycle;
+            let mut found = (0.0, None);
+            for p in &self.phases {
+                if offset < p.secs.max(0.0) {
+                    found = (p.power_w, p.tag);
+                    break;
+                }
+                offset -= p.secs.max(0.0);
+            }
+            found
+        } else {
+            (0.0, None)
+        };
+        // Independent per-sample noise stream: seeding by (seed, stream,
+        // index) keeps the draw identical no matter what was sampled
+        // before — the property that makes checkpoints resumable.
+        let mut rng = crate::util::prng::Rng::new(
+            self.seed
+                ^ stream.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ index.wrapping_mul(0xD1B54A32D192ED03),
+        );
+        let power_w = sensor_apply(true_w, self.quant_w, self.noise_frac, rng.normal());
+        SynthSample { t_s, power_w, tag }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +168,52 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!((mean - 200.0).abs() < 0.2, "mean {mean}");
+    }
+
+    fn spec() -> StreamSpec {
+        StreamSpec {
+            seed: 7,
+            period_s: 0.1,
+            quant_w: 1.0,
+            noise_frac: 0.01,
+            phases: vec![
+                StreamPhase { tag: None, secs: 1.0, power_w: 60.0 },
+                StreamPhase { tag: Some(0), secs: 2.0, power_w: 230.0 },
+                StreamPhase { tag: Some(1), secs: 1.5, power_w: 180.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn synthetic_stream_is_a_pure_function_of_index() {
+        let s = spec();
+        // Same (stream, index) → identical bytes, regardless of call
+        // order; this is the random-access property checkpoints rely on.
+        let a = s.sample_at(2, 1234);
+        let _ = s.sample_at(0, 5);
+        let b = s.sample_at(2, 1234);
+        assert_eq!(a, b);
+        assert_eq!(a.t_s, 123.4);
+        // Different streams decorrelate (somewhere in the first 20
+        // samples the noise draw or phase shift must differ).
+        assert!((0..20).any(|i| s.sample_at(0, i) != s.sample_at(1, i)));
+    }
+
+    #[test]
+    fn synthetic_stream_follows_the_phase_schedule() {
+        let s = spec();
+        // Stream 0 has no shift: t=0.5 is idle, t=1.5 is tag 0, t=3.5 is
+        // tag 1 (cycle is 4.5 s).
+        assert_eq!(s.sample_at(0, 5).tag, None);
+        assert_eq!(s.sample_at(0, 15).tag, Some(0));
+        assert_eq!(s.sample_at(0, 35).tag, Some(1));
+        // The schedule repeats: index 50 is t=5.0 ≡ 0.5 → idle again.
+        assert_eq!(s.sample_at(0, 50).tag, None);
+        // Powers go through the quantizing sensor (whole watts here) and
+        // sit near the phase's true level.
+        let p = s.sample_at(0, 15).power_w;
+        assert_eq!(p, p.round());
+        assert!((p - 230.0).abs() < 25.0, "{p}");
     }
 
     #[test]

@@ -47,6 +47,15 @@
 //! advancement, per-arch tables resolved once through the engine, and a
 //! byte-deterministic parallel merge.
 //!
+//! The [`daemon`] module is the continuous-monitoring shape of the same
+//! model: `wattchmen daemon` runs supervised sampler → attributor →
+//! exporter workers over live telemetry streams, with per-stream health
+//! state machines, an integer-nanojoule ledger whose
+//! `attributed + idle + unattributed == total` invariant holds to the
+//! bit, crash-safe fsync'd checkpoints, and a deterministic
+//! [`FaultPlan`](daemon::faults::FaultPlan) for fault-injection soak
+//! testing.  See `DAEMON.md` at the repo root for the ops guide.
+//!
 //! The crate lints itself: the [`lint`] module and its `wlint` binary
 //! enforce repo-specific invariants (panic-safe request paths, typed
 //! errors, deterministic simulation layers) in CI.  The rule catalog
@@ -69,6 +78,7 @@
     clippy::type_complexity
 )]
 
+pub mod daemon;
 pub mod gpusim;
 pub mod report;
 pub mod runtime;

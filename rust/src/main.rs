@@ -7,6 +7,8 @@
 //!   predict               predict a workload's energy from a saved table
 //!   serve                 JSON-over-TCP batched prediction service
 //!   fleet                 simulate a heterogeneous device fleet for a day
+//!   daemon                supervised continuous attribution (crash-safe,
+//!                         fault-injectable; see DAEMON.md)
 //!   list                  list environments / workloads / experiments
 //!   version
 //!
@@ -17,6 +19,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use wattchmen::daemon::{self, faults::FaultPlan, DaemonConfig};
 use wattchmen::engine::client::RemoteClient;
 use wattchmen::engine::DEFAULT_TOP;
 use wattchmen::fleet;
@@ -285,6 +288,55 @@ fn cmd_fleet(args: &Args) -> Result<(), Error> {
     Ok(())
 }
 
+/// `wattchmen daemon`: supervised continuous attribution over synthetic
+/// telemetry streams — worker panics are caught and restarted, sensor
+/// garbage is classified per stream, the integer-nanojoule ledger stays
+/// exactly conserved, and checkpoints make a restart resume without
+/// double-counting a sample.  `--fault-plan` injects a deterministic
+/// failure schedule (the CI soak runs `seeded:42`); see DAEMON.md.
+fn cmd_daemon(args: &Args) -> Result<(), Error> {
+    let d = DaemonConfig::default();
+    let interval_ms = args.get_f64("interval-ms", 0.0)?;
+    if !interval_ms.is_finite() || interval_ms < 0.0 {
+        return Err(Error::bad_request(
+            "--interval-ms must be a non-negative finite number",
+        ));
+    }
+    let seed = args.get_usize("seed", d.spec.seed as usize)? as u64;
+    let mut spec = d.spec.clone();
+    spec.seed = seed;
+    let mut restart = d.restart;
+    restart.seed = seed;
+    let mut policy = d.policy;
+    policy.gap_floor_w = args.get_f64("gap-floor", policy.gap_floor_w)?;
+    let checkpoint_every = args.get_usize("checkpoint-every", d.checkpoint_every as usize)?;
+    let cfg = DaemonConfig {
+        streams: args.get_usize("streams", d.streams)?,
+        samples: args.get_usize("samples", d.samples as usize)? as u64,
+        batch: args.get_usize("batch", d.batch)?,
+        interval: Duration::from_secs_f64(interval_ms / 1000.0),
+        checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+        checkpoint_every: checkpoint_every as u64,
+        keep: args.get_usize("keep", d.keep)?,
+        metrics_out: args.get("metrics-out").map(PathBuf::from),
+        config_path: args.get("config").map(PathBuf::from),
+        spec,
+        policy,
+        restart,
+        ..d
+    };
+    let plan = FaultPlan::parse(args.get_or("fault-plan", ""))?;
+    let t0 = Instant::now();
+    let report = daemon::run(cfg, plan)?;
+    print!("{}", report.render());
+    println!(
+        "daemon: {} samples in {:.2}s",
+        report.ledger.samples,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_list() {
     println!("environments:");
     for n in ["cloudlab-v100", "summit-v100", "ref-v100", "lonestar-a100", "lonestar-h100"] {
@@ -315,6 +367,7 @@ fn main() {
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("daemon") => cmd_daemon(&args),
         Some("list") => {
             cmd_list();
             Ok(())
@@ -325,7 +378,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: wattchmen <report|train|predict|serve|list|version> [options]\n\
+                "usage: wattchmen <report|train|predict|serve|fleet|daemon|list|version> [options]\n\
                  \n\
                  report <fig1..fig14|all> [--fast] [--seed N] [--jobs N] [--out DIR] [--no-artifacts]\n\
                  train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
@@ -337,6 +390,9 @@ fn main() {
                          [--linger-ms MS] [--queue N] [--deadline-ms MS]\n\
                  fleet   [--devices N] [--hours H] [--jobs N] [--seed N] [--power-cap W]\n\
                          [--bin-secs S] [--gap-secs S] [--archs name[=w],...] [--full] [--out FILE]\n\
+                 daemon  [--streams N] [--samples N] [--batch N] [--interval-ms MS] [--seed N]\n\
+                         [--checkpoint-dir DIR [--checkpoint-every N] [--keep N]]\n\
+                         [--metrics-out FILE] [--config FILE] [--gap-floor W] [--fault-plan SPEC]\n\
                  list"
             );
             std::process::exit(2);

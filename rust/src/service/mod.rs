@@ -61,7 +61,7 @@ use crate::report::context::WORKLOAD_SECS;
 use crate::runtime::coalescer::{Coalescer, Job};
 use crate::runtime::Artifacts;
 use crate::util::json::Json;
-use crate::util::sync::{lock_unpoisoned, Semaphore};
+use crate::util::sync::{lock_unpoisoned, Backoff, Semaphore};
 
 use protocol::{Proto, Request};
 
@@ -131,6 +131,10 @@ struct Shared {
     rejected: AtomicUsize,
     deadline_exceeded: AtomicUsize,
     request_errors: AtomicUsize,
+    /// Listener `accept()` failures (fd exhaustion, aborted handshakes
+    /// surfaced as errors, …).  The acceptor counts them and backs off
+    /// instead of spinning — see [`accept_backoff`].
+    accept_errors: AtomicUsize,
     default_duration_s: f64,
     default_deadline: Option<Duration>,
     /// Retry hint shipped in `overloaded` responses: the linger window,
@@ -164,6 +168,7 @@ impl PredictServer {
             rejected: AtomicUsize::new(0),
             deadline_exceeded: AtomicUsize::new(0),
             request_errors: AtomicUsize::new(0),
+            accept_errors: AtomicUsize::new(0),
             default_duration_s: cfg.default_duration_s,
             default_deadline: cfg.deadline,
             retry_after_ms: cfg.linger.as_millis().max(1) as u64,
@@ -194,25 +199,41 @@ impl PredictServer {
         listener.set_nonblocking(true)?;
         {
             let shared = shared.clone();
-            handles.push(thread::spawn(move || loop {
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        // Accepted sockets must not inherit non-blocking
-                        // mode (platform-dependent otherwise).
-                        if stream.set_nonblocking(false).is_err() {
-                            continue;
+            handles.push(thread::spawn(move || {
+                // Consecutive accept() failures (WouldBlock excluded):
+                // each one counts toward `accept_errors` and stretches
+                // the retry delay; any successful accept resets it.
+                let mut err_streak: u32 = 0;
+                loop {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            err_streak = 0;
+                            // Accepted sockets must not inherit non-blocking
+                            // mode (platform-dependent otherwise).
+                            if stream.set_nonblocking(false).is_err() {
+                                continue;
+                            }
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
                         }
-                        if conn_tx.send(stream).is_err() {
-                            break;
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            err_streak = 0;
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => {
+                            // Transient resource failure (e.g. EMFILE).
+                            // Count it and back off: spinning on a hot
+                            // error starves the workers of the fds they
+                            // need to clear the very condition.
+                            shared.accept_errors.fetch_add(1, Ordering::SeqCst);
+                            thread::sleep(accept_backoff(err_streak));
+                            err_streak = err_streak.saturating_add(1);
                         }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        thread::sleep(Duration::from_millis(20));
-                    }
-                    Err(_) => thread::sleep(Duration::from_millis(20)),
                 }
             }));
         }
@@ -257,6 +278,11 @@ impl PredictServer {
     /// Requests answered with a non-deadline, non-overload error.
     pub fn request_errors(&self) -> usize {
         self.shared.request_errors.load(Ordering::SeqCst)
+    }
+
+    /// Listener accept() failures survived so far (backed off, retried).
+    pub fn accept_errors(&self) -> usize {
+        self.shared.accept_errors.load(Ordering::SeqCst)
     }
 
     /// Clone of the coalescer's job sender: lets an embedder (or the
@@ -455,6 +481,19 @@ fn engine_for(shared: &Shared, jobs: &Sender<Job>, arch: &str) -> Result<Engine,
     ))
 }
 
+/// Retry delay after the `n`-th *consecutive* accept() failure: bounded
+/// exponential, 20 ms doubling to a 1 s ceiling, deterministic (no
+/// jitter — a single acceptor thread has no peers to desynchronize
+/// from).  Pure so the schedule is unit-testable without a socket.
+fn accept_backoff(consecutive_errors: u32) -> Duration {
+    const SCHEDULE: Backoff = Backoff {
+        base: Duration::from_millis(20),
+        max: Duration::from_secs(1),
+        jitter_frac: 0.0,
+    };
+    SCHEDULE.delay(consecutive_errors, 0.0)
+}
+
 /// The budget actually enforced: a per-request `deadline_ms` may only
 /// tighten the server-wide one — never extend it, or a hostile client
 /// could pin queue slots past the operator's ceiling.
@@ -491,6 +530,7 @@ fn counters(shared: &Shared) -> protocol::ServiceCounters {
         table_reloads: shared.registry.reloads(),
         profile_cache_hits: shared.profiles.hits(),
         profile_cache_misses: shared.profiles.misses(),
+        accept_errors: shared.accept_errors.load(Ordering::SeqCst),
     }
 }
 
@@ -509,6 +549,23 @@ mod tests {
         // deadline_ms must not extend the operator's ceiling.
         assert_eq!(effective_deadline(Some(ms(50)), Some(ms(100))), Some(ms(50)));
         assert_eq!(effective_deadline(Some(ms(86_400_000)), Some(ms(100))), Some(ms(100)));
+    }
+
+    #[test]
+    fn accept_backoff_is_bounded_exponential() {
+        let ms = Duration::from_millis;
+        assert_eq!(accept_backoff(0), ms(20));
+        assert_eq!(accept_backoff(1), ms(40));
+        assert_eq!(accept_backoff(2), ms(80));
+        assert_eq!(accept_backoff(3), ms(160));
+        // Capped at the 1 s ceiling from the 6th failure on, forever.
+        assert_eq!(accept_backoff(6), ms(1000));
+        assert_eq!(accept_backoff(100), ms(1000));
+        assert_eq!(accept_backoff(u32::MAX), ms(1000));
+        // Monotone non-decreasing across the whole ramp.
+        for n in 0..12 {
+            assert!(accept_backoff(n) <= accept_backoff(n + 1));
+        }
     }
 }
 
@@ -532,6 +589,7 @@ fn status_json(shared: &Shared, v: Proto) -> Json {
             "profile_cache_misses",
             Json::Num(c.profile_cache_misses as f64),
         ),
+        ("accept_errors", Json::Num(c.accept_errors as f64)),
     ];
     if v == Proto::V2 {
         pairs.push(("capabilities", protocol::capabilities_json()));

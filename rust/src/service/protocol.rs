@@ -116,13 +116,14 @@ pub struct ServiceCounters {
     pub table_reloads: usize,
     pub profile_cache_hits: usize,
     pub profile_cache_misses: usize,
+    pub accept_errors: usize,
 }
 
 /// Render the counters in Prometheus text exposition format (one
 /// HELP/TYPE header per family; all families are monotonic counters).
 pub fn prometheus_text(c: &ServiceCounters) -> String {
     let mut out = String::new();
-    let families: [(&str, &str, usize); 8] = [
+    let families: [(&str, &str, usize); 9] = [
         (
             "wattchmen_predictions_served_total",
             "Predict requests answered successfully.",
@@ -163,10 +164,194 @@ pub fn prometheus_text(c: &ServiceCounters) -> String {
             "profile_app computations on cache miss.",
             c.profile_cache_misses,
         ),
+        (
+            "wattchmen_accept_errors_total",
+            "Listener accept() failures (e.g. fd exhaustion), backed off and retried.",
+            c.accept_errors,
+        ),
     ];
     for (name, help, value) in families {
         out.push_str(&format!(
             "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"
+        ));
+    }
+    out
+}
+
+/// Snapshot of the daemon's health and ledger, for its Prometheus
+/// export (`wattchmen daemon --metrics-out`).  Energy fields carry the
+/// integer-nanojoule ledger, so `attributed + idle + unattributed ==
+/// total` holds exactly in the rendered text too.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DaemonMetrics {
+    pub samples_total: u64,
+    pub attributed_nj: u128,
+    pub idle_nj: u128,
+    pub unattributed_nj: u128,
+    pub total_nj: u128,
+    pub streams_healthy: u64,
+    pub streams_degraded: u64,
+    pub streams_stale: u64,
+    pub worker_restarts: u64,
+    pub workers_degraded: u64,
+    pub duplicates_dropped: u64,
+    pub out_of_order: u64,
+    pub invalid_samples: u64,
+    pub gaps_interpolated: u64,
+    pub unbounded_gaps: u64,
+    pub dropouts_injected: u64,
+    pub export_failures: u64,
+    pub checkpoint_writes: u64,
+    pub checkpoint_failures: u64,
+    pub config_reloads: u64,
+    pub config_reload_errors: u64,
+    pub config_stale: bool,
+}
+
+/// Render the daemon metrics in Prometheus text exposition format.
+/// Stream/worker health and the staleness flag are gauges (they move
+/// both ways); everything else is a monotonic counter.
+pub fn daemon_prometheus_text(m: &DaemonMetrics) -> String {
+    let counter = "counter";
+    let gauge = "gauge";
+    let families: [(&str, &str, &str, String); 22] = [
+        (
+            "wattchmen_daemon_samples_total",
+            "Telemetry samples attributed (deduplicated).",
+            counter,
+            m.samples_total.to_string(),
+        ),
+        (
+            "wattchmen_daemon_attributed_energy_nj_total",
+            "Energy credited to tagged kernels, in nanojoules.",
+            counter,
+            m.attributed_nj.to_string(),
+        ),
+        (
+            "wattchmen_daemon_idle_energy_nj_total",
+            "Energy credited to idle (untagged) time, in nanojoules.",
+            counter,
+            m.idle_nj.to_string(),
+        ),
+        (
+            "wattchmen_daemon_unattributed_energy_nj_total",
+            "Energy accrued over unbounded gaps and invalid samples, in nanojoules.",
+            counter,
+            m.unattributed_nj.to_string(),
+        ),
+        (
+            "wattchmen_daemon_energy_nj_total",
+            "Total integrated stream energy, in nanojoules (equals the three buckets).",
+            counter,
+            m.total_nj.to_string(),
+        ),
+        (
+            "wattchmen_daemon_streams_healthy",
+            "Streams currently in the healthy state.",
+            gauge,
+            m.streams_healthy.to_string(),
+        ),
+        (
+            "wattchmen_daemon_streams_degraded",
+            "Streams currently in the degraded state.",
+            gauge,
+            m.streams_degraded.to_string(),
+        ),
+        (
+            "wattchmen_daemon_streams_stale",
+            "Streams currently in the stale state.",
+            gauge,
+            m.streams_stale.to_string(),
+        ),
+        (
+            "wattchmen_daemon_worker_restarts_total",
+            "Worker panics caught and restarted by the supervisor.",
+            counter,
+            m.worker_restarts.to_string(),
+        ),
+        (
+            "wattchmen_daemon_workers_degraded",
+            "Workers parked after exhausting their restart budget.",
+            gauge,
+            m.workers_degraded.to_string(),
+        ),
+        (
+            "wattchmen_daemon_duplicates_dropped_total",
+            "Duplicate samples dropped before attribution.",
+            counter,
+            m.duplicates_dropped.to_string(),
+        ),
+        (
+            "wattchmen_daemon_out_of_order_total",
+            "Samples rejected for non-advancing timestamps.",
+            counter,
+            m.out_of_order.to_string(),
+        ),
+        (
+            "wattchmen_daemon_invalid_samples_total",
+            "Samples with NaN or negative power readings.",
+            counter,
+            m.invalid_samples.to_string(),
+        ),
+        (
+            "wattchmen_daemon_gaps_interpolated_total",
+            "Bounded gaps bridged by trapezoidal interpolation.",
+            counter,
+            m.gaps_interpolated.to_string(),
+        ),
+        (
+            "wattchmen_daemon_unbounded_gaps_total",
+            "Gaps past the bound, accrued to unattributed energy.",
+            counter,
+            m.unbounded_gaps.to_string(),
+        ),
+        (
+            "wattchmen_daemon_dropouts_injected_total",
+            "Sensor readings swallowed by injected dropouts.",
+            counter,
+            m.dropouts_injected.to_string(),
+        ),
+        (
+            "wattchmen_daemon_export_failures_total",
+            "Metrics export ticks that hit an I/O error.",
+            counter,
+            m.export_failures.to_string(),
+        ),
+        (
+            "wattchmen_daemon_checkpoint_writes_total",
+            "Checkpoints durably written (fsync + rename).",
+            counter,
+            m.checkpoint_writes.to_string(),
+        ),
+        (
+            "wattchmen_daemon_checkpoint_failures_total",
+            "Checkpoint write attempts that failed.",
+            counter,
+            m.checkpoint_failures.to_string(),
+        ),
+        (
+            "wattchmen_daemon_config_reloads_total",
+            "Successful stream-policy hot reloads.",
+            counter,
+            m.config_reloads.to_string(),
+        ),
+        (
+            "wattchmen_daemon_config_reload_errors_total",
+            "Rejected stream-policy reloads (kept the old config).",
+            counter,
+            m.config_reload_errors.to_string(),
+        ),
+        (
+            "wattchmen_daemon_config_stale",
+            "1 when the on-disk config is invalid and an older one is live.",
+            gauge,
+            if m.config_stale { "1" } else { "0" }.to_string(),
+        ),
+    ];
+    let mut out = String::new();
+    for (name, help, kind, value) in families {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
         ));
     }
     out
@@ -691,10 +876,11 @@ mod tests {
             table_reloads: 1,
             profile_cache_hits: 10,
             profile_cache_misses: 2,
+            accept_errors: 7,
         };
         let text = prometheus_text(&c);
         // One HELP + TYPE + sample line per family, counters only.
-        assert_eq!(text.lines().count(), 24, "{text}");
+        assert_eq!(text.lines().count(), 27, "{text}");
         assert!(text.contains(
             "# HELP wattchmen_predictions_served_total Predict requests answered successfully.\n\
              # TYPE wattchmen_predictions_served_total counter\n\
@@ -707,6 +893,7 @@ mod tests {
         assert!(text.contains("wattchmen_table_reloads_total 1\n"));
         assert!(text.contains("wattchmen_profile_cache_hits_total 10\n"));
         assert!(text.contains("wattchmen_profile_cache_misses_total 2\n"));
+        assert!(text.contains("wattchmen_accept_errors_total 7\n"));
         assert!(text.ends_with('\n'));
         for line in text.lines() {
             assert!(
@@ -721,6 +908,60 @@ mod tests {
             j.get("content_type").unwrap().as_str(),
             Some("text/plain; version=0.0.4")
         );
+    }
+
+    #[test]
+    fn daemon_prometheus_rendering_pins_every_family() {
+        let m = DaemonMetrics {
+            samples_total: 3000,
+            attributed_nj: 123_456_789_000,
+            idle_nj: 9_876_543_210,
+            unattributed_nj: 11,
+            total_nj: 123_456_789_000 + 9_876_543_210 + 11,
+            streams_healthy: 1,
+            streams_degraded: 1,
+            streams_stale: 0,
+            worker_restarts: 4,
+            workers_degraded: 0,
+            duplicates_dropped: 2,
+            out_of_order: 3,
+            invalid_samples: 9,
+            gaps_interpolated: 5,
+            unbounded_gaps: 1,
+            dropouts_injected: 27,
+            export_failures: 2,
+            checkpoint_writes: 6,
+            checkpoint_failures: 1,
+            config_reloads: 1,
+            config_reload_errors: 1,
+            config_stale: true,
+        };
+        let text = daemon_prometheus_text(&m);
+        // 22 families, HELP + TYPE + sample each.
+        assert_eq!(text.lines().count(), 66, "{text}");
+        assert!(text.contains(
+            "# HELP wattchmen_daemon_samples_total Telemetry samples attributed \
+             (deduplicated).\n# TYPE wattchmen_daemon_samples_total counter\n\
+             wattchmen_daemon_samples_total 3000\n"
+        ));
+        assert!(text.contains("wattchmen_daemon_attributed_energy_nj_total 123456789000\n"));
+        assert!(text.contains("wattchmen_daemon_energy_nj_total 133333332221\n"));
+        assert!(text.contains("# TYPE wattchmen_daemon_streams_healthy gauge\n"));
+        assert!(text.contains("# TYPE wattchmen_daemon_workers_degraded gauge\n"));
+        assert!(text.contains("# TYPE wattchmen_daemon_config_stale gauge\n"));
+        assert!(text.contains("wattchmen_daemon_config_stale 1\n"));
+        assert!(text.contains("# TYPE wattchmen_daemon_worker_restarts_total counter\n"));
+        assert!(text.ends_with('\n'));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with("wattchmen_daemon_"),
+                "stray line {line:?}"
+            );
+        }
+        // The default snapshot renders every value as zero.
+        let zero = daemon_prometheus_text(&DaemonMetrics::default());
+        assert_eq!(zero.lines().count(), 66);
+        assert!(zero.contains("wattchmen_daemon_config_stale 0\n"));
     }
 
     #[test]

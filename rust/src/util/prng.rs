@@ -120,8 +120,14 @@ impl Rng {
 /// Stable 64-bit hash of a string (FNV-1a) — used to derive deterministic
 /// per-opcode jitter in the hidden ground-truth energy model.
 pub fn fnv1a(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
+}
+
+/// FNV-1a over raw bytes — the checksum in the daemon checkpoint footer
+/// (stable across platforms, no allocation, one multiply per byte).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.as_bytes() {
+    for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
@@ -204,5 +210,10 @@ mod tests {
     fn fnv1a_stable() {
         assert_eq!(fnv1a("LDG.E.64"), fnv1a("LDG.E.64"));
         assert_ne!(fnv1a("LDG.E.64"), fnv1a("LDG.E.32"));
+        // The byte variant is the same hash, and pins the published
+        // FNV-1a test vector so the checkpoint checksum is portable.
+        assert_eq!(fnv1a("abc"), fnv1a_bytes(b"abc"));
+        assert_eq!(fnv1a_bytes(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_bytes(b"a"), 0xaf63dc4c8601ec8c);
     }
 }

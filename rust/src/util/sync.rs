@@ -16,6 +16,7 @@ use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
 
 /// Poison-tolerant lock: recover the guard even if another thread
 /// panicked while holding this mutex.  Correct wherever every critical
@@ -278,6 +279,37 @@ impl Drop for OwnedSemaphorePermit {
     }
 }
 
+/// Deterministic exponential backoff with bounded jitter — the restart
+/// primitive behind [`daemon::supervisor`](crate::daemon::supervisor)
+/// and the serve acceptor's error backoff.
+///
+/// [`delay`](Backoff::delay) is a *pure* function of `(attempt,
+/// jitter01)`: `base · 2^attempt` capped at `max`, stretched by up to
+/// `jitter_frac` of the capped delay according to `jitter01 ∈ [0, 1)`.
+/// Callers draw `jitter01` from a seeded
+/// [`Rng`](crate::util::prng::Rng) (or pass 0.0), so restart timing is
+/// reproducible end to end — the daemon soak test relies on it.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    pub base: Duration,
+    pub max: Duration,
+    /// Fraction of the capped delay added as jitter (0.0 disables).
+    pub jitter_frac: f64,
+}
+
+impl Backoff {
+    pub fn delay(&self, attempt: u32, jitter01: f64) -> Duration {
+        let base_s = self.base.as_secs_f64();
+        let max_s = self.max.as_secs_f64();
+        // 2^attempt saturates well past any real cap; clamp the exponent
+        // so a runaway attempt counter cannot overflow to infinity.
+        let exp = base_s * (2.0f64).powi(attempt.min(62) as i32);
+        let capped = exp.min(max_s).max(0.0);
+        let jitter = capped * self.jitter_frac.max(0.0) * jitter01.clamp(0.0, 1.0);
+        Duration::from_secs_f64(capped + jitter)
+    }
+}
+
 /// Round-robin sharding: the items of shard `shard` out of `shards`
 /// (shard `s` keeps input positions `s`, `s + shards`, `s + 2·shards`, …).
 /// Shards partition the input, and the partition depends only on
@@ -529,6 +561,39 @@ mod tests {
         assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
         assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let b = Backoff {
+            base: Duration::from_millis(10),
+            max: Duration::from_millis(160),
+            jitter_frac: 0.0,
+        };
+        assert_eq!(b.delay(0, 0.0), Duration::from_millis(10));
+        assert_eq!(b.delay(1, 0.0), Duration::from_millis(20));
+        assert_eq!(b.delay(3, 0.0), Duration::from_millis(80));
+        // The cap bounds every later attempt, including absurd ones.
+        assert_eq!(b.delay(5, 0.0), Duration::from_millis(160));
+        assert_eq!(b.delay(60, 0.0), Duration::from_millis(160));
+        assert_eq!(b.delay(u32::MAX, 0.0), Duration::from_millis(160));
+    }
+
+    #[test]
+    fn backoff_jitter_is_bounded_and_deterministic() {
+        let b = Backoff {
+            base: Duration::from_millis(100),
+            max: Duration::from_secs(1),
+            jitter_frac: 0.5,
+        };
+        // jitter01 = 0 → exact; jitter01 → 1 adds at most jitter_frac.
+        assert_eq!(b.delay(0, 0.0), Duration::from_millis(100));
+        assert_eq!(b.delay(0, 1.0), Duration::from_millis(150));
+        let d = b.delay(0, 0.4);
+        assert_eq!(d, Duration::from_millis(120));
+        // Out-of-range jitter draws are clamped, never panic.
+        assert_eq!(b.delay(0, -3.0), Duration::from_millis(100));
+        assert_eq!(b.delay(0, 7.0), Duration::from_millis(150));
     }
 
     #[test]

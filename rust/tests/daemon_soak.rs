@@ -1,0 +1,314 @@
+//! Fault-injected soak suite for `wattchmen daemon` — the PR's
+//! acceptance gate.  Everything here is deterministic: the fault plan is
+//! a fixed schedule (`FaultPlan::seeded(42)` covers all six kinds), the
+//! jitter streams are seeded, and the ledger is integer nanojoules, so
+//! the invariants are asserted *exactly*, not within a tolerance:
+//!
+//! * `attributed + idle + unattributed == total` to the bit, under the
+//!   full fault plan (worker panics, I/O errors, dropouts, NaN bursts,
+//!   clock skips, checkpoint-write failures);
+//! * an offline mirror replaying the pure emission rule through a fresh
+//!   state machine lands on the same ledger bits as the live daemon —
+//!   restarts never double-count or lose a sample;
+//! * a killed daemon resumes from its last good checkpoint and finishes
+//!   with a ledger byte-identical to an uninterrupted run;
+//! * corrupt / truncated / missing checkpoints fall back to the previous
+//!   good generation;
+//! * checkpoint bytes are a function of sample count alone — batch size
+//!   and pacing never change them;
+//! * restart-budget exhaustion degrades, it never kills the process.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use wattchmen::daemon::checkpoint::{CheckpointState, Checkpointer};
+use wattchmen::daemon::faults::{FaultPlan, PanicFault, Worker};
+use wattchmen::daemon::stream::{Ledger, StreamState};
+use wattchmen::daemon::supervisor::RestartPolicy;
+use wattchmen::daemon::{emission, run, DaemonConfig};
+use wattchmen::util::sync::Backoff;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("wattchmen-soak-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Millisecond-scale restarts so the suite runs in seconds.
+fn fast_restart(budget: u32) -> RestartPolicy {
+    RestartPolicy {
+        backoff: Backoff {
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(4),
+            jitter_frac: 0.5,
+        },
+        budget,
+        seed: 42,
+    }
+}
+
+fn soak_config(tag: &str) -> DaemonConfig {
+    DaemonConfig {
+        interval: Duration::ZERO,
+        export_interval: Duration::from_millis(1),
+        restart: fast_restart(8),
+        checkpoint_dir: Some(tmpdir(tag)),
+        ..DaemonConfig::default()
+    }
+}
+
+#[test]
+fn conservation_is_exact_under_the_full_seeded_fault_plan() {
+    let plan = FaultPlan::seeded(42);
+    let cfg = soak_config("fullplan");
+    let report = run(cfg.clone(), plan.clone()).unwrap();
+
+    // Clean completion despite the full fault schedule.
+    assert!(report.degraded_workers.is_empty(), "{:?}", report.degraded_workers);
+    assert_eq!(report.ledger.samples, cfg.samples);
+    assert_eq!(report.emitted, cfg.samples);
+
+    // THE invariant: attributed + idle + unattributed == total, to the bit.
+    assert!(report.conserved(), "ledger not conserved: {:?}", report.ledger);
+    assert!(report.render().contains("conservation: exact"), "{}", report.render());
+
+    // Every one of the six fault kinds left its fingerprint.
+    assert_eq!(report.restarts, plan.panics.len() as u64, "one restart per planned panic");
+    assert_eq!(report.export_failures, plan.io_errors.len() as u64);
+    assert!(report.dropouts_injected >= 1, "dropout spans must swallow samples");
+    let invalid: u64 = report.streams.iter().map(|s| s.counters.invalid).sum();
+    assert!(invalid >= 1, "NaN bursts must be counted invalid");
+    let unbounded: u64 = report.streams.iter().map(|s| s.counters.unbounded_gaps).sum();
+    assert!(unbounded >= 1, "the +5s clock skip must open an unbounded gap");
+    let out_of_order: u64 = report.streams.iter().map(|s| s.counters.out_of_order).sum();
+    assert!(out_of_order >= 1, "the -2.5s clock skip must send time backwards");
+    assert_eq!(report.checkpoint_failures, 1, "generation 2 is planned to fail");
+    assert!(report.checkpoint_writes >= 1);
+    assert!(report.ledger.unattributed_nj > 0, "unbounded gaps accrue to unattributed");
+
+    // Offline mirror: replay the pure emission rule through a fresh
+    // state machine.  If the live daemon double-counted or lost a single
+    // sample across any restart, this comparison fails on the bit.
+    let mut states = vec![StreamState::default(); cfg.streams];
+    let mut mirror = Ledger::default();
+    let mut g = 0u64;
+    let mut count = 0u64;
+    while count < cfg.samples {
+        if let Some(s) = emission(&cfg.spec, &plan, cfg.streams, g) {
+            states[s.stream].ingest(&s, &cfg.policy, &mut mirror);
+            count += 1;
+        }
+        g += 1;
+    }
+    assert_eq!(mirror, report.ledger, "mirror and live ledgers must be bitwise identical");
+    assert_eq!(states, report.streams, "per-stream machines must agree state-for-state");
+}
+
+#[test]
+fn killed_daemon_resumes_from_checkpoint_without_double_counting() {
+    let dir = tmpdir("resume");
+    let base = DaemonConfig {
+        interval: Duration::ZERO,
+        export_interval: Duration::from_millis(1),
+        restart: fast_restart(8),
+        checkpoint_every: 100,
+        ..DaemonConfig::default()
+    };
+
+    // Run A: "crashes" after 1234 samples — no final checkpoint, exactly
+    // what a kill -9 leaves behind (last periodic generation: 12 @ 1200).
+    let a = DaemonConfig {
+        samples: 1234,
+        checkpoint_dir: Some(dir.clone()),
+        final_checkpoint: false,
+        ..base.clone()
+    };
+    let report_a = run(a, FaultPlan::default()).unwrap();
+    assert_eq!(report_a.checkpoint_writes, 12);
+    assert_eq!(report_a.final_generation, 12);
+
+    // Run B: same directory, higher target — must resume, not restart.
+    let b = DaemonConfig {
+        samples: 2000,
+        checkpoint_dir: Some(dir),
+        ..base.clone()
+    };
+    let report_b = run(b, FaultPlan::default()).unwrap();
+    assert_eq!(report_b.resumed_from, Some(12));
+    assert_eq!(report_b.skipped_checkpoints, 0);
+    assert_eq!(report_b.ledger.samples, 2000);
+    assert_eq!(report_b.emitted, 2000, "resume counts prior samples, emits only the rest");
+    assert!(report_b.conserved());
+
+    // Run C: uninterrupted control run to the same target.
+    let c = DaemonConfig { samples: 2000, checkpoint_dir: None, ..base };
+    let report_c = run(c, FaultPlan::default()).unwrap();
+    assert_eq!(
+        report_b.ledger, report_c.ledger,
+        "resumed ledger must be bitwise identical to the uninterrupted run"
+    );
+    assert_eq!(report_b.streams, report_c.streams);
+}
+
+/// A distinct, content-rich checkpoint per generation.
+fn seeded_state(generation: u64) -> CheckpointState {
+    let mut ledger = Ledger::default();
+    ledger.credit(Some(0), 1_000_000 * generation as u128);
+    ledger.credit(Some(1), 77 * generation as u128);
+    ledger.credit(None, 55_000);
+    ledger.credit_unattributed(13);
+    ledger.samples = generation * 10;
+    CheckpointState {
+        generation,
+        processed: ledger.samples,
+        ledger,
+        streams: vec![StreamState::default(); 2],
+    }
+}
+
+#[test]
+fn corrupt_checkpoints_fall_back_to_the_previous_good_generation() {
+    // Four corruption shapes; each must resume generation 2 of 3.
+    let cases: &[(&str, fn(&PathBuf))] = &[
+        ("truncated", |p| {
+            let bytes = std::fs::read(p).unwrap();
+            std::fs::write(p, &bytes[..bytes.len() - 10]).unwrap();
+        }),
+        ("bitflip", |p| {
+            let mut bytes = std::fs::read(p).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+            std::fs::write(p, &bytes).unwrap();
+        }),
+        ("zerolen", |p| {
+            std::fs::write(p, b"").unwrap();
+        }),
+        ("missing", |p| {
+            std::fs::remove_file(p).unwrap();
+        }),
+    ];
+    for (tag, corrupt) in cases {
+        let dir = tmpdir(&format!("corrupt-{tag}"));
+        let ck = Checkpointer::new(&dir, 3).unwrap();
+        for generation in 1..=3 {
+            ck.write(&seeded_state(generation)).unwrap();
+        }
+        corrupt(&ck.path_for(3));
+        let (state, skipped) = ck.load_latest();
+        let state = state.unwrap_or_else(|| panic!("{tag}: no good generation found"));
+        assert_eq!(state, seeded_state(2), "{tag}: must fall back to generation 2");
+        let want_skipped = if *tag == "missing" { 0 } else { 1 };
+        assert_eq!(skipped, want_skipped, "{tag}");
+    }
+}
+
+#[test]
+fn checkpoint_bytes_are_deterministic_in_sample_count() {
+    // Same sample count, wildly different pacing and batching: every
+    // generation's on-disk bytes must match exactly.
+    let fast = DaemonConfig {
+        samples: 1000,
+        batch: 16,
+        interval: Duration::ZERO,
+        export_interval: Duration::from_millis(1),
+        restart: fast_restart(8),
+        checkpoint_dir: Some(tmpdir("det-a")),
+        checkpoint_every: 500,
+        keep: 8,
+        ..DaemonConfig::default()
+    };
+    let slow = DaemonConfig {
+        batch: 7,
+        interval: Duration::from_millis(1),
+        checkpoint_dir: Some(tmpdir("det-b")),
+        ..fast.clone()
+    };
+    let ra = run(fast.clone(), FaultPlan::default()).unwrap();
+    let rb = run(slow.clone(), FaultPlan::default()).unwrap();
+    assert_eq!(ra.ledger, rb.ledger);
+
+    let ck_a = Checkpointer::new(fast.checkpoint_dir.unwrap(), 8).unwrap();
+    let ck_b = Checkpointer::new(slow.checkpoint_dir.unwrap(), 8).unwrap();
+    let mut gens = ck_a.generations();
+    gens.sort_unstable();
+    let mut gens_b = ck_b.generations();
+    gens_b.sort_unstable();
+    assert_eq!(gens, gens_b);
+    assert!(!gens.is_empty());
+    for g in gens {
+        let a = std::fs::read(ck_a.path_for(g)).unwrap();
+        let b = std::fs::read(ck_b.path_for(g)).unwrap();
+        assert_eq!(a, b, "generation {g} bytes diverged");
+    }
+}
+
+#[test]
+fn restart_budget_exhaustion_degrades_but_never_exits() {
+    // Three attributor panics against a budget of two: the third panic
+    // exhausts the budget and parks the worker.  run() must still return
+    // a report (the daemon never exits on worker failure), the partial
+    // ledger must still conserve, and the health flag must be raised.
+    let plan = FaultPlan {
+        panics: vec![
+            PanicFault { worker: Worker::Attributor, at: 10 },
+            PanicFault { worker: Worker::Attributor, at: 20 },
+            PanicFault { worker: Worker::Attributor, at: 30 },
+        ],
+        ..FaultPlan::default()
+    };
+    let cfg = DaemonConfig {
+        samples: 200,
+        interval: Duration::ZERO,
+        export_interval: Duration::from_millis(1),
+        restart: fast_restart(2),
+        ..DaemonConfig::default()
+    };
+    let report = run(cfg, plan).unwrap();
+    assert_eq!(report.degraded_workers, vec!["attributor"]);
+    assert_eq!(report.restarts, 2, "budget of 2 allows exactly 2 restarts");
+    assert_eq!(report.ledger.samples, 30, "the third panic fires before sample 30 commits");
+    assert!(report.conserved(), "a degraded daemon's partial ledger still conserves");
+    assert!(report.render().contains("degraded workers: attributor"));
+}
+
+#[test]
+fn clean_run_exports_final_metrics_and_checkpoint() {
+    let dir = tmpdir("clean");
+    let metrics = dir.join("daemon.prom");
+    let cfg = DaemonConfig {
+        samples: 600,
+        interval: Duration::ZERO,
+        export_interval: Duration::from_millis(1),
+        restart: fast_restart(8),
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 500,
+        metrics_out: Some(metrics.clone()),
+        ..DaemonConfig::default()
+    };
+    let report = run(cfg, FaultPlan::default()).unwrap();
+    assert_eq!(report.restarts, 0);
+    assert!(report.degraded_workers.is_empty());
+    assert_eq!(report.ledger.samples, 600);
+    assert!(report.conserved());
+    assert!(report.export_ticks >= 1);
+    assert_eq!(report.export_failures, 0);
+
+    // The final export ran after shutdown: the file carries the
+    // complete run, not a mid-flight snapshot.
+    let text = std::fs::read_to_string(&metrics).unwrap();
+    assert!(text.contains("wattchmen_daemon_samples_total 600\n"), "{text}");
+    assert!(text.contains("wattchmen_daemon_workers_degraded 0\n"), "{text}");
+    assert!(!metrics.with_extension("tmp").exists(), "atomic write leaves no temp file");
+
+    // Periodic generation at 500 plus the final checkpoint.
+    assert_eq!(report.checkpoint_writes, 2);
+    assert_eq!(report.final_generation, 2);
+    let ck = Checkpointer::new(&dir, 3).unwrap();
+    let mut gens = ck.generations();
+    gens.sort_unstable();
+    assert_eq!(gens, vec![1, 2]);
+    let (latest, skipped) = ck.load_latest();
+    assert_eq!(skipped, 0);
+    assert_eq!(latest.unwrap().processed, 600);
+}

@@ -212,7 +212,7 @@ fn v2_success_bytes_match_v1_and_status_gains_capabilities() {
     assert_eq!(
         v1_status,
         concat!(
-            r#"{"batched_predict_calls":0,"deadline_exceeded":0,"ok":true,"#,
+            r#"{"accept_errors":0,"batched_predict_calls":0,"deadline_exceeded":0,"ok":true,"#,
             r#""profile_cache_hits":0,"profile_cache_misses":0,"rejected":0,"#,
             r#""request_errors":0,"served":0,"table_reloads":0}"#
         )
