@@ -17,6 +17,10 @@
 //!   serve_predict_all    — the whole 16-workload suite answered by ONE
 //!                          `predict_all` request (vs 64 single requests
 //!                          above; the control is predict_sweep_v100)
+//!   serve_idle_4k        — single-predict latency while ~4096 idle
+//!                          keep-alive connections sit parked in the
+//!                          readiness-loop acceptor (fd budget
+//!                          permitting; the note reports the herd size)
 //!   compare_models_v100  — memoized compare_models steady state (the
 //!                          warmup pays training+measurement once; timed
 //!                          samples are all EvalCache hits)
@@ -256,9 +260,14 @@ fn main() {
     let suite = workloads::evaluation_suite(Gen::Volta);
     // The trained table feeds predict_sweep and the serve benches; the
     // campaign is skipped when --filter excludes them all.
-    let need_table = ["predict_sweep_v100", "serve_predict_all", "serve_batch_64"]
-        .iter()
-        .any(|n| selected(n));
+    let need_table = [
+        "predict_sweep_v100",
+        "serve_predict_all",
+        "serve_batch_64",
+        "serve_idle_4k",
+    ]
+    .iter()
+    .any(|n| selected(n));
     let table = need_table.then(|| {
         ClusterCampaign::new(cfg.clone(), 4, 42)
             .train(&fast_tc(), arts.as_ref())
@@ -386,7 +395,7 @@ fn main() {
     }
 
     // --- serve: 64-request concurrent burst through the TCP service ---
-    if selected("serve_predict_all") || selected("serve_batch_64") {
+    if selected("serve_predict_all") || selected("serve_batch_64") || selected("serve_idle_4k") {
         let table = table.as_ref().expect("need_table covers the serve benches");
         let dir = std::env::temp_dir().join("wattchmen_bench_serve");
         std::fs::create_dir_all(&dir).unwrap();
@@ -444,6 +453,37 @@ fn main() {
             }
             format!("{} batched calls total", server.batch_calls())
         });
+        // Idle herd: park as close to 4096 keep-alive connections as the
+        // process fd budget allows, then time single predicts flowing
+        // past them.  On the old thread-per-connection acceptor this
+        // herd would be 4k blocked threads; here it is one poller.
+        if selected("serve_idle_4k") && cfg!(unix) {
+            let mut herd = Vec::new();
+            for _ in 0..4096 {
+                match TcpStream::connect(addr) {
+                    Ok(s) => herd.push(s),
+                    Err(_) => break, // fd budget (EMFILE) — note the size below
+                }
+            }
+            // Let the acceptor register the whole herd before timing.
+            while server.open_connections() < herd.len() {
+                thread::sleep(Duration::from_millis(1));
+            }
+            let herd_size = herd.len();
+            bench("serve_idle_4k", 10, &mut results, || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let req = protocol::predict_request("cloudlab-v100", &names[0], Mode::Pred);
+                writer.write_all(req.to_string_compact().as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.contains("\"ok\":true"), "{line}");
+                format!("1 predict past {herd_size} idle conns")
+            });
+            drop(herd);
+        }
         let stream = TcpStream::connect(addr).unwrap();
         let mut reader = BufReader::new(stream.try_clone().unwrap());
         let mut writer = stream;

@@ -11,18 +11,42 @@
 //! This is the extracted, tested form of the TCP loop that used to live
 //! inline in the CLI's `predict --remote`; `wattchmen predict --remote`
 //! is now a thin wrapper over it.
+//!
+//! **I/O deadlines.** Every socket read and write runs under a timeout:
+//! a request with `deadline_ms` derives its socket budget from that
+//! deadline plus a small grace (the server needs a moment to render the
+//! refusal), everything else falls back to [`DEFAULT_IO_TIMEOUT`].  A
+//! timed-out read or write surfaces as [`Error::DeadlineExceeded`] —
+//! never an indefinite hang on a server that accepted the connection
+//! and went silent.
+//!
+//! **Binary frames.** After
+//! [`negotiate_binary_frames`](RemoteClient::negotiate_binary_frames)
+//! succeeds, requests and responses travel as length-prefixed `bin1`
+//! frames (see `SERVE.md`) instead of newline-delimited JSON.  The
+//! payloads are byte-identical JSON either way; only the framing
+//! changes.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::thread;
 use std::time::Duration;
 
 use crate::error::Error;
 use crate::model::Mode;
+use crate::service::conn::{FrameDialect, FRAME_ENC_JSON, FRAME_HEADER_BYTES};
 use crate::service::protocol;
 use crate::util::json::{parse, Json};
 use crate::util::prng::Rng;
 use crate::util::sync::Backoff;
+
+/// Socket read/write budget for requests that carry no deadline.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Slack added on top of a request's `deadline_ms` before the socket
+/// gives up: the server refuses an expired request *after* evaluating
+/// its deadline, so the refusal itself arrives slightly past it.
+pub const DEADLINE_GRACE: Duration = Duration::from_millis(250);
 
 /// One served prediction, decoded from the wire.
 #[derive(Clone, Debug)]
@@ -108,12 +132,14 @@ pub struct RemoteClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     retry: Option<(RetryConfig, Rng)>,
+    dialect: FrameDialect,
 }
 
 impl RemoteClient {
     /// Connect to `HOST:PORT`.  No handshake round trip — the dialect is
     /// detected per response (use [`capabilities`](Self::capabilities)
-    /// for an explicit probe).
+    /// for an explicit probe).  Both socket directions start under
+    /// [`DEFAULT_IO_TIMEOUT`]; per-request deadlines tighten it.
     pub fn connect(addr: &str) -> Result<RemoteClient, Error> {
         let stream =
             TcpStream::connect(addr).map_err(|e| Error::io(format!("connecting {addr}: {e}")))?;
@@ -122,11 +148,66 @@ impl RemoteClient {
                 .try_clone()
                 .map_err(|e| Error::io(format!("cloning socket for {addr}: {e}")))?,
         );
-        Ok(RemoteClient {
+        let client = RemoteClient {
             reader,
             writer: stream,
             retry: None,
-        })
+            dialect: FrameDialect::Jsonl,
+        };
+        client.set_io_bound(DEFAULT_IO_TIMEOUT)?;
+        Ok(client)
+    }
+
+    /// Apply one read+write timeout to the socket.  `try_clone`d halves
+    /// share the underlying socket, so setting it once covers both.
+    fn set_io_bound(&self, bound: Duration) -> Result<(), Error> {
+        let stream = self.reader.get_ref();
+        stream
+            .set_read_timeout(Some(bound))
+            .and_then(|()| stream.set_write_timeout(Some(bound)))
+            .map_err(|e| Error::io(format!("setting socket timeout: {e}")))
+    }
+
+    /// The wire framing currently in force (`jsonl` until a successful
+    /// [`negotiate_binary_frames`](Self::negotiate_binary_frames)).
+    pub fn dialect(&self) -> FrameDialect {
+        self.dialect
+    }
+
+    /// Upgrade the connection to length-prefixed `bin1` frames.
+    ///
+    /// Probes the protocol-v2 `capabilities` handshake first: a server
+    /// that does not advertise `bin1` under `frames` (v1 servers have no
+    /// capabilities at all) leaves the connection on newline JSON and
+    /// returns `Ok(false)` — nothing is ever sent that an old server
+    /// would reject.  On an affirmative ack (sent in the *old* dialect)
+    /// the client switches and returns `Ok(true)`; every later request
+    /// and response on this connection then travels as binary frames.
+    pub fn negotiate_binary_frames(&mut self) -> Result<bool, Error> {
+        let advertised = self
+            .capabilities()?
+            .and_then(|caps| caps.get("frames").cloned())
+            .and_then(|f| match f {
+                Json::Arr(formats) => Some(formats),
+                _ => None,
+            })
+            .map(|formats| {
+                formats
+                    .iter()
+                    .any(|f| f.as_str() == Some(protocol::FRAMES_BIN1))
+            })
+            .unwrap_or(false);
+        if !advertised {
+            return Ok(false);
+        }
+        let resp = self.roundtrip(&protocol::frames_request(protocol::FRAMES_BIN1))?;
+        if resp.get("frames").and_then(Json::as_str) != Some(protocol::FRAMES_BIN1) {
+            return Err(Error::internal(
+                "server advertised bin1 frames but did not ack the switch",
+            ));
+        }
+        self.dialect = FrameDialect::Bin1;
+        Ok(true)
     }
 
     /// Enable bounded, jittered retries of `overloaded` responses.  The
@@ -148,7 +229,7 @@ impl RemoteClient {
         deadline_ms: Option<f64>,
     ) -> Result<RemotePrediction, Error> {
         let req = v2(protocol::predict_request(arch, workload, mode), deadline_ms);
-        let resp = self.roundtrip(&req)?;
+        let resp = self.roundtrip_within(&req, deadline_ms)?;
         RemotePrediction::from_json(&resp)
     }
 
@@ -160,7 +241,7 @@ impl RemoteClient {
         deadline_ms: Option<f64>,
     ) -> Result<RemoteSuite, Error> {
         let req = v2(protocol::predict_all_request(arch, mode), deadline_ms);
-        let resp = self.roundtrip(&req)?;
+        let resp = self.roundtrip_within(&req, deadline_ms)?;
         let arch = resp
             .get("arch")
             .and_then(Json::as_str)
@@ -219,6 +300,20 @@ impl RemoteClient {
     /// backoff schedule; I/O and parse failures are never retried, the
     /// connection state after them is unknown.
     fn roundtrip(&mut self, req: &Json) -> Result<Json, Error> {
+        self.roundtrip_within(req, None)
+    }
+
+    /// [`roundtrip`](Self::roundtrip) under a socket budget derived from
+    /// the request's deadline: `deadline_ms` + [`DEADLINE_GRACE`], or
+    /// [`DEFAULT_IO_TIMEOUT`] for deadline-less requests.  A socket that
+    /// times out inside the budget means the answer cannot arrive in
+    /// time — that is [`Error::DeadlineExceeded`], decided client-side.
+    fn roundtrip_within(&mut self, req: &Json, deadline_ms: Option<f64>) -> Result<Json, Error> {
+        let bound = deadline_ms
+            .filter(|ms| ms.is_finite() && *ms >= 0.0)
+            .map(|ms| Duration::from_secs_f64(ms.min(protocol::MAX_DEADLINE_MS) / 1000.0))
+            .map_or(DEFAULT_IO_TIMEOUT, |d| d + DEADLINE_GRACE);
+        self.set_io_bound(bound)?;
         let mut attempt: u32 = 0;
         loop {
             let resp = self.send_recv(req)?;
@@ -249,22 +344,77 @@ impl RemoteClient {
     }
 
     fn send_recv(&mut self, req: &Json) -> Result<Json, Error> {
+        match self.dialect {
+            FrameDialect::Jsonl => self.send_recv_jsonl(req),
+            FrameDialect::Bin1 => self.send_recv_bin1(req),
+        }
+    }
+
+    fn send_recv_jsonl(&mut self, req: &Json) -> Result<Json, Error> {
         self.writer
             .write_all(req.to_string_compact().as_bytes())
-            .map_err(|e| Error::io(format!("sending request: {e}")))?;
+            .map_err(|e| io_failure("sending request", &e))?;
         self.writer
             .write_all(b"\n")
-            .map_err(|e| Error::io(format!("sending request: {e}")))?;
+            .map_err(|e| io_failure("sending request", &e))?;
         let mut line = String::new();
         let n = self
             .reader
             .read_line(&mut line)
-            .map_err(|e| Error::io(format!("reading response: {e}")))?;
+            .map_err(|e| io_failure("reading response", &e))?;
         if n == 0 {
             return Err(Error::io("server closed the connection"));
         }
         parse(line.trim())
             .map_err(|e| Error::internal(format!("malformed server response: {e}")))
+    }
+
+    fn send_recv_bin1(&mut self, req: &Json) -> Result<Json, Error> {
+        let payload = req.to_string_compact();
+        let mut frame = Vec::with_capacity(FRAME_HEADER_BYTES + 1 + payload.len());
+        let n = (payload.len() + 1) as u32;
+        frame.extend_from_slice(&n.to_le_bytes());
+        frame.push(FRAME_ENC_JSON);
+        frame.extend_from_slice(payload.as_bytes());
+        self.writer
+            .write_all(&frame)
+            .map_err(|e| io_failure("sending request frame", &e))?;
+
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        self.reader
+            .read_exact(&mut header)
+            .map_err(|e| io_failure("reading response frame header", &e))?;
+        let len = u32::from_le_bytes(header) as usize;
+        if len == 0 {
+            return Err(Error::internal("server sent an empty binary frame"));
+        }
+        let mut body = vec![0u8; len];
+        self.reader
+            .read_exact(&mut body)
+            .map_err(|e| io_failure("reading response frame body", &e))?;
+        let (tag, json_bytes) = match body.split_first() {
+            Some(parts) => parts,
+            None => return Err(Error::internal("server sent an empty binary frame")),
+        };
+        if *tag != FRAME_ENC_JSON {
+            return Err(Error::internal(format!(
+                "server sent unknown frame encoding 0x{tag:02x}"
+            )));
+        }
+        let text = std::str::from_utf8(json_bytes)
+            .map_err(|_| Error::internal("server frame is not valid UTF-8"))?;
+        parse(text).map_err(|e| Error::internal(format!("malformed server response: {e}")))
+    }
+}
+
+/// Classify a socket failure: a timeout under the per-request budget is
+/// a missed deadline (the server cannot answer in time), everything
+/// else is plain I/O.  `WouldBlock` is how Unix reports a timed-out
+/// nonblocking-style read; macOS reports `TimedOut`.
+fn io_failure(what: &str, e: &std::io::Error) -> Error {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => Error::DeadlineExceeded,
+        _ => Error::io(format!("{what}: {e}")),
     }
 }
 
@@ -513,5 +663,97 @@ mod tests {
             .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
             .unwrap_err();
         assert_eq!(err.code(), "io_failed");
+    }
+
+    /// The bug this PR retires: a server that accepts the connection,
+    /// reads the request, and never answers used to hang the client
+    /// forever.  Now the deadline bounds the socket and the failure is
+    /// typed as what it is.
+    #[test]
+    fn silent_server_surfaces_deadline_exceeded_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // Swallow request bytes until the client gives up; never
+            // write a single response byte.
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                line.clear();
+            }
+        });
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let start = std::time::Instant::now();
+        let err = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, Some(50.0))
+            .unwrap_err();
+        assert_eq!(err, Error::DeadlineExceeded);
+        // Budget = 50 ms deadline + 250 ms grace; the generous bound
+        // only guards against "blocked until some multi-second default".
+        assert!(start.elapsed() < Duration::from_secs(10));
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn negotiation_declines_when_server_advertises_no_bin1() {
+        // A v1 server: status has no capabilities at all.
+        let (addr, _seen) = stub(vec![r#"{"ok":true,"served":0}"#.to_string()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        assert!(!client.negotiate_binary_frames().unwrap());
+        assert_eq!(client.dialect(), FrameDialect::Jsonl);
+    }
+
+    #[test]
+    fn binary_negotiation_upgrades_then_frames_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let pred = sample_prediction_json().to_string_compact();
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            // 1. capabilities probe (newline JSON both ways).
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("status"), "expected status probe: {line}");
+            let caps = concat!(
+                r#"{"capabilities":{"frames":["jsonl","bin1"],"#,
+                r#""protocol_versions":[1,2]},"ok":true,"served":0}"#,
+                "\n"
+            );
+            writer.write_all(caps.as_bytes()).unwrap();
+            // 2. dialect switch: request and ack still newline JSON.
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"frames\""), "expected switch: {line}");
+            writer
+                .write_all(b"{\"frames\":\"bin1\",\"ok\":true}\n")
+                .unwrap();
+            // 3. everything after the ack is length-prefixed bin1.
+            let mut header = [0u8; 4];
+            reader.read_exact(&mut header).unwrap();
+            let n = u32::from_le_bytes(header) as usize;
+            let mut body = vec![0u8; n];
+            reader.read_exact(&mut body).unwrap();
+            let (tag, req) = body.split_first().unwrap();
+            assert_eq!(*tag, 0x01);
+            assert!(std::str::from_utf8(req).unwrap().contains("predict"));
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&((pred.len() + 1) as u32).to_le_bytes());
+            frame.push(0x01);
+            frame.extend_from_slice(pred.as_bytes());
+            writer.write_all(&frame).unwrap();
+        });
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        assert!(client.negotiate_binary_frames().unwrap());
+        assert_eq!(client.dialect(), FrameDialect::Bin1);
+        let p = client
+            .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+            .unwrap();
+        assert_eq!(p.workload, "hotspot");
+        assert_eq!(p.energy_j, 12345.67);
+        server.join().unwrap();
     }
 }

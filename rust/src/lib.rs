@@ -39,7 +39,12 @@
 //!
 //! Remote consumers use [`engine::client::RemoteClient`], the typed
 //! protocol-v2 client (with transparent v1 fallback) for a running
-//! `wattchmen serve`.
+//! `wattchmen serve`.  The server multiplexes idle keep-alive
+//! connections on a single readiness-loop acceptor
+//! ([`util::poll`], unix) and optionally speaks a length-prefixed
+//! binary frame dialect negotiated in-band; `SERVE.md` at the repo
+//! root specifies the wire formats, the negotiation handshake, the
+//! acceptor modes, and the deadline model.
 //!
 //! The [`fleet`] module scales the model out: `wattchmen fleet`
 //! simulates thousands of heterogeneous devices replaying a day of

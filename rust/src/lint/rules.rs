@@ -155,7 +155,14 @@ pub fn check(rel: &str, src: &str, lx: &Lexed) -> Vec<Diagnostic> {
     }
 
     // --- request-unwrap: panics on the serve request path ------------
-    if in_dirs(rel, REQUEST_PATH_DIRS) || rel == "runtime/coalescer.rs" {
+    // util/poll.rs and util/bytes.rs carry the event-loop acceptor's
+    // readiness and buffer machinery: a panic there takes down every
+    // connection at once, so they get the same discipline.
+    if in_dirs(rel, REQUEST_PATH_DIRS)
+        || rel == "runtime/coalescer.rs"
+        || rel == "util/poll.rs"
+        || rel == "util/bytes.rs"
+    {
         for i in 0..toks.len() {
             if in_spans(i, &tests) {
                 continue;
@@ -208,7 +215,7 @@ pub fn check(rel: &str, src: &str, lx: &Lexed) -> Vec<Diagnostic> {
     }
 
     // --- err-string: `Result<_, String>` in engine-reachable code ----
-    if in_dirs(rel, TYPED_ERROR_DIRS) || rel == "main.rs" {
+    if in_dirs(rel, TYPED_ERROR_DIRS) || rel == "main.rs" || rel == "util/poll.rs" {
         let mut i = 0;
         while i + 1 < toks.len() {
             if ident_is(&toks[i], "Result") && toks[i + 1].text == "<" && !in_spans(i, &tests) {

@@ -27,7 +27,7 @@ use wattchmen::gpusim::config::ArchConfig;
 use wattchmen::isa::Gen;
 use wattchmen::report::{self, EvalCache};
 use wattchmen::runtime::Artifacts;
-use wattchmen::service::{protocol, PredictServer, ServeConfig};
+use wattchmen::service::{protocol, Acceptor, PredictServer, ServeConfig};
 use wattchmen::util::cli::Args;
 use wattchmen::workloads;
 use wattchmen::{Engine, Error, PredictRequest};
@@ -155,6 +155,12 @@ fn predict_remote(addr: &str, args: &Args) -> Result<(), Error> {
     let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
     let deadline_ms = (deadline_ms > 0.0).then_some(deadline_ms);
     let mut client = RemoteClient::connect(addr)?;
+    // --binary upgrades the connection to length-prefixed bin1 frames
+    // when the server advertises them; responses decode identically, so
+    // the printed text is unchanged either way.
+    if args.flag("binary") && !client.negotiate_binary_frames()? {
+        eprintln!("note: server does not support binary frames; staying on newline JSON");
+    }
     let text = match args.get("workload") {
         Some(w) => client.predict(arch, w, mode, deadline_ms)?.text,
         None => client.predict_all(arch, mode, deadline_ms)?.text,
@@ -204,6 +210,27 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             "--deadline-ms must be a non-negative finite number",
         ));
     }
+    // --header-deadline-ms 0 disables the slow-sender guard.
+    let header_deadline_ms = args.get_f64("header-deadline-ms", 10_000.0)?;
+    if !header_deadline_ms.is_finite() || header_deadline_ms < 0.0 {
+        return Err(Error::bad_request(
+            "--header-deadline-ms must be a non-negative finite number",
+        ));
+    }
+    let acceptor = match args.get_or("acceptor", "event-loop") {
+        "event-loop" if cfg!(unix) => Acceptor::EventLoop,
+        "event-loop" => {
+            return Err(Error::bad_request(
+                "--acceptor event-loop requires a Unix platform (use --acceptor threads)",
+            ))
+        }
+        "threads" => Acceptor::ThreadPerConn,
+        other => {
+            return Err(Error::bad_request(format!(
+                "unknown --acceptor '{other}' (event-loop|threads)"
+            )))
+        }
+    };
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7117").to_string(),
         workers: args.get_usize("workers", 64)?,
@@ -214,6 +241,10 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
         deadline: (deadline_ms > 0.0).then(|| {
             Duration::from_secs_f64(deadline_ms.min(protocol::MAX_DEADLINE_MS) / 1000.0)
         }),
+        acceptor,
+        header_deadline: Duration::from_secs_f64(
+            header_deadline_ms.min(protocol::MAX_DEADLINE_MS) / 1000.0,
+        ),
     };
     let server = PredictServer::bind(cfg)?;
     if let Some(path) = args.get("table") {
@@ -385,9 +416,10 @@ fn main() {
                  predict --table FILE [--arch ENV] [--workload NAME] [--mode direct|pred]\n\
                          [--breakdown [--top N]]\n\
                  predict --remote H:P [--arch ENV] [--workload NAME] [--mode direct|pred] [--deadline-ms MS]\n\
-                         (no --workload: one predict_all request for the whole suite)\n\
+                         [--binary] (no --workload: one predict_all request for the whole suite)\n\
                  serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N]\n\
                          [--linger-ms MS] [--queue N] [--deadline-ms MS]\n\
+                         [--acceptor event-loop|threads] [--header-deadline-ms MS]\n\
                  fleet   [--devices N] [--hours H] [--jobs N] [--seed N] [--power-cap W]\n\
                          [--bin-secs S] [--gap-secs S] [--archs name[=w],...] [--full] [--out FILE]\n\
                  daemon  [--streams N] [--samples N] [--batch N] [--interval-ms MS] [--seed N]\n\

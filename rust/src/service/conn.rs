@@ -1,0 +1,356 @@
+//! Wire framing shared by the server (both acceptor paths) and
+//! [`RemoteClient`](crate::engine::client::RemoteClient) — see SERVE.md
+//! for the byte-level layouts and the negotiation sequence.
+//!
+//! Two dialects carry the same JSON request/response bodies:
+//!
+//! * [`FrameDialect::Jsonl`] — newline-delimited JSON, the v1/v2 legacy
+//!   dialect every connection starts in.  Pinned byte-identical by
+//!   `tests/protocol_v2.rs`.
+//! * [`FrameDialect::Bin1`] — length-prefixed binary: a little-endian
+//!   `u32` payload length, then one encoding-tag byte
+//!   ([`FRAME_ENC_JSON`]), then the payload.  Negotiated per connection
+//!   through the `frames` command (advertised in the protocol-v2
+//!   `capabilities` object); the tag byte reserves room for packed
+//!   predict encodings without another version bump.
+//!
+//! `extract_frame` is a pure function over a [`ByteQueue`], so frame
+//! reassembly behaves identically whether bytes arrive through the
+//! event loop's nonblocking reads or the legacy path's blocking reads —
+//! and the slow-sender/oversize policies live in exactly one place.
+
+use std::time::Instant;
+
+use crate::util::bytes::ByteQueue;
+
+/// How request/response bodies are framed on a connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameDialect {
+    /// Newline-delimited JSON (the default; protocol v1 and v2).
+    Jsonl,
+    /// `u32` little-endian length + encoding tag + payload.
+    Bin1,
+}
+
+/// Bin1 encoding tag: the payload (after this byte) is UTF-8 JSON.
+pub const FRAME_ENC_JSON: u8 = 0x01;
+
+/// Bin1 length-prefix size in bytes.
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Outcome of trying to pull one frame off the head of a byte queue.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Extract {
+    /// One complete frame body (trimmed of surrounding whitespace for
+    /// Jsonl parity with the legacy `read_line` + `trim` path).  May be
+    /// empty (blank line) — callers skip those.
+    Frame(String),
+    /// Not enough bytes yet; read more.
+    Incomplete,
+    /// The stream violates the framing contract; answer with this
+    /// message and close.  The queue is left as-is — the connection is
+    /// done either way.
+    Violation(&'static str),
+}
+
+/// Pull one frame from `buf` under the `max` body-size bound.
+/// Consumes the frame's bytes (header included) on success only.
+pub fn extract_frame(dialect: FrameDialect, buf: &mut ByteQueue, max: usize) -> Extract {
+    match dialect {
+        FrameDialect::Jsonl => match buf.find_byte(b'\n') {
+            Some(i) if i > max => Extract::Violation("request line too long"),
+            Some(i) => {
+                let raw = buf.take(i + 1);
+                match String::from_utf8(raw) {
+                    Ok(s) => Extract::Frame(s.trim().to_string()),
+                    Err(_) => Extract::Violation("request is not valid UTF-8"),
+                }
+            }
+            // No newline yet: a sender that has already streamed more
+            // than a full line's bound will never produce a valid frame.
+            None if buf.len() > max => Extract::Violation("request line too long"),
+            None => Extract::Incomplete,
+        },
+        FrameDialect::Bin1 => {
+            let Some(n) = buf.peek_u32_le() else {
+                return Extract::Incomplete;
+            };
+            let n = n as usize;
+            if n == 0 {
+                return Extract::Violation("empty frame");
+            }
+            if n > max {
+                return Extract::Violation("frame too large");
+            }
+            if buf.len() < FRAME_HEADER_BYTES + n {
+                return Extract::Incomplete;
+            }
+            buf.consume(FRAME_HEADER_BYTES);
+            let payload = buf.take(n);
+            let Some((&tag, body)) = payload.split_first() else {
+                return Extract::Violation("empty frame");
+            };
+            if tag != FRAME_ENC_JSON {
+                return Extract::Violation("unknown frame encoding");
+            }
+            match std::str::from_utf8(body) {
+                Ok(s) => Extract::Frame(s.trim().to_string()),
+                Err(_) => Extract::Violation("frame is not valid UTF-8"),
+            }
+        }
+    }
+}
+
+/// Append one framed payload to `out` in the given dialect.
+pub fn encode_frame(dialect: FrameDialect, payload: &str, out: &mut Vec<u8>) {
+    match dialect {
+        FrameDialect::Jsonl => {
+            out.extend_from_slice(payload.as_bytes());
+            out.push(b'\n');
+        }
+        FrameDialect::Bin1 => {
+            let n = (payload.len() + 1).min(u32::MAX as usize) as u32;
+            out.extend_from_slice(&n.to_le_bytes());
+            out.push(FRAME_ENC_JSON);
+            out.extend_from_slice(payload.as_bytes());
+        }
+    }
+}
+
+/// What the connection loop should do after writing a response — the
+/// third verb (`SwitchDialect`) is why this is no longer a bool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnDirective {
+    /// Keep the connection open in the current dialect.
+    Continue,
+    /// Write the response, then close.
+    Close,
+    /// Write the response in the *current* dialect, then speak the new
+    /// one for every subsequent frame in both directions.
+    SwitchDialect(FrameDialect),
+}
+
+/// Per-connection state machine for the event loop: a connection is
+/// either assembling a request frame or waiting for the worker pool to
+/// finish the one it dispatched (writing happens opportunistically in
+/// both states via the write buffer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnState {
+    /// Assembling the next request frame from read bytes.
+    ReadingFrame,
+    /// One request is in the worker pool; parsing is paused so at most
+    /// one request per connection is in flight (responses stay in
+    /// order, and the worker channel is bounded by open connections).
+    Dispatched,
+}
+
+/// One event-loop connection: socket, buffers, framing state.
+pub struct Conn {
+    pub stream: std::net::TcpStream,
+    pub state: ConnState,
+    pub dialect: FrameDialect,
+    pub rbuf: ByteQueue,
+    pub wbuf: ByteQueue,
+    /// Close once `wbuf` drains (violation answered, `shutdown` acked,
+    /// or peer EOF seen).
+    pub close_after_write: bool,
+    /// Peer EOF / hangup observed; no more reads will be attempted.
+    pub eof: bool,
+    /// When the currently-assembling partial frame started arriving;
+    /// `None` while the read buffer holds no partial frame.  The
+    /// header-deadline sweep closes connections whose partial is older
+    /// than the configured bound (the slow-loris guard).
+    pub partial_since: Option<Instant>,
+    /// Interest bits currently registered with the poller (tracked so
+    /// redundant `modify` calls are elided).  Connections register with
+    /// read interest at accept time.
+    pub reg_readable: bool,
+    pub reg_writable: bool,
+}
+
+impl Conn {
+    pub fn new(stream: std::net::TcpStream) -> Conn {
+        Conn {
+            stream,
+            state: ConnState::ReadingFrame,
+            dialect: FrameDialect::Jsonl,
+            rbuf: ByteQueue::new(),
+            wbuf: ByteQueue::new(),
+            close_after_write: false,
+            eof: false,
+            partial_since: None,
+            reg_readable: true,
+            reg_writable: false,
+        }
+    }
+
+    /// Queue a response payload in the current dialect, then apply the
+    /// directive (dialect switches take effect *after* this response).
+    pub fn queue_response(&mut self, payload: &str, directive: ConnDirective) {
+        let mut bytes = Vec::with_capacity(payload.len() + 8);
+        encode_frame(self.dialect, payload, &mut bytes);
+        self.wbuf.push(&bytes);
+        match directive {
+            ConnDirective::Continue => {}
+            ConnDirective::Close => self.close_after_write = true,
+            ConnDirective::SwitchDialect(d) => self.dialect = d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(bytes: &[u8]) -> ByteQueue {
+        let mut b = ByteQueue::new();
+        b.push(bytes);
+        b
+    }
+
+    const MAX: usize = 64 * 1024;
+
+    #[test]
+    fn jsonl_extracts_trimmed_lines_and_leaves_the_rest() {
+        let mut b = q(b"  {\"cmd\":\"status\"}\r\n{\"cmd\":");
+        assert_eq!(
+            extract_frame(FrameDialect::Jsonl, &mut b, MAX),
+            Extract::Frame("{\"cmd\":\"status\"}".into())
+        );
+        // The partial second request stays queued.
+        assert_eq!(b.as_slice(), b"{\"cmd\":");
+        assert_eq!(extract_frame(FrameDialect::Jsonl, &mut b, MAX), Extract::Incomplete);
+    }
+
+    #[test]
+    fn jsonl_blank_lines_come_back_as_empty_frames() {
+        let mut b = q(b"\n\n{\"cmd\":\"status\"}\n");
+        assert_eq!(extract_frame(FrameDialect::Jsonl, &mut b, MAX), Extract::Frame(String::new()));
+        assert_eq!(extract_frame(FrameDialect::Jsonl, &mut b, MAX), Extract::Frame(String::new()));
+        assert!(matches!(
+            extract_frame(FrameDialect::Jsonl, &mut b, MAX),
+            Extract::Frame(s) if s == "{\"cmd\":\"status\"}"
+        ));
+    }
+
+    #[test]
+    fn jsonl_oversize_is_a_violation_with_the_pinned_message() {
+        // Newline-free overrun: caught as soon as the queue exceeds max.
+        let mut b = q(&vec![b'x'; MAX + 1]);
+        assert_eq!(
+            extract_frame(FrameDialect::Jsonl, &mut b, MAX),
+            Extract::Violation("request line too long")
+        );
+        // A complete line whose body exceeds max is equally rejected.
+        let mut with_nl = vec![b'y'; MAX + 1];
+        with_nl.push(b'\n');
+        let mut b = q(&with_nl);
+        assert_eq!(
+            extract_frame(FrameDialect::Jsonl, &mut b, MAX),
+            Extract::Violation("request line too long")
+        );
+        // Exactly at the bound still parses.
+        let mut at = vec![b'z'; MAX];
+        at.push(b'\n');
+        let mut b = q(&at);
+        assert!(matches!(extract_frame(FrameDialect::Jsonl, &mut b, MAX), Extract::Frame(_)));
+    }
+
+    #[test]
+    fn bin1_roundtrips_through_encode() {
+        let payload = "{\"cmd\":\"predict\",\"arch\":\"cloudlab-v100\"}";
+        let mut bytes = Vec::new();
+        encode_frame(FrameDialect::Bin1, payload, &mut bytes);
+        assert_eq!(bytes.len(), FRAME_HEADER_BYTES + 1 + payload.len());
+        let mut b = q(&bytes);
+        assert_eq!(
+            extract_frame(FrameDialect::Bin1, &mut b, MAX),
+            Extract::Frame(payload.to_string())
+        );
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn bin1_reassembles_across_arbitrary_split_points() {
+        let payload = "{\"cmd\":\"status\",\"v\":2}";
+        let mut bytes = Vec::new();
+        encode_frame(FrameDialect::Bin1, payload, &mut bytes);
+        encode_frame(FrameDialect::Bin1, payload, &mut bytes);
+        for split in 0..bytes.len() {
+            let mut b = ByteQueue::new();
+            b.push(bytes.get(..split).unwrap_or(&[]));
+            let mut got = Vec::new();
+            loop {
+                match extract_frame(FrameDialect::Bin1, &mut b, MAX) {
+                    Extract::Frame(s) => got.push(s),
+                    Extract::Incomplete => break,
+                    Extract::Violation(m) => panic!("violation at split {split}: {m}"),
+                }
+            }
+            b.push(bytes.get(split..).unwrap_or(&[]));
+            loop {
+                match extract_frame(FrameDialect::Bin1, &mut b, MAX) {
+                    Extract::Frame(s) => got.push(s),
+                    Extract::Incomplete => break,
+                    Extract::Violation(m) => panic!("violation at split {split}: {m}"),
+                }
+            }
+            assert_eq!(got, vec![payload.to_string(); 2], "split at {split}");
+        }
+    }
+
+    #[test]
+    fn bin1_rejects_bad_frames() {
+        // Oversize length prefix.
+        let mut b = ByteQueue::new();
+        b.push(&(MAX as u32 + 1).to_le_bytes());
+        b.push(&[FRAME_ENC_JSON]);
+        assert_eq!(
+            extract_frame(FrameDialect::Bin1, &mut b, MAX),
+            Extract::Violation("frame too large")
+        );
+        // Zero-length frame.
+        let mut b = q(&0u32.to_le_bytes());
+        assert_eq!(
+            extract_frame(FrameDialect::Bin1, &mut b, MAX),
+            Extract::Violation("empty frame")
+        );
+        // Unknown encoding tag.
+        let mut b = ByteQueue::new();
+        b.push(&2u32.to_le_bytes());
+        b.push(&[0x7f, b'x']);
+        assert_eq!(
+            extract_frame(FrameDialect::Bin1, &mut b, MAX),
+            Extract::Violation("unknown frame encoding")
+        );
+        // Invalid UTF-8 body.
+        let mut b = ByteQueue::new();
+        b.push(&3u32.to_le_bytes());
+        b.push(&[FRAME_ENC_JSON, 0xff, 0xfe]);
+        assert_eq!(
+            extract_frame(FrameDialect::Bin1, &mut b, MAX),
+            Extract::Violation("frame is not valid UTF-8")
+        );
+    }
+
+    #[test]
+    fn queue_response_switches_dialect_after_the_ack() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut c = Conn::new(stream);
+        c.queue_response(
+            "{\"frames\":\"bin1\",\"ok\":true}",
+            ConnDirective::SwitchDialect(FrameDialect::Bin1),
+        );
+        // The ack itself is newline-framed (old dialect) ...
+        assert!(c.wbuf.as_slice().ends_with(b"\n"));
+        assert_eq!(c.dialect, FrameDialect::Bin1);
+        // ... and the next response is binary-framed.
+        c.queue_response("{\"ok\":true}", ConnDirective::Continue);
+        let tail_len = FRAME_HEADER_BYTES + 1 + "{\"ok\":true}".len();
+        let all = c.wbuf.take(usize::MAX);
+        let tail = all.get(all.len() - tail_len..).unwrap();
+        assert_eq!(&tail[..4], &(1 + "{\"ok\":true}".len() as u32).to_le_bytes());
+        assert_eq!(tail[4], FRAME_ENC_JSON);
+    }
+}

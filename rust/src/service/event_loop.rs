@@ -1,0 +1,407 @@
+//! The readiness-loop acceptor: ONE thread multiplexes every client
+//! connection through a [`Poller`] (epoll on Linux, poll(2) fallback),
+//! so an idle keep-alive connection costs a registration and two byte
+//! queues instead of a parked worker thread.
+//!
+//! Flow per connection (see [`ConnState`]):
+//!
+//! ```text
+//! readable ─▶ read into rbuf ─▶ extract_frame ─▶ ReadingFrame
+//!                                    │ complete frame
+//!                                    ▼
+//!                          Dispatched (req_tx ─▶ worker pool)
+//!                                    │ worker: respond() → done_tx + wake
+//!                                    ▼
+//!                  queue response in wbuf ─▶ flush (writable events
+//!                  drain the remainder) ─▶ back to ReadingFrame
+//! ```
+//!
+//! Read interest is dropped while a request is in flight (at most one
+//! per connection), so the worker channel is bounded by the number of
+//! open connections and a pipelining client cannot make the loop buffer
+//! its backlog.  The workers still run the *same* `respond()` as the
+//! legacy thread-per-connection path — admission, deadlines, and the
+//! coalescer are untouched; only the transport changed.
+//!
+//! Slow senders (the bug family this PR retires): a partial frame older
+//! than `header_deadline` is answered with an error and closed by the
+//! periodic sweep — no thread was ever pinned waiting for its bytes.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::conn::{extract_frame, Conn, ConnDirective, ConnState, Extract};
+use super::{accept_backoff, protocol, Shared, MAX_REQUEST_BYTES};
+use crate::util::poll::{drain_waker, Event, Interest, Poller};
+
+/// Registration token for the listening socket.
+const LISTENER_TOKEN: u64 = 0;
+/// Registration token for the waker's read end.
+const WAKER_TOKEN: u64 = 1;
+/// First token handed to an accepted connection.
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// One complete request frame headed for the worker pool.
+pub(crate) struct WorkItem {
+    pub token: u64,
+    pub line: String,
+}
+
+/// A finished response headed back to the event loop.
+pub(crate) struct Done {
+    pub token: u64,
+    pub payload: String,
+    pub directive: ConnDirective,
+}
+
+/// Poll-timeout ceiling: bounds shutdown and header-deadline-sweep
+/// latency.  Completions interrupt the wait through the waker, so this
+/// is a ceiling on idle latency, not a response-time cadence.
+const TICK: Duration = Duration::from_millis(100);
+
+/// Per-read chunk size; also the slack allowed past `MAX_REQUEST_BYTES`
+/// before the loop stops reading a connection that is mid-violation.
+const READ_CHUNK: usize = 16 * 1024;
+
+pub(crate) struct EventLoop {
+    pub listener: TcpListener,
+    pub shared: Arc<Shared>,
+    pub poller: Poller,
+    pub req_tx: Sender<WorkItem>,
+    pub done_rx: Receiver<Done>,
+    pub waker_rx: TcpStream,
+    /// Bound on partial-frame age (the slow-loris guard); zero disables.
+    pub header_deadline: Duration,
+}
+
+impl EventLoop {
+    /// Drive the loop until shutdown completes.  Consumes self so that
+    /// returning drops `req_tx` — the worker pool's receiver
+    /// disconnects, workers exit and release their coalescer senders,
+    /// and the coordinator drains: the same teardown chain as the
+    /// legacy acceptor.
+    pub(crate) fn run(mut self) {
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut events: Vec<Event> = Vec::new();
+        let mut next_token = FIRST_CONN_TOKEN;
+        // Requests currently in the worker pool; shutdown drains them
+        // (their responses still go out) before the loop exits.
+        let mut dispatched: usize = 0;
+        let mut accepting = true;
+        // Accept-failure backoff without sleeping the loop: on error the
+        // listener is deregistered until the deadline passes.
+        let mut accept_paused_until: Option<Instant> = None;
+        let mut accept_err_streak: u32 = 0;
+        let listener_fd = self.listener.as_raw_fd();
+        if self
+            .poller
+            .register(listener_fd, LISTENER_TOKEN, Interest::READ)
+            .is_err()
+        {
+            return;
+        }
+        if self
+            .poller
+            .register(self.waker_rx.as_raw_fd(), WAKER_TOKEN, Interest::READ)
+            .is_err()
+        {
+            return;
+        }
+        loop {
+            if self.poller.wait(&mut events, Some(TICK)).is_err() {
+                break;
+            }
+            for ev in events.iter().copied() {
+                match ev.token {
+                    LISTENER_TOKEN => {
+                        if accepting && accept_paused_until.is_none() {
+                            if self.accept_ready(&mut conns, &mut next_token) {
+                                accept_err_streak = 0;
+                            } else {
+                                let _ = self.poller.deregister(listener_fd);
+                                accept_paused_until =
+                                    Some(Instant::now() + accept_backoff(accept_err_streak));
+                                accept_err_streak = accept_err_streak.saturating_add(1);
+                            }
+                        }
+                    }
+                    WAKER_TOKEN => drain_waker(&self.waker_rx),
+                    token => self.conn_event(&mut conns, token, ev, &mut dispatched),
+                }
+            }
+            events.clear();
+            while let Ok(done) = self.done_rx.try_recv() {
+                self.complete(&mut conns, done, &mut dispatched);
+            }
+            self.sweep_header_deadlines(&mut conns);
+            if accepting {
+                if let Some(until) = accept_paused_until {
+                    if Instant::now() >= until
+                        && self
+                            .poller
+                            .register(listener_fd, LISTENER_TOKEN, Interest::READ)
+                            .is_ok()
+                    {
+                        accept_paused_until = None;
+                    }
+                }
+            }
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                if accepting {
+                    accepting = false;
+                    if accept_paused_until.is_none() {
+                        let _ = self.poller.deregister(listener_fd);
+                    }
+                }
+                // Idle connections close now; dispatched ones get their
+                // response (flushed by the loop) before teardown.
+                let idle: Vec<u64> = conns
+                    .iter()
+                    .filter(|(_, c)| c.state == ConnState::ReadingFrame && c.wbuf.is_empty())
+                    .map(|(t, _)| *t)
+                    .collect();
+                for token in idle {
+                    self.close_conn(&mut conns, token);
+                }
+                if dispatched == 0 && conns.is_empty() {
+                    break;
+                }
+            }
+        }
+        let remaining: Vec<u64> = conns.keys().copied().collect();
+        for token in remaining {
+            self.close_conn(&mut conns, token);
+        }
+    }
+
+    /// Accept until `WouldBlock`.  Returns false on a transient accept
+    /// error (e.g. fd exhaustion) — the caller pauses the listener
+    /// instead of spinning on a level-triggered readable event.
+    fn accept_ready(&mut self, conns: &mut HashMap<u64, Conn>, next_token: &mut u64) -> bool {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let token = *next_token;
+                    *next_token += 1;
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        self.shared.accept_errors.fetch_add(1, Ordering::SeqCst);
+                        continue;
+                    }
+                    conns.insert(token, Conn::new(stream));
+                    self.shared.open_conns.fetch_add(1, Ordering::SeqCst);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(_) => {
+                    self.shared.accept_errors.fetch_add(1, Ordering::SeqCst);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Handle a readiness event for one connection.
+    fn conn_event(
+        &mut self,
+        conns: &mut HashMap<u64, Conn>,
+        token: u64,
+        ev: Event,
+        dispatched: &mut usize,
+    ) {
+        let close = match conns.get_mut(&token) {
+            None => return, // already torn down earlier in this batch
+            Some(conn) => {
+                if (ev.readable || ev.closed)
+                    && !conn.eof
+                    && conn.state == ConnState::ReadingFrame
+                {
+                    read_ready(conn);
+                }
+                self.advance(token, conn, dispatched)
+            }
+        };
+        if close {
+            self.close_conn(conns, token);
+        }
+    }
+
+    /// Extract-and-dispatch until the connection blocks, then flush.
+    /// Returns whether the connection should close now.
+    fn advance(&mut self, token: u64, conn: &mut Conn, dispatched: &mut usize) -> bool {
+        while conn.state == ConnState::ReadingFrame && !conn.close_after_write {
+            match extract_frame(conn.dialect, &mut conn.rbuf, MAX_REQUEST_BYTES) {
+                Extract::Frame(line) => {
+                    // The deadline clock restarts per frame: leftover
+                    // bytes are the *next* request's partial.
+                    conn.partial_since = if conn.rbuf.is_empty() {
+                        None
+                    } else {
+                        Some(Instant::now())
+                    };
+                    if line.is_empty() {
+                        continue; // blank keep-alive line
+                    }
+                    conn.state = ConnState::Dispatched;
+                    *dispatched += 1;
+                    if self.req_tx.send(WorkItem { token, line }).is_err() {
+                        // Worker pool is gone (teardown) — no response
+                        // will come back for this request.
+                        *dispatched -= 1;
+                        conn.close_after_write = true;
+                    }
+                }
+                Extract::Incomplete => {
+                    if conn.rbuf.is_empty() {
+                        conn.partial_since = None;
+                    } else if conn.partial_since.is_none() {
+                        conn.partial_since = Some(Instant::now());
+                    }
+                    break;
+                }
+                Extract::Violation(msg) => {
+                    let payload = protocol::error_json(msg).to_string_compact();
+                    conn.queue_response(&payload, ConnDirective::Close);
+                    break;
+                }
+            }
+        }
+        self.flush(token, conn)
+    }
+
+    /// Write as much of `wbuf` as the socket accepts, then reconcile
+    /// poller interest.  Returns whether the connection should close.
+    fn flush(&mut self, token: u64, conn: &mut Conn) -> bool {
+        while !conn.wbuf.is_empty() {
+            match (&conn.stream).write(conn.wbuf.as_slice()) {
+                Ok(0) => return true,
+                Ok(n) => conn.wbuf.consume(n),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+        if conn.wbuf.is_empty() {
+            if conn.close_after_write {
+                return true;
+            }
+            if conn.eof && conn.state == ConnState::ReadingFrame {
+                // Peer finished sending and nothing is owed.  (An
+                // in-flight request still gets its response first.)
+                return true;
+            }
+        }
+        self.update_interest(token, conn);
+        false
+    }
+
+    /// Keep the poller registration in sync with what the connection
+    /// can actually make progress on.
+    fn update_interest(&mut self, token: u64, conn: &mut Conn) {
+        let want = Interest {
+            readable: conn.state == ConnState::ReadingFrame && !conn.close_after_write && !conn.eof,
+            writable: !conn.wbuf.is_empty(),
+        };
+        if want.readable != conn.reg_readable || want.writable != conn.reg_writable {
+            if self.poller.modify(conn.stream.as_raw_fd(), token, want).is_ok() {
+                conn.reg_readable = want.readable;
+                conn.reg_writable = want.writable;
+            }
+        }
+    }
+
+    /// Deliver a worker's response and resume reading (pipelined
+    /// requests already buffered are dispatched immediately).
+    fn complete(&mut self, conns: &mut HashMap<u64, Conn>, done: Done, dispatched: &mut usize) {
+        *dispatched = dispatched.saturating_sub(1);
+        let close = match conns.get_mut(&done.token) {
+            None => return, // connection tore down while its request ran
+            Some(conn) => {
+                conn.queue_response(&done.payload, done.directive);
+                conn.state = ConnState::ReadingFrame;
+                self.advance(done.token, conn, dispatched)
+            }
+        };
+        if close {
+            self.close_conn(conns, done.token);
+        }
+    }
+
+    /// Close connections whose partial frame is older than the header
+    /// deadline — the slow-loris guard.  Runs every tick; cost is one
+    /// `Instant` comparison per connection holding a partial.
+    fn sweep_header_deadlines(&mut self, conns: &mut HashMap<u64, Conn>) {
+        if self.header_deadline.is_zero() {
+            return;
+        }
+        let expired: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| {
+                !c.close_after_write
+                    && c.partial_since
+                        .map_or(false, |t| t.elapsed() > self.header_deadline)
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for token in expired {
+            let close = {
+                let Some(conn) = conns.get_mut(&token) else { continue };
+                self.shared.slow_client_closes.fetch_add(1, Ordering::SeqCst);
+                let payload =
+                    protocol::error_json("request header deadline exceeded").to_string_compact();
+                conn.queue_response(&payload, ConnDirective::Close);
+                self.flush(token, conn)
+            };
+            if close {
+                self.close_conn(conns, token);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, conns: &mut HashMap<u64, Conn>, token: u64) {
+        if let Some(conn) = conns.remove(&token) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.shared.open_conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Drain the socket into the read buffer until it blocks, EOF, or the
+/// buffer passes the request bound (the framing layer then answers with
+/// the oversize violation — reading further would buffer an attacker's
+/// stream without limit).
+fn read_ready(conn: &mut Conn) {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match (&conn.stream).read(&mut chunk) {
+            Ok(0) => {
+                conn.eof = true;
+                return;
+            }
+            Ok(n) => {
+                conn.rbuf.push(chunk.get(..n).unwrap_or(&[]));
+                if conn.rbuf.len() > MAX_REQUEST_BYTES + READ_CHUNK {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.eof = true;
+                return;
+            }
+        }
+    }
+}

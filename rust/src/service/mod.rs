@@ -1,18 +1,27 @@
 //! `wattchmen serve` — the batched multi-table prediction service.
 //!
-//! A std-only JSON-over-TCP server (tokio is unavailable offline — the
-//! same constraint that keeps `cluster/` on `std::thread`) that turns
-//! the per-table prediction pipeline into an online service:
+//! A std-only TCP server (tokio is unavailable offline — the same
+//! constraint that keeps `cluster/` on `std::thread`) that turns the
+//! per-table prediction pipeline into an online service.  Two acceptor
+//! architectures share every other layer (see [`Acceptor`], SERVE.md):
 //!
-//! * acceptor thread — hands sockets to the worker pool;
-//! * worker pool — parses newline-delimited JSON requests (protocol v1
-//!   or v2, see [`protocol`]), resolves tables through [`TableRegistry`]
-//!   (mtime-based hot reload), and answers each predict-family request
-//!   through a per-request [`Engine`](crate::engine::Engine) handle —
-//!   the same typed facade the CLI and the report pipeline use — which
-//!   memoizes profiles in the counter-instrumented [`ProfileCache`],
-//!   enqueues [`PredictJob`](crate::runtime::coalescer::PredictJob)s,
-//!   and blocks on their replies;
+//! * **event loop** (default on unix) — ONE thread multiplexes every
+//!   connection through `util::poll` (epoll/poll(2)); complete request
+//!   frames are dispatched to the worker pool, so thousands of idle
+//!   keep-alive connections cost registrations, not threads
+//!   ([`event_loop`]);
+//! * **thread-per-connection** (`Acceptor::ThreadPerConn`, and the
+//!   non-unix fallback) — the legacy path: an acceptor thread hands
+//!   sockets to workers that own them for the connection's lifetime;
+//! * worker pool — parses requests (protocol v1 or v2 over either
+//!   frame dialect, see [`protocol`] and [`conn`]), resolves tables
+//!   through [`TableRegistry`] (mtime-based hot reload), and answers
+//!   each predict-family request through a per-request
+//!   [`Engine`](crate::engine::Engine) handle — the same typed facade
+//!   the CLI and the report pipeline use — which memoizes profiles in
+//!   the counter-instrumented [`ProfileCache`], enqueues
+//!   [`PredictJob`](crate::runtime::coalescer::PredictJob)s, and blocks
+//!   on their replies;
 //! * coordinator — [`PredictServer::run`] drives the request
 //!   [`Coalescer`] on the *calling* thread, where the non-Sync PJRT
 //!   artifacts may live; concurrent requests against the same table
@@ -37,16 +46,19 @@
 //! same value.
 
 pub mod cache;
+pub mod conn;
+#[cfg(unix)]
+pub(crate) mod event_loop;
 pub mod protocol;
 pub mod registry;
 
 pub use cache::ProfileCache;
 pub use registry::TableRegistry;
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -60,10 +72,35 @@ use crate::report::cache::EvalCache;
 use crate::report::context::WORKLOAD_SECS;
 use crate::runtime::coalescer::{Coalescer, Job};
 use crate::runtime::Artifacts;
+use crate::util::bytes::ByteQueue;
 use crate::util::json::Json;
 use crate::util::sync::{lock_unpoisoned, Backoff, Semaphore};
 
+use conn::{extract_frame, ConnDirective, Extract, FrameDialect};
 use protocol::{Proto, Request};
+
+/// Which acceptor architecture [`PredictServer::bind`] spawns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acceptor {
+    /// One readiness-loop thread multiplexing every connection
+    /// (`util::poll` + [`event_loop`]); requests run on the worker
+    /// pool.  The default on unix.
+    EventLoop,
+    /// The legacy architecture: each accepted socket occupies one
+    /// worker thread for the connection's lifetime.  The only option
+    /// off unix, and the fallback if `EventLoop` is requested there.
+    ThreadPerConn,
+}
+
+impl Default for Acceptor {
+    fn default() -> Acceptor {
+        if cfg!(unix) {
+            Acceptor::EventLoop
+        } else {
+            Acceptor::ThreadPerConn
+        }
+    }
+}
 
 /// Server configuration (all CLI-settable; see `wattchmen serve`).
 #[derive(Clone, Debug)]
@@ -92,6 +129,13 @@ pub struct ServeConfig {
     /// (the effective budget is the minimum of the two) — a client must
     /// not be able to hold a queue slot past the operator's ceiling.
     pub deadline: Option<Duration>,
+    /// Acceptor architecture (event loop on unix by default).
+    pub acceptor: Acceptor,
+    /// Bound on how long a connection may take to assemble one complete
+    /// request frame (the slow-loris guard, enforced by BOTH acceptor
+    /// paths).  Zero disables.  Generous by default: it exists to stop
+    /// a sender that never finishes, not to race legitimate clients.
+    pub header_deadline: Duration,
 }
 
 impl Default for ServeConfig {
@@ -104,6 +148,8 @@ impl Default for ServeConfig {
             default_duration_s: WORKLOAD_SECS,
             queue_capacity: 256,
             deadline: None,
+            acceptor: Acceptor::default(),
+            header_deadline: Duration::from_secs(10),
         }
     }
 }
@@ -135,11 +181,30 @@ struct Shared {
     /// surfaced as errors, …).  The acceptor counts them and backs off
     /// instead of spinning — see [`accept_backoff`].
     accept_errors: AtomicUsize,
+    /// Currently-open connections (event-loop acceptor only; a gauge).
+    open_conns: AtomicUsize,
+    /// Connections closed by the header deadline (slow-loris guard).
+    slow_client_closes: AtomicUsize,
+    /// Connections upgraded to the bin1 frame dialect.
+    frame_upgrades: AtomicUsize,
     default_duration_s: f64,
     default_deadline: Option<Duration>,
-    /// Retry hint shipped in `overloaded` responses: the linger window,
-    /// i.e. one batch's worth of drain time.
-    retry_after_ms: u64,
+    /// Bound on partial-frame assembly time; zero disables.
+    header_deadline: Duration,
+    /// The coalescer linger window in ms, stored atomically so the
+    /// `overloaded` retry hint (one batch's worth of drain time) is
+    /// derived at *response* time — a hot-reloaded linger must not ship
+    /// a stale hint (the bug this field replaces: the hint used to be
+    /// computed once at construction).
+    linger_ms: AtomicU64,
+}
+
+impl Shared {
+    /// The `retry_after_ms` hint for `overloaded` responses, derived
+    /// from the *current* linger window on every call.
+    fn retry_after_ms(&self) -> u64 {
+        self.linger_ms.load(Ordering::SeqCst).max(1)
+    }
 }
 
 pub struct PredictServer {
@@ -169,11 +234,96 @@ impl PredictServer {
             deadline_exceeded: AtomicUsize::new(0),
             request_errors: AtomicUsize::new(0),
             accept_errors: AtomicUsize::new(0),
+            open_conns: AtomicUsize::new(0),
+            slow_client_closes: AtomicUsize::new(0),
+            frame_upgrades: AtomicUsize::new(0),
             default_duration_s: cfg.default_duration_s,
             default_deadline: cfg.deadline,
-            retry_after_ms: cfg.linger.as_millis().max(1) as u64,
+            header_deadline: cfg.header_deadline,
+            linger_ms: AtomicU64::new(cfg.linger.as_millis().max(1) as u64),
         });
+        listener.set_nonblocking(true)?;
 
+        #[cfg(unix)]
+        if cfg.acceptor == Acceptor::EventLoop {
+            return Self::bind_event_loop(cfg, listener, shared, jobs_tx);
+        }
+        Self::bind_thread_per_conn(cfg, listener, shared, jobs_tx)
+    }
+
+    /// The readiness-loop acceptor: workers consume complete request
+    /// frames instead of owning sockets; one thread owns every fd.
+    #[cfg(unix)]
+    fn bind_event_loop(
+        cfg: ServeConfig,
+        listener: TcpListener,
+        shared: Arc<Shared>,
+        jobs_tx: Sender<Job>,
+    ) -> Result<PredictServer, Error> {
+        use crate::util::poll::{Poller, Waker};
+        use event_loop::{Done, EventLoop, WorkItem};
+
+        let poller = Poller::new().map_err(|e| Error::io(format!("creating poller: {e}")))?;
+        let (waker, waker_rx) =
+            Waker::pair().map_err(|e| Error::io(format!("creating waker: {e}")))?;
+        let (req_tx, req_rx) = mpsc::channel::<WorkItem>();
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        let req_rx = Arc::new(Mutex::new(req_rx));
+        let mut handles = Vec::with_capacity(cfg.workers + 1);
+        for _ in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let req_rx = req_rx.clone();
+            let jobs_tx = jobs_tx.clone();
+            let done_tx = done_tx.clone();
+            let waker = waker.clone();
+            handles.push(thread::spawn(move || loop {
+                let item = lock_unpoisoned(&req_rx).recv();
+                let Ok(WorkItem { token, line }) = item else { break };
+                let (response, directive) = respond(&line, &shared, &jobs_tx);
+                let done = Done {
+                    token,
+                    payload: response.to_string_compact(),
+                    directive,
+                };
+                if done_tx.send(done).is_err() {
+                    break;
+                }
+                waker.wake();
+            }));
+        }
+        // done_tx's original drops here: once the event loop exits and
+        // workers drain, the done channel fully disconnects.  jobs_tx's
+        // original drops at end of scope; the surviving clones are the
+        // workers' and the Shared slot (taken by the shutdown request),
+        // after which the coalescer's receiver disconnects and run()
+        // returns — that IS clean shutdown.
+        drop(done_tx);
+        let ev = EventLoop {
+            listener,
+            shared: shared.clone(),
+            poller,
+            req_tx,
+            done_rx,
+            waker_rx,
+            header_deadline: cfg.header_deadline,
+        };
+        handles.push(thread::spawn(move || ev.run()));
+        Ok(PredictServer {
+            shared,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    /// The legacy thread-per-connection acceptor (and the non-unix
+    /// fallback): each accepted socket occupies one worker until it
+    /// closes.  Shares the framing layer (`conn`) and `respond()` with
+    /// the event loop, so dialects and deadlines behave identically.
+    fn bind_thread_per_conn(
+        cfg: ServeConfig,
+        listener: TcpListener,
+        shared: Arc<Shared>,
+        jobs_tx: Sender<Job>,
+    ) -> Result<PredictServer, Error> {
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
         let mut handles = Vec::with_capacity(cfg.workers + 1);
@@ -192,11 +342,10 @@ impl PredictServer {
         // the Shared slot (taken by the shutdown request), after which
         // the coalescer's receiver disconnects and run() returns — that
         // IS clean shutdown.
-        // Non-blocking accept loop so the acceptor can observe the
-        // shutdown flag regardless of bind address or platform (a
-        // wake-by-self-connect would not reach e.g. an 0.0.0.0 bind
-        // everywhere).
-        listener.set_nonblocking(true)?;
+        // The listener is already non-blocking (set in bind()) so the
+        // acceptor can observe the shutdown flag regardless of bind
+        // address or platform (a wake-by-self-connect would not reach
+        // e.g. an 0.0.0.0 bind everywhere).
         {
             let shared = shared.clone();
             handles.push(thread::spawn(move || {
@@ -285,6 +434,37 @@ impl PredictServer {
         self.shared.accept_errors.load(Ordering::SeqCst)
     }
 
+    /// Currently-open client connections (event-loop acceptor; the
+    /// legacy path reports 0 — it has no central connection table).
+    pub fn open_connections(&self) -> usize {
+        self.shared.open_conns.load(Ordering::SeqCst)
+    }
+
+    /// Connections closed for exceeding the header deadline.
+    pub fn slow_client_closes(&self) -> usize {
+        self.shared.slow_client_closes.load(Ordering::SeqCst)
+    }
+
+    /// Connections upgraded to the bin1 binary frame dialect.
+    pub fn frame_upgrades(&self) -> usize {
+        self.shared.frame_upgrades.load(Ordering::SeqCst)
+    }
+
+    /// The `retry_after_ms` hint currently shipped in `overloaded`
+    /// responses (derived from the live linger value, not construction
+    /// time).
+    pub fn retry_after_ms(&self) -> u64 {
+        self.shared.retry_after_ms()
+    }
+
+    /// Config hot-reload hook: update the linger window the `overloaded`
+    /// retry hint is derived from.  Clamped to ≥ 1 ms on read, so a
+    /// zero linger never tells clients to retry immediately in a tight
+    /// loop.
+    pub fn set_linger_ms(&self, ms: u64) {
+        self.shared.linger_ms.store(ms, Ordering::SeqCst);
+    }
+
     /// Clone of the coalescer's job sender: lets an embedder (or the
     /// soak tests) run [`ExecJob`]s on the coordinator thread alongside
     /// live traffic.  `None` once shutdown has begun.  The coalescer
@@ -312,92 +492,153 @@ impl PredictServer {
 /// the conformance tests probe the real boundary.)
 pub const MAX_REQUEST_BYTES: usize = 64 * 1024;
 
+/// The legacy per-connection loop, rewritten onto the same framing
+/// layer ([`conn::extract_frame`]) the event loop uses: blocking socket,
+/// periodic read timeouts (shutdown + header-deadline checks), both
+/// frame dialects, and the same per-frame assembly bound — so a slow
+/// sender can pin this worker for at most `header_deadline`, not
+/// forever (the 250 ms-WouldBlock-retry-forever bug this PR retires).
 fn handle_conn(
     stream: TcpStream,
     shared: &Shared,
     jobs: &Sender<Job>,
 ) -> std::io::Result<()> {
     // Periodic read timeouts let idle keep-alive connections notice
-    // shutdown instead of pinning their worker forever.
+    // shutdown (and slow partials their deadline) instead of pinning
+    // their worker forever.
     stream.set_read_timeout(Some(Duration::from_millis(250)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    let mut line = String::new();
+    let mut rbuf = ByteQueue::new();
+    let mut dialect = FrameDialect::Jsonl;
+    let mut partial_since: Option<Instant> = None;
+    let mut chunk = [0u8; 8 * 1024];
     loop {
-        // Byte-budgeted read: each call may append at most what is left
-        // of the request bound, so a client streaming newline-free bytes
-        // can never grow the buffer past MAX_REQUEST_BYTES + 1.
-        if line.len() > MAX_REQUEST_BYTES {
-            let err = protocol::error_json("request line too long");
-            writer.write_all(err.to_string_compact().as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
-            break;
-        }
-        let budget = (MAX_REQUEST_BYTES + 1 - line.len()) as u64;
-        match std::io::Read::by_ref(&mut reader).take(budget).read_line(&mut line) {
-            Ok(0) => break, // EOF (budget is always ≥ 1 here)
-            Ok(_) => {
-                if !line.ends_with('\n') {
-                    // Mid-line: budget cap hit or sender paused — keep
-                    // accumulating (the bound above catches overruns).
-                    continue;
-                }
-                let request = line.trim().to_string();
-                line.clear();
+        match extract_frame(dialect, &mut rbuf, MAX_REQUEST_BYTES) {
+            Extract::Frame(request) => {
+                // The assembly clock restarts per frame; leftover bytes
+                // are the next request's partial.
+                partial_since = if rbuf.is_empty() {
+                    None
+                } else {
+                    Some(Instant::now())
+                };
                 if request.is_empty() {
                     continue;
                 }
-                let (response, done) = respond(&request, shared, jobs);
-                writer.write_all(response.to_string_compact().as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
-                if done {
-                    break;
+                let (response, directive) = respond(&request, shared, jobs);
+                write_frame(&stream, dialect, &response.to_string_compact())?;
+                match directive {
+                    ConnDirective::Continue => {}
+                    ConnDirective::Close => break,
+                    ConnDirective::SwitchDialect(d) => dialect = d,
                 }
             }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // Partial bytes (if any) stay accumulated in `line`.
-                if shared.shutdown.load(Ordering::SeqCst) {
+            Extract::Violation(msg) => {
+                let err = protocol::error_json(msg);
+                write_frame(&stream, dialect, &err.to_string_compact())?;
+                break;
+            }
+            Extract::Incomplete => {
+                if rbuf.is_empty() {
+                    partial_since = None;
+                } else if partial_since.is_none() {
+                    partial_since = Some(Instant::now());
+                }
+                if header_deadline_expired(partial_since, shared.header_deadline) {
+                    shared.slow_client_closes.fetch_add(1, Ordering::SeqCst);
+                    let err = protocol::error_json("request header deadline exceeded");
+                    write_frame(&stream, dialect, &err.to_string_compact())?;
                     break;
                 }
+                match (&stream).read(&mut chunk) {
+                    Ok(0) => break, // EOF
+                    Ok(n) => rbuf.push(chunk.get(..n).unwrap_or(&[])),
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        // Partial bytes (if any) stay accumulated.
+                        if shared.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
             }
-            Err(_) => break,
         }
     }
     Ok(())
 }
 
-/// Build the response for one request line; the bool asks the connection
-/// loop to close afterwards.
-fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
+/// Whether a partial frame has outlived the assembly bound (zero
+/// disables).  Pure, so the policy is unit-testable without a socket.
+fn header_deadline_expired(partial_since: Option<Instant>, bound: Duration) -> bool {
+    if bound.is_zero() {
+        return false;
+    }
+    partial_since.map_or(false, |t| t.elapsed() > bound)
+}
+
+/// Blocking write of one framed response (legacy path).
+fn write_frame(
+    mut stream: &TcpStream,
+    dialect: FrameDialect,
+    payload: &str,
+) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(payload.len() + 8);
+    conn::encode_frame(dialect, payload, &mut bytes);
+    stream.write_all(&bytes)
+}
+
+/// Build the response for one request frame, plus what the connection
+/// loop (either acceptor) should do after writing it.
+fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, ConnDirective) {
+    use ConnDirective::Continue;
     // Admission time: deadlines and elapsed_ms are measured from here, so
     // the budget covers parsing, table/profile resolution, queueing, and
     // the batch itself.
     let t0 = Instant::now();
     let (v, parsed) = protocol::parse_request(request);
     let req = match parsed {
-        Err(e) => return (protocol::error_response(v, &e), false),
+        Err(e) => return (protocol::error_response(v, &e), Continue),
         Ok(r) => r,
     };
     match req {
-        Request::Status => (status_json(shared, v), false),
+        Request::Status => (status_json(shared, v), Continue),
         Request::Metrics => (
             protocol::metrics_json(&protocol::prometheus_text(&counters(shared))),
-            false,
+            Continue,
         ),
         Request::Shutdown => {
-            // The acceptor polls this flag (non-blocking accept loop) and
-            // idle connections see it via their read timeouts.  Dropping
-            // the embedder-facing job sender lets the coalescer drain
-            // once the workers exit.
+            // The acceptor polls this flag (non-blocking accept loop /
+            // event-loop tick) and idle connections see it via their
+            // read timeouts or the shutdown sweep.  Dropping the
+            // embedder-facing job sender lets the coalescer drain once
+            // the workers exit.
             shared.shutdown.store(true, Ordering::SeqCst);
             lock_unpoisoned(&shared.jobs_tx).take();
-            (protocol::ack_json("shutting down"), true)
+            (protocol::ack_json("shutting down"), ConnDirective::Close)
         }
+        Request::Frames { format } => match format.as_str() {
+            "bin1" => {
+                shared.frame_upgrades.fetch_add(1, Ordering::SeqCst);
+                (
+                    protocol::frames_ack_json("bin1"),
+                    ConnDirective::SwitchDialect(FrameDialect::Bin1),
+                )
+            }
+            "jsonl" => (
+                protocol::frames_ack_json("jsonl"),
+                ConnDirective::SwitchDialect(FrameDialect::Jsonl),
+            ),
+            other => (
+                protocol::error_response(
+                    v,
+                    &Error::BadRequest(format!("unknown frame format '{other}' (jsonl|bin1)")),
+                ),
+                Continue,
+            ),
+        },
         Request::Predict {
             arch,
             workload,
@@ -407,7 +648,7 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
         } => {
             let Some(permit) = shared.queue.try_acquire_owned() else {
                 shared.rejected.fetch_add(1, Ordering::SeqCst);
-                return (protocol::overloaded_json(v, shared.retry_after_ms), false);
+                return (protocol::overloaded_json(v, shared.retry_after_ms()), Continue);
             };
             let deadline_at =
                 effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
@@ -424,9 +665,9 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
             match outcome {
                 Ok(out) => {
                     shared.served.fetch_add(1, Ordering::SeqCst);
-                    (protocol::prediction_json(&out.prediction), false)
+                    (protocol::prediction_json(&out.prediction), Continue)
                 }
-                Err(e) => (failure_json(shared, e, t0, v), false),
+                Err(e) => (failure_json(shared, e, t0, v), Continue),
             }
         }
         Request::PredictAll {
@@ -437,7 +678,7 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
         } => {
             let Some(permit) = shared.queue.try_acquire_owned() else {
                 shared.rejected.fetch_add(1, Ordering::SeqCst);
-                return (protocol::overloaded_json(v, shared.retry_after_ms), false);
+                return (protocol::overloaded_json(v, shared.retry_after_ms()), Continue);
             };
             let deadline_at =
                 effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
@@ -456,9 +697,9 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, bool) {
                     shared.served.fetch_add(1, Ordering::SeqCst);
                     let preds: Vec<Prediction> =
                         outs.into_iter().map(|o| o.prediction).collect();
-                    (protocol::predict_all_json(&arch, &preds), false)
+                    (protocol::predict_all_json(&arch, &preds), Continue)
                 }
-                Err(e) => (failure_json(shared, e, t0, v), false),
+                Err(e) => (failure_json(shared, e, t0, v), Continue),
             }
         }
     }
@@ -531,6 +772,9 @@ fn counters(shared: &Shared) -> protocol::ServiceCounters {
         profile_cache_hits: shared.profiles.hits(),
         profile_cache_misses: shared.profiles.misses(),
         accept_errors: shared.accept_errors.load(Ordering::SeqCst),
+        open_connections: shared.open_conns.load(Ordering::SeqCst),
+        slow_client_closes: shared.slow_client_closes.load(Ordering::SeqCst),
+        frame_upgrades: shared.frame_upgrades.load(Ordering::SeqCst),
     }
 }
 
@@ -549,6 +793,65 @@ mod tests {
         // deadline_ms must not extend the operator's ceiling.
         assert_eq!(effective_deadline(Some(ms(50)), Some(ms(100))), Some(ms(50)));
         assert_eq!(effective_deadline(Some(ms(86_400_000)), Some(ms(100))), Some(ms(100)));
+    }
+
+    #[test]
+    fn retry_after_hint_tracks_linger_hot_reload() {
+        // Build a Shared directly (no listener needed): the hint must
+        // be derived from the *current* linger value at response time,
+        // not frozen at construction — the staleness bug this PR fixes.
+        let (coalescer, jobs_tx) = Coalescer::new(Duration::from_millis(25));
+        let shared = Shared {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            registry: TableRegistry::new(PathBuf::from(".")),
+            profiles: Arc::new(ProfileCache::new()),
+            eval_cache: Arc::new(EvalCache::new()),
+            coalescer,
+            queue: Arc::new(Semaphore::new(1)),
+            jobs_tx: Mutex::new(Some(jobs_tx)),
+            shutdown: AtomicBool::new(false),
+            served: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            deadline_exceeded: AtomicUsize::new(0),
+            request_errors: AtomicUsize::new(0),
+            accept_errors: AtomicUsize::new(0),
+            open_conns: AtomicUsize::new(0),
+            slow_client_closes: AtomicUsize::new(0),
+            frame_upgrades: AtomicUsize::new(0),
+            default_duration_s: WORKLOAD_SECS,
+            default_deadline: None,
+            header_deadline: Duration::from_secs(10),
+            linger_ms: AtomicU64::new(25),
+        };
+        assert_eq!(shared.retry_after_ms(), 25);
+        // Hot-reload shrinks the batch window: the hint follows.
+        shared.linger_ms.store(3, Ordering::SeqCst);
+        assert_eq!(shared.retry_after_ms(), 3);
+        // Zero linger clamps to 1 ms — never "retry immediately".
+        shared.linger_ms.store(0, Ordering::SeqCst);
+        assert_eq!(shared.retry_after_ms(), 1);
+        // The overloaded response carries the live value.
+        let j = protocol::overloaded_json(Proto::V2, shared.retry_after_ms());
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn header_deadline_policy_is_pure_and_bounded() {
+        // checked_sub: Instant cannot underflow even on short uptimes.
+        let old = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .expect("uptime exceeds 50ms");
+        // Disabled bound never expires anything, however old.
+        assert!(!header_deadline_expired(Some(old), Duration::ZERO));
+        // No partial frame → nothing to expire.
+        assert!(!header_deadline_expired(None, Duration::from_millis(1)));
+        // A partial older than the bound is expired...
+        assert!(header_deadline_expired(Some(old), Duration::from_millis(10)));
+        // ...while a fresh partial survives a generous one.
+        assert!(!header_deadline_expired(
+            Some(Instant::now()),
+            Duration::from_secs(10)
+        ));
     }
 
     #[test]

@@ -69,6 +69,12 @@ pub const DEFAULT_ARCH: &str = "cloudlab-v100";
 /// overflowing (but finite) float, and such a budget means "no budget".
 pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
 
+/// Wire name of the default newline-delimited JSON framing.
+pub const FRAMES_JSONL: &str = "jsonl";
+
+/// Wire name of the length-prefixed binary framing (see `SERVE.md`).
+pub const FRAMES_BIN1: &str = "bin1";
+
 /// Wire dialect of one request (see the module docs).  Every response
 /// builder takes the request's `Proto` so v1 clients keep receiving the
 /// legacy bytes while v2 clients get structured errors.
@@ -103,6 +109,11 @@ pub enum Request {
     Status,
     Metrics,
     Shutdown,
+    /// Switch the connection's frame dialect (`format`: `jsonl` or
+    /// `bin1`).  The ack is written in the *old* dialect; every
+    /// subsequent frame in both directions uses the new one (see
+    /// SERVE.md §Negotiation).
+    Frames { format: String },
 }
 
 /// Snapshot of the serve counters, for `status` / `metrics` rendering.
@@ -117,62 +128,98 @@ pub struct ServiceCounters {
     pub profile_cache_hits: usize,
     pub profile_cache_misses: usize,
     pub accept_errors: usize,
+    /// Currently-open client connections (event-loop acceptor; the
+    /// legacy thread-per-connection path does not track it).  A gauge.
+    pub open_connections: usize,
+    /// Connections closed by the header deadline (slow-loris guard).
+    pub slow_client_closes: usize,
+    /// Connections upgraded to the `bin1` binary frame dialect.
+    pub frame_upgrades: usize,
 }
 
 /// Render the counters in Prometheus text exposition format (one
-/// HELP/TYPE header per family; all families are monotonic counters).
+/// HELP/TYPE header per family).  These families are *metrics-only*:
+/// the v1 `status` JSON keeps its original ten fields byte-identical
+/// (pinned by `tests/protocol_v2.rs`), so new observability lands here.
 pub fn prometheus_text(c: &ServiceCounters) -> String {
     let mut out = String::new();
-    let families: [(&str, &str, usize); 9] = [
+    let families: [(&str, &str, &str, usize); 12] = [
         (
             "wattchmen_predictions_served_total",
             "Predict requests answered successfully.",
+            "counter",
             c.served,
         ),
         (
             "wattchmen_requests_rejected_total",
             "Predict requests shed with an overloaded response (queue full).",
+            "counter",
             c.rejected,
         ),
         (
             "wattchmen_deadline_exceeded_total",
             "Predict requests that missed their deadline budget.",
+            "counter",
             c.deadline_exceeded,
         ),
         (
             "wattchmen_request_errors_total",
             "Predict requests answered with a non-deadline, non-overload error.",
+            "counter",
             c.request_errors,
         ),
         (
             "wattchmen_batched_predict_calls_total",
             "Coalesced predict_many calls issued.",
+            "counter",
             c.batched_predict_calls,
         ),
         (
             "wattchmen_table_reloads_total",
             "Energy-table hot reloads from disk.",
+            "counter",
             c.table_reloads,
         ),
         (
             "wattchmen_profile_cache_hits_total",
             "Memoized profile_app lookups served from cache.",
+            "counter",
             c.profile_cache_hits,
         ),
         (
             "wattchmen_profile_cache_misses_total",
             "profile_app computations on cache miss.",
+            "counter",
             c.profile_cache_misses,
         ),
         (
             "wattchmen_accept_errors_total",
             "Listener accept() failures (e.g. fd exhaustion), backed off and retried.",
+            "counter",
             c.accept_errors,
         ),
+        (
+            "wattchmen_open_connections",
+            "Currently-open client connections (event-loop acceptor).",
+            "gauge",
+            c.open_connections,
+        ),
+        (
+            "wattchmen_slow_client_closes_total",
+            "Connections closed for exceeding the request header deadline.",
+            "counter",
+            c.slow_client_closes,
+        ),
+        (
+            "wattchmen_frame_upgrades_total",
+            "Connections upgraded to the bin1 binary frame dialect.",
+            "counter",
+            c.frame_upgrades,
+        ),
     ];
-    for (name, help, value) in families {
+    for (name, help, kind, value) in families {
         out.push_str(&format!(
-            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
         ));
     }
     out
@@ -484,6 +531,19 @@ fn parse_request_body(j: &Json) -> Result<Request, Error> {
         "status" => Ok(Request::Status),
         "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
+        "frames" => {
+            let format = j
+                .get("format")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    Error::bad_request("frames needs a string 'format' field (jsonl|bin1)")
+                })?
+                .to_string();
+            Ok(Request::Frames { format })
+        }
+        // The parenthetical hint is legacy v1 bytes pinned by
+        // tests/protocol_v2.rs — `frames` is discovered through the v2
+        // capabilities object instead of being appended here.
         other => Err(Error::BadRequest(format!(
             "unknown cmd '{other}' (predict|predict_all|status|metrics|shutdown)"
         ))),
@@ -612,9 +672,10 @@ pub fn capabilities_json() -> Json {
         ("protocol_versions", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
         (
             "commands",
-            strs(&["predict", "predict_all", "status", "metrics", "shutdown"]),
+            strs(&["predict", "predict_all", "status", "metrics", "shutdown", "frames"]),
         ),
         ("modes", strs(&["direct", "pred"])),
+        ("frames", strs(&["jsonl", "bin1"])),
         ("error_codes", strs(&Error::CODES)),
         ("max_deadline_ms", Json::Num(MAX_DEADLINE_MS)),
         (
@@ -649,6 +710,26 @@ pub fn ack_json(msg: &str) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("ack", Json::Str(msg.into())),
+    ])
+}
+
+/// Client-side helper: build the `frames` dialect-switch request (a v2
+/// command — servers that predate it answer with the legacy unknown-cmd
+/// error, which a client treats as "no upgrade").
+pub fn frames_request(format: &str) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("frames".into())),
+        ("format", Json::Str(format.into())),
+        ("v", Json::Num(2.0)),
+    ])
+}
+
+/// The `frames` ack: echoes the granted format.  Written in the *old*
+/// dialect; the switch takes effect for every subsequent frame.
+pub fn frames_ack_json(format: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("frames", Json::Str(format.into())),
     ])
 }
 
@@ -849,7 +930,10 @@ mod tests {
         let versions = caps.get("protocol_versions").unwrap().as_arr().unwrap();
         assert_eq!(versions.len(), 2);
         let commands = caps.get("commands").unwrap().as_arr().unwrap();
-        assert_eq!(commands.len(), 5);
+        assert_eq!(commands.len(), 6);
+        let frames = caps.get("frames").unwrap().as_arr().unwrap();
+        let frames: Vec<&str> = frames.iter().filter_map(Json::as_str).collect();
+        assert_eq!(frames, ["jsonl", "bin1"]);
         let codes = caps.get("error_codes").unwrap().as_arr().unwrap();
         assert_eq!(codes.len(), Error::CODES.len());
         assert_eq!(
@@ -866,6 +950,27 @@ mod tests {
     }
 
     #[test]
+    fn frames_parses_and_requires_format() {
+        assert!(matches!(
+            req(r#"{"cmd":"frames","format":"bin1","v":2}"#),
+            Request::Frames { format } if format == "bin1"
+        ));
+        // The client helper builds exactly that shape.
+        assert_eq!(
+            frames_request("bin1").to_string_compact(),
+            r#"{"cmd":"frames","format":"bin1","v":2}"#
+        );
+        let (_, parsed) = parse_request(r#"{"cmd":"frames"}"#);
+        let msg = parsed.unwrap_err().to_string();
+        assert!(msg.contains("format"), "{msg}");
+        // The ack echoes the granted format.
+        assert_eq!(
+            frames_ack_json("bin1").to_string_compact(),
+            r#"{"frames":"bin1","ok":true}"#
+        );
+    }
+
+    #[test]
     fn prometheus_rendering_is_exposition_format() {
         let c = ServiceCounters {
             served: 12,
@@ -877,10 +982,13 @@ mod tests {
             profile_cache_hits: 10,
             profile_cache_misses: 2,
             accept_errors: 7,
+            open_connections: 4096,
+            slow_client_closes: 8,
+            frame_upgrades: 9,
         };
         let text = prometheus_text(&c);
-        // One HELP + TYPE + sample line per family, counters only.
-        assert_eq!(text.lines().count(), 27, "{text}");
+        // One HELP + TYPE + sample line per family.
+        assert_eq!(text.lines().count(), 36, "{text}");
         assert!(text.contains(
             "# HELP wattchmen_predictions_served_total Predict requests answered successfully.\n\
              # TYPE wattchmen_predictions_served_total counter\n\
@@ -894,6 +1002,12 @@ mod tests {
         assert!(text.contains("wattchmen_profile_cache_hits_total 10\n"));
         assert!(text.contains("wattchmen_profile_cache_misses_total 2\n"));
         assert!(text.contains("wattchmen_accept_errors_total 7\n"));
+        // The connection gauge is typed gauge, not counter.
+        assert!(text.contains(
+            "# TYPE wattchmen_open_connections gauge\nwattchmen_open_connections 4096\n"
+        ));
+        assert!(text.contains("wattchmen_slow_client_closes_total 8\n"));
+        assert!(text.contains("wattchmen_frame_upgrades_total 9\n"));
         assert!(text.ends_with('\n'));
         for line in text.lines() {
             assert!(

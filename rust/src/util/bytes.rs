@@ -1,0 +1,166 @@
+//! `ByteQueue` — a compacting FIFO byte buffer for connection I/O.
+//!
+//! The serve event loop and the legacy thread-per-connection path both
+//! accumulate partial frames here (see `service::conn`).  All slice
+//! arithmetic lives behind this API so the request-path modules that
+//! consume it stay free of raw indexing (wlint's `request-unwrap` rule);
+//! every accessor is total — out-of-range requests clamp or return
+//! `None` instead of panicking.
+
+/// FIFO byte buffer: bytes are appended at the tail with [`push`] and
+/// released from the head with [`consume`]/[`take`].  Consumption is
+/// O(1) (a head offset); the backing `Vec` is compacted once the dead
+/// prefix outweighs the live bytes, so a long-lived keep-alive
+/// connection does not grow its buffer without bound.
+///
+/// [`push`]: ByteQueue::push
+/// [`consume`]: ByteQueue::consume
+/// [`take`]: ByteQueue::take
+#[derive(Debug, Default)]
+pub struct ByteQueue {
+    buf: Vec<u8>,
+    head: usize,
+}
+
+/// Compact only when the dead prefix is at least this large *and*
+/// outweighs the live bytes — small queues never pay the memmove.
+const COMPACT_MIN_HEAD: usize = 4096;
+
+impl ByteQueue {
+    pub fn new() -> ByteQueue {
+        ByteQueue {
+            buf: Vec::new(),
+            head: 0,
+        }
+    }
+
+    /// Live (unconsumed) byte count.
+    pub fn len(&self) -> usize {
+        self.buf.len().saturating_sub(self.head)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append bytes at the tail.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The live bytes, head first.
+    pub fn as_slice(&self) -> &[u8] {
+        self.buf.get(self.head..).unwrap_or(&[])
+    }
+
+    /// Offset (relative to the head) of the first occurrence of `b`.
+    pub fn find_byte(&self, b: u8) -> Option<usize> {
+        self.as_slice().iter().position(|&x| x == b)
+    }
+
+    /// The first four live bytes as a little-endian u32, if present.
+    pub fn peek_u32_le(&self) -> Option<u32> {
+        let four: [u8; 4] = self.as_slice().get(..4)?.try_into().ok()?;
+        Some(u32::from_le_bytes(four))
+    }
+
+    /// Remove and return the first `n` live bytes (clamped to `len`).
+    pub fn take(&mut self, n: usize) -> Vec<u8> {
+        let n = n.min(self.len());
+        let out = self.as_slice().get(..n).unwrap_or(&[]).to_vec();
+        self.consume(n);
+        out
+    }
+
+    /// Discard the first `n` live bytes (clamped to `len`).
+    pub fn consume(&mut self, n: usize) {
+        self.head = (self.head + n.min(self.len())).min(self.buf.len());
+        if self.head >= COMPACT_MIN_HEAD && self.head > self.len() {
+            self.buf.drain(..self.head);
+            self.head = 0;
+        }
+        if self.is_empty() && self.head > 0 {
+            self.buf.clear();
+            self.head = 0;
+        }
+    }
+
+    /// Drop everything (live and dead).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_take_roundtrip() {
+        let mut q = ByteQueue::new();
+        assert!(q.is_empty());
+        q.push(b"hello ");
+        q.push(b"world");
+        assert_eq!(q.len(), 11);
+        assert_eq!(q.as_slice(), b"hello world");
+        assert_eq!(q.take(6), b"hello ");
+        assert_eq!(q.as_slice(), b"world");
+        assert_eq!(q.take(100), b"world"); // clamped
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn find_byte_is_head_relative() {
+        let mut q = ByteQueue::new();
+        q.push(b"abc\ndef\n");
+        assert_eq!(q.find_byte(b'\n'), Some(3));
+        q.consume(4);
+        assert_eq!(q.find_byte(b'\n'), Some(3)); // relative to the new head
+        assert_eq!(q.find_byte(b'z'), None);
+    }
+
+    #[test]
+    fn peek_u32_le_needs_four_bytes() {
+        let mut q = ByteQueue::new();
+        q.push(&[0x01, 0x02, 0x03]);
+        assert_eq!(q.peek_u32_le(), None);
+        q.push(&[0x04]);
+        assert_eq!(q.peek_u32_le(), Some(0x0403_0201));
+        // Peek does not consume.
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn consume_clamps_and_compacts() {
+        let mut q = ByteQueue::new();
+        q.consume(10); // no-op on empty
+        assert!(q.is_empty());
+        // Push past the compaction threshold, consume most of it: the
+        // dead prefix must be reclaimed and the live bytes preserved.
+        let blob = vec![7u8; 2 * COMPACT_MIN_HEAD];
+        q.push(&blob);
+        q.consume(2 * COMPACT_MIN_HEAD - 3);
+        assert_eq!(q.as_slice(), &[7u8, 7, 7]);
+        assert!(q.buf.len() <= COMPACT_MIN_HEAD, "dead prefix reclaimed");
+        // Draining fully resets the backing storage offsets.
+        q.consume(3);
+        assert!(q.is_empty());
+        assert_eq!(q.head, 0);
+    }
+
+    #[test]
+    fn interleaved_push_consume_preserves_order() {
+        let mut q = ByteQueue::new();
+        let mut out = Vec::new();
+        for round in 0..64u32 {
+            q.push(&round.to_le_bytes());
+            if round % 3 == 0 {
+                out.extend_from_slice(&q.take(5));
+            }
+        }
+        out.extend_from_slice(&q.take(usize::MAX));
+        let want: Vec<u8> = (0..64u32).flat_map(|r| r.to_le_bytes()).collect();
+        assert_eq!(out, want);
+    }
+}

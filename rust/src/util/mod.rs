@@ -3,8 +3,11 @@
 //! are unavailable in the offline build environment (see DESIGN.md
 //! §Offline-crate-substitutions).
 
+pub mod bytes;
 pub mod cli;
 pub mod json;
+#[cfg(unix)]
+pub mod poll;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

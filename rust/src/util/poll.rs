@@ -1,0 +1,555 @@
+//! A minimal readiness poller — the std-only core of the serve event
+//! loop (see `service::event_loop` and SERVE.md).
+//!
+//! Two backends behind one API:
+//!
+//! * **epoll** (Linux): O(ready) wakeups, the production path for
+//!   multiplexing thousands of idle keep-alive connections on one
+//!   thread.  Reached through the C symbols the platform libc exports
+//!   (`epoll_create1`/`epoll_ctl`/`epoll_wait`) — std already links
+//!   libc, so declaring them costs no dependency; raw syscall numbers
+//!   would be per-architecture and are avoided on purpose.
+//! * **poll(2)** (any unix): O(registered) scans, the portable fallback
+//!   and the cross-check backend for tests.
+//!
+//! Both are level-triggered: an event repeats every `wait` until the
+//! condition is consumed, so a short read/write never strands a
+//! connection.  [`Waker`] lets worker threads interrupt a blocked
+//! `wait` from outside the loop (completion notifications, shutdown).
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which readiness conditions a registration subscribes to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const READ_WRITE: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness notification from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The caller-chosen registration token.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hangup or socket error — drain any final bytes, then tear
+    /// the connection down.
+    pub closed: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod esys {
+    //! Linux epoll ABI.  `epoll_event` is packed on x86_64 only (the
+    //! kernel UAPI carries `__attribute__((packed))` just there).
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    /// `O_CLOEXEC` — octal 0o2000000.
+    pub const EPOLL_CLOEXEC: i32 = 0x8_0000;
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+mod psys {
+    //! Portable poll(2) ABI (POSIX; layout identical across unixes).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    #[cfg(target_os = "linux")]
+    pub type Nfds = u64;
+    #[cfg(not(target_os = "linux"))]
+    pub type Nfds = u32;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+    }
+}
+
+/// A poll(2)-backend registration.
+#[derive(Clone, Copy)]
+struct Entry {
+    fd: RawFd,
+    token: u64,
+    interest: Interest,
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll {
+        epfd: i32,
+        /// Reused event buffer for `epoll_wait`.
+        buf: Vec<esys::EpollEvent>,
+    },
+    Poll {
+        entries: Vec<Entry>,
+        /// Reused pollfd array, rebuilt from `entries` each `wait`.
+        fds: Vec<psys::PollFd>,
+    },
+}
+
+/// The readiness poller.  Registrations map an fd to a caller-chosen
+/// `token`; `wait` reports which tokens are ready.  The caller owns the
+/// fds — dropping a socket without `deregister` is a logic error on the
+/// poll backend (stale scan entry) and harmless on epoll (the kernel
+/// auto-removes closed fds), so the event loop always deregisters.
+pub struct Poller {
+    backend: Backend,
+}
+
+/// Upper bound on events translated per `wait` on the epoll backend;
+/// level-triggering re-reports anything that does not fit.
+const EPOLL_BATCH: usize = 1024;
+
+impl Poller {
+    /// The best backend for this platform: epoll on Linux, poll(2)
+    /// elsewhere.
+    pub fn new() -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            // SAFETY: epoll_create1 takes a flag word and returns an fd
+            // or -1; no pointers are involved.
+            let epfd = unsafe { esys::epoll_create1(esys::EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            return Ok(Poller {
+                backend: Backend::Epoll {
+                    epfd,
+                    buf: Vec::new(),
+                },
+            });
+        }
+        #[cfg(not(target_os = "linux"))]
+        Poller::with_poll_backend()
+    }
+
+    /// Force the portable poll(2) backend (tests cross-check it against
+    /// epoll on Linux).
+    pub fn with_poll_backend() -> io::Result<Poller> {
+        Ok(Poller {
+            backend: Backend::Poll {
+                entries: Vec::new(),
+                fds: Vec::new(),
+            },
+        })
+    }
+
+    /// Subscribe `fd` under `token`.  One registration per fd.
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                epoll_ctl(*epfd, esys::EPOLL_CTL_ADD, fd, token, interest)
+            }
+            Backend::Poll { entries, .. } => {
+                if entries.iter().any(|e| e.fd == fd) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::AlreadyExists,
+                        "fd already registered",
+                    ));
+                }
+                entries.push(Entry { fd, token, interest });
+                Ok(())
+            }
+        }
+    }
+
+    /// Replace the interest set of an existing registration.
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                epoll_ctl(*epfd, esys::EPOLL_CTL_MOD, fd, token, interest)
+            }
+            Backend::Poll { entries, .. } => {
+                for e in entries.iter_mut() {
+                    if e.fd == fd {
+                        e.token = token;
+                        e.interest = interest;
+                        return Ok(());
+                    }
+                }
+                Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+            }
+        }
+    }
+
+    /// Remove a registration.  Must precede closing the fd.
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                // A null event pointer is allowed for EPOLL_CTL_DEL
+                // since Linux 2.6.9.
+                // SAFETY: DEL reads no event struct.
+                let rc = unsafe {
+                    esys::epoll_ctl(*epfd, esys::EPOLL_CTL_DEL, fd, std::ptr::null_mut())
+                };
+                if rc < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(())
+            }
+            Backend::Poll { entries, .. } => {
+                let before = entries.len();
+                entries.retain(|e| e.fd != fd);
+                if entries.len() == before {
+                    return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until at least one registration is ready or `timeout`
+    /// elapses (`None` = indefinitely), appending events to `out`
+    /// (cleared first).  EINTR is surfaced as zero events.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let timeout_ms: i32 = match timeout {
+            None => -1,
+            Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+        };
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, buf } => {
+                buf.resize(EPOLL_BATCH, esys::EpollEvent { events: 0, data: 0 });
+                // SAFETY: buf holds EPOLL_BATCH initialized entries and
+                // outlives the call; the kernel writes at most that many.
+                let n = unsafe {
+                    esys::epoll_wait(*epfd, buf.as_mut_ptr(), EPOLL_BATCH as i32, timeout_ms)
+                };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(err);
+                }
+                for raw in buf.iter().take(n as usize) {
+                    let ev = *raw; // copy out of the (possibly packed) struct
+                    let bits = ev.events;
+                    out.push(Event {
+                        token: ev.data,
+                        readable: bits & (esys::EPOLLIN | esys::EPOLLRDHUP) != 0,
+                        writable: bits & esys::EPOLLOUT != 0,
+                        closed: bits & (esys::EPOLLERR | esys::EPOLLHUP | esys::EPOLLRDHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+            Backend::Poll { entries, fds } => {
+                fds.clear();
+                for e in entries.iter() {
+                    let mut events: i16 = 0;
+                    if e.interest.readable {
+                        events |= psys::POLLIN;
+                    }
+                    if e.interest.writable {
+                        events |= psys::POLLOUT;
+                    }
+                    fds.push(psys::PollFd {
+                        fd: e.fd,
+                        events,
+                        revents: 0,
+                    });
+                }
+                // SAFETY: fds has exactly entries.len() initialized
+                // elements; poll writes only their revents fields.
+                let n = unsafe {
+                    psys::poll(fds.as_mut_ptr(), fds.len() as psys::Nfds, timeout_ms)
+                };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(err);
+                }
+                for (pfd, e) in fds.iter().zip(entries.iter()) {
+                    let bits = pfd.revents;
+                    if bits == 0 {
+                        continue;
+                    }
+                    out.push(Event {
+                        token: e.token,
+                        readable: bits & psys::POLLIN != 0,
+                        writable: bits & psys::POLLOUT != 0,
+                        closed: bits & (psys::POLLERR | psys::POLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll { epfd, .. } = &self.backend {
+            // SAFETY: epfd came from epoll_create1 and is closed once.
+            unsafe { esys::close(*epfd) };
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_ctl(epfd: i32, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+    let mut bits = esys::EPOLLRDHUP;
+    if interest.readable {
+        bits |= esys::EPOLLIN;
+    }
+    if interest.writable {
+        bits |= esys::EPOLLOUT;
+    }
+    let mut ev = esys::EpollEvent {
+        events: bits,
+        data: token,
+    };
+    // SAFETY: `ev` is a valid epoll_event for the duration of the call.
+    let rc = unsafe { esys::epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Cross-thread wakeup for a blocked [`Poller::wait`]: `wake()` writes
+/// one byte to a loopback TCP pair whose read end the event loop
+/// registers like any connection.  Cheap to clone (one `Arc`), safe to
+/// call from any thread; a full pipe means a wakeup is already pending,
+/// so the dropped write is harmless.
+pub struct Waker {
+    stream: Arc<TcpStream>,
+}
+
+impl Clone for Waker {
+    fn clone(&self) -> Waker {
+        Waker {
+            stream: self.stream.clone(),
+        }
+    }
+}
+
+impl Waker {
+    /// Build the pair: the returned `TcpStream` is the nonblocking read
+    /// end for the poller; the `Waker` is handed to worker threads.
+    pub fn pair() -> io::Result<(Waker, TcpStream)> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let tx = TcpStream::connect(listener.local_addr()?)?;
+        let (rx, peer) = listener.accept()?;
+        // Guard against an unrelated local connection racing our own
+        // connect to the ephemeral port.
+        if peer != tx.local_addr()? {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "waker pair accept raced a foreign connection",
+            ));
+        }
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        let _ = tx.set_nodelay(true);
+        Ok((
+            Waker {
+                stream: Arc::new(tx),
+            },
+            rx,
+        ))
+    }
+
+    /// Make the read end readable.  Never blocks.
+    pub fn wake(&self) {
+        use std::io::Write;
+        let _ = (&*self.stream).write(&[1u8]);
+    }
+}
+
+/// Drain a waker read end after its readable event (level-triggered
+/// pollers re-report until the bytes are consumed).
+pub fn drain_waker(rx: &TcpStream) {
+    use std::io::Read;
+    let mut sink = [0u8; 64];
+    let mut r = rx;
+    loop {
+        match r.read(&mut sink) {
+            Ok(0) => return,       // waker end dropped
+            Ok(_) => continue,
+            Err(_) => return,      // WouldBlock: drained
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    fn backends() -> Vec<Poller> {
+        let mut v = vec![Poller::with_poll_backend().unwrap()];
+        if cfg!(target_os = "linux") {
+            v.push(Poller::new().unwrap());
+        }
+        v
+    }
+
+    #[test]
+    fn readable_event_fires_on_both_backends() {
+        for mut poller in backends() {
+            let (mut tx, rx) = tcp_pair();
+            rx.set_nonblocking(true).unwrap();
+            poller.register(rx.as_raw_fd(), 7, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            // Nothing pending yet.
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.iter().all(|e| !e.readable));
+            tx.write_all(b"x").unwrap();
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        }
+    }
+
+    #[test]
+    fn writable_interest_reports_immediately_and_modify_silences_it() {
+        for mut poller in backends() {
+            let (_tx, rx) = tcp_pair();
+            rx.set_nonblocking(true).unwrap();
+            let fd = rx.as_raw_fd();
+            poller.register(fd, 3, Interest::READ_WRITE).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert!(events.iter().any(|e| e.token == 3 && e.writable));
+            // Dropping write interest stops the level-triggered repeat.
+            poller.modify(fd, 3, Interest::READ).unwrap();
+            poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert!(events.iter().all(|e| !e.writable));
+        }
+    }
+
+    #[test]
+    fn peer_close_reports_closed_or_readable() {
+        for mut poller in backends() {
+            let (tx, rx) = tcp_pair();
+            rx.set_nonblocking(true).unwrap();
+            poller.register(rx.as_raw_fd(), 9, Interest::READ).unwrap();
+            drop(tx);
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            // EOF may surface as readable (read returns 0) and/or HUP.
+            assert!(events.iter().any(|e| e.token == 9 && (e.readable || e.closed)));
+        }
+    }
+
+    #[test]
+    fn deregistered_fd_stops_reporting() {
+        for mut poller in backends() {
+            let (mut tx, rx) = tcp_pair();
+            rx.set_nonblocking(true).unwrap();
+            let fd = rx.as_raw_fd();
+            poller.register(fd, 1, Interest::READ).unwrap();
+            tx.write_all(b"x").unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert!(events.iter().any(|e| e.token == 1));
+            poller.deregister(fd).unwrap();
+            poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert!(events.is_empty());
+        }
+    }
+
+    #[test]
+    fn waker_unblocks_wait_from_another_thread() {
+        for mut poller in backends() {
+            let (waker, waker_rx) = Waker::pair().unwrap();
+            poller
+                .register(waker_rx.as_raw_fd(), 0, Interest::READ)
+                .unwrap();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                waker.wake();
+                waker.wake(); // coalesces — still one readable condition
+            });
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+            assert!(events.iter().any(|e| e.token == 0 && e.readable));
+            drain_waker(&waker_rx);
+            // Drained: the level-triggered readable condition is gone.
+            poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert!(events.iter().all(|e| !(e.token == 0 && e.readable)));
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn duplicate_register_errors_on_poll_backend() {
+        let mut poller = Poller::with_poll_backend().unwrap();
+        let (_tx, rx) = tcp_pair();
+        poller.register(rx.as_raw_fd(), 1, Interest::READ).unwrap();
+        assert!(poller.register(rx.as_raw_fd(), 2, Interest::READ).is_err());
+        poller.deregister(rx.as_raw_fd()).unwrap();
+        assert!(poller.deregister(rx.as_raw_fd()).is_err());
+    }
+
+    #[test]
+    fn abi_struct_sizes_match_the_kernel_contract() {
+        // poll(2): struct pollfd is 8 bytes everywhere.
+        assert_eq!(std::mem::size_of::<psys::PollFd>(), 8);
+        #[cfg(target_os = "linux")]
+        {
+            // epoll_event: 12 bytes packed on x86_64, padded elsewhere.
+            let want = if cfg!(target_arch = "x86_64") { 12 } else { 16 };
+            assert_eq!(std::mem::size_of::<esys::EpollEvent>(), want);
+        }
+    }
+}

@@ -286,6 +286,83 @@ fn remote_client_speaks_v2_against_a_live_server() {
     assert_eq!(server.request_errors(), 2);
 }
 
+/// The bin1 dialect changes framing only: a predict response fetched
+/// over binary frames must carry the EXACT bytes of its newline-JSON
+/// counterpart, and the negotiation ack itself is byte-pinned.
+#[test]
+fn binary_frame_responses_are_byte_identical_to_jsonl() {
+    use std::io::Read;
+
+    let (server, runner) = start_server("bin1_parity");
+    let line =
+        as_v2(&protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact());
+
+    // Reference bytes over the default newline-JSON dialect.
+    let mut jsonl_client = Client::connect(server.local_addr());
+    let jsonl_resp = jsonl_client.send_raw(&line);
+
+    // Second connection: negotiate bin1 by hand so every wire byte of
+    // the handshake is visible to the test.
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // capabilities advertises the frames formats...
+    writer.write_all(b"{\"cmd\":\"status\",\"v\":2}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let caps = parse(resp.trim()).unwrap();
+    let frames = caps
+        .get("capabilities")
+        .and_then(|c| c.get("frames").cloned())
+        .expect("capabilities.frames");
+    let formats: Vec<&str> = frames.as_arr().unwrap().iter().filter_map(Json::as_str).collect();
+    assert_eq!(formats, ["jsonl", "bin1"]);
+
+    // ...the switch is acked in the OLD dialect with pinned bytes...
+    writer
+        .write_all(b"{\"cmd\":\"frames\",\"format\":\"bin1\",\"v\":2}\n")
+        .unwrap();
+    resp.clear();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(resp.trim_end_matches('\n'), r#"{"frames":"bin1","ok":true}"#);
+
+    // ...and from here on both directions are length-prefixed frames.
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&((line.len() + 1) as u32).to_le_bytes());
+    frame.push(0x01);
+    frame.extend_from_slice(line.as_bytes());
+    writer.write_all(&frame).unwrap();
+
+    let mut header = [0u8; 4];
+    reader.read_exact(&mut header).unwrap();
+    let n = u32::from_le_bytes(header) as usize;
+    let mut body = vec![0u8; n];
+    reader.read_exact(&mut body).unwrap();
+    let (tag, payload) = body.split_first().unwrap();
+    assert_eq!(*tag, 0x01, "payload encoding tag is UTF-8 JSON");
+    assert_eq!(
+        std::str::from_utf8(payload).unwrap(),
+        jsonl_resp,
+        "bin1 payload differs from the jsonl response bytes"
+    );
+
+    // The typed client negotiates the same upgrade end-to-end.
+    let mut remote = RemoteClient::connect(&server.local_addr().to_string()).unwrap();
+    assert!(remote.negotiate_binary_frames().unwrap());
+    let pred = remote
+        .predict("cloudlab-v100", "hotspot", Mode::Pred, None)
+        .unwrap();
+    assert_eq!(pred.workload, "hotspot");
+    assert_eq!(server.frame_upgrades(), 2);
+
+    // Shutdown over a binary connection acks and drains cleanly.
+    remote.shutdown().unwrap();
+    drop(jsonl_client);
+    runner.join().unwrap();
+    assert_eq!(server.served(), 3);
+}
+
 #[test]
 fn every_error_variant_maps_to_exactly_one_wire_code() {
     let examples = Error::examples();

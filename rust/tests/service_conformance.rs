@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use wattchmen::model::{EnergyTable, Mode};
 use wattchmen::report::context::WORKLOAD_SECS;
-use wattchmen::service::{protocol, PredictServer, ServeConfig, MAX_REQUEST_BYTES};
+use wattchmen::service::{protocol, Acceptor, PredictServer, ServeConfig, MAX_REQUEST_BYTES};
 use wattchmen::util::json::{parse, Json};
 
 fn test_table() -> EnergyTable {
@@ -281,6 +281,113 @@ fn abrupt_disconnects_leave_the_server_healthy() {
     assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true));
     client.shutdown();
     runner.join().unwrap();
+}
+
+/// A sender that trickles a partial request and then stalls must be cut
+/// off at the header deadline — in BOTH acceptor modes.  Before this
+/// guard, such a connection pinned a legacy worker thread in an endless
+/// 250 ms WouldBlock retry loop (and would idle in the event loop
+/// forever): the slow-loris bug this PR retires.
+fn slow_sender_is_closed_at_the_header_deadline(tag: &str, acceptor: Acceptor) {
+    let server = Arc::new(
+        PredictServer::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            linger: Duration::from_millis(1),
+            tables_dir: temp_tables_dir(tag),
+            default_duration_s: WORKLOAD_SECS,
+            acceptor,
+            header_deadline: Duration::from_millis(400),
+            ..ServeConfig::default()
+        })
+        .unwrap(),
+    );
+    let runner = {
+        let server = server.clone();
+        thread::spawn(move || server.run(None).unwrap())
+    };
+
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // Half a request, never a newline, then silence.
+    writer.write_all(br#"{"cmd":"pred"#).unwrap();
+    writer.flush().unwrap();
+    // The server must answer with the deadline error and close — reading
+    // blocks only until it does (well under the 30 s safety margin).
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let err = error_of(&parse(resp.trim()).unwrap());
+    assert!(err.contains("header deadline"), "{err}");
+    resp.clear();
+    assert_eq!(reader.read_line(&mut resp).unwrap(), 0, "{resp:?}");
+    assert_eq!(server.slow_client_closes(), 1);
+
+    // Chunked-but-progressing senders are NOT cut off: each chunk resets
+    // nothing — the clock runs from the first partial byte — so finish
+    // well inside the 400 ms bound.
+    let mut client = Client::connect(server.local_addr());
+    let request =
+        protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact();
+    let (a, b) = request.split_at(request.len() / 2);
+    client.writer.write_all(a.as_bytes()).unwrap();
+    client.writer.flush().unwrap();
+    thread::sleep(Duration::from_millis(50));
+    client.writer.write_all(b.as_bytes()).unwrap();
+    client.writer.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    client.reader.read_line(&mut resp).unwrap();
+    let pred = parse(resp.trim()).unwrap();
+    assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true), "{resp}");
+
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.slow_client_closes(), 1);
+}
+
+#[test]
+fn slow_sender_is_closed_event_loop() {
+    if cfg!(unix) {
+        slow_sender_is_closed_at_the_header_deadline("loris_ev", Acceptor::EventLoop);
+    }
+}
+
+#[test]
+fn slow_sender_is_closed_thread_per_conn() {
+    slow_sender_is_closed_at_the_header_deadline("loris_thr", Acceptor::ThreadPerConn);
+}
+
+/// The legacy thread-per-connection acceptor stays fully functional when
+/// selected explicitly (`--acceptor threads`): same wire bytes, same
+/// counters, same drain.
+#[test]
+fn thread_per_conn_acceptor_smoke() {
+    let server = Arc::new(
+        PredictServer::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            linger: Duration::from_millis(1),
+            tables_dir: temp_tables_dir("threads_smoke"),
+            default_duration_s: WORKLOAD_SECS,
+            acceptor: Acceptor::ThreadPerConn,
+            ..ServeConfig::default()
+        })
+        .unwrap(),
+    );
+    let runner = {
+        let server = server.clone();
+        thread::spawn(move || server.run(None).unwrap())
+    };
+    let mut client = Client::connect(server.local_addr());
+    let pred = client.send_line(
+        &protocol::predict_request("cloudlab-v100", "hotspot", Mode::Pred).to_string_compact(),
+    );
+    assert_eq!(pred.get("ok").unwrap(), &Json::Bool(true), "{pred:?}");
+    let status = client.send_line(r#"{"cmd":"status"}"#);
+    assert_eq!(status.get("served").unwrap().as_f64(), Some(1.0));
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 1);
 }
 
 #[test]

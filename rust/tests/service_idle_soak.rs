@@ -1,0 +1,246 @@
+//! Idle-connection soak for the readiness-loop acceptor: one acceptor
+//! thread must hold hundreds (CI default 512; set `WATTCHMEN_IDLE_CONNS`
+//! to 4096+ where the fd budget allows) of idle keep-alive connections
+//! without a thread per connection, keep serving real requests through a
+//! sample of them, shed load correctly under a pinned coordinator, and
+//! account for every predict-family request in exactly one of
+//! `served + rejected + deadline_exceeded`.  Shutdown must drain every
+//! idle connection (clean EOF, gauge back to zero) with all threads
+//! joined.
+//!
+//! The thread-per-connection acceptor cannot pass the scale half of this
+//! test — 4096 idle connections would be 4096 blocked worker threads —
+//! which is the point of the event loop.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use wattchmen::model::EnergyTable;
+use wattchmen::report::context::WORKLOAD_SECS;
+use wattchmen::runtime::coalescer::{ExecJob, Job};
+use wattchmen::service::{Acceptor, PredictServer, ServeConfig};
+use wattchmen::util::json::{parse, Json};
+
+fn test_table() -> EnergyTable {
+    EnergyTable {
+        arch: "cloudlab-v100".into(),
+        const_power_w: 38.0,
+        static_power_w: 44.0,
+        entries: [
+            ("FADD", 1.0),
+            ("FFMA", 1.2),
+            ("MOV", 0.4),
+            ("LDG.E.32@L1", 2.5),
+            ("LDG.E.32@L2", 8.0),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect(),
+    }
+}
+
+/// Idle-connection target: CI-sized by default, acceptance-sized via env.
+fn idle_target() -> usize {
+    std::env::var("WATTCHMEN_IDLE_CONNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512)
+}
+
+/// One request/response exchange on an existing keep-alive connection.
+fn exchange(stream: &mut TcpStream, line: &str) -> Json {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    parse(resp.trim()).unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"))
+}
+
+fn predict_line(duration_s: f64, deadline_ms: f64) -> String {
+    let mut fields = vec![
+        ("cmd", Json::Str("predict".into())),
+        ("arch", Json::Str("cloudlab-v100".into())),
+        ("workload", Json::Str("hotspot".into())),
+        ("duration_s", Json::Num(duration_s)),
+    ];
+    if deadline_ms >= 0.0 {
+        fields.push(("deadline_ms", Json::Num(deadline_ms)));
+    }
+    Json::obj(fields).to_string_compact()
+}
+
+fn await_open_connections(server: &PredictServer, want: usize) {
+    for _ in 0..5000 {
+        if server.open_connections() == want {
+            return;
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(server.open_connections(), want, "gauge never converged");
+}
+
+#[test]
+fn idle_keepalive_soak_serves_through_thousands_of_open_connections() {
+    if !cfg!(unix) {
+        eprintln!("idle soak: event-loop acceptor is unix-only; skipping");
+        return;
+    }
+    const SAMPLE: usize = 32;
+    const STORM_THREADS: usize = 4;
+    const STORM_REQUESTS: usize = 4;
+
+    let dir = std::env::temp_dir().join("wattchmen_idle_soak");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    test_table()
+        .save(&dir.join("cloudlab-v100.table.json"))
+        .unwrap();
+
+    let server = Arc::new(
+        PredictServer::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 8,
+            linger: Duration::from_millis(1),
+            tables_dir: PathBuf::from(dir),
+            default_duration_s: WORKLOAD_SECS,
+            queue_capacity: 1,
+            acceptor: Acceptor::EventLoop,
+            ..ServeConfig::default()
+        })
+        .unwrap(),
+    );
+    let addr = server.local_addr();
+    let runner = {
+        let server = server.clone();
+        thread::spawn(move || server.run(None).unwrap())
+    };
+
+    // Phase 1 — the herd: open as many idle keep-alive connections as
+    // the target (or the process fd budget) allows.  Not one byte is
+    // sent on most of them; the acceptor must park them all in its
+    // poller, not in threads.
+    let target = idle_target();
+    let mut conns: Vec<TcpStream> = Vec::with_capacity(target);
+    for _ in 0..target {
+        match TcpStream::connect(addr) {
+            Ok(s) => conns.push(s),
+            Err(e) => {
+                // Client and server share this process's fd table, so
+                // the budget caps at roughly half the nofile limit.
+                assert!(
+                    conns.len() >= 128,
+                    "opened only {} connections: {e}",
+                    conns.len()
+                );
+                eprintln!(
+                    "idle soak: fd budget reached at {} connections ({e}); continuing",
+                    conns.len()
+                );
+                break;
+            }
+        }
+    }
+    let herd = conns.len();
+    await_open_connections(&server, herd);
+
+    // Phase 2 — the herd does not starve service: real predicts flow
+    // through a sample of the idle connections while the rest stay open.
+    for stream in conns.iter_mut().take(SAMPLE) {
+        let resp = exchange(stream, &predict_line(90.0, -1.0));
+        assert_eq!(resp.get("ok").unwrap(), &Json::Bool(true), "{resp:?}");
+    }
+    assert_eq!(server.open_connections(), herd);
+
+    // Phase 3 — overload behind the same herd: pin the coordinator, let
+    // one deadlined request hold the single queue permit, then storm.
+    let handle = server.coordinator_handle().expect("server is running");
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    handle
+        .send(Job::Exec(ExecJob(Box::new(move |_| {
+            entered_tx.send(()).unwrap();
+            release_rx.recv().ok();
+        }))))
+        .unwrap();
+    entered_rx.recv().unwrap();
+    // Fresh duration → not profile-cached → must reach the coordinator,
+    // which is pinned: the 1 ms deadline expires with the permit held.
+    let resp = exchange(&mut conns[SAMPLE], &predict_line(91.0, 1.0));
+    assert_eq!(
+        resp.get("error").and_then(Json::as_str),
+        Some("deadline exceeded"),
+        "{resp:?}"
+    );
+    let barrier = Arc::new(Barrier::new(STORM_THREADS));
+    let mut storm = Vec::new();
+    for t in 0..STORM_THREADS {
+        let barrier = barrier.clone();
+        let mut stream = conns[SAMPLE + 1 + t].try_clone().unwrap();
+        storm.push(thread::spawn(move || {
+            barrier.wait();
+            (0..STORM_REQUESTS)
+                .map(|_| {
+                    exchange(&mut stream, &predict_line(90.0, 50.0))
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .map(String::from)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut shed = 0;
+    for h in storm {
+        for outcome in h.join().unwrap() {
+            assert_eq!(outcome.as_deref(), Some("overloaded"));
+            shed += 1;
+        }
+    }
+    release_tx.send(()).unwrap();
+
+    // Phase 4 — healthy again, and every request accounted for exactly
+    // once, client- and server-side.
+    let resp = exchange(&mut conns[0], &predict_line(90.0, -1.0));
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(true), "{resp:?}");
+    let total = SAMPLE + 1 + shed + 1;
+    let status = exchange(&mut conns[0], "{\"cmd\":\"status\"}");
+    let counter = |name: &str| status.get(name).and_then(Json::as_f64).unwrap() as usize;
+    assert_eq!(counter("served"), SAMPLE + 1);
+    assert_eq!(counter("rejected"), shed);
+    assert_eq!(counter("deadline_exceeded"), 1);
+    assert_eq!(counter("request_errors"), 0);
+    assert_eq!(
+        counter("served") + counter("rejected") + counter("deadline_exceeded"),
+        total
+    );
+    assert_eq!(server.open_connections(), herd);
+    // The gauge is also visible to scrapes.
+    let metrics = exchange(&mut conns[0], "{\"cmd\":\"metrics\"}");
+    let body = metrics.get("body").unwrap().as_str().unwrap().to_string();
+    assert!(
+        body.contains(&format!("wattchmen_open_connections {herd}\n")),
+        "{body}"
+    );
+
+    // Phase 5 — clean drain: shutdown acks, every idle connection gets a
+    // crisp EOF (no stragglers, no hangs), and the gauge returns to 0.
+    drop(handle);
+    let ack = exchange(&mut conns[0], "{\"cmd\":\"shutdown\"}");
+    assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true), "{ack:?}");
+    runner.join().unwrap();
+    assert_eq!(server.open_connections(), 0);
+    for stream in conns.iter_mut().skip(1).take(8) {
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut byte = [0u8; 1];
+        assert_eq!(stream.read(&mut byte).unwrap_or(0), 0, "expected EOF");
+    }
+    assert_eq!(server.served(), SAMPLE + 1);
+    assert_eq!(server.rejected(), shed);
+    assert_eq!(server.deadline_exceeded(), 1);
+}
