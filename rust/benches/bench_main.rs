@@ -34,6 +34,12 @@
 //!   daemon_overhead_*    — `wattchmen daemon` supervised loop at three
 //!                          sampling intervals (0 µs / 500 µs / 2 ms);
 //!                          the note reports supervisor wakeups/sec
+//!   advise_sweep_v100    — PR 10 DVFS advisor: `Engine::sweep` over the
+//!                          16-workload suite — ONE coalesced predict
+//!                          pass expanded post-predict to 11-step curves
+//!   advise_single        — warm-table advise for one workload prefix
+//!                          (`backprop`), the latency a `{"cmd":"advise"}`
+//!                          request pays once the table is resident
 //!
 //! Each benchmark also prints the headline numbers it reproduces so
 //! `cargo bench` doubles as a quick regeneration harness.  Pass
@@ -65,6 +71,7 @@ use wattchmen::util::json::Json;
 use wattchmen::util::prng::Rng;
 use wattchmen::util::stats;
 use wattchmen::workloads;
+use wattchmen::{Engine, SweepRequest};
 
 /// `--filter <substring>` from argv; benchmarks whose name doesn't
 /// contain it are skipped (and guarded setup blocks with them).
@@ -265,6 +272,8 @@ fn main() {
         "serve_predict_all",
         "serve_batch_64",
         "serve_idle_4k",
+        "advise_sweep_v100",
+        "advise_single",
     ]
     .iter()
     .any(|n| selected(n));
@@ -287,6 +296,49 @@ fn main() {
             format!(
                 "16 workloads, sum={:.0} J",
                 preds.iter().map(|p| p.energy_j).sum::<f64>()
+            )
+        });
+
+        // --- DVFS advisor (PR 10): sweep cost on a warm table.  Each
+        // call is ONE coalesced predict pass; the curve expansion and
+        // sweet-spot scan ride post-predict, so the delta over
+        // predict_sweep_v100 is the advisor's own overhead.
+        let advise_engine = Engine::builder()
+            .arch("cloudlab-v100")
+            .table(Arc::new(table.clone()))
+            .build()
+            .unwrap();
+        let advise_jobs = thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        bench("advise_sweep_v100", 10, &mut results, || {
+            let advice = advise_engine
+                .sweep(SweepRequest {
+                    jobs: advise_jobs,
+                    ..SweepRequest::default()
+                })
+                .unwrap();
+            let best = advice
+                .spots
+                .iter()
+                .map(|s| s.savings_frac)
+                .fold(0.0f64, f64::max);
+            format!(
+                "{} curves x {} steps, best save {:.1}%",
+                advice.curves.len(),
+                advice.space.steps.len(),
+                100.0 * best
+            )
+        });
+        bench("advise_single", 10, &mut results, || {
+            let advice = advise_engine
+                .sweep(SweepRequest {
+                    workload: Some("backprop".into()),
+                    ..SweepRequest::default()
+                })
+                .unwrap();
+            format!(
+                "{} kernels, {} steps",
+                advice.curves.len(),
+                advice.space.steps.len()
             )
         });
     }

@@ -1,0 +1,367 @@
+//! The per-arch DVFS state space: frequency steps with analytic
+//! voltage/leakage scaling factors layered on top of the per-instruction
+//! energy tables.
+//!
+//! Tables are trained at one implicit operating point — the arch's boost
+//! clock (`ArchConfig::clock_ghz`), the point every prediction so far has
+//! answered for.  A [`FreqSpace`] extends that single point into a range:
+//! each [`FreqStep`] carries three multiplicative factors relative to the
+//! boost step, applied *post-predict* (the table itself is untouched, so
+//! the coalescer and every cache keyed on the table `Arc` keep working):
+//!
+//! * `dyn_energy_factor` — per-op dynamic energy.  Above the voltage
+//!   floor the regulator tracks frequency, so energy scales as
+//!   `s^EXP` with `s = clock/boost` and `EXP ≈ 2.6` — the same V²f-derived
+//!   exponent [`ArchConfig::clock_energy_factor`] uses between
+//!   calibration bins.  Below the floor (`s < S_KNEE`) voltage is pinned
+//!   and per-op energy only falls ∝ `s`, continuously joined at the knee
+//!   (the same physics `Device::run`'s throttle comment documents).
+//! * `runtime_factor` — `1/s`: compute-bound work stretches inversely
+//!   with clock (the paper's sweep protocol holds work, not time, fixed).
+//! * `static_factor` — leakage via the *affine* static model
+//!   [`ArchConfig::static_power_affine`]: a slower clock draws less
+//!   dynamic power, runs cooler ([`ThermalState::steady`]), and leaks
+//!   less.  The factor is the affine static power at the step's steady
+//!   temperature over the boost step's, evaluated at a fixed reference
+//!   dynamic load (half of TDP) so the space stays workload-independent.
+//!
+//! A space is built either [closed-form](FreqSpace::closed_form) from the
+//! arch catalog, or [fitted](FreqSpace::measured) from per-step
+//! microbench measurements when a sweep campaign has produced them; the
+//! two are pinned against each other by parity tests (a measured space
+//! synthesized from the closed form reproduces it byte-for-byte).
+
+use crate::error::Error;
+use crate::gpusim::config::ArchConfig;
+use crate::gpusim::thermal::ThermalState;
+
+/// Number of frequency steps in a closed-form space (half to full boost
+/// clock inclusive, 5%-of-boost spacing — the granularity `nvidia-smi
+/// -lgc` exposes on the paper's V100s, coarsened to keep sweeps cheap).
+pub const STEP_COUNT: usize = 11;
+
+/// Lowest modeled clock as a fraction of boost.
+pub const S_MIN: f64 = 0.5;
+
+/// Voltage-floor knee as a fraction of boost: below this the regulator
+/// is pinned and per-op energy falls only linearly with clock.
+pub const S_KNEE: f64 = 0.6;
+
+/// Default voltage-scaling exponent above the knee; mirrors
+/// [`ArchConfig::clock_energy_factor`]'s calibrated 2.6.
+pub const EXP_DEFAULT: f64 = 2.6;
+
+/// Reference dynamic load (fraction of TDP) at which `static_factor`'s
+/// steady temperatures are evaluated.
+pub const REF_DYN_TDP_FRAC: f64 = 0.5;
+
+/// Where a [`FreqSpace`]'s scaling factors came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FreqSource {
+    /// Analytic fallback from the arch catalog (no measurements).
+    ClosedForm,
+    /// Voltage exponent fitted from per-step microbench measurements.
+    Measured,
+}
+
+impl FreqSource {
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            FreqSource::ClosedForm => "closed-form",
+            FreqSource::Measured => "measured",
+        }
+    }
+}
+
+/// One DVFS operating point, with its scaling factors relative to the
+/// boost step (which is always the last step and carries factors 1.0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FreqStep {
+    /// Position in the space, ascending with clock; the boost step has
+    /// index `len - 1`.
+    pub index: usize,
+    /// Absolute core clock at this step [GHz].
+    pub clock_ghz: f64,
+    /// Per-op dynamic-energy multiplier vs the boost step.
+    pub dyn_energy_factor: f64,
+    /// Runtime multiplier vs the boost step (`1/s`).
+    pub runtime_factor: f64,
+    /// Static/idle-power multiplier vs the boost step (leakage).
+    pub static_factor: f64,
+}
+
+/// A per-arch DVFS state space: the frequency steps the advisor sweeps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FreqSpace {
+    pub arch: String,
+    /// Steps ascending by clock; the last is the boost (training) point.
+    pub steps: Vec<FreqStep>,
+    pub source: FreqSource,
+}
+
+/// Dynamic-energy factor at clock fraction `s` for voltage exponent
+/// `exp`: `s^exp` above the knee, linear (and continuous at the knee)
+/// below it where the regulator sits at its floor.
+pub fn dyn_energy_factor(s: f64, exp: f64) -> f64 {
+    if s >= S_KNEE {
+        s.powf(exp)
+    } else {
+        S_KNEE.powf(exp) * (s / S_KNEE)
+    }
+}
+
+impl FreqSpace {
+    /// The analytic space from the arch catalog alone: [`STEP_COUNT`]
+    /// steps spanning [`S_MIN`]..1.0 of the boost clock with the
+    /// [`EXP_DEFAULT`] voltage exponent.
+    pub fn closed_form(cfg: &ArchConfig) -> FreqSpace {
+        FreqSpace::with_exponent(cfg, EXP_DEFAULT, FreqSource::ClosedForm)
+    }
+
+    /// A space whose voltage exponent is fitted from per-step microbench
+    /// measurements: `samples` holds `(clock_fraction, dyn_energy_factor)`
+    /// pairs (factors normalized to the boost step).  Only samples above
+    /// the voltage-floor knee constrain the exponent (below it the slope
+    /// is pinned to 1 by the floor); at least two distinct ones are
+    /// required.  The fitted exponent is quantized to 1e-3 — far inside
+    /// measurement noise — so spaces are byte-reproducible across runs.
+    pub fn measured(cfg: &ArchConfig, samples: &[(f64, f64)]) -> Result<FreqSpace, Error> {
+        let exp = fit_exponent(samples)?;
+        Ok(FreqSpace::with_exponent(cfg, exp, FreqSource::Measured))
+    }
+
+    /// Measured when per-step samples are present, closed-form fallback
+    /// otherwise — the one split every advisor surface routes through.
+    pub fn for_arch(cfg: &ArchConfig, samples: Option<&[(f64, f64)]>) -> Result<FreqSpace, Error> {
+        match samples {
+            Some(s) => FreqSpace::measured(cfg, s),
+            None => Ok(FreqSpace::closed_form(cfg)),
+        }
+    }
+
+    fn with_exponent(cfg: &ArchConfig, exp: f64, source: FreqSource) -> FreqSpace {
+        // Steady temperature at clock fraction `s` under the reference
+        // dynamic load, and the affine static power it implies.
+        let (s0, b) = cfg.static_power_affine(1.0);
+        let p_ref_dyn = cfg.tdp_w * REF_DYN_TDP_FRAC;
+        let static_at = |s: f64| {
+            let dyn_power = p_ref_dyn * dyn_energy_factor(s, exp) * s;
+            let t = ThermalState::steady(
+                &cfg.cooling,
+                cfg.const_power_w + cfg.static_power_w + dyn_power,
+            );
+            s0 + b * t
+        };
+        let static_boost = static_at(1.0);
+        let steps = (0..STEP_COUNT)
+            .map(|index| {
+                let frac = index as f64 / (STEP_COUNT - 1) as f64;
+                let s = S_MIN + (1.0 - S_MIN) * frac;
+                FreqStep {
+                    index,
+                    clock_ghz: cfg.clock_ghz * s,
+                    dyn_energy_factor: dyn_energy_factor(s, exp),
+                    runtime_factor: 1.0 / s,
+                    static_factor: static_at(s) / static_boost,
+                }
+            })
+            .collect();
+        FreqSpace {
+            arch: cfg.name.clone(),
+            steps,
+            source,
+        }
+    }
+
+    /// The boost (training) step — the reference every factor is 1.0 at.
+    pub fn boost(&self) -> Result<&FreqStep, Error> {
+        self.steps
+            .last()
+            .ok_or_else(|| Error::internal("empty DVFS state space"))
+    }
+}
+
+/// Least-squares fit of the voltage exponent from `(clock_fraction,
+/// dyn_energy_factor)` samples: the slope of `ln factor` on `ln s` over
+/// the samples above the knee, quantized to 1e-3.
+pub fn fit_exponent(samples: &[(f64, f64)]) -> Result<f64, Error> {
+    let logs: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|(s, factor)| *s >= S_KNEE && *s > 0.0 && *factor > 0.0)
+        .map(|(s, factor)| (s.ln(), factor.ln()))
+        .collect();
+    let n = logs.len() as f64;
+    if logs.len() < 2 {
+        return Err(Error::bad_request(
+            "fitting a DVFS exponent needs at least 2 positive samples above the voltage knee",
+        ));
+    }
+    let mean_x: f64 = logs.iter().map(|(x, _)| x).sum::<f64>() / n;
+    let mean_y: f64 = logs.iter().map(|(_, y)| y).sum::<f64>() / n;
+    let sxx: f64 = logs.iter().map(|(x, _)| (x - mean_x) * (x - mean_x)).sum();
+    let sxy: f64 = logs.iter().map(|(x, y)| (x - mean_x) * (y - mean_y)).sum();
+    if sxx <= 0.0 {
+        return Err(Error::bad_request(
+            "fitting a DVFS exponent needs at least 2 distinct clock fractions above the knee",
+        ));
+    }
+    Ok((sxy / sxx * 1000.0).round() / 1000.0)
+}
+
+/// The fleet's DVFS throttle fixed point, relocated here from
+/// `fleet::ArchPlan::resolve` (PR 6's documented deviation, retired in
+/// PR 10): starting from the boost clock, iterate the steady-state
+/// temperature ↔ static-power ↔ headroom loop that mirrors `Device::run`
+/// and return the converged slowdown `s` plus whether the cap engaged.
+/// `t_entry` is the temperature the static-power guess is evaluated at
+/// on entry (the fleet plan uses the idle steady state).  Operation
+/// order is byte-identical to the PR 6 loop — `fleet` parity pins it.
+pub fn throttle_solve(cfg: &ArchConfig, t_entry: f64, occ: f64, p_dyn: f64) -> (f64, bool) {
+    let mut s = 1.0f64;
+    let mut throttled = false;
+    for _ in 0..4 {
+        let t_guess = ThermalState::steady(
+            &cfg.cooling,
+            cfg.const_power_w + cfg.static_power_at(t_entry, occ) + p_dyn * s.powi(3),
+        );
+        let p_stat = cfg.static_power_at(t_guess, occ);
+        let headroom = cfg.tdp_w - cfg.const_power_w - p_stat;
+        if p_dyn > 0.0 && p_dyn * s.powi(2) > headroom && headroom > 0.0 {
+            s = (headroom / p_dyn).sqrt().min(1.0);
+            throttled = true;
+        }
+    }
+    (s, throttled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_space_shape_and_boost_identity() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let space = FreqSpace::closed_form(&cfg);
+        assert_eq!(space.arch, "cloudlab-v100");
+        assert_eq!(space.source, FreqSource::ClosedForm);
+        assert_eq!(space.steps.len(), STEP_COUNT);
+        // Ascending clocks, spanning S_MIN..1.0 of boost.
+        for pair in space.steps.windows(2) {
+            assert!(pair[0].clock_ghz < pair[1].clock_ghz);
+        }
+        assert!((space.steps[0].clock_ghz - cfg.clock_ghz * S_MIN).abs() < 1e-12);
+        // The boost step is the exact training point: every factor 1.0.
+        let top = space.boost().unwrap();
+        assert_eq!(top.index, STEP_COUNT - 1);
+        assert_eq!(top.clock_ghz.to_bits(), cfg.clock_ghz.to_bits());
+        assert_eq!(top.dyn_energy_factor.to_bits(), 1.0f64.to_bits());
+        assert_eq!(top.runtime_factor.to_bits(), 1.0f64.to_bits());
+        assert_eq!(top.static_factor.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn factors_are_monotone_and_knee_is_continuous() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let space = FreqSpace::closed_form(&cfg);
+        for pair in space.steps.windows(2) {
+            // Lower clock: cheaper per-op energy, longer runtime, less leakage.
+            assert!(pair[0].dyn_energy_factor < pair[1].dyn_energy_factor);
+            assert!(pair[0].runtime_factor > pair[1].runtime_factor);
+            assert!(pair[0].static_factor < pair[1].static_factor);
+            assert!(pair[0].static_factor > 0.0);
+        }
+        // The piecewise dyn model is continuous at the knee.
+        let eps = 1e-9;
+        let below = dyn_energy_factor(S_KNEE - eps, EXP_DEFAULT);
+        let at = dyn_energy_factor(S_KNEE, EXP_DEFAULT);
+        assert!((below - at).abs() < 1e-6);
+        // Below the knee the slope is linear in s (voltage floor).
+        let half = dyn_energy_factor(S_KNEE * 0.5, EXP_DEFAULT);
+        assert!((half * 2.0 - at).abs() < 1e-12);
+        // Above the knee it matches the calibrated V²f exponent.
+        assert_eq!(
+            dyn_energy_factor(0.8, EXP_DEFAULT).to_bits(),
+            0.8f64.powf(2.6).to_bits()
+        );
+    }
+
+    #[test]
+    fn measured_space_from_closed_form_samples_is_byte_identical() {
+        // The parity pin for the measured/closed-form split: synthesize
+        // per-step "measurements" from the closed form and fit.  The
+        // quantized exponent recovers exactly 2.6, so every factor in the
+        // fitted space is byte-identical to the closed form's.
+        let cfg = ArchConfig::cloudlab_v100();
+        let closed = FreqSpace::closed_form(&cfg);
+        let samples: Vec<(f64, f64)> = closed
+            .steps
+            .iter()
+            .map(|st| (st.clock_ghz / cfg.clock_ghz, st.dyn_energy_factor))
+            .collect();
+        let fitted = FreqSpace::measured(&cfg, &samples).unwrap();
+        assert_eq!(fitted.source, FreqSource::Measured);
+        assert_eq!(fitted.steps.len(), closed.steps.len());
+        for (f, c) in fitted.steps.iter().zip(&closed.steps) {
+            assert_eq!(f.clock_ghz.to_bits(), c.clock_ghz.to_bits());
+            assert_eq!(f.dyn_energy_factor.to_bits(), c.dyn_energy_factor.to_bits());
+            assert_eq!(f.runtime_factor.to_bits(), c.runtime_factor.to_bits());
+            assert_eq!(f.static_factor.to_bits(), c.static_factor.to_bits());
+        }
+        // for_arch routes the split.
+        let via = FreqSpace::for_arch(&cfg, Some(&samples)).unwrap();
+        assert_eq!(via.source, FreqSource::Measured);
+        assert_eq!(
+            FreqSpace::for_arch(&cfg, None).unwrap().source,
+            FreqSource::ClosedForm
+        );
+    }
+
+    #[test]
+    fn fit_exponent_recovers_noise_free_slopes_and_rejects_degenerate_input() {
+        let samples: Vec<(f64, f64)> =
+            [0.6, 0.7, 0.8, 0.9, 1.0].iter().map(|&s| (s, s.powf(2.6))).collect();
+        assert_eq!(fit_exponent(&samples).unwrap().to_bits(), 2.6f64.to_bits());
+        // Sub-knee samples are excluded: a floor-pinned slope of 1 in the
+        // low range must not drag the exponent down.
+        let mut with_floor = samples.clone();
+        with_floor.push((0.5, dyn_energy_factor(0.5, 2.6)));
+        assert_eq!(fit_exponent(&with_floor).unwrap().to_bits(), 2.6f64.to_bits());
+        // Too few / degenerate samples are typed bad_request errors.
+        assert_eq!(fit_exponent(&[]).unwrap_err().code(), "bad_request");
+        assert_eq!(fit_exponent(&[(0.9, 0.8)]).unwrap_err().code(), "bad_request");
+        assert_eq!(
+            fit_exponent(&[(0.9, 0.8), (0.9, 0.8)]).unwrap_err().code(),
+            "bad_request"
+        );
+        // Samples entirely below the knee cannot constrain the exponent.
+        assert_eq!(
+            fit_exponent(&[(0.5, 0.4), (0.55, 0.45)]).unwrap_err().code(),
+            "bad_request"
+        );
+    }
+
+    #[test]
+    fn throttle_solve_caps_hot_workloads_and_passes_cool_ones() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let t_idle = ThermalState::steady(&cfg.cooling, cfg.const_power_w);
+        // Cool workload: well under TDP, no throttle.
+        let (s, throttled) = throttle_solve(&cfg, t_idle, 0.5, 100.0);
+        assert_eq!(s.to_bits(), 1.0f64.to_bits());
+        assert!(!throttled);
+        // Hot workload: dynamic draw over the cap engages the fixed point.
+        let (s, throttled) = throttle_solve(&cfg, t_idle, 1.0, 400.0);
+        assert!(throttled);
+        assert!(s < 1.0 && s > 0.0);
+        // Converged state respects the cap: P = const + static + dyn·s².
+        let t = ThermalState::steady(
+            &cfg.cooling,
+            cfg.const_power_w + cfg.static_power_at(t_idle, 1.0) + 400.0 * s.powi(3),
+        );
+        let total = cfg.const_power_w + cfg.static_power_at(t, 1.0) + 400.0 * s * s;
+        assert!(total <= cfg.tdp_w * 1.02, "{total}");
+        // Zero dynamic power never throttles.
+        let (s, throttled) = throttle_solve(&cfg, t_idle, 0.0, 0.0);
+        assert_eq!(s.to_bits(), 1.0f64.to_bits());
+        assert!(!throttled);
+    }
+}

@@ -1,0 +1,49 @@
+//! `wattchmen::advisor` — DVFS-aware energy modeling and the
+//! frequency-sweep advisor behind `wattchmen advise`.
+//!
+//! The per-instruction tables predict energy at one operating point: the
+//! arch's boost clock.  This subsystem adds the frequency axis the
+//! paper's closing case studies monetize (up to 35% energy savings on
+//! Backprop/QMCPACK by capping clocks), without touching the tables:
+//!
+//! * [`freq`] — the per-arch DVFS state space: frequency steps with
+//!   analytic V²f dynamic-energy factors, `1/s` runtime stretch, and a
+//!   leakage-aware static factor tied to the affine static-power model;
+//!   closed-form from the catalog or fitted from per-step microbench
+//!   measurements (parity-pinned).  Also home of [`throttle_solve`], the
+//!   fleet's DVFS throttle fixed point.
+//! * [`sweep`] — expands ONE batched `predict_many` pass into
+//!   energy/runtime/power/EDP curves across the whole space (scaling is
+//!   post-predict, so the coalescer and caches are reused, not bypassed).
+//! * [`policy`] — per-workload sweet spots under selectable
+//!   [`Objective`]s: min-energy, min-EDP, energy-under-power-cap.
+//! * [`report`] — the one payload builder every surface ships
+//!   (`wattchmen advise --json`, the `{"cmd":"advise"}` wire response,
+//!   `RemoteClient::advise`), plus the "cap at step k → save X%"
+//!   narrative lines.
+//!
+//! Engine integration lives in [`crate::engine::Engine::sweep`]; the
+//! derivations and CLI/wire examples are documented in `ADVISOR.md`.
+
+pub mod freq;
+pub mod policy;
+pub mod report;
+pub mod sweep;
+
+pub use freq::{fit_exponent, throttle_solve, FreqSource, FreqSpace, FreqStep};
+pub use policy::{sweet_spot, Objective, SweetSpot};
+pub use report::{advice_json, advice_text, spot_line};
+pub use sweep::{scale_prediction, StepPoint, WorkloadCurve};
+
+/// A complete advisory: the swept state space, one curve and one sweet
+/// spot per workload, under one objective.  Built by
+/// [`sweep::assemble`] / [`crate::engine::Engine::sweep`] and rendered
+/// by [`report::advice_json`].
+#[derive(Clone, Debug)]
+pub struct Advice {
+    pub arch: String,
+    pub objective: Objective,
+    pub space: FreqSpace,
+    pub curves: Vec<WorkloadCurve>,
+    pub spots: Vec<SweetSpot>,
+}

@@ -1,0 +1,243 @@
+//! Sweet-spot selection: which DVFS step a workload should run at,
+//! under a selectable objective.
+//!
+//! The paper's closing case studies (Backprop, QMCPACK) turn the model
+//! into "cap the clock at step k → save X% energy" advice; this module
+//! reproduces that decision rule over the [`super::sweep`] curves.  All
+//! selections are deterministic: ties prefer the *higher* clock (least
+//! intrusive recommendation), implemented by scanning from the boost
+//! step downward and only accepting strict improvements.
+
+use crate::error::Error;
+
+use super::sweep::{StepPoint, WorkloadCurve};
+
+/// What "best" means for a sweep curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Minimize total energy (the paper's headline metric).
+    MinEnergy,
+    /// Minimize energy·delay product (throughput-respecting savings).
+    MinEdp,
+    /// Minimize energy among steps whose average power fits under the
+    /// given cap [W]; if no step fits, the lowest-power step wins.
+    EnergyUnderCap(f64),
+}
+
+impl Objective {
+    /// Parse the CLI/wire objective spec.  `power_cap_w` is required by
+    /// (and only meaningful for) `power-cap`.
+    pub fn parse(name: &str, power_cap_w: Option<f64>) -> Result<Objective, Error> {
+        match name {
+            "min-energy" => Ok(Objective::MinEnergy),
+            "min-edp" => Ok(Objective::MinEdp),
+            "power-cap" => {
+                let cap = power_cap_w.ok_or_else(|| {
+                    Error::bad_request("objective 'power-cap' needs a power_cap_w field (watts)")
+                })?;
+                if !cap.is_finite() || cap <= 0.0 {
+                    return Err(Error::BadRequest(format!(
+                        "power_cap_w must be a positive finite number, got {cap}"
+                    )));
+                }
+                Ok(Objective::EnergyUnderCap(cap))
+            }
+            other => Err(Error::BadRequest(format!(
+                "unknown objective '{other}' (min-energy|min-edp|power-cap)"
+            ))),
+        }
+    }
+
+    /// The spec name the wire payload echoes back.
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            Objective::MinEnergy => "min-energy",
+            Objective::MinEdp => "min-edp",
+            Objective::EnergyUnderCap(_) => "power-cap",
+        }
+    }
+
+    /// The cap, for objectives that carry one.
+    pub fn power_cap_w(&self) -> Option<f64> {
+        match self {
+            Objective::EnergyUnderCap(cap) => Some(*cap),
+            _ => None,
+        }
+    }
+}
+
+/// One workload's recommended operating point, with the savings story
+/// relative to the boost step (the point predictions answer for today).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweetSpot {
+    pub workload: String,
+    /// Recommended step index in the swept [`super::FreqSpace`].
+    pub index: usize,
+    pub clock_ghz: f64,
+    pub energy_j: f64,
+    pub runtime_s: f64,
+    pub power_w: f64,
+    /// Fraction of boost-step energy saved (0 when boost is best).
+    pub savings_frac: f64,
+    /// Fractional runtime increase vs the boost step.
+    pub slowdown_frac: f64,
+}
+
+/// Pick the curve's best point under the objective.  Curves are swept
+/// ascending by clock; the scan runs from the boost step downward and
+/// takes strict improvements only, so ties resolve to the higher clock.
+pub fn sweet_spot(curve: &WorkloadCurve, objective: &Objective) -> Result<SweetSpot, Error> {
+    let boost = curve
+        .points
+        .last()
+        .ok_or_else(|| Error::internal("sweep produced an empty curve"))?;
+    let mut best = boost;
+    for point in curve.points.iter().rev() {
+        if improves(point, best, objective) {
+            best = point;
+        }
+    }
+    Ok(SweetSpot {
+        workload: curve.workload.clone(),
+        index: best.index,
+        clock_ghz: best.clock_ghz,
+        energy_j: best.energy_j,
+        runtime_s: best.runtime_s,
+        power_w: best.power_w,
+        savings_frac: if boost.energy_j > 0.0 {
+            1.0 - best.energy_j / boost.energy_j
+        } else {
+            0.0
+        },
+        slowdown_frac: if boost.runtime_s > 0.0 {
+            best.runtime_s / boost.runtime_s - 1.0
+        } else {
+            0.0
+        },
+    })
+}
+
+/// Strict "candidate beats incumbent" under the objective.
+fn improves(candidate: &StepPoint, incumbent: &StepPoint, objective: &Objective) -> bool {
+    match objective {
+        Objective::MinEnergy => candidate.energy_j < incumbent.energy_j,
+        Objective::MinEdp => candidate.edp < incumbent.edp,
+        Objective::EnergyUnderCap(cap) => {
+            let c_fits = candidate.power_w <= *cap;
+            let i_fits = incumbent.power_w <= *cap;
+            match (c_fits, i_fits) {
+                // Fitting under the cap beats any over-cap incumbent.
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => candidate.energy_j < incumbent.energy_j,
+                // Nothing fits (yet): chase the lowest power.
+                (false, false) => candidate.power_w < incumbent.power_w,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(index: usize, energy_j: f64, runtime_s: f64) -> StepPoint {
+        StepPoint {
+            index,
+            clock_ghz: 0.7 + 0.1 * index as f64,
+            energy_j,
+            runtime_s,
+            power_w: energy_j / runtime_s,
+            edp: energy_j * runtime_s,
+        }
+    }
+
+    fn curve(points: Vec<StepPoint>) -> WorkloadCurve {
+        WorkloadCurve {
+            workload: "hotspot".into(),
+            points,
+        }
+    }
+
+    #[test]
+    fn parse_covers_the_objective_surface() {
+        assert_eq!(Objective::parse("min-energy", None).unwrap(), Objective::MinEnergy);
+        assert_eq!(Objective::parse("min-edp", None).unwrap(), Objective::MinEdp);
+        assert_eq!(
+            Objective::parse("power-cap", Some(250.0)).unwrap(),
+            Objective::EnergyUnderCap(250.0)
+        );
+        for (name, cap) in [
+            ("power-cap", None),
+            ("power-cap", Some(0.0)),
+            ("power-cap", Some(-5.0)),
+            ("power-cap", Some(f64::NAN)),
+            ("frobnicate", None),
+        ] {
+            assert_eq!(Objective::parse(name, cap).unwrap_err().code(), "bad_request");
+        }
+        assert_eq!(Objective::MinEnergy.wire_name(), "min-energy");
+        assert_eq!(Objective::EnergyUnderCap(250.0).wire_name(), "power-cap");
+        assert_eq!(Objective::EnergyUnderCap(250.0).power_cap_w(), Some(250.0));
+        assert_eq!(Objective::MinEdp.power_cap_w(), None);
+    }
+
+    #[test]
+    fn min_energy_finds_the_interior_minimum() {
+        // U-shaped energy curve: minimum at step 1.
+        let c = curve(vec![
+            point(0, 1200.0, 2.0),
+            point(1, 900.0, 1.5),
+            point(2, 1000.0, 1.0),
+        ]);
+        let spot = sweet_spot(&c, &Objective::MinEnergy).unwrap();
+        assert_eq!(spot.index, 1);
+        assert!((spot.savings_frac - 0.1).abs() < 1e-12);
+        assert!((spot.slowdown_frac - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_prefer_the_higher_clock() {
+        let c = curve(vec![
+            point(0, 1000.0, 2.0),
+            point(1, 1000.0, 1.5),
+            point(2, 1000.0, 1.0),
+        ]);
+        let spot = sweet_spot(&c, &Objective::MinEnergy).unwrap();
+        assert_eq!(spot.index, 2);
+        assert_eq!(spot.savings_frac, 0.0);
+        assert_eq!(spot.slowdown_frac, 0.0);
+    }
+
+    #[test]
+    fn min_edp_weighs_runtime() {
+        // Step 0 saves energy but doubles runtime; EDP prefers step 2.
+        let c = curve(vec![point(0, 900.0, 2.0), point(2, 1000.0, 1.0)]);
+        assert_eq!(sweet_spot(&c, &Objective::MinEdp).unwrap().index, 2);
+        assert_eq!(sweet_spot(&c, &Objective::MinEnergy).unwrap().index, 0);
+    }
+
+    #[test]
+    fn power_cap_picks_min_energy_among_fitting_steps() {
+        // Powers: 600, 600, 1000 W.
+        let c = curve(vec![
+            point(0, 1200.0, 2.0),
+            point(1, 900.0, 1.5),
+            point(2, 1000.0, 1.0),
+        ]);
+        let spot = sweet_spot(&c, &Objective::EnergyUnderCap(700.0)).unwrap();
+        assert_eq!(spot.index, 1);
+        // A cap nothing fits under falls back to the lowest-power step.
+        let spot = sweet_spot(&c, &Objective::EnergyUnderCap(100.0)).unwrap();
+        assert_eq!(spot.index, 1, "600 W tie resolves to the higher clock");
+        // A loose cap degenerates to plain min-energy.
+        let spot = sweet_spot(&c, &Objective::EnergyUnderCap(1e6)).unwrap();
+        assert_eq!(spot.index, 1);
+    }
+
+    #[test]
+    fn empty_curve_is_a_typed_internal_error() {
+        let err = sweet_spot(&curve(vec![]), &Objective::MinEnergy).unwrap_err();
+        assert_eq!(err.code(), "internal");
+    }
+}

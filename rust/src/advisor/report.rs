@@ -1,0 +1,187 @@
+//! Rendering an [`Advice`]: the wire/CLI JSON payload and the
+//! per-workload "cap at step k → save X%" narrative lines.
+//!
+//! Exactly one builder produces the advise payload — `wattchmen advise
+//! --json`, the `{"cmd":"advise"}` wire response, and
+//! `RemoteClient::advise` all ship [`advice_json`]'s bytes, so the three
+//! surfaces are byte-identical by construction (the same discipline
+//! `render_line` enforces for predict).
+
+use crate::util::json::Json;
+
+use super::policy::SweetSpot;
+use super::sweep::{StepPoint, WorkloadCurve};
+use super::{Advice, FreqStep};
+
+/// The per-workload narrative line (the paper's Backprop/QMCPACK story).
+/// CI's advise smoke test greps for the `sweet spot @` marker.
+pub fn spot_line(s: &SweetSpot) -> String {
+    format!(
+        "{:<18} sweet spot @ {:.3} GHz: cap at step {} -> save {:.1}% energy, \
+         runtime +{:.1}%, avg power {:.1} W",
+        s.workload,
+        s.clock_ghz,
+        s.index,
+        100.0 * s.savings_frac,
+        100.0 * s.slowdown_frac,
+        s.power_w
+    )
+}
+
+/// Every workload's narrative, newline-joined (the CLI's default output
+/// and the payload's `text` field, shared like predict's `render_line`).
+pub fn advice_text(a: &Advice) -> String {
+    let lines: Vec<String> = a.spots.iter().map(spot_line).collect();
+    lines.join("\n")
+}
+
+fn step_json(s: &FreqStep) -> Json {
+    Json::obj(vec![
+        ("step", Json::Num(s.index as f64)),
+        ("clock_ghz", Json::Num(s.clock_ghz)),
+        ("dyn_energy_factor", Json::Num(s.dyn_energy_factor)),
+        ("runtime_factor", Json::Num(s.runtime_factor)),
+        ("static_factor", Json::Num(s.static_factor)),
+    ])
+}
+
+fn point_json(p: &StepPoint) -> Json {
+    Json::obj(vec![
+        ("step", Json::Num(p.index as f64)),
+        ("clock_ghz", Json::Num(p.clock_ghz)),
+        ("energy_j", Json::Num(p.energy_j)),
+        ("runtime_s", Json::Num(p.runtime_s)),
+        ("power_w", Json::Num(p.power_w)),
+        ("edp", Json::Num(p.edp)),
+    ])
+}
+
+fn curve_json(c: &WorkloadCurve) -> Json {
+    Json::obj(vec![
+        ("workload", Json::Str(c.workload.clone())),
+        ("points", Json::Arr(c.points.iter().map(point_json).collect())),
+    ])
+}
+
+fn spot_json(s: &SweetSpot) -> Json {
+    Json::obj(vec![
+        ("workload", Json::Str(s.workload.clone())),
+        ("step", Json::Num(s.index as f64)),
+        ("clock_ghz", Json::Num(s.clock_ghz)),
+        ("energy_j", Json::Num(s.energy_j)),
+        ("runtime_s", Json::Num(s.runtime_s)),
+        ("power_w", Json::Num(s.power_w)),
+        ("savings_pct", Json::Num(100.0 * s.savings_frac)),
+        ("slowdown_pct", Json::Num(100.0 * s.slowdown_frac)),
+        ("text", Json::Str(spot_line(s))),
+    ])
+}
+
+/// The advise payload: the swept state space, per-workload curves, one
+/// sweet spot per workload, and the narrative `text`.  `ok:true` is
+/// baked in — this object IS the success wire response.
+pub fn advice_json(a: &Advice) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("arch", Json::Str(a.arch.clone())),
+        ("objective", Json::Str(a.objective.wire_name().into())),
+        ("source", Json::Str(a.space.source.wire_name().into())),
+        ("count", Json::Num(a.curves.len() as f64)),
+        ("steps", Json::Arr(a.space.steps.iter().map(step_json).collect())),
+        ("curves", Json::Arr(a.curves.iter().map(curve_json).collect())),
+        ("sweet_spots", Json::Arr(a.spots.iter().map(spot_json).collect())),
+        ("text", Json::Str(advice_text(a))),
+    ];
+    if let Some(cap) = a.objective.power_cap_w() {
+        fields.push(("power_cap_w", Json::Num(cap)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::freq::FreqSpace;
+    use crate::advisor::policy::Objective;
+    use crate::advisor::sweep::assemble;
+    use crate::gpusim::config::ArchConfig;
+    use crate::model::{EnergyTable, Prediction};
+    use std::collections::BTreeMap;
+
+    fn advice(objective: Objective) -> Advice {
+        let cfg = ArchConfig::cloudlab_v100();
+        let table = EnergyTable {
+            arch: "cloudlab-v100".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: BTreeMap::new(),
+        };
+        let base_j = 82.0 * 90.0;
+        let preds = vec![Prediction {
+            workload: "hotspot".into(),
+            energy_j: base_j + 9000.0,
+            base_j,
+            dynamic_j: 9000.0,
+            coverage: 1.0,
+            duration_s: 90.0,
+            by_bucket: BTreeMap::new(),
+            by_key: Vec::new(),
+        }];
+        let space = FreqSpace::closed_form(&cfg);
+        assemble("cloudlab-v100", objective, space, &table, &preds, 1).unwrap()
+    }
+
+    #[test]
+    fn payload_shape_covers_the_surface() {
+        let j = advice_json(&advice(Objective::MinEnergy));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("arch").and_then(Json::as_str), Some("cloudlab-v100"));
+        assert_eq!(j.get("objective").and_then(Json::as_str), Some("min-energy"));
+        assert_eq!(j.get("source").and_then(Json::as_str), Some("closed-form"));
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(j.get("power_cap_w").is_none());
+        let steps = j.get("steps").and_then(Json::as_arr).unwrap();
+        assert_eq!(steps.len(), crate::advisor::freq::STEP_COUNT);
+        let curves = j.get("curves").and_then(Json::as_arr).unwrap();
+        assert_eq!(curves.len(), 1);
+        let points = curves[0].get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(points.len(), steps.len());
+        let spots = j.get("sweet_spots").and_then(Json::as_arr).unwrap();
+        assert_eq!(spots.len(), 1);
+        // The payload text is the joined spot lines, and each spot's
+        // `text` is its own line — the CLI prints exactly these.
+        let text = j.get("text").and_then(Json::as_str).unwrap();
+        assert_eq!(
+            text,
+            spots[0].get("text").and_then(Json::as_str).unwrap()
+        );
+        assert!(text.contains("sweet spot @"), "{text}");
+        assert!(text.contains("-> save"), "{text}");
+    }
+
+    #[test]
+    fn power_cap_objectives_echo_the_cap() {
+        let j = advice_json(&advice(Objective::EnergyUnderCap(250.0)));
+        assert_eq!(j.get("objective").and_then(Json::as_str), Some("power-cap"));
+        assert_eq!(j.get("power_cap_w").and_then(Json::as_f64), Some(250.0));
+    }
+
+    #[test]
+    fn spot_line_is_stable() {
+        let s = SweetSpot {
+            workload: "hotspot".into(),
+            index: 7,
+            clock_ghz: 1.224,
+            energy_j: 11000.0,
+            runtime_s: 112.5,
+            power_w: 97.777,
+            savings_frac: 0.0731,
+            slowdown_frac: 0.25,
+        };
+        assert_eq!(
+            spot_line(&s),
+            "hotspot            sweet spot @ 1.224 GHz: cap at step 7 -> save 7.3% energy, \
+             runtime +25.0%, avg power 97.8 W"
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Frequency sweeps over predictions: one [`crate::model::Prediction`]
+//! per workload (computed at the boost clock, through the normal batched
+//! `predict_many` path) expands into a full energy / runtime / power /
+//! EDP curve across the arch's [`FreqSpace`](super::FreqSpace).
+//!
+//! The scaling is applied *post-predict*, so a sweep costs exactly one
+//! coalesced `predict_many` pass per (table, mode) — the coalescer and
+//! every cache keyed on the table `Arc` are reused, not bypassed
+//! (`Engine::sweep` pins this with a `batch_calls` counter test).  The
+//! boost step of every curve reproduces the plain prediction
+//! byte-for-byte: `base_j` is `(const + static·1.0)·duration` under the
+//! `FullGpu` static model and `energy_j = base_j + dynamic_j`, both
+//! `f64`-identical to `model::predict_many`'s own assembly.
+
+use crate::error::Error;
+use crate::model::{EnergyTable, Prediction};
+use crate::util::sync::parallel_map;
+
+use super::freq::{FreqSpace, FreqStep};
+use super::policy::{sweet_spot, Objective, SweetSpot};
+use super::Advice;
+
+/// One workload's model outputs at one DVFS step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepPoint {
+    /// Step index in the swept [`FreqSpace`].
+    pub index: usize,
+    pub clock_ghz: f64,
+    /// Total energy at this step [J].
+    pub energy_j: f64,
+    /// Runtime at this step [s].
+    pub runtime_s: f64,
+    /// Average power at this step [W].
+    pub power_w: f64,
+    /// Energy·delay product [J·s].
+    pub edp: f64,
+}
+
+/// One workload's full sweep curve, ascending by clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadCurve {
+    pub workload: String,
+    pub points: Vec<StepPoint>,
+}
+
+/// Scale one boost-clock prediction to one DVFS step: dynamic energy by
+/// the V²f factor, runtime by `1/s`, and the constant+static base by the
+/// stretched runtime with the leakage-scaled static share.
+pub fn scale_prediction(table: &EnergyTable, p: &Prediction, step: &FreqStep) -> StepPoint {
+    let runtime_s = p.duration_s * step.runtime_factor;
+    let dynamic_j = p.dynamic_j * step.dyn_energy_factor;
+    let base_j = (table.const_power_w + table.static_power_w * step.static_factor) * runtime_s;
+    let energy_j = base_j + dynamic_j;
+    StepPoint {
+        index: step.index,
+        clock_ghz: step.clock_ghz,
+        energy_j,
+        runtime_s,
+        power_w: if runtime_s > 0.0 { energy_j / runtime_s } else { 0.0 },
+        edp: energy_j * runtime_s,
+    }
+}
+
+/// Expand predictions into per-workload curves on a worker pool.  Work
+/// is pure per-workload math and results merge in input order, so the
+/// output is byte-identical for every `jobs` (pinned by tests).
+pub fn curves(
+    table: &EnergyTable,
+    space: &FreqSpace,
+    preds: &[Prediction],
+    jobs: usize,
+) -> Vec<WorkloadCurve> {
+    parallel_map(preds.len(), jobs.max(1), |i| {
+        // parallel_map drives indices 0..len, so the lookup cannot miss;
+        // .get keeps the request path panic-free anyway.
+        let p = match preds.get(i) {
+            Some(p) => p,
+            None => return WorkloadCurve { workload: String::new(), points: Vec::new() },
+        };
+        WorkloadCurve {
+            workload: p.workload.clone(),
+            points: space.steps.iter().map(|step| scale_prediction(table, p, step)).collect(),
+        }
+    })
+}
+
+/// Assemble the full advisory: curves plus one sweet spot per workload
+/// under the objective.  This is the shared back half of every advise
+/// surface (CLI, wire, `RemoteClient`) — byte-identical by construction.
+pub fn assemble(
+    arch: &str,
+    objective: Objective,
+    space: FreqSpace,
+    table: &EnergyTable,
+    preds: &[Prediction],
+    jobs: usize,
+) -> Result<Advice, Error> {
+    let curves = curves(table, &space, preds, jobs);
+    let spots: Vec<SweetSpot> = curves
+        .iter()
+        .map(|c| sweet_spot(c, &objective))
+        .collect::<Result<Vec<_>, Error>>()?;
+    Ok(Advice {
+        arch: arch.to_string(),
+        objective,
+        space,
+        curves,
+        spots,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::config::ArchConfig;
+    use std::collections::BTreeMap;
+
+    fn table() -> EnergyTable {
+        EnergyTable {
+            arch: "cloudlab-v100".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    fn pred(name: &str, dynamic_j: f64, duration_s: f64) -> Prediction {
+        let base_j = (38.0 + 44.0) * duration_s;
+        Prediction {
+            workload: name.into(),
+            energy_j: base_j + dynamic_j,
+            base_j,
+            dynamic_j,
+            coverage: 1.0,
+            duration_s,
+            by_bucket: BTreeMap::new(),
+            by_key: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn boost_step_reproduces_the_plain_prediction_bytes() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let space = FreqSpace::closed_form(&cfg);
+        let t = table();
+        let p = pred("hotspot", 9000.0, 90.0);
+        let top = scale_prediction(&t, &p, space.boost().unwrap());
+        assert_eq!(top.energy_j.to_bits(), p.energy_j.to_bits());
+        assert_eq!(top.runtime_s.to_bits(), p.duration_s.to_bits());
+        assert_eq!(top.clock_ghz.to_bits(), cfg.clock_ghz.to_bits());
+    }
+
+    #[test]
+    fn dynamic_heavy_workloads_have_an_interior_energy_minimum() {
+        // E(s) = D·s^2.6 + B/s has its minimum at s* = (B/2.6D)^(1/3.6);
+        // with dynamic ≈ 1.5× base the sweet spot sits inside the range
+        // and saves real energy — the Backprop/QMCPACK story.
+        let cfg = ArchConfig::cloudlab_v100();
+        let space = FreqSpace::closed_form(&cfg);
+        let t = table();
+        let p = pred("backprop_k2", 82.0 * 90.0 * 1.5, 90.0);
+        let cs = curves(&t, &space, &[p], 1);
+        assert_eq!(cs.len(), 1);
+        let c = cs.first().unwrap();
+        let boost = c.points.last().unwrap();
+        let min = c
+            .points
+            .iter()
+            .min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).unwrap())
+            .unwrap();
+        assert!(min.index > 0 && min.index < boost.index, "interior: {}", min.index);
+        assert!(min.energy_j < boost.energy_j * 0.95, "real savings");
+        // Power falls monotonically with clock for this mix.
+        for pair in c.points.windows(2) {
+            assert!(pair[0].power_w < pair[1].power_w);
+        }
+        // EDP and power are consistent with energy and runtime.
+        for pt in &c.points {
+            assert_eq!(pt.edp.to_bits(), (pt.energy_j * pt.runtime_s).to_bits());
+            assert_eq!(pt.power_w.to_bits(), (pt.energy_j / pt.runtime_s).to_bits());
+        }
+    }
+
+    #[test]
+    fn curves_are_jobs_invariant_bitwise() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let space = FreqSpace::closed_form(&cfg);
+        let t = table();
+        let preds: Vec<Prediction> = (0..16)
+            .map(|i| pred(&format!("w{i:02}"), 1000.0 + 700.0 * i as f64, 90.0))
+            .collect();
+        let serial = curves(&t, &space, &preds, 1);
+        let parallel = curves(&t, &space, &preds, 8);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.workload, b.workload);
+            for (pa, pb) in a.points.iter().zip(&b.points) {
+                assert_eq!(pa.energy_j.to_bits(), pb.energy_j.to_bits());
+                assert_eq!(pa.edp.to_bits(), pb.edp.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_pairs_every_curve_with_a_spot() {
+        let cfg = ArchConfig::cloudlab_v100();
+        let space = FreqSpace::closed_form(&cfg);
+        let t = table();
+        let preds = vec![pred("hotspot", 5000.0, 90.0), pred("kmeans", 11000.0, 90.0)];
+        let advice = assemble("cloudlab-v100", Objective::MinEnergy, space, &t, &preds, 1).unwrap();
+        assert_eq!(advice.arch, "cloudlab-v100");
+        assert_eq!(advice.curves.len(), 2);
+        assert_eq!(advice.spots.len(), 2);
+        for (c, s) in advice.curves.iter().zip(&advice.spots) {
+            assert_eq!(c.workload, s.workload);
+        }
+    }
+}

@@ -32,6 +32,7 @@ use std::net::TcpStream;
 use std::thread;
 use std::time::Duration;
 
+use crate::advisor::Objective;
 use crate::error::Error;
 use crate::model::Mode;
 use crate::service::conn::{FrameDialect, FRAME_ENC_JSON, FRAME_HEADER_BYTES};
@@ -93,6 +94,62 @@ pub struct RemoteSuite {
     pub arch: String,
     pub predictions: Vec<RemotePrediction>,
     /// Newline-joined per-workload CLI lines.
+    pub text: String,
+}
+
+/// One per-workload DVFS sweet spot, decoded from an `advise` response.
+#[derive(Clone, Debug)]
+pub struct RemoteSpot {
+    pub workload: String,
+    pub step: f64,
+    pub clock_ghz: f64,
+    pub energy_j: f64,
+    pub runtime_s: f64,
+    pub power_w: f64,
+    pub savings_pct: f64,
+    pub slowdown_pct: f64,
+    /// The server-rendered narrative line (byte-identical to local
+    /// `wattchmen advise` output).
+    pub text: String,
+}
+
+impl RemoteSpot {
+    fn from_json(j: &Json) -> Result<RemoteSpot, Error> {
+        let num = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::internal(format!("server response has no {k} field")))
+        };
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::internal(format!("server response has no {k} field")))
+        };
+        Ok(RemoteSpot {
+            workload: s("workload")?,
+            step: num("step")?,
+            clock_ghz: num("clock_ghz")?,
+            energy_j: num("energy_j")?,
+            runtime_s: num("runtime_s")?,
+            power_w: num("power_w")?,
+            savings_pct: num("savings_pct")?,
+            slowdown_pct: num("slowdown_pct")?,
+            text: s("text")?,
+        })
+    }
+}
+
+/// A whole `advise` response: per-workload sweet spots plus the
+/// newline-joined narrative.  Curves and the step table stay in the raw
+/// payload (available via [`RemoteClient`] consumers that need them);
+/// the typed surface carries what the CLI renders.
+#[derive(Clone, Debug)]
+pub struct RemoteAdvice {
+    pub arch: String,
+    pub objective: String,
+    pub spots: Vec<RemoteSpot>,
+    /// Newline-joined narrative lines.
     pub text: String,
 }
 
@@ -262,6 +319,55 @@ impl RemoteClient {
         Ok(RemoteSuite {
             arch,
             predictions,
+            text,
+        })
+    }
+
+    /// Sweep the arch's DVFS frequency space server-side and return the
+    /// per-workload sweet spots under `objective`.  Protocol v2 only —
+    /// a v1 server answers with its pinned unknown-command error, which
+    /// surfaces here as a typed [`Error`]; probe
+    /// [`capabilities`](Self::capabilities) for `"advise"` first when
+    /// the server version is unknown.
+    pub fn advise(
+        &mut self,
+        arch: &str,
+        workload: Option<&str>,
+        mode: Mode,
+        objective: &Objective,
+        deadline_ms: Option<f64>,
+    ) -> Result<RemoteAdvice, Error> {
+        let req = v2(
+            protocol::advise_request(arch, workload, mode, objective),
+            deadline_ms,
+        );
+        let resp = self.roundtrip_within(&req, deadline_ms)?;
+        let arch = resp
+            .get("arch")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let objective = resp
+            .get("objective")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let text = resp
+            .get("text")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::internal("server response has no text field"))?
+            .to_string();
+        let spots = resp
+            .get("sweet_spots")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::internal("server response has no sweet_spots field"))?
+            .iter()
+            .map(RemoteSpot::from_json)
+            .collect::<Result<Vec<_>, Error>>()?;
+        Ok(RemoteAdvice {
+            arch,
+            objective,
+            spots,
             text,
         })
     }
@@ -564,6 +670,88 @@ mod tests {
         assert_eq!(suite.arch, "cloudlab-v100");
         assert_eq!(suite.predictions.len(), 2);
         assert_eq!(suite.text, "line1\nline2");
+    }
+
+    /// A real advise payload (the shared builder, not a hand-rolled
+    /// shape) so the decode test pins against the bytes a live server
+    /// would actually send.
+    fn sample_advice_json() -> Json {
+        use crate::advisor::sweep::assemble;
+        use crate::advisor::FreqSpace;
+        use crate::gpusim::config::ArchConfig;
+        use crate::model::{EnergyTable, Prediction};
+        use std::collections::BTreeMap;
+        let cfg = ArchConfig::cloudlab_v100();
+        let table = EnergyTable {
+            arch: "cloudlab-v100".into(),
+            const_power_w: 38.0,
+            static_power_w: 44.0,
+            entries: BTreeMap::new(),
+        };
+        let base_j = 82.0 * 90.0;
+        let preds = vec![Prediction {
+            workload: "hotspot".into(),
+            energy_j: base_j + 9000.0,
+            base_j,
+            dynamic_j: 9000.0,
+            coverage: 1.0,
+            duration_s: 90.0,
+            by_bucket: BTreeMap::new(),
+            by_key: Vec::new(),
+        }];
+        let space = FreqSpace::closed_form(&cfg);
+        let advice =
+            assemble("cloudlab-v100", Objective::MinEnergy, space, &table, &preds, 1).unwrap();
+        protocol::advise_json(&advice)
+    }
+
+    #[test]
+    fn advise_decodes_spots_and_sends_the_objective() {
+        let (addr, seen) = stub(vec![sample_advice_json().to_string_compact()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        let advice = client
+            .advise(
+                "cloudlab-v100",
+                Some("hotspot"),
+                Mode::Pred,
+                &Objective::MinEdp,
+                Some(500.0),
+            )
+            .unwrap();
+        assert_eq!(advice.arch, "cloudlab-v100");
+        // The typed objective echoes the server payload, not the request.
+        assert_eq!(advice.objective, "min-energy");
+        assert_eq!(advice.spots.len(), 1);
+        let spot = &advice.spots[0];
+        assert_eq!(spot.workload, "hotspot");
+        assert!(spot.text.contains("sweet spot @"), "{}", spot.text);
+        assert_eq!(advice.text, spot.text);
+        // The request carried the advise command, objective, and v2 stamp.
+        let req = parse(&seen.recv().unwrap()).unwrap();
+        assert_eq!(req.get("cmd").unwrap().as_str(), Some("advise"));
+        assert_eq!(req.get("objective").unwrap().as_str(), Some("min-edp"));
+        assert_eq!(req.get("workload").unwrap().as_str(), Some("hotspot"));
+        assert_eq!(req.get("v").unwrap().as_f64(), Some(2.0));
+        assert_eq!(req.get("deadline_ms").unwrap().as_f64(), Some(500.0));
+    }
+
+    #[test]
+    fn advise_power_cap_requests_carry_the_cap() {
+        let (addr, seen) = stub(vec![sample_advice_json().to_string_compact()]);
+        let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+        client
+            .advise(
+                "v100",
+                None,
+                Mode::Pred,
+                &Objective::EnergyUnderCap(250.0),
+                None,
+            )
+            .unwrap();
+        let req = parse(&seen.recv().unwrap()).unwrap();
+        assert_eq!(req.get("objective").unwrap().as_str(), Some("power-cap"));
+        assert_eq!(req.get("power_cap_w").unwrap().as_f64(), Some(250.0));
+        assert!(req.get("workload").is_none());
     }
 
     #[test]

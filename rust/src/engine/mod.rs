@@ -78,6 +78,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::advisor::{self, Advice, Objective};
 use crate::cluster::ClusterCampaign;
 use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
@@ -143,6 +144,44 @@ impl Default for PredictRequest {
             mode: Mode::Pred,
             duration_s: None,
             top: DEFAULT_TOP,
+            deadline: None,
+            permit: None,
+        }
+    }
+}
+
+/// One frequency-sweep request, shared by `wattchmen advise`, the
+/// `{"cmd":"advise"}` wire command, and `RemoteClient::advise`.
+///
+/// `workload` selects by exact name *or prefix* (`"backprop"` sweeps
+/// both backprop kernels); `None` sweeps the whole evaluation suite.
+/// `deadline`/`permit` are the serve path's admission machinery, exactly
+/// as on [`PredictRequest`].
+pub struct SweepRequest {
+    /// Workload selection (exact name or prefix); `None` = whole suite.
+    pub workload: Option<String>,
+    pub mode: Mode,
+    /// Scaling target in seconds; `None` = the engine's default.
+    pub duration_s: Option<f64>,
+    /// What "best" means for the per-workload sweet spots.
+    pub objective: Objective,
+    /// Workers for the post-predict curve expansion (output is
+    /// byte-identical for every value; 1 = inline).
+    pub jobs: usize,
+    /// Absolute deadline for coordinated predictions.
+    pub deadline: Option<Instant>,
+    /// Admission token from the serve queue, riding into the coalescer.
+    pub permit: Option<OwnedSemaphorePermit>,
+}
+
+impl Default for SweepRequest {
+    fn default() -> SweepRequest {
+        SweepRequest {
+            workload: None,
+            mode: Mode::Pred,
+            duration_s: None,
+            objective: Objective::MinEnergy,
+            jobs: 1,
             deadline: None,
             permit: None,
         }
@@ -508,6 +547,65 @@ impl Engine {
             .collect())
     }
 
+    /// Sweep the request's selection across the arch's whole DVFS state
+    /// space: ONE batched `predict_many` pass at the boost clock (the
+    /// coalescer and profile/eval caches are reused, not bypassed — a
+    /// `batch_calls` counter test pins it), then the per-step scaling
+    /// factors expand each prediction into energy/runtime/power/EDP
+    /// curves with a sweet spot per workload under `req.objective`.
+    pub fn sweep(&self, req: SweepRequest) -> Result<Advice, Error> {
+        let SweepRequest {
+            workload,
+            mode,
+            duration_s,
+            objective,
+            jobs,
+            deadline,
+            permit,
+        } = req;
+        let table = self.table()?;
+        let secs = duration_s.unwrap_or(self.default_duration_s);
+        let apps = self.sweep_apps(workload.as_deref(), secs)?;
+        let preds = self.predict_batch(&table, &apps, mode, deadline, permit)?;
+        let space = advisor::FreqSpace::closed_form(&self.cfg);
+        advisor::sweep::assemble(&self.cfg.name, objective, space, &table, &preds, jobs)
+    }
+
+    /// The sweep's app selection: suite order, matching by exact name or
+    /// prefix, profiled through the engine's profile source (the serve
+    /// path's counter-instrumented `ProfileCache` or the content-keyed
+    /// `EvalCache`) exactly like a predict request.
+    fn sweep_apps(
+        &self,
+        wanted: Option<&str>,
+        secs: f64,
+    ) -> Result<Vec<(String, Arc<Vec<KernelProfile>>)>, Error> {
+        let suite = workloads::evaluation_suite(self.cfg.gen);
+        let selected: Vec<&Workload> = match wanted {
+            None => suite.iter().collect(),
+            Some(pat) => {
+                let sel: Vec<&Workload> =
+                    suite.iter().filter(|w| w.name.starts_with(pat)).collect();
+                if sel.is_empty() {
+                    return Err(Error::unknown_workload(pat, &self.cfg.name));
+                }
+                sel
+            }
+        };
+        selected
+            .iter()
+            .map(|w| match &self.profile_source {
+                ProfileSource::Service(pc) => {
+                    Ok((w.name.clone(), pc.get(&self.cfg, &w.name, secs)?))
+                }
+                ProfileSource::Eval => {
+                    let scaled = scaled_workload(&self.cfg, w, secs);
+                    Ok((w.name.clone(), self.cache.profiles(&self.cfg, &scaled)))
+                }
+            })
+            .collect()
+    }
+
     /// Batched prediction over pre-profiled apps — the report pipeline's
     /// entry point (`compare_models` scales/profiles through the shared
     /// cache and predicts here).
@@ -755,6 +853,97 @@ mod tests {
         let key_rows = lines.iter().filter(|l| l.contains("top: ")).count();
         assert_eq!(key_rows, 3);
         assert!(lines[0].ends_with(" J"));
+    }
+
+    #[test]
+    fn sweep_selects_by_prefix_and_rejects_unknowns() {
+        let engine = Engine::builder().table(test_table()).build().unwrap();
+        // Exact name.
+        let one = engine
+            .sweep(SweepRequest {
+                workload: Some("hotspot".into()),
+                ..SweepRequest::default()
+            })
+            .unwrap();
+        assert_eq!(one.curves.len(), 1);
+        assert_eq!(one.spots[0].workload, "hotspot");
+        // Prefix: both backprop kernels (the CI smoke's selection).
+        let fam = engine
+            .sweep(SweepRequest {
+                workload: Some("backprop".into()),
+                ..SweepRequest::default()
+            })
+            .unwrap();
+        assert_eq!(fam.curves.len(), 2);
+        assert!(fam.spots.iter().all(|s| s.workload.starts_with("backprop")));
+        // None = the whole suite, in suite order.
+        let all = engine.sweep(SweepRequest::default()).unwrap();
+        let suite = workloads::evaluation_suite(Gen::Volta);
+        assert_eq!(all.curves.len(), suite.len());
+        for (c, w) in all.curves.iter().zip(&suite) {
+            assert_eq!(c.workload, w.name);
+        }
+        // Unknown selections keep the legacy typed error.
+        let err = engine
+            .sweep(SweepRequest {
+                workload: Some("nosuch".into()),
+                ..SweepRequest::default()
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_workload");
+        assert_eq!(
+            err.to_string(),
+            "unknown workload 'nosuch' for cloudlab-v100 (see `wattchmen list`)"
+        );
+    }
+
+    #[test]
+    fn sweep_boost_step_matches_predict_bitwise_and_is_jobs_invariant() {
+        let engine = Engine::builder().table(test_table()).build().unwrap();
+        let advice = engine.sweep(SweepRequest::default()).unwrap();
+        let preds = engine.predict_suite(PredictRequest::default()).unwrap();
+        for (curve, out) in advice.curves.iter().zip(&preds) {
+            let boost = curve.points.last().unwrap();
+            assert_eq!(boost.energy_j.to_bits(), out.prediction.energy_j.to_bits());
+            assert_eq!(boost.runtime_s.to_bits(), out.prediction.duration_s.to_bits());
+        }
+        // The rendered payload is byte-identical for any `jobs`.
+        let parallel = engine
+            .sweep(SweepRequest {
+                jobs: 8,
+                ..SweepRequest::default()
+            })
+            .unwrap();
+        assert_eq!(
+            crate::advisor::advice_json(&advice).to_string_compact(),
+            crate::advisor::advice_json(&parallel).to_string_compact()
+        );
+    }
+
+    #[test]
+    fn sweep_is_one_coalesced_batch() {
+        // The acceptance pin: a whole-suite sweep costs exactly ONE
+        // coalesced predict_many call — scaling is post-predict.
+        let table = test_table();
+        let cfg = ArchConfig::cloudlab_v100();
+        let (coal, jobs) = Coalescer::new(Duration::from_millis(1));
+        let coal = Arc::new(coal);
+        let runner = {
+            let coal = coal.clone();
+            thread::spawn(move || coal.run(None))
+        };
+        let engine = Engine::for_report(cfg, 42, true, Arc::new(EvalCache::new()), Some(jobs))
+            .with_table(table.clone());
+        let advice = engine.sweep(SweepRequest::default()).unwrap();
+        let native = Engine::builder().table(table).build().unwrap();
+        let want = native.sweep(SweepRequest::default()).unwrap();
+        drop(engine);
+        runner.join().unwrap();
+        assert_eq!(coal.batch_calls(), 1);
+        assert_eq!(
+            crate::advisor::advice_json(&advice).to_string_compact(),
+            crate::advisor::advice_json(&want).to_string_compact()
+        );
     }
 
     #[test]

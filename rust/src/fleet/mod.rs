@@ -10,8 +10,10 @@
 //!    one batched `predict_suite` per arch, never per device — and
 //!    derives, per evaluation workload, the steady dynamic power
 //!    (`dynamic_j / duration_s`), the duration-weighted occupancy, and
-//!    the DVFS throttle slowdown (the device model's 4-iteration cap
-//!    fixed point, evaluated from the idle steady-state temperature).
+//!    the DVFS operating point under the campaign's [`DvfsPolicy`]:
+//!    the reactive TDP throttle fixed point
+//!    ([`advisor::throttle_solve`], the default), optionally preceded
+//!    by a proactive advisor sweet-spot clock cap.
 //! 2. **Traces** ([`trace::device_trace`]): each device replays a seeded
 //!    Poisson arrival stream of suite workloads, a pure function of
 //!    (fleet seed, device id) — independent of worker count.
@@ -40,6 +42,7 @@ pub mod trace;
 
 use std::sync::Arc;
 
+use crate::advisor::{self, Objective};
 use crate::engine::{Engine, PredictRequest};
 use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
@@ -59,6 +62,47 @@ pub use trace::TraceConfig;
 /// merge order (block index) — and therefore every floating-point sum —
 /// is identical for any worker count.
 pub const BLOCKS: usize = 64;
+
+/// How [`ArchPlan::resolve`] picks each workload's operating point.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum DvfsPolicy {
+    /// Run at the boost clock and let the TDP throttle fixed point
+    /// ([`advisor::throttle_solve`]) cap reactively — the original
+    /// fleet behavior, byte-identical to the PR 6 inline loop.
+    #[default]
+    BoostThrottle,
+    /// Proactively cap each workload at its advisor sweet spot under
+    /// the objective, then still apply the reactive TDP fixed point to
+    /// whatever dynamic power remains.
+    SweetSpot(Objective),
+}
+
+impl DvfsPolicy {
+    /// Parse the `--dvfs-policy` spec.  Sweet-spot policies reuse the
+    /// advisor objective names; `power-cap` is spelled with its cap
+    /// (`power-cap=250`) since the fleet CLI's `--power-cap` flag is
+    /// already taken by the fleet-level violation accounting.
+    pub fn parse(spec: &str) -> Result<DvfsPolicy, Error> {
+        match spec {
+            "boost-throttle" => Ok(DvfsPolicy::BoostThrottle),
+            "min-energy" | "min-edp" => {
+                Ok(DvfsPolicy::SweetSpot(Objective::parse(spec, None)?))
+            }
+            other => match other.strip_prefix("power-cap=") {
+                Some(w) => {
+                    let cap = w.trim().parse::<f64>().map_err(|_| {
+                        Error::bad_request(format!("bad power cap in --dvfs-policy '{other}'"))
+                    })?;
+                    Ok(DvfsPolicy::SweetSpot(Objective::parse("power-cap", Some(cap))?))
+                }
+                None => Err(Error::bad_request(format!(
+                    "unknown --dvfs-policy '{other}' \
+                     (boost-throttle|min-energy|min-edp|power-cap=W)"
+                ))),
+            },
+        }
+    }
+}
 
 /// One evaluation workload as the fleet scheduler sees it: the model's
 /// steady dynamic power plus the device-level DVFS outcome.
@@ -89,18 +133,28 @@ impl ArchPlan {
     /// Resolve the plan through an engine: train (memoized in the shared
     /// [`EvalCache`]) and predict the whole suite in one batch, then
     /// derive per-workload steady power, occupancy, and the DVFS
-    /// throttle factor.
+    /// operating point under `policy`.
     ///
-    /// The throttle fixed point mirrors `Device::run`: find `s` with
-    /// `const + static(T_steady) + p_dyn·s³ ≤ TDP`, then `duration /= s`
-    /// and `p_dyn *= s²`.  The device model seeds the static-power guess
+    /// The reactive leg is [`advisor::throttle_solve`], the fixed point
+    /// that mirrors `Device::run`: find `s` with `const +
+    /// static(T_steady) + p_dyn·s³ ≤ TDP`, then `duration /= s` and
+    /// `p_dyn *= s²`.  The device model seeds the static-power guess
     /// with the *current* die temperature; a fleet device picks jobs up
     /// at varying temperatures, so the plan uses the idle steady state —
-    /// the temperature a device relaxes to between jobs.
-    pub fn resolve(engine: &Engine) -> Result<ArchPlan, Error> {
+    /// the temperature a device relaxes to between jobs.  Under
+    /// [`DvfsPolicy::BoostThrottle`] the resulting plan is byte-for-byte
+    /// what the inline PR 6 loop produced (pinned in tests).
+    ///
+    /// [`DvfsPolicy::SweetSpot`] first caps each workload's clock at its
+    /// advisor-recommended step (the same scaling factors `wattchmen
+    /// advise` sweeps), then runs the reactive fixed point on the
+    /// already-reduced dynamic power — a proactively capped workload
+    /// rarely throttles on top.
+    pub fn resolve(engine: &Engine, policy: DvfsPolicy) -> Result<ArchPlan, Error> {
         let cfg = engine.arch().clone();
         let dt = cfg.nvml_period_s;
         engine.train_cached()?;
+        let table = engine.table()?;
         let outs = engine.predict_suite(PredictRequest {
             workload: None,
             mode: Mode::Pred,
@@ -116,6 +170,7 @@ impl ArchPlan {
                 cfg.name
             )));
         }
+        let space = advisor::FreqSpace::closed_form(&cfg);
         let t_idle = ThermalState::steady(&cfg.cooling, cfg.const_power_w);
         let plans = outs
             .iter()
@@ -136,31 +191,48 @@ impl ArchPlan {
                 }
                 let occ = if secs > 0.0 { occ_secs / secs } else { 0.5 };
 
-                let mut s = 1.0f64;
-                let mut throttled = false;
-                for _ in 0..4 {
-                    let t_guess = ThermalState::steady(
-                        &cfg.cooling,
-                        cfg.const_power_w
-                            + cfg.static_power_at(t_idle, occ)
-                            + p_dyn * s.powi(3),
-                    );
-                    let p_stat = cfg.static_power_at(t_guess, occ);
-                    let headroom = cfg.tdp_w - cfg.const_power_w - p_stat;
-                    if p_dyn > 0.0 && p_dyn * s.powi(2) > headroom && headroom > 0.0 {
-                        s = (headroom / p_dyn).sqrt().min(1.0);
-                        throttled = true;
+                // Proactive leg: cap at the advisor sweet spot.
+                let (mut p_dyn_w, mut slowdown, mut throttled) = (p_dyn, 1.0f64, false);
+                if let DvfsPolicy::SweetSpot(objective) = &policy {
+                    let curve = advisor::WorkloadCurve {
+                        workload: w.name.clone(),
+                        points: space
+                            .steps
+                            .iter()
+                            .map(|step| advisor::scale_prediction(&table, p, step))
+                            .collect(),
+                    };
+                    let spot = advisor::sweet_spot(&curve, objective)?;
+                    let step = space.steps.get(spot.index).ok_or_else(|| {
+                        Error::internal(format!(
+                            "sweet spot step {} outside the {}-step space",
+                            spot.index,
+                            space.steps.len()
+                        ))
+                    })?;
+                    if step.runtime_factor > 0.0 {
+                        p_dyn_w = p_dyn * step.dyn_energy_factor / step.runtime_factor;
                     }
+                    slowdown = step.runtime_factor;
+                    throttled = spot.index + 1 < space.steps.len();
                 }
-                WorkloadPlan {
+
+                // Reactive leg: the TDP fixed point on what remains.
+                let (s, capped) = advisor::throttle_solve(&cfg, t_idle, occ, p_dyn_w);
+                if capped {
+                    p_dyn_w *= s.powi(2);
+                    slowdown *= 1.0 / s;
+                    throttled = true;
+                }
+                Ok(WorkloadPlan {
                     name: w.name.clone(),
-                    p_dyn_w: if throttled { p_dyn * s.powi(2) } else { p_dyn },
+                    p_dyn_w,
                     occupancy: occ,
-                    slowdown: if throttled { 1.0 / s } else { 1.0 },
+                    slowdown,
                     throttled,
-                }
+                })
             })
-            .collect();
+            .collect::<Result<Vec<WorkloadPlan>, Error>>()?;
         Ok(ArchPlan {
             idle: PowerDynamics::idle(&cfg, dt),
             cfg,
@@ -194,6 +266,8 @@ pub struct FleetConfig {
     /// `(arch name, weight)` mix; devices are assigned contiguously by
     /// cumulative weight.
     pub arch_weights: Vec<(String, f64)>,
+    /// How each workload's operating point is chosen at plan time.
+    pub dvfs_policy: DvfsPolicy,
 }
 
 impl Default for FleetConfig {
@@ -211,6 +285,7 @@ impl Default for FleetConfig {
             mean_gap_secs: 600.0,
             job_secs: (60.0, 900.0),
             arch_weights: default_mix(),
+            dvfs_policy: DvfsPolicy::BoostThrottle,
         }
     }
 }
@@ -289,7 +364,7 @@ pub fn resolve_plans(fc: &FleetConfig, cache: &Arc<EvalCache>) -> Result<Vec<Arc
                 .fast(fc.fast)
                 .cache(cache.clone())
                 .build()?;
-            ArchPlan::resolve(&engine)
+            ArchPlan::resolve(&engine, fc.dvfs_policy)
         })
         .collect()
 }
@@ -447,6 +522,76 @@ mod tests {
         }
         assert_eq!(arch_counts(10, &[1.0]), vec![10]);
         assert_eq!(arch_counts(4, &[1.0, 1.0]), vec![2, 2]);
+    }
+
+    #[test]
+    fn dvfs_policy_parses_and_rejects_garbage() {
+        assert_eq!(
+            DvfsPolicy::parse("boost-throttle").unwrap(),
+            DvfsPolicy::BoostThrottle
+        );
+        assert_eq!(DvfsPolicy::default(), DvfsPolicy::BoostThrottle);
+        assert_eq!(
+            DvfsPolicy::parse("min-energy").unwrap(),
+            DvfsPolicy::SweetSpot(Objective::MinEnergy)
+        );
+        assert_eq!(
+            DvfsPolicy::parse("min-edp").unwrap(),
+            DvfsPolicy::SweetSpot(Objective::MinEdp)
+        );
+        assert_eq!(
+            DvfsPolicy::parse("power-cap=250").unwrap(),
+            DvfsPolicy::SweetSpot(Objective::EnergyUnderCap(250.0))
+        );
+        for bad in ["", "sweet", "power-cap", "power-cap=", "power-cap=-3"] {
+            assert_eq!(DvfsPolicy::parse(bad).unwrap_err().code(), "bad_request", "{bad}");
+        }
+    }
+
+    /// The PR 6 deviation, retired: the throttle fixed point now lives
+    /// in `advisor::throttle_solve`.  This pins that the relocated loop
+    /// is byte-for-byte the old inline one — the default policy's plans
+    /// (and therefore every fleet report byte) cannot have moved.
+    #[test]
+    fn default_policy_reproduces_the_legacy_throttle_loop_bitwise() {
+        for name in ["cloudlab-v100", "summit-v100", "lonestar-a100", "lonestar-h100"] {
+            let cfg = ArchConfig::by_name(name).unwrap();
+            let t_idle = ThermalState::steady(&cfg.cooling, cfg.const_power_w);
+            for (occ, p_dyn) in [(0.3, 50.0), (0.65, 180.0), (0.9, 320.0), (1.0, 400.0), (0.5, 0.0)]
+            {
+                // The PR 6 inline fixed point, verbatim.
+                let mut s = 1.0f64;
+                let mut throttled = false;
+                for _ in 0..4 {
+                    let t_guess = ThermalState::steady(
+                        &cfg.cooling,
+                        cfg.const_power_w
+                            + cfg.static_power_at(t_idle, occ)
+                            + p_dyn * s.powi(3),
+                    );
+                    let p_stat = cfg.static_power_at(t_guess, occ);
+                    let headroom = cfg.tdp_w - cfg.const_power_w - p_stat;
+                    if p_dyn > 0.0 && p_dyn * s.powi(2) > headroom && headroom > 0.0 {
+                        s = (headroom / p_dyn).sqrt().min(1.0);
+                        throttled = true;
+                    }
+                }
+                let (s2, t2) = advisor::throttle_solve(&cfg, t_idle, occ, p_dyn);
+                assert_eq!(s.to_bits(), s2.to_bits(), "{name} occ={occ} p_dyn={p_dyn}");
+                assert_eq!(throttled, t2, "{name} occ={occ} p_dyn={p_dyn}");
+                // And the plan fields derived from it match the old
+                // `if throttled { … }` expressions bitwise.
+                let legacy_p = if throttled { p_dyn * s.powi(2) } else { p_dyn };
+                let legacy_slow = if throttled { 1.0 / s } else { 1.0 };
+                let (mut p_dyn_w, mut slowdown) = (p_dyn, 1.0f64);
+                if t2 {
+                    p_dyn_w *= s2.powi(2);
+                    slowdown *= 1.0 / s2;
+                }
+                assert_eq!(legacy_p.to_bits(), p_dyn_w.to_bits());
+                assert_eq!(legacy_slow.to_bits(), slowdown.to_bits());
+            }
+        }
     }
 
     #[test]

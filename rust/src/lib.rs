@@ -52,6 +52,15 @@
 //! advancement, per-arch tables resolved once through the engine, and a
 //! byte-deterministic parallel merge.
 //!
+//! The [`advisor`] module makes the model frequency-aware: a per-arch
+//! DVFS state space with analytic V²f/leakage scaling factors layered on
+//! top of the tables, an [`Engine::sweep`] op that expands one coalesced
+//! prediction pass into energy/runtime/power/EDP curves, and per-workload
+//! sweet spots under min-energy / min-EDP / power-cap objectives —
+//! served as `wattchmen advise` and the `{"cmd":"advise"}` wire command.
+//! The scaling-term derivation and examples live in `ADVISOR.md` at the
+//! repo root.
+//!
 //! The [`daemon`] module is the continuous-monitoring shape of the same
 //! model: `wattchmen daemon` runs supervised sampler → attributor →
 //! exporter workers over live telemetry streams, with per-stream health
@@ -83,6 +92,7 @@
     clippy::type_complexity
 )]
 
+pub mod advisor;
 pub mod daemon;
 pub mod gpusim;
 pub mod report;
@@ -102,7 +112,8 @@ pub mod model;
 pub mod util;
 pub mod workloads;
 
-pub use engine::{Engine, EngineBuilder, PredictOutcome, PredictRequest, TrainOutcome};
+pub use advisor::{Advice, Objective};
+pub use engine::{Engine, EngineBuilder, PredictOutcome, PredictRequest, SweepRequest, TrainOutcome};
 pub use error::Error;
 
 pub fn version() -> &'static str {

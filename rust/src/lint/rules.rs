@@ -26,13 +26,16 @@ pub const RULE_IDS: &[&str] = &[
 /// Directories whose request paths must be panic-free (plus
 /// `runtime/coalescer.rs`, matched exactly).  The daemon's continuous
 /// path is held to the same standard: a stray unwrap there takes down a
-/// worker restart budget instead of one request.
-const REQUEST_PATH_DIRS: &[&str] = &["service/", "daemon/"];
+/// worker restart budget instead of one request.  The advisor runs
+/// inside the serve request path (`{"cmd":"advise"}`), so it gets the
+/// same discipline.
+const REQUEST_PATH_DIRS: &[&str] = &["advisor/", "service/", "daemon/"];
 
 /// Engine-reachable code: stringly-typed `Result`s are banned here in
 /// favor of `wattchmen::Error`.
 const TYPED_ERROR_DIRS: &[&str] = &[
-    "engine/", "service/", "daemon/", "runtime/", "model/", "report/", "fleet/", "cluster/",
+    "advisor/", "engine/", "service/", "daemon/", "runtime/", "model/", "report/", "fleet/",
+    "cluster/",
 ];
 
 /// Layers that must stay deterministic: no unordered-map iteration

@@ -5,6 +5,8 @@
 //!   report <fig...|all>   reproduce paper tables/figures
 //!   train                 run a training campaign, save the energy table
 //!   predict               predict a workload's energy from a saved table
+//!   advise                sweep the DVFS frequency space, recommend
+//!                         per-workload sweet spots (see ADVISOR.md)
 //!   serve                 JSON-over-TCP batched prediction service
 //!   fleet                 simulate a heterogeneous device fleet for a day
 //!   daemon                supervised continuous attribution (crash-safe,
@@ -30,7 +32,7 @@ use wattchmen::runtime::Artifacts;
 use wattchmen::service::{protocol, Acceptor, PredictServer, ServeConfig};
 use wattchmen::util::cli::Args;
 use wattchmen::workloads;
-use wattchmen::{Engine, Error, PredictRequest};
+use wattchmen::{advisor, Engine, Error, Objective, PredictRequest, SweepRequest};
 
 fn load_artifacts(args: &Args) -> Option<Artifacts> {
     if args.flag("no-artifacts") {
@@ -199,6 +201,81 @@ fn cmd_predict(args: &Args) -> Result<(), Error> {
     Ok(())
 }
 
+/// `wattchmen advise`: sweep the arch's DVFS frequency space — one
+/// coalesced prediction pass expanded by the advisor's scaling factors —
+/// and print the per-workload sweet-spot narrative (`--json` for the
+/// full payload, byte-identical to the `{"cmd":"advise"}` wire
+/// response).  Without `--table` the engine trains first (`--fast`
+/// keeps that cheap — the CI smoke path); `--remote H:P` asks a running
+/// `wattchmen serve` instead and prints the served text.
+fn cmd_advise(args: &Args) -> Result<(), Error> {
+    let arch = args.get_or("arch", protocol::DEFAULT_ARCH);
+    let mode = protocol::parse_mode(args.get_or("mode", "pred"))?;
+    let cap_w = args.get_f64("power-cap", 0.0)?;
+    let objective = Objective::parse(
+        args.get_or("objective", "min-energy"),
+        (cap_w > 0.0).then_some(cap_w),
+    )?;
+    if let Some(addr) = args.get("remote") {
+        let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
+        let deadline_ms = (deadline_ms > 0.0).then_some(deadline_ms);
+        let mut client = RemoteClient::connect(addr)?;
+        let advice = client.advise(arch, args.get("workload"), mode, &objective, deadline_ms)?;
+        println!("{}", advice.text);
+        return Ok(());
+    }
+    let arts = load_artifacts(args);
+    let jobs = match args.get_usize("jobs", 0)? {
+        0 => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4),
+        j => j,
+    };
+    let mut builder = Engine::builder()
+        .arch(arch)
+        .seed(args.get_usize("seed", 42)? as u64)
+        .fast(args.flag("fast"))
+        .artifacts(arts);
+    if let Some(path) = args.get("table") {
+        builder = builder.table_path(PathBuf::from(path));
+    }
+    let engine = builder.build()?;
+    if args.get("table").is_none() {
+        let trained = engine.train_cached()?;
+        eprintln!(
+            "[wattchmen] trained {} in {:.1}s (pass --table FILE to reuse a saved table)",
+            engine.arch().name,
+            trained.elapsed.as_secs_f64()
+        );
+    }
+    let duration = args.get_f64("duration", 0.0)?;
+    let advice = engine.sweep(SweepRequest {
+        workload: args.get("workload").map(String::from),
+        mode,
+        duration_s: (duration > 0.0).then_some(duration),
+        objective,
+        jobs,
+        ..SweepRequest::default()
+    })?;
+    if args.flag("json") {
+        println!("{}", protocol::advise_json(&advice).to_string_compact());
+    } else {
+        let lo = advice.space.steps.first().map_or(0.0, |s| s.clock_ghz);
+        let hi = advice.space.steps.last().map_or(0.0, |s| s.clock_ghz);
+        println!(
+            "advise {} ({}): objective {}, {} steps {:.3}-{:.3} GHz",
+            advice.arch,
+            advice.space.source.wire_name(),
+            advice.objective.wire_name(),
+            advice.space.steps.len(),
+            lo,
+            hi
+        );
+        println!("{}", advisor::advice_text(&advice));
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), Error> {
     let arts = load_artifacts(args);
     let linger_ms = args.get_f64("linger-ms", 10.0)?;
@@ -294,6 +371,10 @@ fn cmd_fleet(args: &Args) -> Result<(), Error> {
     if cap_w > 0.0 {
         fc.power_cap_w = Some(cap_w);
     }
+    // --dvfs-policy min-energy|min-edp|power-cap=W caps clocks
+    // proactively at the advisor sweet spot; the default reproduces the
+    // original reactive TDP throttle byte-for-byte.
+    fc.dvfs_policy = fleet::DvfsPolicy::parse(args.get_or("dvfs-policy", "boost-throttle"))?;
 
     let cache = Arc::new(EvalCache::new());
     let t0 = Instant::now();
@@ -396,6 +477,7 @@ fn main() {
         Some("report") => cmd_report(&args),
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
+        Some("advise") => cmd_advise(&args),
         Some("serve") => cmd_serve(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("daemon") => cmd_daemon(&args),
@@ -409,7 +491,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: wattchmen <report|train|predict|serve|fleet|daemon|list|version> [options]\n\
+                "usage: wattchmen <report|train|predict|advise|serve|fleet|daemon|list|version> [options]\n\
                  \n\
                  report <fig1..fig14|all> [--fast] [--seed N] [--jobs N] [--out DIR] [--no-artifacts]\n\
                  train   [--arch ENV] [--gpus N] [--fast] [--out FILE]\n\
@@ -417,11 +499,15 @@ fn main() {
                          [--breakdown [--top N]]\n\
                  predict --remote H:P [--arch ENV] [--workload NAME] [--mode direct|pred] [--deadline-ms MS]\n\
                          [--binary] (no --workload: one predict_all request for the whole suite)\n\
+                 advise  [--arch ENV] [--workload PREFIX] [--objective min-energy|min-edp|power-cap]\n\
+                         [--power-cap W] [--table FILE | --fast] [--mode direct|pred] [--jobs N]\n\
+                         [--json] [--remote H:P [--deadline-ms MS]] (see ADVISOR.md)\n\
                  serve   [--addr H:P] [--tables DIR] [--table FILE [--arch ENV]] [--workers N]\n\
                          [--linger-ms MS] [--queue N] [--deadline-ms MS]\n\
                          [--acceptor event-loop|threads] [--header-deadline-ms MS]\n\
                  fleet   [--devices N] [--hours H] [--jobs N] [--seed N] [--power-cap W]\n\
                          [--bin-secs S] [--gap-secs S] [--archs name[=w],...] [--full] [--out FILE]\n\
+                         [--dvfs-policy boost-throttle|min-energy|min-edp|power-cap=W]\n\
                  daemon  [--streams N] [--samples N] [--batch N] [--interval-ms MS] [--seed N]\n\
                          [--checkpoint-dir DIR [--checkpoint-every N] [--keep N]]\n\
                          [--metrics-out FILE] [--config FILE] [--gap-floor W] [--fault-plan SPEC]\n\

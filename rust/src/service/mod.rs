@@ -64,7 +64,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::engine::{Engine, PredictRequest};
+use crate::engine::{Engine, PredictRequest, SweepRequest};
 use crate::error::Error;
 use crate::gpusim::config::ArchConfig;
 use crate::model::Prediction;
@@ -698,6 +698,39 @@ fn respond(request: &str, shared: &Shared, jobs: &Sender<Job>) -> (Json, ConnDir
                     let preds: Vec<Prediction> =
                         outs.into_iter().map(|o| o.prediction).collect();
                     (protocol::predict_all_json(&arch, &preds), Continue)
+                }
+                Err(e) => (failure_json(shared, e, t0, v), Continue),
+            }
+        }
+        Request::Advise {
+            arch,
+            workload,
+            mode,
+            duration_s,
+            deadline,
+            objective,
+        } => {
+            let Some(permit) = shared.queue.try_acquire_owned() else {
+                shared.rejected.fetch_add(1, Ordering::SeqCst);
+                return (protocol::overloaded_json(v, shared.retry_after_ms()), Continue);
+            };
+            let deadline_at =
+                effective_deadline(deadline, shared.default_deadline).map(|d| t0 + d);
+            let outcome = engine_for(shared, jobs, &arch).and_then(|engine| {
+                engine.sweep(SweepRequest {
+                    workload,
+                    mode,
+                    duration_s,
+                    objective,
+                    deadline: deadline_at,
+                    permit: Some(permit),
+                    ..SweepRequest::default()
+                })
+            });
+            match outcome {
+                Ok(advice) => {
+                    shared.served.fetch_add(1, Ordering::SeqCst);
+                    (protocol::advise_json(&advice), Continue)
                 }
                 Err(e) => (failure_json(shared, e, t0, v), Continue),
             }

@@ -19,6 +19,15 @@
 //!                                           format (in the "body" field)
 //!   {"cmd":"shutdown"}                    → ack, then the server drains
 //!
+//! Two further commands are discovered through the v2 `capabilities`
+//! handshake rather than the legacy hint string: `frames` (switch the
+//! connection's frame dialect, see below) and `advise` (DVFS frequency
+//! sweep — `{"cmd":"advise","v":2,"arch":…,"workload":…,"objective":
+//! "min-energy"|"min-edp"|"power-cap","power_cap_w":…}` answers with
+//! [`crate::advisor::report::advice_json`]'s payload, byte-identical to
+//! `wattchmen advise --json`).  Both parse under v1 too; v1 responses
+//! for the five legacy commands are unchanged byte-for-byte.
+//!
 //! `predict` and `predict_all` accept an optional `"deadline_ms"` field
 //! (combined with the server-wide `--deadline-ms` budget by MINIMUM — a
 //! client may tighten the operator's ceiling, never extend it): a request
@@ -57,6 +66,7 @@
 
 use std::time::Duration;
 
+use crate::advisor::Objective;
 use crate::error::Error;
 use crate::model::{Mode, Prediction};
 use crate::util::json::{parse, Json};
@@ -105,6 +115,17 @@ pub enum Request {
         mode: Mode,
         duration_s: Option<f64>,
         deadline: Option<Duration>,
+    },
+    /// DVFS frequency sweep: curves + sweet spots for the selection
+    /// (`workload` matches by exact name or prefix; `None` = the whole
+    /// suite) under the requested objective.
+    Advise {
+        arch: String,
+        workload: Option<String>,
+        mode: Mode,
+        duration_s: Option<f64>,
+        deadline: Option<Duration>,
+        objective: Objective,
     },
     Status,
     Metrics,
@@ -528,6 +549,26 @@ fn parse_request_body(j: &Json) -> Result<Request, Error> {
                 deadline,
             })
         }
+        "advise" => {
+            let (arch, mode, duration_s, deadline) = predict_fields(j)?;
+            let workload = j.get("workload").and_then(Json::as_str).map(str::to_string);
+            let name = j.get("objective").and_then(Json::as_str).unwrap_or("min-energy");
+            let power_cap_w = match j.get("power_cap_w") {
+                None => None,
+                Some(v) => Some(v.as_f64().ok_or_else(|| {
+                    Error::bad_request("power_cap_w must be a number (watts)")
+                })?),
+            };
+            let objective = Objective::parse(name, power_cap_w)?;
+            Ok(Request::Advise {
+                arch,
+                workload,
+                mode,
+                duration_s,
+                deadline,
+                objective,
+            })
+        }
         "status" => Ok(Request::Status),
         "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
@@ -568,6 +609,32 @@ pub fn predict_all_request(arch: &str, mode: Mode) -> Json {
         ("arch", Json::Str(arch.into())),
         ("mode", Json::Str(mode_tag(mode).into())),
     ])
+}
+
+/// Client-side helper: build an advise (DVFS sweep) request line's JSON.
+/// `workload` selects by exact name or prefix; `None` sweeps the suite.
+pub fn advise_request(arch: &str, workload: Option<&str>, mode: Mode, obj: &Objective) -> Json {
+    let mut fields = vec![
+        ("cmd", Json::Str("advise".into())),
+        ("arch", Json::Str(arch.into())),
+        ("mode", Json::Str(mode_tag(mode).into())),
+        ("objective", Json::Str(obj.wire_name().into())),
+    ];
+    if let Some(w) = workload {
+        fields.push(("workload", Json::Str(w.into())));
+    }
+    if let Some(cap) = obj.power_cap_w() {
+        fields.push(("power_cap_w", Json::Num(cap)));
+    }
+    Json::obj(fields)
+}
+
+/// The advise success response: the advisor's shared payload builder,
+/// verbatim — `wattchmen advise --json` prints exactly these bytes for
+/// the same request (the predict/`render_line` discipline, applied to
+/// the whole payload).
+pub fn advise_json(advice: &crate::advisor::Advice) -> Json {
+    crate::advisor::report::advice_json(advice)
 }
 
 /// The one-line summary `wattchmen predict` prints per workload.  Shared
@@ -672,8 +739,9 @@ pub fn capabilities_json() -> Json {
         ("protocol_versions", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
         (
             "commands",
-            strs(&["predict", "predict_all", "status", "metrics", "shutdown", "frames"]),
+            strs(&["predict", "predict_all", "advise", "status", "metrics", "shutdown", "frames"]),
         ),
+        ("objectives", strs(&["min-energy", "min-edp", "power-cap"])),
         ("modes", strs(&["direct", "pred"])),
         ("frames", strs(&["jsonl", "bin1"])),
         ("error_codes", strs(&Error::CODES)),
@@ -930,7 +998,12 @@ mod tests {
         let versions = caps.get("protocol_versions").unwrap().as_arr().unwrap();
         assert_eq!(versions.len(), 2);
         let commands = caps.get("commands").unwrap().as_arr().unwrap();
-        assert_eq!(commands.len(), 6);
+        assert_eq!(commands.len(), 7);
+        let commands: Vec<&str> = commands.iter().filter_map(Json::as_str).collect();
+        assert!(commands.contains(&"advise"));
+        let objectives = caps.get("objectives").unwrap().as_arr().unwrap();
+        let objectives: Vec<&str> = objectives.iter().filter_map(Json::as_str).collect();
+        assert_eq!(objectives, ["min-energy", "min-edp", "power-cap"]);
         let frames = caps.get("frames").unwrap().as_arr().unwrap();
         let frames: Vec<&str> = frames.iter().filter_map(Json::as_str).collect();
         assert_eq!(frames, ["jsonl", "bin1"]);
@@ -940,6 +1013,73 @@ mod tests {
             caps.get("max_deadline_ms").unwrap().as_f64(),
             Some(MAX_DEADLINE_MS)
         );
+    }
+
+    #[test]
+    fn advise_parses_with_defaults_and_validates_the_objective() {
+        // The client helper round-trips through the parser.
+        let line = advise_request("cloudlab-v100", Some("backprop"), Mode::Pred, &Objective::MinEdp)
+            .to_string_compact();
+        assert_eq!(
+            line,
+            r#"{"arch":"cloudlab-v100","cmd":"advise","mode":"pred","objective":"min-edp","workload":"backprop"}"#
+        );
+        match req(&line) {
+            Request::Advise {
+                arch,
+                workload,
+                mode,
+                objective,
+                ..
+            } => {
+                assert_eq!(arch, "cloudlab-v100");
+                assert_eq!(workload.as_deref(), Some("backprop"));
+                assert_eq!(mode, Mode::Pred);
+                assert_eq!(objective, Objective::MinEdp);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Defaults mirror predict's; objective defaults to min-energy.
+        match req(r#"{"cmd":"advise"}"#) {
+            Request::Advise {
+                arch,
+                workload,
+                objective,
+                duration_s,
+                deadline,
+                ..
+            } => {
+                assert_eq!(arch, DEFAULT_ARCH);
+                assert_eq!(workload, None);
+                assert_eq!(objective, Objective::MinEnergy);
+                assert_eq!(duration_s, None);
+                assert_eq!(deadline, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // power-cap needs (and echoes) a positive finite cap.
+        match req(r#"{"cmd":"advise","objective":"power-cap","power_cap_w":250}"#) {
+            Request::Advise { objective, .. } => {
+                assert_eq!(objective, Objective::EnergyUnderCap(250.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        let cap_req = advise_request("v100", None, Mode::Pred, &Objective::EnergyUnderCap(250.0));
+        assert_eq!(
+            cap_req.to_string_compact(),
+            r#"{"arch":"v100","cmd":"advise","mode":"pred","objective":"power-cap","power_cap_w":250}"#
+        );
+        // Bad objectives / caps are typed bad_request parse errors.
+        for bad in [
+            r#"{"cmd":"advise","objective":"frobnicate"}"#,
+            r#"{"cmd":"advise","objective":"power-cap"}"#,
+            r#"{"cmd":"advise","objective":"power-cap","power_cap_w":-1}"#,
+            r#"{"cmd":"advise","objective":"power-cap","power_cap_w":"lots"}"#,
+            r#"{"cmd":"advise","duration_s":0}"#,
+            r#"{"cmd":"advise","deadline_ms":-1}"#,
+        ] {
+            assert_eq!(parse_request(bad).1.unwrap_err().code(), "bad_request", "{bad}");
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ fn config() -> FleetConfig {
         mean_gap_secs: 120.0,
         job_secs: (10.0, 60.0),
         arch_weights: fleet::parse_archs("cloudlab-v100=3,lonestar-a100=1").unwrap(),
+        dvfs_policy: fleet::DvfsPolicy::BoostThrottle,
     }
 }
 

@@ -248,6 +248,43 @@ fn parse(s: &str) -> Result<u32, String> {
 }
 
 #[test]
+fn advisor_scope_is_request_path_and_typed_error() {
+    // The advisor answers `{"cmd":"advise"}` on the serve request path,
+    // so a stray unwrap there drops a client connection.
+    let unwrap_src = "\
+fn f(v: &[u32]) -> u32 {
+    let x = v.first().unwrap();
+    *x + v[0]
+}
+";
+    assert_eq!(
+        rendered("advisor/sweep.rs", unwrap_src),
+        vec![
+            "advisor/sweep.rs:2: request-unwrap: `.unwrap()` can panic on the request path — \
+             return an error instead"
+                .to_string(),
+            "advisor/sweep.rs:3: request-unwrap: indexing can panic on the request path — use \
+             `.get(..)` and handle the miss"
+                .to_string(),
+        ]
+    );
+    // ... and its fallible functions return the typed error.
+    let err_string_src = "\
+fn parse(s: &str) -> Result<u32, String> {
+    s.parse::<u32>().map_err(|e| e.to_string())
+}
+";
+    assert_eq!(
+        rendered("advisor/mod.rs", err_string_src),
+        vec![
+            "advisor/mod.rs:1: err-string: `Result<_, String>` loses the wire code; \
+             engine-reachable code returns `Result<_, wattchmen::Error>`"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
 fn test_code_is_exempt_from_panic_rules() {
     let src = "\
 #[cfg(test)]

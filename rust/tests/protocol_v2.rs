@@ -27,7 +27,7 @@ use wattchmen::report::context::WORKLOAD_SECS;
 use wattchmen::service::protocol::{self, Proto};
 use wattchmen::service::{PredictServer, ServeConfig};
 use wattchmen::util::json::{parse, Json};
-use wattchmen::Error;
+use wattchmen::{Error, Objective};
 
 fn test_table() -> EnergyTable {
     EnergyTable {
@@ -361,6 +361,181 @@ fn binary_frame_responses_are_byte_identical_to_jsonl() {
     drop(jsonl_client);
     runner.join().unwrap();
     assert_eq!(server.served(), 3);
+}
+
+/// The v2 `advise` command: capabilities advertise it, success ships
+/// the advisor payload, errors are structured with stable codes, and a
+/// v1 (unstamped) advise still parses — discovery is via capabilities,
+/// not a version gate, so nothing a v1 client already sends changed.
+#[test]
+fn advise_v2_success_and_error_shapes() {
+    let (server, runner) = start_server("advise_v2");
+    let mut client = Client::connect(server.local_addr());
+
+    // capabilities advertise the command and the objective vocabulary.
+    let status = client.send(r#"{"cmd":"status","v":2}"#);
+    let caps = status.get("capabilities").expect("v2 capabilities");
+    let commands: Vec<&str> = caps
+        .get("commands")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert!(commands.contains(&"advise"), "{commands:?}");
+    let objectives: Vec<&str> = caps
+        .get("objectives")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(objectives, ["min-energy", "min-edp", "power-cap"]);
+
+    // Success: `--workload backprop` selects both backprop kernels by
+    // prefix; the payload carries steps, curves, spots, and narrative.
+    let resp = client.send(r#"{"cmd":"advise","workload":"backprop","v":2}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(resp.get("arch").and_then(Json::as_str), Some("cloudlab-v100"));
+    assert_eq!(resp.get("objective").and_then(Json::as_str), Some("min-energy"));
+    assert_eq!(resp.get("source").and_then(Json::as_str), Some("closed-form"));
+    assert_eq!(resp.get("count").and_then(Json::as_f64), Some(2.0));
+    let steps = resp.get("steps").and_then(Json::as_arr).unwrap();
+    assert!(steps.len() >= 2, "{}", steps.len());
+    let curves = resp.get("curves").and_then(Json::as_arr).unwrap();
+    assert_eq!(curves.len(), 2);
+    for curve in curves {
+        let points = curve.get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(points.len(), steps.len());
+    }
+    let spots = resp.get("sweet_spots").and_then(Json::as_arr).unwrap();
+    assert_eq!(spots.len(), 2);
+    let text = resp.get("text").and_then(Json::as_str).unwrap();
+    assert_eq!(text.lines().count(), 2);
+    assert!(text.contains("sweet spot @"), "{text}");
+
+    // Errors: v2-structured with the stable codes and pinned messages.
+    let resp = client.send(r#"{"cmd":"advise","objective":"frobnicate","v":2}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    let err = resp.get("error").unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(
+        err.get("message").and_then(Json::as_str),
+        Some("unknown objective 'frobnicate' (min-energy|min-edp|power-cap)")
+    );
+    let resp = client.send(r#"{"cmd":"advise","objective":"power-cap","v":2}"#);
+    let err = resp.get("error").unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(
+        err.get("message").and_then(Json::as_str),
+        Some("objective 'power-cap' needs a power_cap_w field (watts)")
+    );
+    let resp = client.send(r#"{"cmd":"advise","workload":"nosuch","v":2}"#);
+    let err = resp.get("error").unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("unknown_workload"));
+
+    // An unstamped advise parses too, with the flat v1 error shape.
+    let raw = client.send_raw(r#"{"cmd":"advise","workload":"nosuch"}"#);
+    assert_eq!(
+        raw,
+        concat!(
+            r#"{"error":"unknown workload 'nosuch' for cloudlab-v100 "#,
+            r#"(see `wattchmen list`)","ok":false}"#
+        )
+    );
+
+    client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 1);
+    assert_eq!(server.request_errors(), 2);
+}
+
+/// The advise payload over bin1 frames is the EXACT bytes of its
+/// newline-JSON counterpart — the dialect changes framing only, and two
+/// sweeps over one server's shared caches render identically.
+#[test]
+fn advise_binary_frames_match_jsonl_bytes() {
+    use std::io::Read;
+
+    let (server, runner) = start_server("advise_bin1");
+    let req = protocol::advise_request(
+        "cloudlab-v100",
+        Some("backprop"),
+        Mode::Pred,
+        &Objective::MinEdp,
+    );
+    let line = as_v2(&req.to_string_compact());
+
+    // Reference bytes over newline JSON.
+    let mut jsonl_client = Client::connect(server.local_addr());
+    let jsonl_resp = jsonl_client.send_raw(&line);
+    assert!(jsonl_resp.contains(r#""ok":true"#), "{jsonl_resp}");
+    assert!(jsonl_resp.contains(r#""objective":"min-edp""#), "{jsonl_resp}");
+
+    // Second connection: switch to bin1, replay the same request.
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer
+        .write_all(b"{\"cmd\":\"frames\",\"format\":\"bin1\",\"v\":2}\n")
+        .unwrap();
+    let mut ack = String::new();
+    reader.read_line(&mut ack).unwrap();
+    assert_eq!(ack.trim_end_matches('\n'), r#"{"frames":"bin1","ok":true}"#);
+
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&((line.len() + 1) as u32).to_le_bytes());
+    frame.push(0x01);
+    frame.extend_from_slice(line.as_bytes());
+    writer.write_all(&frame).unwrap();
+
+    let mut header = [0u8; 4];
+    reader.read_exact(&mut header).unwrap();
+    let n = u32::from_le_bytes(header) as usize;
+    let mut body = vec![0u8; n];
+    reader.read_exact(&mut body).unwrap();
+    let (tag, payload) = body.split_first().unwrap();
+    assert_eq!(*tag, 0x01);
+    assert_eq!(
+        std::str::from_utf8(payload).unwrap(),
+        jsonl_resp,
+        "bin1 advise payload differs from the jsonl response bytes"
+    );
+
+    drop(writer);
+    jsonl_client.shutdown();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 2);
+}
+
+/// `RemoteClient::advise` against a live server: typed decode of the
+/// spots and the narrative, plus typed errors for a bad selection.
+#[test]
+fn remote_client_advise_round_trips() {
+    let (server, runner) = start_server("remote_advise");
+    let mut client = RemoteClient::connect(&server.local_addr().to_string()).unwrap();
+    let advice = client
+        .advise(
+            "cloudlab-v100",
+            Some("backprop"),
+            Mode::Pred,
+            &Objective::MinEnergy,
+            None,
+        )
+        .unwrap();
+    assert_eq!(advice.arch, "cloudlab-v100");
+    assert_eq!(advice.objective, "min-energy");
+    assert_eq!(advice.spots.len(), 2);
+    assert!(advice.spots.iter().all(|s| s.text.contains("sweet spot @")));
+    assert_eq!(advice.text.lines().count(), 2);
+    let err = client
+        .advise("cloudlab-v100", Some("nosuch"), Mode::Pred, &Objective::MinEnergy, None)
+        .unwrap_err();
+    assert_eq!(err.code(), "unknown_workload");
+    client.shutdown().unwrap();
+    runner.join().unwrap();
+    assert_eq!(server.served(), 1);
+    assert_eq!(server.request_errors(), 1);
 }
 
 #[test]
